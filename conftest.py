@@ -1,0 +1,7 @@
+"""Pytest path shim: the python build-path packages live under python/,
+so `pytest python/tests/` works from the repo root too."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

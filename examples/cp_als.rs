@@ -1,0 +1,113 @@
+//! End-to-end validation (DESIGN.md experiment E6): CP-ALS tensor
+//! decomposition on a scaled Synth-01 tensor with
+//!
+//! * numerics through the AOT-compiled JAX/Pallas kernels via PJRT
+//!   (Python is NOT running — artifacts were built once by `make
+//!   artifacts`), and
+//! * memory timing through the cycle-level simulator of the paper's
+//!   proposed system, reported as cycles per ALS sweep.
+//!
+//! The loss curve (CP fit / relative error per iteration) is logged so
+//! convergence is visible, and the final factors are cross-checked via
+//! the fit itself.
+//!
+//! Run: `cargo run --release --example cp_als -- [--scale 0.002]
+//!       [--iters 10] [--rank 32] [--preset b] [--dataset synth01]`
+
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::coordinator::TimedCpAls;
+use mttkrp_memsys::mttkrp::CpAlsOptions;
+use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
+use mttkrp_memsys::tensor::gen;
+use mttkrp_memsys::util::cli::Args;
+use mttkrp_memsys::util::fmt_count;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(false);
+    let scale = args.get_f64("scale", 0.002);
+    let iters = args.get_usize("iters", 10);
+    let dataset = args.get_str("dataset", "synth01");
+    let cfg = match args.get_str("preset", "b").as_str() {
+        "a" => SystemConfig::config_a(),
+        _ => SystemConfig::config_b(),
+    };
+
+    let t = match dataset.as_str() {
+        "synth02" => gen::synth_02(scale),
+        _ => gen::synth_01(scale),
+    };
+    println!(
+        "CP-ALS on {} (scale {scale}): dims {:?}, nnz {}",
+        t.name,
+        t.dims,
+        fmt_count(t.nnz() as u64)
+    );
+
+    let dir = find_artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+    let manifest = Manifest::load(&dir)?;
+    let rank = args.get_usize("rank", manifest.partials.rank);
+    anyhow::ensure!(
+        rank == manifest.partials.rank,
+        "rank {rank} != AOT rank {} (re-run `make artifacts` with --rank {rank})",
+        manifest.partials.rank
+    );
+
+    let driver = TimedCpAls::new(cfg.clone(), manifest);
+    let report = driver.run(
+        &t,
+        CpAlsOptions {
+            rank,
+            max_iters: iters,
+            fit_tol: 1e-6,
+            seed: args.get_u64("seed", 7),
+        },
+    )?;
+
+    println!("\nloss curve (CP fit per ALS sweep):");
+    for it in &report.als.iters {
+        let bar_len = ((1.0 - it.rel_error).max(0.0) * 50.0) as usize;
+        println!(
+            "  sweep {:>3}  fit {:+.6}  rel_error {:.6}  {}",
+            it.iter,
+            it.fit,
+            it.rel_error,
+            "#".repeat(bar_len)
+        );
+    }
+    let first = report.als.iters.first().unwrap();
+    let last = report.als.iters.last().unwrap();
+    println!("\nmemory system ({}):", cfg.label);
+    for (mode, sim) in ["mode-I", "mode-J", "mode-K"].iter().zip(&report.per_mode_sim) {
+        println!(
+            "  {mode}: {} cycles ({:.2} B/cycle, cache hit rate {:.1}%)",
+            fmt_count(sim.total_cycles),
+            sim.bytes_per_cycle(),
+            100.0 * sim.cache_hit_rate()
+        );
+    }
+    println!(
+        "  one ALS sweep = {} simulated cycles ({:.2} ms @300 MHz)",
+        fmt_count(report.cycles_per_sweep),
+        report.cycles_per_sweep as f64 / 300e6 * 1e3
+    );
+    println!(
+        "  whole run     = {} simulated cycles over {} sweeps",
+        fmt_count(report.total_cycles),
+        report.als.iters.len()
+    );
+    println!(
+        "\nPJRT compute {:.2}s host; fit {:.4} → {:.4} (Δ {:+.4}), converged={}",
+        report.compute_seconds,
+        first.fit,
+        last.fit,
+        last.fit - first.fit,
+        report.als.converged
+    );
+    anyhow::ensure!(
+        last.rel_error <= first.rel_error + 1e-9,
+        "CP-ALS error did not improve"
+    );
+    println!("cp_als OK");
+    Ok(())
+}

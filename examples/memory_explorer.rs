@@ -1,0 +1,131 @@
+//! Design-space explorer for the reconfigurable memory system (§IV-E):
+//! sweeps the synthesis-time knobs the paper exposes — number of LMBs,
+//! DMA buffers per LMB, and cache geometry — and reports simulated
+//! memory-access time together with the resource/frequency models, i.e.
+//! the trade surface an FPGA engineer would explore before synthesis.
+//!
+//! Run: `cargo run --release --example memory_explorer -- [--quick]
+//!       [--scale 0.005] [--dataset synth01]`
+
+use mttkrp_memsys::config::{FabricType, SystemConfig};
+use mttkrp_memsys::resource::{max_frequency_mhz, ResourceModel};
+use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::tensor::gen;
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::cli::Args;
+use mttkrp_memsys::util::table::{Align, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env(false);
+    let quick = args.flag("quick");
+    let scale = args.get_f64("scale", if quick { 0.002 } else { 0.005 });
+    let t = match args.get_str("dataset", "synth01").as_str() {
+        "synth02" => gen::synth_02(scale),
+        _ => gen::synth_01(scale),
+    };
+    println!(
+        "exploring on {} scale {scale} (nnz {})\n",
+        t.name,
+        t.nnz()
+    );
+
+    // --- Sweep 1: DMA buffers per LMB (paper: saturates after 4). -----
+    println!("DMA buffers per LMB (Config-B, Type-2) — §V-C saturation claim:");
+    let mut tab = Table::new(&["dma buffers", "mem cycles", "speedup vs 1", "fmax (MHz)"])
+        .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right]);
+    let dma_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 6, 8] };
+    let mut base_cycles = None;
+    for &n in dma_counts {
+        let mut cfg = SystemConfig::config_b();
+        cfg.dma.n_buffers = n;
+        let w = workload_from_tensor(
+            &t,
+            mttkrp_memsys::tensor::Mode::I,
+            FabricType::Type2,
+            cfg.pe.n_pes,
+            cfg.pe.rank,
+            cfg.dram.row_bytes,
+        );
+        let rep = simulate(&cfg, &w);
+        let base = *base_cycles.get_or_insert(rep.total_cycles);
+        tab.row(&[
+            n.to_string(),
+            rep.total_cycles.to_string(),
+            format!("{:.2}x", base as f64 / rep.total_cycles as f64),
+            format!("{:.0}", max_frequency_mhz(&cfg)),
+        ]);
+    }
+    println!("{}\n", tab.render());
+
+    // --- Sweep 2: LMB count for Type-2 fabrics. -----------------------
+    println!("LMB count (Type-2 fabric, 4 PEs) — Configuration-B rationale:");
+    let mut tab = Table::new(&["LMBs", "mem cycles", "LUT%", "URAM%"]).aligns(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let lmb_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
+    for &n in lmb_counts {
+        let mut cfg = SystemConfig::config_b();
+        cfg.n_lmbs = n;
+        let w = workload_from_tensor(
+            &t,
+            mttkrp_memsys::tensor::Mode::I,
+            FabricType::Type2,
+            cfg.pe.n_pes,
+            cfg.pe.rank,
+            cfg.dram.row_bytes,
+        );
+        let rep = simulate(&cfg, &w);
+        let m = ResourceModel::new(&cfg);
+        let p = m.system().percent(&m.dev);
+        tab.row(&[
+            n.to_string(),
+            rep.total_cycles.to_string(),
+            format!("{:.2}", p[0]),
+            format!("{:.2}", p[3]),
+        ]);
+    }
+    println!("{}\n", tab.render());
+
+    // --- Sweep 3: cache geometry (lines × associativity). -------------
+    println!("cache geometry (Config-A, Type-1) — §IV-E frequency trade:");
+    let mut tab = Table::new(&["lines", "assoc", "mem cycles", "cache hit%", "fmax (MHz)"])
+        .aligns(&[
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    let geoms: &[(usize, usize)] = if quick {
+        &[(8192, 2)]
+    } else {
+        &[(2048, 1), (4096, 1), (8192, 2), (16384, 2)]
+    };
+    for &(lines, assoc) in geoms {
+        let mut cfg = SystemConfig::config_a();
+        cfg.cache.lines = lines;
+        cfg.cache.associativity = assoc;
+        let w = workload_from_tensor(
+            &t,
+            mttkrp_memsys::tensor::Mode::I,
+            FabricType::Type1,
+            cfg.pe.n_pes,
+            cfg.pe.rank,
+            cfg.dram.row_bytes,
+        );
+        let rep = simulate(&cfg, &w);
+        tab.row(&[
+            lines.to_string(),
+            assoc.to_string(),
+            rep.total_cycles.to_string(),
+            format!("{:.1}", 100.0 * rep.cache_hit_rate()),
+            format!("{:.0}", max_frequency_mhz(&cfg)),
+        ]);
+    }
+    println!("{}", tab.render());
+    println!("\nmemory_explorer OK");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT lowering: JAX → stablehlo → XlaComputation → HLO *text*.
+
+HLO text (not a serialized HloModuleProto) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the Rust ``xla`` crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (run from
+python/; the Makefile `artifacts` target does this). Writes one
+``<name>.hlo.txt`` per entry point plus ``manifest.json`` describing the
+monomorphic shapes for the Rust runtime.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax.jit(...).lower(...) result to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.B)
+    ap.add_argument("--rank", type=int, default=model.R)
+    ap.add_argument("--i-tile", type=int, default=model.I_TILE)
+    ap.add_argument("--j-fused", type=int, default=model.J_FUSED)
+    ap.add_argument("--k-fused", type=int, default=model.K_FUSED)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = {}
+
+    # Entry 1: partials (gather done in Rust).
+    text = lower_entry(
+        model.mttkrp_partials_fn,
+        model.partials_example_args(args.batch, args.rank),
+    )
+    path = os.path.join(args.out_dir, "mttkrp_partials.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entries["mttkrp_partials"] = {
+        "file": "mttkrp_partials.hlo.txt",
+        "batch": args.batch,
+        "rank": args.rank,
+        "inputs": ["vals[B]f32", "d_rows[B,R]f32", "c_rows[B,R]f32"],
+        "output": "partials[B,R]f32",
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    # Entry 2: fused gather + scatter block.
+    text = lower_entry(
+        model.mttkrp_fused_fn,
+        model.fused_example_args(
+            args.batch, args.rank, args.i_tile, args.j_fused, args.k_fused
+        ),
+    )
+    path = os.path.join(args.out_dir, "mttkrp_fused.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    entries["mttkrp_fused"] = {
+        "file": "mttkrp_fused.hlo.txt",
+        "batch": args.batch,
+        "rank": args.rank,
+        "i_tile": args.i_tile,
+        "j": args.j_fused,
+        "k": args.k_fused,
+        "inputs": [
+            "vals[B]f32",
+            "j_idx[B]i32",
+            "k_idx[B]i32",
+            "D[J,R]f32",
+            "C[K,R]f32",
+            "sel[I_TILE,B]f32",
+        ],
+        "output": "a_tile[I_TILE,R]f32",
+    }
+    print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": 1,
+        "jax": jax.__version__,
+        "entries": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

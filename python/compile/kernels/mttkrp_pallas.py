@@ -1,0 +1,142 @@
+"""Layer-1 Pallas kernels for batched spMTTKRP.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+PEs consume one nonzero per cycle, computing `val · D[j,:] ∘ C[k,:]` on
+R-lane vector units fed by the LMB memory system. On a TPU-shaped target
+the same computation is re-tiled:
+
+* `mttkrp_partials` — elementwise VPU work over a (B_TILE, R) block in
+  VMEM. `BlockSpec` tiles the batch dimension; rank stays whole (R ≤ 128
+  keeps a lane-width multiple).
+* `scatter_rows` — the output-fiber accumulation is re-cast as a matmul
+  with a one-hot selection matrix (`A_tile = sel @ partials`), which maps
+  onto the MXU systolic array. The grid reduces over B tiles,
+  accumulating into the output block — the VMEM-resident accumulator
+  plays the role of the paper's output-fiber buffer, and the B-tile grid
+  sweep is the HBM→VMEM schedule the FPGA design realized with DMA
+  double-buffering.
+
+All kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the Rust
+runtime loads (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: VMEM footprint per grid step at (512, 32) f32 is
+# 512·32·4 B ≈ 64 KiB per operand — comfortably inside a TPU core's
+# ~16 MiB VMEM with double buffering.
+B_TILE = 512
+
+
+def _partials_kernel(vals_ref, d_ref, c_ref, o_ref):
+    """o[b, r] = vals[b] * d[b, r] * c[b, r] over one (B_TILE, R) block."""
+    vals = vals_ref[...]  # (B_TILE, 1)
+    o_ref[...] = vals * d_ref[...] * c_ref[...]
+
+
+def mttkrp_partials(vals, d_rows, c_rows, *, b_tile=B_TILE):
+    """Batched partial products: (B,), (B, R), (B, R) → (B, R).
+
+    The batch dimension is tiled by `b_tile`; B must be a multiple (the
+    Rust coordinator pads the tail batch with zero-valued nonzeros, which
+    contribute nothing downstream).
+    """
+    b, r = d_rows.shape
+    assert vals.shape == (b,), f"vals {vals.shape} vs rows {d_rows.shape}"
+    assert c_rows.shape == (b, r)
+    b_tile = min(b_tile, b)
+    assert b % b_tile == 0, f"B={b} not a multiple of b_tile={b_tile}"
+    # Keep vals 2-D: TPU vector layouts want ≥2-D refs.
+    vals2 = vals.reshape(b, 1)
+    grid = (b // b_tile,)
+    return pl.pallas_call(
+        _partials_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((b_tile, r), lambda i: (i, 0)),
+            pl.BlockSpec((b_tile, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_tile, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(vals2, d_rows, c_rows)
+
+
+def _scatter_kernel(sel_ref, part_ref, o_ref):
+    """Accumulate one B-tile of `sel @ partials` into the output block.
+
+    Grid dim 0 sweeps B tiles; the output BlockSpec pins the same output
+    block for every step, so o_ref accumulates across the reduction.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped: (I_TILE, B_TILE) @ (B_TILE, R).
+    o_ref[...] += jnp.dot(
+        sel_ref[...], part_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def scatter_rows(sel, partials, *, b_tile=B_TILE):
+    """A_tile = sel @ partials as an MXU-tiled reduction over B.
+
+    Args:
+      sel:      (I_TILE, B) f32 one-hot selection matrix.
+      partials: (B, R) f32.
+    Returns:
+      (I_TILE, R) f32.
+    """
+    i_tile, b = sel.shape
+    b2, r = partials.shape
+    assert b == b2, f"sel {sel.shape} vs partials {partials.shape}"
+    b_tile = min(b_tile, b)
+    assert b % b_tile == 0, f"B={b} not a multiple of b_tile={b_tile}"
+    grid = (b // b_tile,)
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((i_tile, b_tile), lambda i: (0, i)),
+            pl.BlockSpec((b_tile, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((i_tile, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((i_tile, r), jnp.float32),
+        interpret=True,
+    )(sel, partials)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mttkrp_block(vals, j_idx, k_idx, d_mat, c_mat, sel):
+    """Fused L2 block (gather → partials kernel → scatter kernel).
+
+    The gathers stay in XLA (they are the COO element/fiber loads — the
+    irregular part the paper's memory system serves); the regular compute
+    runs in the two Pallas kernels.
+    """
+    d_rows = jnp.take(d_mat, j_idx, axis=0)
+    c_rows = jnp.take(c_mat, k_idx, axis=0)
+    partials = mttkrp_partials(vals, d_rows, c_rows)
+    return scatter_rows(sel, partials)
+
+
+def vmem_bytes_per_step(b_tile: int, i_tile: int, r: int) -> int:
+    """Static VMEM footprint of one grid step (both kernels), for the
+    §Perf roofline estimate: vals + d + c + partials blocks, plus the
+    selection block and output accumulator."""
+    f32 = 4
+    partials = b_tile * r * f32
+    inputs = b_tile * (2 * r + 1) * f32
+    scatter = i_tile * b_tile * f32 + i_tile * r * f32
+    return partials + inputs + scatter
+
+
+def mxu_flops_per_step(b_tile: int, i_tile: int, r: int) -> int:
+    """MXU MACs per scatter grid step (the matmul 2·I·B·R flops)."""
+    return 2 * i_tile * b_tile * r

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: every kernel in mttkrp_pallas.py must match these bit-for-bit up
+to float tolerance, checked by python/tests/).
+
+The L2 graph computes a *block* of mode-1 spMTTKRP (Algorithm 2 of the
+paper) over a batch of B nonzeros:
+
+    partials[b, r] = vals[b] * D[j[b], r] * C[k[b], r]      (elementwise)
+    A_tile[i, r]  += sum_b sel[i, b] * partials[b, r]       (scatter)
+
+The scatter is expressed as a matmul with a one-hot selection matrix so
+that on a real TPU it maps onto the MXU (DESIGN.md §Hardware-Adaptation).
+"""
+
+import jax.numpy as jnp
+
+
+def mttkrp_partials_ref(vals, d_rows, c_rows):
+    """partials[b, r] = vals[b] * d_rows[b, r] * c_rows[b, r].
+
+    Args:
+      vals:   (B,)   f32 — tensor nonzero values.
+      d_rows: (B, R) f32 — gathered rows of the first factor matrix.
+      c_rows: (B, R) f32 — gathered rows of the second factor matrix.
+    Returns:
+      (B, R) f32.
+    """
+    return vals[:, None] * d_rows * c_rows
+
+
+def scatter_rows_ref(sel, partials):
+    """A_tile = sel @ partials, where sel[i, b] one-hot encodes indI.
+
+    Args:
+      sel:      (I_TILE, B) f32 — selection (one-hot transpose) matrix.
+      partials: (B, R) f32.
+    Returns:
+      (I_TILE, R) f32.
+    """
+    return sel @ partials
+
+
+def mttkrp_block_ref(vals, j_idx, k_idx, d_mat, c_mat, sel):
+    """Full fused block: gather -> partials -> scatter.
+
+    Args:
+      vals:  (B,)    f32
+      j_idx: (B,)    i32 — row indices into d_mat.
+      k_idx: (B,)    i32 — row indices into c_mat.
+      d_mat: (J, R)  f32
+      c_mat: (K, R)  f32
+      sel:   (I_TILE, B) f32
+    Returns:
+      (I_TILE, R) f32 — the mode-1 MTTKRP contribution of this batch to
+      an I_TILE-row tile of the output.
+    """
+    d_rows = jnp.take(d_mat, j_idx, axis=0)
+    c_rows = jnp.take(c_mat, k_idx, axis=0)
+    partials = mttkrp_partials_ref(vals, d_rows, c_rows)
+    return scatter_rows_ref(sel, partials)
+
+
+def mttkrp_dense_ref(tensor_dense, d_mat, c_mat):
+    """Dense mode-1 MTTKRP (Equation 2 of the paper) — the ground truth
+    used to validate the whole batched pipeline end-to-end.
+
+    Args:
+      tensor_dense: (I, J, K) f32
+      d_mat: (J, R) f32
+      c_mat: (K, R) f32
+    Returns:
+      (I, R) f32: A[i, r] = sum_{j,k} B[i,j,k] * D[j,r] * C[k,r]
+    """
+    return jnp.einsum("ijk,jr,kr->ir", tensor_dense, d_mat, c_mat)

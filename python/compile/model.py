@@ -1,0 +1,62 @@
+"""Layer-2 JAX model: the batched spMTTKRP compute graph that the Rust
+coordinator executes through PJRT.
+
+Two entry points are AOT-lowered (python/compile/aot.py):
+
+* ``mttkrp_partials_fn`` — (vals[B], d_rows[B,R], c_rows[B,R]) → [B,R].
+  The Rust runtime gathers factor rows itself (it owns the memory
+  system) and accumulates the partials into output fibers — this mirrors
+  the paper's PE structure most directly.
+* ``mttkrp_fused_fn`` — (vals[B], j[B], k[B], D[J,R], C[K,R],
+  sel[I_TILE,B]) → [I_TILE,R]. Gathers and the one-hot scatter-matmul
+  run inside XLA; used when the factor matrices fit device memory.
+
+Shapes are fixed at lowering time (PJRT executables are monomorphic);
+the manifest records them so the Rust side pads batches accordingly.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import mttkrp_pallas as k
+
+# Default AOT shapes — the Rust coordinator pads each batch to B.
+B = 2048
+R = 32
+I_TILE = 128
+J_FUSED = 4096
+K_FUSED = 4096
+
+
+def mttkrp_partials_fn(vals, d_rows, c_rows):
+    """Partials-only graph (returns a 1-tuple for the HLO bridge)."""
+    return (k.mttkrp_partials(vals, d_rows, c_rows),)
+
+
+def mttkrp_fused_fn(vals, j_idx, k_idx, d_mat, c_mat, sel):
+    """Fused gather→partials→scatter graph (1-tuple)."""
+    return (k.mttkrp_block(vals, j_idx, k_idx, d_mat, c_mat, sel),)
+
+
+def partials_example_args(b=B, r=R):
+    """ShapeDtypeStructs used to lower ``mttkrp_partials_fn``."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b, r), jnp.float32),
+        jax.ShapeDtypeStruct((b, r), jnp.float32),
+    )
+
+
+def fused_example_args(b=B, r=R, i_tile=I_TILE, j=J_FUSED, kk=K_FUSED):
+    """ShapeDtypeStructs used to lower ``mttkrp_fused_fn``."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((j, r), jnp.float32),
+        jax.ShapeDtypeStruct((kk, r), jnp.float32),
+        jax.ShapeDtypeStruct((i_tile, b), jnp.float32),
+    )

@@ -1,0 +1,116 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value distributions; fixed-seed cases pin
+the exact AOT shapes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import mttkrp_pallas as k
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return rng.uniform(-2.0, 2.0, size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("b,r", [(512, 32), (1024, 16), (2048, 32), (512, 8)])
+def test_partials_matches_ref_fixed_shapes(b, r):
+    rng = np.random.default_rng(0)
+    vals, d, c = _rand(rng, b), _rand(rng, b, r), _rand(rng, b, r)
+    got = k.mttkrp_partials(vals, d, c)
+    want = ref.mttkrp_partials_ref(vals, d, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    b_tile=st.sampled_from([128, 256, 512]),
+    r=st.sampled_from([4, 8, 16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_partials_matches_ref_hypothesis(tiles, b_tile, r, seed):
+    b = tiles * b_tile
+    rng = np.random.default_rng(seed)
+    vals, d, c = _rand(rng, b), _rand(rng, b, r), _rand(rng, b, r)
+    got = k.mttkrp_partials(vals, d, c, b_tile=b_tile)
+    want = ref.mttkrp_partials_ref(vals, d, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_partials_rejects_non_multiple_batch():
+    rng = np.random.default_rng(1)
+    with pytest.raises(AssertionError):
+        # 300 is not a multiple of the (clamped) 256 tile.
+        k.mttkrp_partials(
+            _rand(rng, 300), _rand(rng, 300, 8), _rand(rng, 300, 8), b_tile=256
+        )
+
+
+@pytest.mark.parametrize("i_tile,b,r", [(128, 2048, 32), (64, 512, 16), (8, 512, 4)])
+def test_scatter_matches_ref(i_tile, b, r):
+    rng = np.random.default_rng(2)
+    partials = _rand(rng, b, r)
+    # One-hot selection: each nonzero lands in a random output row.
+    rows = rng.integers(0, i_tile, size=b)
+    sel = np.zeros((i_tile, b), dtype=np.float32)
+    sel[rows, np.arange(b)] = 1.0
+    got = k.scatter_rows(sel, partials)
+    want = ref.scatter_rows_ref(sel, partials)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    i_tile=st.sampled_from([8, 32, 128]),
+    tiles=st.integers(min_value=1, max_value=3),
+    r=st.sampled_from([8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_scatter_hypothesis(i_tile, tiles, r, seed):
+    b = tiles * 256
+    rng = np.random.default_rng(seed)
+    partials = _rand(rng, b, r)
+    rows = rng.integers(0, i_tile, size=b)
+    sel = np.zeros((i_tile, b), dtype=np.float32)
+    sel[rows, np.arange(b)] = 1.0
+    got = k.scatter_rows(sel, partials, b_tile=256)
+    want = ref.scatter_rows_ref(sel, partials)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_zero_padding_contributes_nothing():
+    # The Rust coordinator pads tail batches with vals=0: the padded lanes
+    # must not perturb the scatter result.
+    rng = np.random.default_rng(3)
+    b, r, i_tile = 512, 16, 32
+    vals = _rand(rng, b)
+    vals[300:] = 0.0
+    d, c = _rand(rng, b, r), _rand(rng, b, r)
+    rows = rng.integers(0, i_tile, size=b)
+    sel = np.zeros((i_tile, b), dtype=np.float32)
+    sel[rows, np.arange(b)] = 1.0
+    partials = k.mttkrp_partials(vals, d, c)
+    full = k.scatter_rows(sel, partials)
+    # Recompute with the padded region entirely removed (mask sel too).
+    sel_masked = sel.copy()
+    sel_masked[:, 300:] = 0.0
+    masked = k.scatter_rows(sel_masked, partials)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(masked), rtol=1e-6)
+
+
+def test_vmem_estimate_within_budget():
+    # §Perf: the default AOT tile must fit VMEM with double buffering.
+    bytes_per_step = k.vmem_bytes_per_step(k.B_TILE, 128, 32)
+    assert bytes_per_step * 2 < 16 * 1024 * 1024, bytes_per_step
+
+
+def test_dtype_is_preserved():
+    rng = np.random.default_rng(4)
+    out = k.mttkrp_partials(_rand(rng, 512), _rand(rng, 512, 8), _rand(rng, 512, 8))
+    assert out.dtype == jnp.float32

@@ -1,0 +1,133 @@
+//! Bench: simulator component microbenchmarks — host-side throughput of
+//! the hot structures (cache probes, RRSH, temp buffer CAM, DRAM model,
+//! XOR hash) plus whole-simulation requests/second. These are the §Perf
+//! numbers for the L3 layer (EXPERIMENTS.md §Perf).
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::sim::cache::Cache;
+use mttkrp_memsys::sim::dram::{Dram, IdGen};
+use mttkrp_memsys::sim::rrsh::Rrsh;
+use mttkrp_memsys::sim::temp_buffer::TempBuffer;
+use mttkrp_memsys::sim::xor_hash::XorHashTable;
+use mttkrp_memsys::sim::{simulate, MemReq};
+use mttkrp_memsys::tensor::{gen, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::bench::{black_box, section, Bench};
+use mttkrp_memsys::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_millis(600));
+
+    section("component throughput (host ops/s)");
+    // Cache probe stream (hit-heavy).
+    {
+        let cfg = SystemConfig::config_a();
+        let mut cache = Cache::new(&cfg.cache, 0);
+        let mut ids = IdGen::default();
+        // Warm 1024 lines.
+        for i in 0..1024u64 {
+            if let mttkrp_memsys::sim::cache::CacheAccess::Miss { fill_req } =
+                cache.load(i * 64, i, 0, &mut ids)
+            {
+                cache.fill(fill_req.id);
+            }
+        }
+        let mut z = 0u64;
+        b.run("cache probe (hit path)", 100_000, || {
+            for _ in 0..100_000 {
+                z = (z + 1) % 1024;
+                black_box(cache.load(z * 64, z, z, &mut ids));
+            }
+        });
+    }
+    // RRSH request/complete cycle.
+    {
+        let mut rrsh = Rrsh::new(4096, 4, 4);
+        let mut line = 0u64;
+        b.run("rrsh request+complete", 100_000, || {
+            for _ in 0..25_000 {
+                line += 1;
+                for t in 0..3 {
+                    black_box(rrsh.request(line, t));
+                }
+                black_box(rrsh.complete(line));
+            }
+        });
+    }
+    // Temp buffer CAM probes.
+    {
+        let mut tb = TempBuffer::new(8);
+        for l in 0..8 {
+            tb.insert(l);
+        }
+        let mut l = 0u64;
+        b.run("temp-buffer CAM probe", 100_000, || {
+            for _ in 0..100_000 {
+                l = (l + 1) % 16;
+                black_box(tb.probe(l));
+            }
+        });
+    }
+    // XOR hash insert/remove.
+    {
+        let mut t: XorHashTable<u64> = XorHashTable::new(4096);
+        let mut rng = Rng::new(1);
+        b.run("xor-hash insert+remove", 100_000, || {
+            for _ in 0..50_000 {
+                let k = rng.next_u64() >> 16;
+                t.insert(k, k);
+                black_box(t.remove(k));
+            }
+        });
+    }
+    // DRAM model request stream.
+    {
+        let cfg = SystemConfig::config_a();
+        b.run("dram model (random reads)", 50_000, || {
+            let mut d = Dram::new(&cfg.dram);
+            let mut out = Vec::new();
+            let mut rng = Rng::new(7);
+            let mut pushed = 0u64;
+            let mut c = 0;
+            while pushed < 50_000 || !d.is_idle() {
+                while pushed < 50_000 && d.can_accept() {
+                    d.push(
+                        MemReq {
+                            id: pushed + 1,
+                            addr: rng.gen_range(1 << 28),
+                            bytes: 64,
+                            is_write: false,
+                            port: 0,
+                        },
+                        c,
+                    );
+                    pushed += 1;
+                }
+                d.tick(c, &mut out);
+                c += 1;
+            }
+            black_box(out.len());
+        });
+    }
+
+    section("end-to-end simulation speed (simulated PE accesses per host second)");
+    let t = gen::synth_01(0.002);
+    for (kind, label) in [
+        (SystemKind::Proposed, "proposed/config-b"),
+        (SystemKind::IpOnly, "ip-only"),
+    ] {
+        let cfg = SystemConfig::config_b().as_baseline(kind);
+        let w = workload_from_tensor(
+            &t,
+            Mode::I,
+            FabricType::Type2,
+            cfg.pe.n_pes,
+            cfg.pe.rank,
+            cfg.dram.row_bytes,
+        );
+        let accesses = w.n_accesses() as u64;
+        b.run(&format!("simulate {label}"), accesses, || {
+            black_box(simulate(&cfg, &w));
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: the compute path — pure-Rust MTTKRP variants vs the AOT/PJRT
+//! executor (L1/L2 through the runtime), in nonzeros/second. This is the
+//! §Perf evidence that the PJRT batch path amortizes its call overhead.
+
+use mttkrp_memsys::mttkrp::fiber::{mttkrp_fiber_eq3, mttkrp_fiber_eq4};
+use mttkrp_memsys::mttkrp::{mttkrp_parallel, mttkrp_seq};
+use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest, MttkrpExecutor};
+use mttkrp_memsys::tensor::{CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::util::bench::{black_box, section, Bench};
+use mttkrp_memsys::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(77);
+    // Rank must match the AOT artifact (default 32).
+    let rank = find_artifacts_dir()
+        .and_then(|d| Manifest::load(&d).ok())
+        .map(|m| m.partials.rank)
+        .unwrap_or(32);
+    let dims = [512u64, 4096, 4096];
+    let nnz = 200_000;
+    let t = CooTensor::random(&mut rng, dims, nnz);
+    let d = DenseMatrix::random(&mut rng, dims[1] as usize, rank);
+    let c = DenseMatrix::random(&mut rng, dims[2] as usize, rank);
+    let n = t.nnz() as u64;
+
+    section(&format!(
+        "MTTKRP compute variants (nnz {}, rank {rank})",
+        t.nnz()
+    ));
+    let mut b = Bench::new().with_target_time(std::time::Duration::from_secs(1));
+    b.run("alg2 sequential", n, || {
+        black_box(mttkrp_seq(&t, Mode::I, &d, &c));
+    });
+    b.run("alg3 parallel (4 PEs)", n, || {
+        black_box(mttkrp_parallel(&t, Mode::I, &d, &c, 4));
+    });
+    b.run("fiber eq(3)", n, || {
+        black_box(mttkrp_fiber_eq3(&t, Mode::I, &d, &c));
+    });
+    b.run("fiber eq(4)", n, || {
+        black_box(mttkrp_fiber_eq4(&t, Mode::I, &d, &c));
+    });
+
+    match find_artifacts_dir().and_then(|dir| Manifest::load(&dir).ok()) {
+        Some(manifest) if manifest.partials.rank == rank => {
+            let mut exec = MttkrpExecutor::new(&manifest).expect("executor");
+            b.run("AOT/PJRT batch executor", n, || {
+                black_box(exec.mttkrp(&t, Mode::I, &d, &c).expect("mttkrp"));
+            });
+            let s = &exec.stats;
+            println!(
+                "    pjrt split: gather {:.2}s, execute {:.2}s, scatter {:.2}s over {} batches",
+                s.gather_seconds, s.execute_seconds, s.scatter_seconds, s.batches
+            );
+        }
+        _ => println!("(artifacts not built — skipping PJRT executor bench; run `make artifacts`)"),
+    }
+}

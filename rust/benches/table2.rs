@@ -1,0 +1,66 @@
+//! Bench: regenerate paper **Table II** — module configuration and
+//! resource utilization for Configuration-A and Configuration-B — from
+//! the calibrated analytic resource model, side by side with the paper's
+//! published percentages.
+
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::resource::{table2, ResourceModel};
+use mttkrp_memsys::util::bench::section;
+use mttkrp_memsys::util::table::{Align, Table};
+
+/// Paper values: (module, config, [LUT, FF, BRAM, URAM]) in %.
+const PAPER: &[(&str, &str, [f64; 4])] = &[
+    ("Cache", "config-a", [1.87, 1.24, 0.24, 1.25]),
+    ("DMA Engine", "config-a", [0.04, 0.01, 0.00, 0.25]),
+    ("Request Reductor", "config-a", [0.08, 0.10, 0.00, 1.25]),
+    ("LMB", "config-a", [2.03, 1.41, 0.24, 2.75]),
+    ("Complete System", "config-a", [2.25, 1.54, 0.24, 2.75]),
+    ("Cache", "config-b", [0.65, 0.64, 0.06, 0.63]),
+    ("DMA Engine", "config-b", [0.04, 0.01, 0.00, 0.25]),
+    ("Request Reductor", "config-b", [0.08, 0.10, 0.00, 1.25]),
+    ("LMB", "config-b", [0.85, 0.81, 0.06, 2.13]),
+    ("Complete System", "config-b", [3.61, 3.35, 0.24, 8.52]),
+];
+
+fn main() {
+    section("Table II — resource utilization model vs paper");
+    let a = SystemConfig::config_a();
+    let b = SystemConfig::config_b();
+    println!("{}\n", table2(&[&a, &b]));
+
+    section("model vs paper, per cell");
+    let mut t = Table::new(&["module", "metric", "model %", "paper %", "Δpp"]).aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut worst: f64 = 0.0;
+    for (module, cfg_name, paper) in PAPER {
+        let cfg = if *cfg_name == "config-a" { &a } else { &b };
+        let m = ResourceModel::new(cfg);
+        let util = match *module {
+            "Cache" => m.cache(),
+            "DMA Engine" => m.dma(),
+            "Request Reductor" => m.request_reductor(),
+            "LMB" => m.lmb(),
+            _ => m.system(),
+        };
+        let pct = util.percent(&m.dev);
+        for (i, metric) in ["LUT", "FF", "BRAM", "URAM"].iter().enumerate() {
+            let delta = pct[i] - paper[i];
+            worst = worst.max(delta.abs());
+            t.row(&[
+                format!("{module} ({cfg_name})"),
+                metric.to_string(),
+                format!("{:.2}", pct[i]),
+                format!("{:.2}", paper[i]),
+                format!("{delta:+.2}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("\nworst absolute deviation: {worst:.2} percentage points");
+    assert!(worst < 0.6, "resource model drifted from Table II");
+}

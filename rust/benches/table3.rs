@@ -1,0 +1,52 @@
+//! Bench: regenerate paper **Table III** — the synthetic 3-D tensor
+//! datasets — and verify the generator actually realizes the specified
+//! nnz/density at a measurable scale.
+
+use mttkrp_memsys::tensor::gen::{self, GenParams, SYNTH_01, SYNTH_02};
+use mttkrp_memsys::util::bench::{section, Bench};
+use mttkrp_memsys::util::fmt_count;
+use mttkrp_memsys::util::table::{Align, Table};
+
+fn main() {
+    section("Table III — sparse 3D tensor datasets");
+    let mut t = Table::new(&["Tensor", "Dimensions", "Nonzeros", "Density", "paper density"])
+        .aligns(&[
+            Align::Left,
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for (spec, paper_density) in [(&SYNTH_01, 2.37e-9), (&SYNTH_02, 9.05e-13)] {
+        t.row(&[
+            spec.name.to_string(),
+            format!("{} x {} x {}", spec.dims[0], spec.dims[1], spec.dims[2]),
+            fmt_count(spec.nnz),
+            format!("{:.2E}", spec.density()),
+            format!("{paper_density:.2E}"),
+        ]);
+        assert!(
+            (spec.density() / paper_density - 1.0).abs() < 0.1,
+            "{}: density drifted from Table III",
+            spec.name
+        );
+    }
+    println!("{}\n", t.render());
+
+    section("generator realization + throughput (scale 0.002)");
+    let mut b = Bench::quick();
+    for spec in [SYNTH_01.scaled(0.002), SYNTH_02.scaled(0.002)] {
+        let mut made = None;
+        let m = b.run(&format!("generate {}", spec.name), spec.nnz, || {
+            made = Some(gen::generate(&spec, &GenParams::default()));
+        });
+        let tensor = made.unwrap();
+        assert_eq!(tensor.nnz() as u64, spec.nnz, "{} nnz off", spec.name);
+        println!(
+            "    realized: nnz {}, dims {:?}, {:.1} Knnz/s",
+            fmt_count(tensor.nnz() as u64),
+            tensor.dims,
+            m.throughput.unwrap_or(0.0) / 1e3,
+        );
+    }
+}

@@ -1,0 +1,548 @@
+//! Configuration system: every synthesis-time knob of the paper's memory
+//! system plus simulator/workload parameters, with the paper's presets
+//! (Configuration-A, Configuration-B) and baseline variants.
+//!
+//! Configs load from a simple `key = value` file (serde is unavailable
+//! offline) and accept `--key value` CLI overrides, mirroring how the
+//! paper's design is "configured during the synthesis step" (§IV-E).
+
+mod parse;
+
+pub use parse::{parse_kv_file, parse_kv_str};
+
+use crate::util::{is_pow2, json::Json};
+
+/// Which memory-system variant to simulate (§V-B baselines + proposed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SystemKind {
+    /// Direct connection to the commercial memory-controller IP.
+    IpOnly,
+    /// All traffic through a conventional non-blocking cache (with MSHR).
+    CacheOnly,
+    /// All traffic through single-request-at-a-time DMA engines.
+    DmaOnly,
+    /// The paper's LMB-based system (cache + RR/RRSH + DMA per LMB).
+    Proposed,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::IpOnly => "ip-only",
+            SystemKind::CacheOnly => "cache-only",
+            SystemKind::DmaOnly => "dma-only",
+            SystemKind::Proposed => "proposed",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SystemKind> {
+        match s {
+            "ip-only" | "ip" => Some(SystemKind::IpOnly),
+            "cache-only" | "cache" => Some(SystemKind::CacheOnly),
+            "dma-only" | "dma" => Some(SystemKind::DmaOnly),
+            "proposed" | "lmb" => Some(SystemKind::Proposed),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [SystemKind; 4] = [
+        SystemKind::IpOnly,
+        SystemKind::CacheOnly,
+        SystemKind::DmaOnly,
+        SystemKind::Proposed,
+    ];
+}
+
+/// Compute-fabric communication type (§V-C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FabricType {
+    /// Systolic-array fabrics with a single point of access to external
+    /// memory per data structure (shared MLU/TLU/MSU), e.g. Tensaurus.
+    Type1,
+    /// Fabrics with multiple independent points of access — one per PE
+    /// running Algorithm 3 on its own partition.
+    Type2,
+}
+
+impl FabricType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricType::Type1 => "type1",
+            FabricType::Type2 => "type2",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FabricType> {
+        match s {
+            "type1" | "1" => Some(FabricType::Type1),
+            "type2" | "2" => Some(FabricType::Type2),
+            _ => None,
+        }
+    }
+}
+
+/// Cache parameters (paper Table II rows "Cache").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Degree of set-associativity (A: 2, B: 1).
+    pub associativity: usize,
+    /// Total number of cache lines (A: 8192, B: 4096).
+    pub lines: usize,
+    /// Cache-line width in BITS, kept equal to the memory interface IP data
+    /// width (512) to avoid implementation complexities (§IV-B).
+    pub line_bits: usize,
+    /// Hit-pipeline depth (paper: 3-stage for high frequency).
+    pub pipeline_stages: u64,
+    /// MSHR primary-miss entries (used by the cache-only baseline; the
+    /// proposed system absorbs secondary misses in the RRSH instead).
+    pub mshr_entries: usize,
+    /// Secondary misses a single MSHR entry can track before stalling —
+    /// the "conventional MSHR cannot handle a large number of secondary
+    /// cache misses" knob (§V-D).
+    pub mshr_secondary_cap: usize,
+}
+
+impl CacheConfig {
+    pub fn line_bytes(&self) -> u64 {
+        (self.line_bits / 8) as u64
+    }
+
+    pub fn sets(&self) -> usize {
+        self.lines / self.associativity
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.lines as u64 * self.line_bytes()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.associativity == 0 || self.lines == 0 {
+            return Err("cache: associativity and lines must be > 0".into());
+        }
+        if self.lines % self.associativity != 0 {
+            return Err(format!(
+                "cache: lines {} not divisible by associativity {}",
+                self.lines, self.associativity
+            ));
+        }
+        if !is_pow2(self.sets() as u64) {
+            return Err(format!("cache: sets {} must be a power of two", self.sets()));
+        }
+        if self.line_bits % 8 != 0 || !is_pow2(self.line_bytes()) {
+            return Err("cache: line width must be a power-of-two byte count".into());
+        }
+        Ok(())
+    }
+}
+
+/// DMA engine parameters (Table II "DMA Engine").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DmaConfig {
+    /// Number of parallel DMA buffers (paper: 4; saturates after 4, §IV-E).
+    pub n_buffers: usize,
+    /// Size of a single DMA buffer in bytes (paper: 256 B).
+    pub buffer_bytes: u64,
+}
+
+impl DmaConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_buffers == 0 {
+            return Err("dma: n_buffers must be > 0".into());
+        }
+        if self.buffer_bytes == 0 || !is_pow2(self.buffer_bytes) {
+            return Err("dma: buffer_bytes must be a power of two".into());
+        }
+        Ok(())
+    }
+}
+
+/// Request Reductor parameters (Table II "Request Reductor").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RrConfig {
+    /// RRSH (XOR-hash table) entries; paper uses 4096 —
+    /// proportional to cache_lines / associativity (§IV-C1).
+    pub rrsh_entries: usize,
+    /// CAM temporary-buffer entries holding recent cache lines (paper: 8,
+    /// "since CAMs are hardware expensive, we keep [it] small").
+    pub temp_buffer_entries: usize,
+    /// RR pipeline depth (paper: 2-stage).
+    pub pipeline_stages: u64,
+}
+
+impl RrConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !is_pow2(self.rrsh_entries as u64) {
+            return Err("rr: rrsh_entries must be a power of two".into());
+        }
+        if self.temp_buffer_entries == 0 {
+            return Err("rr: temp_buffer_entries must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// DRAM / memory-interface-IP timing model (user-clock cycles @300 MHz).
+///
+/// The paper connects to the Xilinx UltraScale Memory Interface IP
+/// (512-bit data, 31-bit address). We fold DDR4 bank timing into
+/// user-clock latencies; see DESIGN.md §6.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DramConfig {
+    /// Data-bus width in bits (Xilinx MIG on U250: 512 with ECC).
+    pub data_bits: usize,
+    /// Number of DRAM banks the address space interleaves over.
+    pub banks: usize,
+    /// Row-buffer size per bank in bytes (DDR4 x4 rank: 1 KiB columns × 8).
+    pub row_bytes: u64,
+    /// Latency of a row-buffer hit (tCL + controller), user cycles.
+    pub t_row_hit: u64,
+    /// Latency of a row miss (tRCD + tCL + controller), user cycles.
+    pub t_row_miss: u64,
+    /// Extra precharge penalty when the bank has a different open row.
+    pub t_precharge: u64,
+    /// Fixed front-end overhead of the memory controller IP per request.
+    pub t_controller: u64,
+    /// Maximum outstanding requests the controller accepts (queue depth).
+    pub max_outstanding: usize,
+    /// Address width in bits (MIG on U250: 31).
+    pub addr_bits: usize,
+}
+
+impl DramConfig {
+    pub fn beat_bytes(&self) -> u64 {
+        (self.data_bits / 8) as u64
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !is_pow2(self.banks as u64) || !is_pow2(self.row_bytes) {
+            return Err("dram: banks and row_bytes must be powers of two".into());
+        }
+        if self.data_bits % 8 != 0 {
+            return Err("dram: data_bits must be byte aligned".into());
+        }
+        if self.max_outstanding == 0 {
+            return Err("dram: max_outstanding must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// PE / workload front-end parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Number of processing elements.
+    pub n_pes: usize,
+    /// Compute fabric type (decides the trace shape + LMB attachment).
+    pub fabric: FabricType,
+    /// Rank R — elements per factor-matrix fiber (paper evaluation: 32).
+    pub rank: usize,
+    /// Cycles the PE spends computing per nonzero once operands arrive
+    /// (vectorized across rank lanes; memory time dominates at 1–2).
+    pub compute_cycles_per_nnz: u64,
+    /// Outstanding nonzeros a PE may have in flight (decoupling depth).
+    pub max_inflight: usize,
+}
+
+impl PeConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_pes == 0 || self.rank == 0 || self.max_inflight == 0 {
+            return Err("pe: n_pes, rank, max_inflight must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+/// Full memory-system configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SystemConfig {
+    pub kind: SystemKind,
+    /// Number of LMBs (A: 1, B: 4). PEs are distributed round-robin.
+    pub n_lmbs: usize,
+    pub cache: CacheConfig,
+    pub dma: DmaConfig,
+    pub rr: RrConfig,
+    pub dram: DramConfig,
+    pub pe: PeConfig,
+    /// Human label ("config-a", "config-b", ...).
+    pub label: String,
+}
+
+impl SystemConfig {
+    /// Paper Configuration-A: one large LMB for Type-1 fabrics.
+    /// Cache: 2-way, 8192 lines, 512-bit lines. DMA: 4 × 256 B. RRSH 4096.
+    pub fn config_a() -> SystemConfig {
+        SystemConfig {
+            kind: SystemKind::Proposed,
+            n_lmbs: 1,
+            cache: CacheConfig {
+                associativity: 2,
+                lines: 8192,
+                line_bits: 512,
+                pipeline_stages: 3,
+                mshr_entries: 8,
+                mshr_secondary_cap: 1,
+            },
+            dma: DmaConfig {
+                n_buffers: 4,
+                buffer_bytes: 256,
+            },
+            rr: RrConfig {
+                rrsh_entries: 4096,
+                temp_buffer_entries: 8,
+                pipeline_stages: 2,
+            },
+            dram: DramConfig::mig_u250(),
+            pe: PeConfig {
+                n_pes: 4,
+                fabric: FabricType::Type1,
+                rank: 32,
+                compute_cycles_per_nnz: 1,
+                max_inflight: 8,
+            },
+            label: "config-a".into(),
+        }
+    }
+
+    /// Paper Configuration-B: 4 small LMBs (direct-mapped 4096-line caches),
+    /// one per Type-2 PE.
+    pub fn config_b() -> SystemConfig {
+        let mut c = SystemConfig::config_a();
+        c.n_lmbs = 4;
+        c.cache.associativity = 1;
+        c.cache.lines = 4096;
+        c.pe.fabric = FabricType::Type2;
+        c.label = "config-b".into();
+        c
+    }
+
+    /// A baseline variant derived from this config (same DRAM + PEs).
+    pub fn as_baseline(&self, kind: SystemKind) -> SystemConfig {
+        let mut c = self.clone();
+        c.kind = kind;
+        c.label = format!("{}-{}", self.label, kind.name());
+        c
+    }
+
+    /// Per-LMB PE count (PEs are distributed round-robin over LMBs).
+    pub fn pes_per_lmb(&self) -> usize {
+        crate::util::ceil_div(self.pe.n_pes as u64, self.n_lmbs as u64) as usize
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_lmbs == 0 {
+            return Err("system: n_lmbs must be > 0".into());
+        }
+        if self.n_lmbs > self.pe.n_pes {
+            return Err(format!(
+                "system: n_lmbs {} > n_pes {}",
+                self.n_lmbs, self.pe.n_pes
+            ));
+        }
+        self.cache.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.dma.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.rr.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.dram.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.pe.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        Ok(())
+    }
+
+    /// Apply `--section.key value`-style overrides (from CLI or file).
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let parse_usize =
+            |v: &str| v.parse::<usize>().map_err(|e| format!("{key}={v}: {e}"));
+        let parse_u64 = |v: &str| v.parse::<u64>().map_err(|e| format!("{key}={v}: {e}"));
+        match key {
+            "system.kind" => {
+                self.kind =
+                    SystemKind::from_name(value).ok_or(format!("unknown kind {value:?}"))?
+            }
+            "system.n_lmbs" => self.n_lmbs = parse_usize(value)?,
+            "cache.associativity" => self.cache.associativity = parse_usize(value)?,
+            "cache.lines" => self.cache.lines = parse_usize(value)?,
+            "cache.line_bits" => self.cache.line_bits = parse_usize(value)?,
+            "cache.mshr_entries" => self.cache.mshr_entries = parse_usize(value)?,
+            "cache.mshr_secondary_cap" => self.cache.mshr_secondary_cap = parse_usize(value)?,
+            "dma.n_buffers" => self.dma.n_buffers = parse_usize(value)?,
+            "dma.buffer_bytes" => self.dma.buffer_bytes = parse_u64(value)?,
+            "rr.rrsh_entries" => self.rr.rrsh_entries = parse_usize(value)?,
+            "rr.temp_buffer_entries" => self.rr.temp_buffer_entries = parse_usize(value)?,
+            "pe.n_pes" => self.pe.n_pes = parse_usize(value)?,
+            "pe.rank" => self.pe.rank = parse_usize(value)?,
+            "pe.fabric" => {
+                self.pe.fabric =
+                    FabricType::from_name(value).ok_or(format!("unknown fabric {value:?}"))?
+            }
+            "pe.compute_cycles_per_nnz" => self.pe.compute_cycles_per_nnz = parse_u64(value)?,
+            "pe.max_inflight" => self.pe.max_inflight = parse_usize(value)?,
+            "dram.t_row_hit" => self.dram.t_row_hit = parse_u64(value)?,
+            "dram.t_row_miss" => self.dram.t_row_miss = parse_u64(value)?,
+            "dram.t_controller" => self.dram.t_controller = parse_u64(value)?,
+            "dram.max_outstanding" => self.dram.max_outstanding = parse_usize(value)?,
+            "dram.banks" => self.dram.banks = parse_usize(value)?,
+            _ => return Err(format!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    /// Load a preset by name, then apply `key = value` overrides from `src`.
+    pub fn from_kv(preset: &str, src: &str) -> Result<SystemConfig, String> {
+        let mut cfg = match preset {
+            "config-a" | "a" => SystemConfig::config_a(),
+            "config-b" | "b" => SystemConfig::config_b(),
+            other => return Err(format!("unknown preset {other:?}")),
+        };
+        for (k, v) in parse_kv_str(src)? {
+            cfg.apply_override(&k, &v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// JSON dump for experiment records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("kind", Json::str(self.kind.name())),
+            ("n_lmbs", Json::num(self.n_lmbs as f64)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("associativity", Json::num(self.cache.associativity as f64)),
+                    ("lines", Json::num(self.cache.lines as f64)),
+                    ("line_bits", Json::num(self.cache.line_bits as f64)),
+                    ("mshr_entries", Json::num(self.cache.mshr_entries as f64)),
+                ]),
+            ),
+            (
+                "dma",
+                Json::obj(vec![
+                    ("n_buffers", Json::num(self.dma.n_buffers as f64)),
+                    ("buffer_bytes", Json::num(self.dma.buffer_bytes as f64)),
+                ]),
+            ),
+            (
+                "rr",
+                Json::obj(vec![
+                    ("rrsh_entries", Json::num(self.rr.rrsh_entries as f64)),
+                    (
+                        "temp_buffer_entries",
+                        Json::num(self.rr.temp_buffer_entries as f64),
+                    ),
+                ]),
+            ),
+            (
+                "pe",
+                Json::obj(vec![
+                    ("n_pes", Json::num(self.pe.n_pes as f64)),
+                    ("fabric", Json::str(self.pe.fabric.name())),
+                    ("rank", Json::num(self.pe.rank as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl DramConfig {
+    /// Xilinx MIG-like DDR4 channel on Alveo U250 (see DESIGN.md §6).
+    pub fn mig_u250() -> DramConfig {
+        DramConfig {
+            data_bits: 512,
+            banks: 16,
+            row_bytes: 8192,
+            t_row_hit: 28,
+            t_row_miss: 52,
+            t_precharge: 12,
+            t_controller: 8,
+            max_outstanding: 32,
+            addr_bits: 31,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table2() {
+        let a = SystemConfig::config_a();
+        assert_eq!(a.n_lmbs, 1);
+        assert_eq!(a.cache.associativity, 2);
+        assert_eq!(a.cache.lines, 8192);
+        assert_eq!(a.cache.line_bits, 512);
+        assert_eq!(a.dma.n_buffers, 4);
+        assert_eq!(a.dma.buffer_bytes, 256);
+        assert_eq!(a.rr.rrsh_entries, 4096);
+        assert_eq!(a.rr.temp_buffer_entries, 8);
+        a.validate().unwrap();
+
+        let b = SystemConfig::config_b();
+        assert_eq!(b.n_lmbs, 4);
+        assert_eq!(b.cache.associativity, 1);
+        assert_eq!(b.cache.lines, 4096);
+        assert_eq!(b.pe.fabric, FabricType::Type2);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn rrsh_sizing_rule_holds_for_presets() {
+        // §IV-C1: RRSH entries ∝ cache lines / associativity.
+        let a = SystemConfig::config_a();
+        assert_eq!(a.rr.rrsh_entries, a.cache.lines / a.cache.associativity / 1);
+        let b = SystemConfig::config_b();
+        assert_eq!(b.rr.rrsh_entries, b.cache.lines / b.cache.associativity);
+    }
+
+    #[test]
+    fn overrides_and_validation() {
+        let mut c = SystemConfig::config_a();
+        c.apply_override("cache.lines", "2048").unwrap();
+        c.apply_override("dma.n_buffers", "8").unwrap();
+        c.apply_override("pe.fabric", "type2").unwrap();
+        assert_eq!(c.cache.lines, 2048);
+        assert_eq!(c.dma.n_buffers, 8);
+        assert_eq!(c.pe.fabric, FabricType::Type2);
+        assert!(c.apply_override("bogus.key", "1").is_err());
+        assert!(c.apply_override("cache.lines", "not-a-number").is_err());
+
+        c.cache.lines = 3000; // 1500 sets, not a power of two
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn baseline_derivation() {
+        let a = SystemConfig::config_a();
+        let c = a.as_baseline(SystemKind::CacheOnly);
+        assert_eq!(c.kind, SystemKind::CacheOnly);
+        assert_eq!(c.cache, a.cache);
+        assert!(c.label.contains("cache-only"));
+    }
+
+    #[test]
+    fn from_kv_parses_preset_plus_overrides() {
+        let cfg = SystemConfig::from_kv(
+            "config-b",
+            "# comment\ncache.lines = 1024\npe.rank=16\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.cache.lines, 1024);
+        assert_eq!(cfg.pe.rank, 16);
+        assert!(SystemConfig::from_kv("nope", "").is_err());
+    }
+
+    #[test]
+    fn cache_geometry_helpers() {
+        let a = SystemConfig::config_a();
+        assert_eq!(a.cache.line_bytes(), 64);
+        assert_eq!(a.cache.sets(), 4096);
+        assert_eq!(a.cache.capacity_bytes(), 8192 * 64);
+        assert_eq!(a.dram.beat_bytes(), 64);
+    }
+
+    #[test]
+    fn json_dump_has_key_fields() {
+        let j = SystemConfig::config_a().to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("proposed"));
+        assert!(j.get("cache").unwrap().get("lines").is_some());
+    }
+}

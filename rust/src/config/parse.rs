@@ -1,0 +1,66 @@
+//! `key = value` config-file parser (one setting per line, `#` comments).
+
+/// Parse `key = value` lines from a string. Returns pairs in file order.
+pub fn parse_kv_str(src: &str) -> Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+        let key = k.trim();
+        let val = v.trim();
+        if key.is_empty() || val.is_empty() {
+            return Err(format!("line {}: empty key or value in {raw:?}", lineno + 1));
+        }
+        out.push((key.to_string(), val.to_string()));
+    }
+    Ok(out)
+}
+
+/// Parse a `key = value` file from disk.
+pub fn parse_kv_file(path: &std::path::Path) -> Result<Vec<(String, String)>, String> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    parse_kv_str(&src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_lines_comments_whitespace() {
+        let kv = parse_kv_str(
+            "
+            # a comment
+            cache.lines = 4096   # trailing comment
+            pe.rank=32
+            ",
+        )
+        .unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("cache.lines".to_string(), "4096".to_string()),
+                ("pe.rank".to_string(), "32".to_string())
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_kv_str("just-a-token").is_err());
+        assert!(parse_kv_str("key =").is_err());
+        assert!(parse_kv_str("= value").is_err());
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(parse_kv_str("").unwrap().is_empty());
+        assert!(parse_kv_str("# only comments\n\n").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,112 @@
+//! Single-MTTKRP accelerator run: simulated memory timing + PJRT
+//! numerics for one mode-`mode` sweep over a tensor.
+
+use crate::config::SystemConfig;
+use crate::mttkrp::mttkrp_seq;
+use crate::runtime::{BatchComputeStats, Manifest, MttkrpExecutor};
+use crate::sim::{simulate, SimReport};
+use crate::tensor::{CooTensor, DenseMatrix, Mode};
+use crate::trace::workload_from_tensor;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Combined timing + compute report for one accelerator run.
+#[derive(Debug, Clone)]
+pub struct AccelReport {
+    pub sim: SimReport,
+    pub compute: BatchComputeStats,
+    /// Frobenius norm of the MTTKRP output (quick integrity signal).
+    pub output_norm: f64,
+    /// Max |Δ| between the PJRT output and the pure-Rust reference.
+    pub max_diff_vs_reference: f32,
+}
+
+impl AccelReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sim", self.sim.to_json()),
+            ("output_norm", Json::num(self.output_norm)),
+            (
+                "max_diff_vs_reference",
+                Json::num(self.max_diff_vs_reference as f64),
+            ),
+            (
+                "compute",
+                Json::obj(vec![
+                    ("batches", Json::num(self.compute.batches as f64)),
+                    ("nnz", Json::num(self.compute.nnz as f64)),
+                    (
+                        "execute_seconds",
+                        Json::num(self.compute.execute_seconds),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Run one mode-`mode` MTTKRP through the full stack:
+/// 1. generate the request trace for `cfg`'s fabric type,
+/// 2. simulate the memory system (paper's Fig. 4 metric),
+/// 3. execute the numerics via the AOT/PJRT path,
+/// 4. cross-check against the pure-Rust reference.
+pub fn run_accelerator(
+    cfg: &SystemConfig,
+    manifest: &Manifest,
+    t: &CooTensor,
+    mode: Mode,
+    m1: &DenseMatrix,
+    m2: &DenseMatrix,
+) -> Result<(DenseMatrix, AccelReport)> {
+    let workload = workload_from_tensor(
+        t,
+        mode,
+        cfg.pe.fabric,
+        cfg.pe.n_pes,
+        cfg.pe.rank,
+        cfg.dram.row_bytes,
+    );
+    let sim = simulate(cfg, &workload);
+
+    let mut exec = MttkrpExecutor::new(manifest)?;
+    let out = exec.mttkrp(t, mode, m1, m2)?;
+
+    let reference = mttkrp_seq(t, mode, m1, m2);
+    let max_diff = out.max_abs_diff(&reference);
+    let report = AccelReport {
+        sim,
+        compute: exec.stats.clone(),
+        output_norm: out.fro_norm(),
+        max_diff_vs_reference: max_diff,
+    };
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn full_stack_roundtrip() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let cfg = SystemConfig::config_b();
+        let mut rng = Rng::new(110);
+        let t = CooTensor::random(&mut rng, [32, 2000, 3000], 2500);
+        let r = manifest.partials.rank;
+        let d = DenseMatrix::random(&mut rng, 2000, r);
+        let c = DenseMatrix::random(&mut rng, 3000, r);
+        let (out, report) = run_accelerator(&cfg, &manifest, &t, Mode::I, &d, &c).unwrap();
+        assert_eq!(out.rows, 32);
+        assert!(report.sim.total_cycles > 0);
+        assert!(report.max_diff_vs_reference < 1e-3);
+        assert!(report.output_norm > 0.0);
+        let j = report.to_json();
+        assert!(j.get("sim").unwrap().get("total_cycles").is_some());
+    }
+}

@@ -1,0 +1,160 @@
+//! Timed CP-ALS driver (experiment E6): the end-to-end validation that
+//! all three layers compose — CP-ALS numerics run through the AOT/PJRT
+//! kernels while each mode's request stream is simulated on the
+//! configured memory system, so the run reports both *fit convergence*
+//! and *simulated memory cycles per sweep*.
+
+use crate::config::SystemConfig;
+use crate::mttkrp::{CpAls, CpAlsOptions, CpAlsReport};
+use crate::runtime::{Manifest, MttkrpExecutor};
+use crate::sim::{simulate, SimReport};
+use crate::tensor::{CooTensor, DenseMatrix, Mode};
+use crate::trace::workload_from_tensor;
+use crate::Result;
+
+/// CP-ALS report + simulated memory timing.
+#[derive(Debug, Clone)]
+pub struct TimedCpAlsReport {
+    pub als: CpAlsReport,
+    /// One memory-system simulation per mode (the access streams repeat
+    /// identically every sweep, so a sweep costs the sum of the three).
+    pub per_mode_sim: Vec<SimReport>,
+    /// Simulated memory cycles for one full ALS sweep.
+    pub cycles_per_sweep: u64,
+    /// Total simulated cycles for the whole run.
+    pub total_cycles: u64,
+    /// Host seconds spent in PJRT execution.
+    pub compute_seconds: f64,
+}
+
+/// End-to-end driver owning the executor + config.
+pub struct TimedCpAls {
+    cfg: SystemConfig,
+    manifest: Manifest,
+}
+
+impl TimedCpAls {
+    pub fn new(cfg: SystemConfig, manifest: Manifest) -> TimedCpAls {
+        TimedCpAls { cfg, manifest }
+    }
+
+    /// Run CP-ALS with the PJRT MTTKRP kernel and simulate each mode's
+    /// memory traffic on the configured system.
+    pub fn run(&self, t: &CooTensor, opts: CpAlsOptions) -> Result<TimedCpAlsReport> {
+        anyhow::ensure!(
+            opts.rank == self.manifest.partials.rank,
+            "CP-ALS rank {} != AOT rank {} — re-run `make artifacts --rank`",
+            opts.rank,
+            self.manifest.partials.rank
+        );
+        // Memory-system timing: one simulation per mode (the trace is
+        // identical across sweeps — the factor values change, not the
+        // access pattern).
+        let mut per_mode_sim = Vec::new();
+        for mode in Mode::ALL {
+            let mut sorted = t.clone();
+            sorted.sort_mode(mode);
+            let w = workload_from_tensor(
+                &sorted,
+                mode,
+                self.cfg.pe.fabric,
+                self.cfg.pe.n_pes,
+                opts.rank,
+                self.cfg.dram.row_bytes,
+            );
+            per_mode_sim.push(simulate(&self.cfg, &w));
+        }
+        let cycles_per_sweep: u64 = per_mode_sim.iter().map(|s| s.total_cycles).sum();
+
+        // Numerics through PJRT.
+        let mut exec = MttkrpExecutor::new(&self.manifest)?;
+        let mut als = CpAls::new(t, opts);
+        let mut err: Option<anyhow::Error> = None;
+        let report = {
+            let mut kernel =
+                |tt: &CooTensor, m: Mode, m1: &DenseMatrix, m2: &DenseMatrix| -> DenseMatrix {
+                    match exec.mttkrp(tt, m, m1, m2) {
+                        Ok(out) => out,
+                        Err(e) => {
+                            // Surface the first failure after the sweep.
+                            if err.is_none() {
+                                err = Some(e);
+                            }
+                            DenseMatrix::zeros(tt.dim(m) as usize, m1.cols)
+                        }
+                    }
+                };
+            als.run_with(&mut kernel)
+        };
+        if let Some(e) = err {
+            return Err(e);
+        }
+        let sweeps = report.iters.len() as u64;
+        Ok(TimedCpAlsReport {
+            als: report,
+            per_mode_sim,
+            cycles_per_sweep,
+            total_cycles: cycles_per_sweep * sweeps,
+            compute_seconds: exec.stats.execute_seconds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::find_artifacts_dir;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn timed_als_converges_and_reports_cycles() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let rank = manifest.partials.rank;
+        let mut rng = Rng::new(120);
+        let t = CooTensor::random(&mut rng, [30, 40, 50], 4000);
+        let driver = TimedCpAls::new(SystemConfig::config_b(), manifest);
+        let report = driver
+            .run(
+                &t,
+                CpAlsOptions {
+                    rank,
+                    max_iters: 3,
+                    fit_tol: 0.0,
+                    seed: 1,
+                },
+            )
+            .unwrap();
+        assert_eq!(report.als.iters.len(), 3);
+        assert_eq!(report.per_mode_sim.len(), 3);
+        assert!(report.cycles_per_sweep > 0);
+        assert_eq!(report.total_cycles, report.cycles_per_sweep * 3);
+        assert!(report.compute_seconds > 0.0);
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let manifest = Manifest::load(&dir).unwrap();
+        let bad_rank = manifest.partials.rank + 3;
+        let mut rng = Rng::new(121);
+        let t = CooTensor::random(&mut rng, [8, 8, 8], 50);
+        let driver = TimedCpAls::new(SystemConfig::config_a(), manifest);
+        assert!(driver
+            .run(
+                &t,
+                CpAlsOptions {
+                    rank: bad_rank,
+                    max_iters: 1,
+                    ..Default::default()
+                }
+            )
+            .is_err());
+    }
+}

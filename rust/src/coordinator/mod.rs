@@ -1,0 +1,14 @@
+//! L3 coordinator: binds the memory-system simulator (timing) to the
+//! PJRT compute path (numerics) and drives end-to-end workloads.
+//!
+//! The paper's contribution is the memory system, so the coordinator's
+//! job is the glue an accelerator host would do: partition nonzeros,
+//! generate the request streams, run them through the simulated LMBs for
+//! the paper's *total memory access time* metric, and execute the same
+//! batches through the AOT-compiled kernels for real numerics.
+
+mod accel;
+mod driver;
+
+pub use accel::{run_accelerator, AccelReport};
+pub use driver::{TimedCpAls, TimedCpAlsReport};

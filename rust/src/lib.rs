@@ -1,0 +1,41 @@
+//! # mttkrp-memsys
+//!
+//! Reproduction of *"Reconfigurable Low-latency Memory System for Sparse
+//! Matricized Tensor Times Khatri-Rao Product on FPGA"* (Wijeratne, Kannan,
+//! Prasanna — 2021) as a three-layer Rust + JAX/Pallas + PJRT stack.
+//!
+//! The paper's contribution — a reconfigurable **Local Memory Block (LMB)**
+//! memory system (non-blocking cache + Request Reductor + DMA engine behind
+//! a request router) for sparse MTTKRP accelerators — is reproduced as a
+//! cycle-level simulator ([`sim`]), driven by request traces generated from
+//! real sparse tensors ([`tensor`], [`trace`]). The MTTKRP arithmetic runs
+//! through AOT-compiled JAX/Pallas HLO via PJRT ([`runtime`]), orchestrated
+//! by the [`coordinator`]. FPGA resource utilization (paper Table II) is
+//! reproduced by an analytic model ([`resource`]).
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — event loop, memory-system simulation, batching,
+//!   routing, CLI, metrics.
+//! * **L2 (python/compile/model.py)** — batched spMTTKRP JAX graph.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (partials +
+//!   scatter-as-matmul), lowered with `interpret=True` into the same HLO.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod mttkrp;
+pub mod resource;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod trace;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

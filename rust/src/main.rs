@@ -1,0 +1,294 @@
+//! `mttkrp-memsys` — CLI for the reconfigurable-memory-system
+//! reproduction.
+//!
+//! Subcommands:
+//!   fig4       Regenerate the paper's Fig. 4 speedup comparison.
+//!   table2     Print the Table II resource-utilization model.
+//!   table3     Print the Table III dataset summary.
+//!   simulate   Run one memory-system simulation (config + workload).
+//!   mttkrp     Run one MTTKRP through the full stack (sim + PJRT).
+//!   als        Timed CP-ALS (experiment E6).
+//!   gen        Generate a synthetic tensor to a .tns file.
+//!   freq       Max-frequency model sweep (§IV-E ablation).
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::coordinator::TimedCpAls;
+use mttkrp_memsys::mttkrp::CpAlsOptions;
+use mttkrp_memsys::resource::{max_frequency_mhz, table2};
+use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
+use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::tensor::{gen, io, CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::cli::Args;
+use mttkrp_memsys::util::rng::Rng;
+use mttkrp_memsys::util::table::{Align, Table};
+use mttkrp_memsys::util::{fmt_bytes, fmt_count};
+
+fn main() {
+    let args = Args::parse_env(true);
+    let result = match args.subcommand.as_deref() {
+        Some("fig4") => cmd_fig4(&args),
+        Some("table2") => cmd_table2(),
+        Some("table3") => cmd_table3(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("mttkrp") => cmd_mttkrp(&args),
+        Some("als") => cmd_als(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("freq") => cmd_freq(),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "mttkrp-memsys — reconfigurable low-latency memory system for sparse MTTKRP
+
+USAGE: mttkrp-memsys <subcommand> [--options]
+
+  fig4      [--scale 0.01]            Fig. 4 speedups (all systems × configs × datasets)
+  table2                              Table II resource model
+  table3    [--scale 1.0]             Table III dataset summary
+  simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
+            [--scale 0.01] [--dataset synth01|synth02] [--<section.key> v]
+  mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
+  als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
+  gen       --out t.tns [--dataset synth01] [--scale 0.01]
+  freq                                max-frequency model sweep (§IV-E)"
+    );
+}
+
+fn load_tensor(args: &Args) -> CooTensor {
+    let scale = args.get_f64("scale", 0.01);
+    match args.get_str("dataset", "synth01").as_str() {
+        "synth02" => gen::synth_02(scale),
+        _ => gen::synth_01(scale),
+    }
+}
+
+fn preset(args: &Args) -> anyhow::Result<SystemConfig> {
+    let name = args.get_str("preset", "b");
+    let mut cfg = match name.as_str() {
+        "a" | "config-a" => SystemConfig::config_a(),
+        "b" | "config-b" => SystemConfig::config_b(),
+        other => anyhow::bail!("unknown preset {other:?}"),
+    };
+    if let Some(sys) = args.get("system") {
+        let kind = SystemKind::from_name(sys)
+            .ok_or_else(|| anyhow::anyhow!("unknown system {sys:?}"))?;
+        cfg = cfg.as_baseline(kind);
+    }
+    // Pass through any config-style overrides (`--cache.lines 4096`).
+    for (k, v) in args.options() {
+        if k.contains('.') {
+            cfg.apply_override(k, v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+    }
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn manifest() -> anyhow::Result<Manifest> {
+    let dir = find_artifacts_dir()
+        .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?;
+    Manifest::load(&dir)
+}
+
+fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
+    let scale = args.get_f64("scale", 0.01);
+    println!("Fig. 4 — memory-access-time speedup over IP-only (scale {scale})\n");
+    let mut table = Table::new(&["category", "ip-only", "cache-only", "dma-only", "proposed"])
+        .aligns(&[
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+            Align::Right,
+        ]);
+    for (cfg_base, fabric, label) in [
+        (SystemConfig::config_a(), FabricType::Type1, "A_1"),
+        (SystemConfig::config_b(), FabricType::Type2, "B_2"),
+    ] {
+        for (ds, tname) in [("synth01", "S1"), ("synth02", "S2")] {
+            let t = match ds {
+                "synth02" => gen::synth_02(scale),
+                _ => gen::synth_01(scale),
+            };
+            let w = workload_from_tensor(
+                &t,
+                Mode::I,
+                fabric,
+                cfg_base.pe.n_pes,
+                cfg_base.pe.rank,
+                cfg_base.dram.row_bytes,
+            );
+            let reports: Vec<_> = SystemKind::ALL
+                .iter()
+                .map(|&k| {
+                    let mut c = cfg_base.as_baseline(k);
+                    c.pe.fabric = fabric;
+                    simulate(&c, &w)
+                })
+                .collect();
+            let ip = &reports[0];
+            table.row(&[
+                format!("{label}_{tname}"),
+                "1.00".to_string(),
+                format!("{:.2}", reports[1].speedup_over(ip)),
+                format!("{:.2}", reports[2].speedup_over(ip)),
+                format!("{:.2}", reports[3].speedup_over(ip)),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("\npaper: proposed ≈ 3.5× vs IP-only, ≈ 2× vs cache-only, ≈ 1.26× vs DMA-only");
+    Ok(())
+}
+
+fn cmd_table2() -> anyhow::Result<()> {
+    let a = SystemConfig::config_a();
+    let b = SystemConfig::config_b();
+    println!("Table II — module configuration and resource utilization (model)\n");
+    println!("{}", table2(&[&a, &b]));
+    Ok(())
+}
+
+fn cmd_table3(args: &Args) -> anyhow::Result<()> {
+    let scale = args.get_f64("scale", 1.0);
+    println!("Table III — sparse 3D tensor datasets (scale {scale})\n");
+    let mut t = Table::new(&["Tensor", "Dimensions", "Nonzeros", "Density"]).aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+    ]);
+    for spec in [gen::SYNTH_01.scaled(scale), gen::SYNTH_02.scaled(scale)] {
+        t.row(&[
+            spec.name.to_string(),
+            format!("{} x {} x {}", spec.dims[0], spec.dims[1], spec.dims[2]),
+            fmt_count(spec.nnz),
+            format!("{:.2E}", spec.density()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = preset(args)?;
+    let t = load_tensor(args);
+    let w = workload_from_tensor(
+        &t,
+        Mode::I,
+        cfg.pe.fabric,
+        cfg.pe.n_pes,
+        cfg.pe.rank,
+        cfg.dram.row_bytes,
+    );
+    println!(
+        "workload: {} nnz={} accesses={} bytes={}",
+        t.name,
+        fmt_count(t.nnz() as u64),
+        fmt_count(w.n_accesses() as u64),
+        fmt_bytes(w.total_bytes())
+    );
+    let report = simulate(&cfg, &w);
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_mttkrp(args: &Args) -> anyhow::Result<()> {
+    let cfg = preset(args)?;
+    let man = manifest()?;
+    let mut t = load_tensor(args);
+    t.sort_mode(Mode::I);
+    let r = man.partials.rank;
+    let mut rng = Rng::new(args.get_u64("seed", 7));
+    let d = DenseMatrix::random(&mut rng, t.dims[1] as usize, r);
+    let c = DenseMatrix::random(&mut rng, t.dims[2] as usize, r);
+    let (_out, report) =
+        mttkrp_memsys::coordinator::run_accelerator(&cfg, &man, &t, Mode::I, &d, &c)?;
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_als(args: &Args) -> anyhow::Result<()> {
+    let cfg = preset(args)?;
+    let man = manifest()?;
+    let t = load_tensor(args);
+    let opts = CpAlsOptions {
+        rank: man.partials.rank,
+        max_iters: args.get_usize("iters", 10),
+        fit_tol: args.get_f64("tol", 1e-5),
+        seed: args.get_u64("seed", 7),
+    };
+    let driver = TimedCpAls::new(cfg, man);
+    let report = driver.run(&t, opts)?;
+    for it in &report.als.iters {
+        println!(
+            "iter {:>3}  fit {:.6}  rel_error {:.6}",
+            it.iter, it.fit, it.rel_error
+        );
+    }
+    println!(
+        "cycles/sweep {}  total cycles {}  compute {:.2}s  converged {}",
+        fmt_count(report.cycles_per_sweep),
+        fmt_count(report.total_cycles),
+        report.compute_seconds,
+        report.als.converged
+    );
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let t = load_tensor(args);
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out <file.tns> required"))?;
+    io::write_tns(&t, std::path::Path::new(out))?;
+    println!(
+        "wrote {} ({} nnz, {})",
+        out,
+        fmt_count(t.nnz() as u64),
+        fmt_bytes(t.stored_bytes())
+    );
+    Ok(())
+}
+
+fn cmd_freq() -> anyhow::Result<()> {
+    println!("max-frequency model (§IV-E): DMA-count and cache-size sweeps\n");
+    let mut t = Table::new(&["dma buffers", "fmax (MHz)", "", "cache lines", "fmax (MHz)"])
+        .aligns(&[
+            Align::Right,
+            Align::Right,
+            Align::Left,
+            Align::Right,
+            Align::Right,
+        ]);
+    let dmas = [1usize, 2, 4, 6, 8];
+    let lines = [2048usize, 4096, 8192, 16384, 32768];
+    for i in 0..5 {
+        let mut ca = SystemConfig::config_a();
+        ca.dma.n_buffers = dmas[i];
+        let mut cb = SystemConfig::config_a();
+        cb.cache.lines = lines[i];
+        t.row(&[
+            dmas[i].to_string(),
+            format!("{:.0}", max_frequency_mhz(&ca)),
+            String::new(),
+            lines[i].to_string(),
+            format!("{:.0}", max_frequency_mhz(&cb)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Fiber-oriented MTTKRP formulations — Eq. (3) and Eq. (4) of the paper.
+//!
+//! State-of-the-art fabrics execute one of:
+//!
+//! ```text
+//! (3)  fiber_out = scalar · Σ_K Σ_J (fiber_k ∘ fiber_j)
+//! (4)  fiber_out = Σ_K Σ_J  fiber_k ∘ (scalar · fiber_j)
+//! ```
+//!
+//! Both reassociate the same sum; the *memory access pattern* is what the
+//! paper cares about: load input fibers (streaming → DMA), load scalars
+//! (element-wise, cached), store output fibers (streaming → DMA). These
+//! implementations are organized around those three access types so the
+//! trace generator mirrors them 1:1.
+
+use super::operand_modes;
+use crate::tensor::{CooTensor, DenseMatrix, Mode};
+
+/// Eq. (3)-shaped evaluation: group nonzeros by output fiber; for each
+/// nonzero accumulate the Hadamard product of the two input fibers, scaled
+/// once by the tensor scalar at the end of each product term.
+pub fn mttkrp_fiber_eq3(
+    t: &CooTensor,
+    mode: Mode,
+    m1: &DenseMatrix,
+    m2: &DenseMatrix,
+) -> DenseMatrix {
+    fiber_impl(t, mode, m1, m2, true)
+}
+
+/// Eq. (4)-shaped evaluation: scale the first input fiber by the scalar,
+/// then Hadamard with the second.
+pub fn mttkrp_fiber_eq4(
+    t: &CooTensor,
+    mode: Mode,
+    m1: &DenseMatrix,
+    m2: &DenseMatrix,
+) -> DenseMatrix {
+    fiber_impl(t, mode, m1, m2, false)
+}
+
+fn fiber_impl(
+    t: &CooTensor,
+    mode: Mode,
+    m1: &DenseMatrix,
+    m2: &DenseMatrix,
+    scale_after: bool,
+) -> DenseMatrix {
+    super::check_shapes(t, mode, m1, m2, &DenseMatrix::zeros(t.dim(mode) as usize, m1.cols));
+    assert!(t.is_sorted_mode(mode), "fiber evaluation needs mode-sorted input");
+    let (om1, om2) = operand_modes(mode);
+    let r = m1.cols;
+    let mut out = DenseMatrix::zeros(t.dim(mode) as usize, r);
+    let mut fiber_out = vec![0f32; r];
+    let mut z = 0usize;
+    while z < t.nnz() {
+        let oi = t.coord(z, mode);
+        fiber_out.fill(0.0);
+        // Accumulate all nonzeros of this output fiber.
+        while z < t.nnz() && t.coord(z, mode) == oi {
+            let scalar = t.vals[z];
+            let fj = m1.row(t.coord(z, om1) as usize); // "fiber_j" (DMA load)
+            let fk = m2.row(t.coord(z, om2) as usize); // "fiber_k" (DMA load)
+            if scale_after {
+                // Eq. (3): scalar · (fiber_k ∘ fiber_j)
+                for x in 0..r {
+                    fiber_out[x] += scalar * (fk[x] * fj[x]);
+                }
+            } else {
+                // Eq. (4): fiber_k ∘ (scalar · fiber_j)
+                for x in 0..r {
+                    fiber_out[x] += fk[x] * (scalar * fj[x]);
+                }
+            }
+            z += 1;
+        }
+        // Store the output fiber (DMA store).
+        out.row_mut(oi as usize).copy_from_slice(&fiber_out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::seq::mttkrp_seq;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq3_eq4_and_alg2_agree() {
+        let mut rng = Rng::new(30);
+        let t = CooTensor::random(&mut rng, [24, 18, 20], 900);
+        let d = DenseMatrix::random(&mut rng, 18, 8);
+        let c = DenseMatrix::random(&mut rng, 20, 8);
+        let a2 = mttkrp_seq(&t, Mode::I, &d, &c);
+        let e3 = mttkrp_fiber_eq3(&t, Mode::I, &d, &c);
+        let e4 = mttkrp_fiber_eq4(&t, Mode::I, &d, &c);
+        assert!(e3.max_abs_diff(&a2) < 1e-4, "eq3 vs alg2: {}", e3.max_abs_diff(&a2));
+        assert!(e4.max_abs_diff(&a2) < 1e-4, "eq4 vs alg2: {}", e4.max_abs_diff(&a2));
+        assert!(e3.max_abs_diff(&e4) < 1e-4);
+    }
+
+    #[test]
+    fn single_fiber_tensor() {
+        let mut t = CooTensor::new("one", [1, 3, 3]);
+        t.push(0, 0, 1, 2.0);
+        t.push(0, 2, 0, -1.0);
+        let mut rng = Rng::new(31);
+        let d = DenseMatrix::random(&mut rng, 3, 4);
+        let c = DenseMatrix::random(&mut rng, 3, 4);
+        let e3 = mttkrp_fiber_eq3(&t, Mode::I, &d, &c);
+        let a2 = mttkrp_seq(&t, Mode::I, &d, &c);
+        assert!(e3.max_abs_diff(&a2) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "mode-sorted")]
+    fn unsorted_panics() {
+        let mut t = CooTensor::new("u", [4, 2, 2]);
+        t.push(3, 0, 0, 1.0);
+        t.push(0, 1, 1, 1.0); // descending i — unsorted
+        let d = DenseMatrix::zeros(2, 2);
+        let c = DenseMatrix::zeros(2, 2);
+        mttkrp_fiber_eq3(&t, Mode::I, &d, &c);
+    }
+}

@@ -1,0 +1,201 @@
+//! Small dense linear algebra for the CP-ALS normal equations:
+//! matmul, symmetric-positive-definite solves (Cholesky with a
+//! Tikhonov-regularized fallback), and the CP fit computation helpers.
+
+use crate::tensor::DenseMatrix;
+
+/// C = A · B (naïve; operands here are at most (dim × R) with R ≤ 64).
+pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut c = DenseMatrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let aik = a.at(i, k);
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            let crow = c.row_mut(i);
+            for j in 0..b.cols {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Cholesky factorization of a symmetric positive-definite R×R matrix.
+/// Returns the lower-triangular factor, or None if not SPD.
+pub fn cholesky(g: &DenseMatrix) -> Option<DenseMatrix> {
+    assert_eq!(g.rows, g.cols);
+    let n = g.rows;
+    let mut l = DenseMatrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = g.at(i, j) as f64;
+            for k in 0..j {
+                sum -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = (sum.sqrt()) as f32;
+            } else {
+                *l.at_mut(i, j) = (sum / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve X · G = B for X (row-wise), where G is SPD R×R and B is (n × R).
+/// This is the ALS update `A ← MTTKRP(B) · (CᵀC ∗ DᵀD)⁻¹`; we solve
+/// Gᵀ Xᵀ = Bᵀ via Cholesky (G symmetric ⇒ G = L Lᵀ).
+///
+/// If G is singular/ill-conditioned, a small ridge (λI) is added —
+/// standard practice in CP-ALS implementations.
+pub fn solve_gram(b: &DenseMatrix, g: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(g.rows, g.cols);
+    assert_eq!(b.cols, g.rows);
+    let mut g_reg = g.clone();
+    let mut l = cholesky(&g_reg);
+    let mut ridge = 1e-8f32 * (1.0 + g.fro_norm() as f32);
+    while l.is_none() && ridge < 1e6 {
+        for d in 0..g_reg.rows {
+            *g_reg.at_mut(d, d) = g.at(d, d) + ridge;
+        }
+        l = cholesky(&g_reg);
+        ridge *= 10.0;
+    }
+    let l = l.expect("gram matrix irreparably singular");
+    let n = g.rows;
+    let mut x = b.clone();
+    // For each row of B: solve L y = bᵀ then Lᵀ x = y.
+    for row in 0..b.rows {
+        let xr = x.row_mut(row);
+        // Forward substitution.
+        for i in 0..n {
+            let mut v = xr[i] as f64;
+            for k in 0..i {
+                v -= l.at(i, k) as f64 * xr[k] as f64;
+            }
+            xr[i] = (v / l.at(i, i) as f64) as f32;
+        }
+        // Backward substitution (Lᵀ).
+        for i in (0..n).rev() {
+            let mut v = xr[i] as f64;
+            for k in (i + 1)..n {
+                v -= l.at(k, i) as f64 * xr[k] as f64;
+            }
+            xr[i] = (v / l.at(i, i) as f64) as f32;
+        }
+    }
+    x
+}
+
+/// Sum of the elementwise product of two equally-shaped matrices
+/// (⟨A, B⟩_F) in f64.
+pub fn dot_f64(a: &DenseMatrix, b: &DenseMatrix) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_small() {
+        let a = DenseMatrix {
+            rows: 2,
+            cols: 3,
+            data: vec![1., 2., 3., 4., 5., 6.],
+        };
+        let b = DenseMatrix {
+            rows: 3,
+            cols: 2,
+            data: vec![7., 8., 9., 10., 11., 12.],
+        };
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn cholesky_recomposes() {
+        let mut rng = Rng::new(40);
+        let m = DenseMatrix::random(&mut rng, 8, 5);
+        let g = m.gram(); // SPD with probability 1
+        let l = cholesky(&g).expect("gram should be SPD");
+        // L·Lᵀ == G.
+        let mut lt = DenseMatrix::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                *lt.at_mut(i, j) = l.at(j, i);
+            }
+        }
+        let recomposed = matmul(&l, &lt);
+        assert!(recomposed.max_abs_diff(&g) < 1e-3 * (1.0 + g.fro_norm() as f32));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let g = DenseMatrix {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 2.0, 2.0, 1.0], // eigenvalues 3, -1
+        };
+        assert!(cholesky(&g).is_none());
+    }
+
+    #[test]
+    fn solve_gram_inverts() {
+        let mut rng = Rng::new(41);
+        let m = DenseMatrix::random(&mut rng, 10, 4);
+        let g = m.gram();
+        let x_true = DenseMatrix::random(&mut rng, 6, 4);
+        let b = matmul(&x_true, &g); // B = X·G
+        let x = solve_gram(&b, &g);
+        assert!(
+            x.max_abs_diff(&x_true) < 1e-2,
+            "diff {}",
+            x.max_abs_diff(&x_true)
+        );
+    }
+
+    #[test]
+    fn solve_gram_survives_singular_with_ridge() {
+        let g = DenseMatrix {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 1.0, 1.0, 1.0], // rank-1
+        };
+        let b = DenseMatrix {
+            rows: 1,
+            cols: 2,
+            data: vec![2.0, 2.0],
+        };
+        let x = solve_gram(&b, &g); // must not panic
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn dot_f64_is_frobenius_inner_product() {
+        let a = DenseMatrix {
+            rows: 1,
+            cols: 3,
+            data: vec![1., 2., 3.],
+        };
+        let b = DenseMatrix {
+            rows: 1,
+            cols: 3,
+            data: vec![4., 5., 6.],
+        };
+        assert_eq!(dot_f64(&a, &b), 32.0);
+    }
+}

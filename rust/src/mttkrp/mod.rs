@@ -1,0 +1,70 @@
+//! MTTKRP reference implementations and the CP-ALS driver.
+//!
+//! * [`seq`] — Algorithm 2 (COO-based sequential spMTTKRP).
+//! * [`parallel`] — Algorithm 3 (partitioned parallel spMTTKRP with the
+//!   `current_I`/`temp_Y` output-fiber register pattern).
+//! * [`fiber`] — the fiber-oriented formulations Eq. (3)/(4) that the
+//!   paper's Type-1/Type-2 compute fabrics execute.
+//! * [`linalg`] — small dense kernels for the ALS normal equations.
+//! * [`als`] — Algorithm 1 (CP-ALS) built on the above.
+//!
+//! All variants are cross-checked against each other and against the
+//! AOT-compiled JAX/Pallas path in `runtime::compute`.
+
+pub mod als;
+pub mod fiber;
+pub mod linalg;
+pub mod parallel;
+pub mod seq;
+
+pub use als::{CpAls, CpAlsOptions, CpAlsReport};
+pub use parallel::mttkrp_parallel;
+pub use seq::mttkrp_seq;
+
+use crate::tensor::{CooTensor, DenseMatrix, Mode};
+
+/// Operand matrices for a mode-`mode` MTTKRP: output rows indexed by
+/// `mode`'s coordinate, inputs by the other two (in cyclic order).
+///
+/// mode-I: A[i] += val · D[j] ∘ C[k]
+/// mode-J: D[j] += val · A[i] ∘ C[k]
+/// mode-K: C[k] += val · A[i] ∘ D[j]
+pub fn operand_modes(mode: Mode) -> (Mode, Mode) {
+    match mode {
+        Mode::I => (Mode::J, Mode::K),
+        Mode::J => (Mode::I, Mode::K),
+        Mode::K => (Mode::I, Mode::J),
+    }
+}
+
+/// Validate operand shapes for a mode-`mode` MTTKRP over `t`.
+pub fn check_shapes(t: &CooTensor, mode: Mode, m1: &DenseMatrix, m2: &DenseMatrix, out: &DenseMatrix) {
+    let (om1, om2) = operand_modes(mode);
+    assert_eq!(m1.rows as u64, t.dim(om1), "first operand rows != dim {om1:?}");
+    assert_eq!(m2.rows as u64, t.dim(om2), "second operand rows != dim {om2:?}");
+    assert_eq!(out.rows as u64, t.dim(mode), "output rows != dim {mode:?}");
+    assert_eq!(m1.cols, m2.cols, "rank mismatch");
+    assert_eq!(m1.cols, out.cols, "rank mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operand_mode_cycle() {
+        assert_eq!(operand_modes(Mode::I), (Mode::J, Mode::K));
+        assert_eq!(operand_modes(Mode::J), (Mode::I, Mode::K));
+        assert_eq!(operand_modes(Mode::K), (Mode::I, Mode::J));
+    }
+
+    #[test]
+    #[should_panic(expected = "rank mismatch")]
+    fn shape_check_catches_rank() {
+        let t = CooTensor::new("t", [2, 3, 4]);
+        let m1 = DenseMatrix::zeros(3, 4);
+        let m2 = DenseMatrix::zeros(4, 5);
+        let out = DenseMatrix::zeros(2, 4);
+        check_shapes(&t, Mode::I, &m1, &m2, &out);
+    }
+}

@@ -1,0 +1,88 @@
+//! Max-frequency model — captures the two §IV-E synthesis observations:
+//!
+//! * "Increasing the number of DMAs ... negatively impacts the maximum
+//!   operating frequency due to increased place and route complexity."
+//! * "We further observed that the cache size also influences the
+//!   maximum operating frequency of the overall design."
+//!
+//! Modeled as a base user clock degraded by routing-congestion terms in
+//! the DMA buffer count, cache capacity, and LMB fan-in. Constants chosen
+//! so the paper's configurations sit at the MIG's 300 MHz user clock.
+
+use crate::config::SystemConfig;
+
+/// Estimated maximum operating frequency (MHz) for a configuration.
+pub fn max_frequency_mhz(cfg: &SystemConfig) -> f64 {
+    let base = 322.0;
+    // DMA routing congestion: mild up to 4 buffers, steep beyond (the
+    // paper's "saturates after 4" ablation pairs with this).
+    let n_dma = cfg.dma.n_buffers as f64;
+    let dma_penalty = if n_dma <= 4.0 {
+        1.5 * n_dma
+    } else {
+        6.0 + 7.0 * (n_dma - 4.0)
+    };
+    // Cache capacity: deeper URAM/BRAM cascades lengthen the critical
+    // path roughly with log2 of capacity beyond 256 KiB.
+    let cap_kib = cfg.cache.capacity_bytes() as f64 / 1024.0;
+    let cache_penalty = 8.0 * (cap_kib / 256.0).log2().max(0.0);
+    // PE fan-in per LMB ("the complexity of the connection between PEs
+    // and LMB exponentially increases with the number of PEs", §IV).
+    let fanin = cfg.pes_per_lmb() as f64;
+    let fanin_penalty = 0.6 * fanin * fanin;
+    (base - dma_penalty - cache_penalty - fanin_penalty).max(50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_meet_the_mig_user_clock() {
+        // Both published configurations must close timing at ~300 MHz.
+        let fa = max_frequency_mhz(&SystemConfig::config_a());
+        let fb = max_frequency_mhz(&SystemConfig::config_b());
+        assert!((295.0..330.0).contains(&fa), "config-a {fa} MHz");
+        assert!((295.0..330.0).contains(&fb), "config-b {fb} MHz");
+    }
+
+    #[test]
+    fn more_dma_buffers_lower_fmax() {
+        let mut prev = f64::INFINITY;
+        for n in [1, 2, 4, 6, 8] {
+            let mut cfg = SystemConfig::config_a();
+            cfg.dma.n_buffers = n;
+            let f = max_frequency_mhz(&cfg);
+            assert!(f <= prev, "fmax should fall with DMA count: {n} → {f}");
+            prev = f;
+        }
+        // The drop beyond 4 is steeper than before 4 (§IV-E).
+        let f = |n: usize| {
+            let mut c = SystemConfig::config_a();
+            c.dma.n_buffers = n;
+            max_frequency_mhz(&c)
+        };
+        let slope_before = f(2) - f(4);
+        let slope_after = f(4) - f(6);
+        assert!(slope_after > slope_before);
+    }
+
+    #[test]
+    fn bigger_caches_lower_fmax() {
+        let f = |lines: usize| {
+            let mut c = SystemConfig::config_a();
+            c.cache.lines = lines;
+            max_frequency_mhz(&c)
+        };
+        assert!(f(16384) < f(8192));
+        assert!(f(32768) < f(16384));
+    }
+
+    #[test]
+    fn fmax_floor_holds() {
+        let mut cfg = SystemConfig::config_a();
+        cfg.dma.n_buffers = 64;
+        cfg.cache.lines = 1 << 20;
+        assert!(max_frequency_mhz(&cfg) >= 50.0);
+    }
+}

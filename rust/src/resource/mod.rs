@@ -1,0 +1,32 @@
+//! Analytic FPGA resource model — reproduces paper Table II.
+//!
+//! The paper reports post-place-and-route utilization on a Xilinx Alveo
+//! U250 (Vivado 2020.2). Without Vivado, we model each module's LUT /
+//! FF / BRAM / URAM cost as closed-form functions of its configuration
+//! parameters, with per-module constants *calibrated against the two
+//! published configurations* (Config-A and Config-B). The model then
+//! extrapolates for ablations (cache-size sweeps, DMA-count sweeps) the
+//! way real synthesis trends would: storage scales with capacity bits,
+//! control logic with ports and comparators, CAMs quadratically-ish with
+//! entries × tag width.
+//!
+//! A simple max-frequency model captures the two §IV-E claims: more DMA
+//! buffers and bigger caches both lower the achievable clock (routing
+//! congestion / deeper muxes).
+
+mod freq;
+mod model;
+
+pub use freq::max_frequency_mhz;
+pub use model::{table2, ModuleUtil, ResourceModel, U250};
+
+/// U250 device totals used for percentages.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub luts: u64,
+    pub ffs: u64,
+    /// BRAM36 blocks.
+    pub bram36: u64,
+    /// URAM288 blocks.
+    pub uram: u64,
+}

@@ -1,0 +1,313 @@
+//! Per-module resource formulas, calibrated against the paper's two
+//! published configurations (Table II).
+//!
+//! Calibration data (percent of U250 resources):
+//!
+//! | module (cfg)     | LUT%  | FF%   | BRAM% | URAM% |
+//! |------------------|-------|-------|-------|-------|
+//! | Cache (A)        | 1.87  | 1.24  | 0.24  | 1.25  |
+//! | Cache (B)        | 0.65  | 0.64  | 0.06  | 0.63  |
+//! | DMA Engine       | 0.04  | 0.01  | —     | 0.25  |
+//! | Request Reductor | 0.08  | 0.10  | —     | 1.25  |
+//! | LMB (A)          | 2.03  | 1.41  | 0.24  | 2.75  |
+//! | LMB (B)          | 0.85  | 0.81  | 0.06  | 2.13  |
+//! | System (A, 1 LMB)| 2.25  | 1.54  | 0.24  | 2.75  |
+//! | System (B, 4 LMB)| 3.61  | 3.35  | 0.24  | 8.52  |
+
+use crate::config::SystemConfig;
+use crate::util::table::{Align, Table};
+
+use super::Device;
+
+/// Xilinx Alveo U250 (paper §V-A: 1728 K LUTs, 3456 K FFs; device totals
+/// for BRAM36/URAM from the U250 datasheet).
+pub const U250: Device = Device {
+    luts: 1_728_000,
+    ffs: 3_456_000,
+    bram36: 2_688,
+    uram: 1_280,
+};
+
+/// Absolute utilization of one module.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModuleUtil {
+    pub luts: f64,
+    pub ffs: f64,
+    pub bram36: f64,
+    pub uram: f64,
+}
+
+impl ModuleUtil {
+    pub fn add(&self, o: &ModuleUtil) -> ModuleUtil {
+        ModuleUtil {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            bram36: self.bram36 + o.bram36,
+            uram: self.uram + o.uram,
+        }
+    }
+
+    pub fn scale(&self, f: f64) -> ModuleUtil {
+        ModuleUtil {
+            luts: self.luts * f,
+            ffs: self.ffs * f,
+            bram36: self.bram36 * f,
+            uram: self.uram * f,
+        }
+    }
+
+    /// Percentages of a device.
+    pub fn percent(&self, dev: &Device) -> [f64; 4] {
+        [
+            100.0 * self.luts / dev.luts as f64,
+            100.0 * self.ffs / dev.ffs as f64,
+            100.0 * self.bram36 / dev.bram36 as f64,
+            100.0 * self.uram / dev.uram as f64,
+        ]
+    }
+}
+
+/// The analytic model over a full system configuration.
+pub struct ResourceModel<'a> {
+    pub cfg: &'a SystemConfig,
+    pub dev: Device,
+}
+
+/// URAM288 block = 288 Kib = 36 KiB of storage.
+const URAM_BYTES: f64 = 36.0 * 1024.0;
+/// BRAM36 block = 36 Kib of storage.
+const BRAM_BITS: f64 = 36.0 * 1024.0;
+
+impl<'a> ResourceModel<'a> {
+    pub fn new(cfg: &'a SystemConfig) -> ResourceModel<'a> {
+        ResourceModel { cfg, dev: U250 }
+    }
+
+    /// Cache: URAM data array, BRAM tag array, LUT comparators/muxes,
+    /// FF pipeline registers.
+    pub fn cache(&self) -> ModuleUtil {
+        let c = &self.cfg.cache;
+        let lines = c.lines as f64;
+        let ways = c.associativity as f64;
+        let line_bytes = c.line_bytes() as f64;
+        // Data array in URAM (512 KiB @A → 16 blocks; 256 KiB @B → 8).
+        let uram = (lines * line_bytes / URAM_BYTES).ceil();
+        // Tag array in BRAM: tag+state ≈ (31 − log2(line) − log2(sets))
+        // + 4 bits per line.
+        let sets = (lines / ways).max(1.0);
+        let tag_bits = 31.0 - (line_bytes).log2() - sets.log2() + 4.0;
+        // Tags pack into true-dual-port BRAM36s (two tag reads per probe
+        // in a 2-way cache add a second bank).
+        let bram = (lines * tag_bits / (2.0 * BRAM_BITS)).ceil()
+            + if ways > 1.0 { 4.0 } else { 0.0 };
+        // Control logic — affine in line×way count (calibrated on A/B).
+        let luts = 4_200.0 + 1.715 * lines * ways;
+        let ffs = 1_420.0 + 5.06 * lines;
+        ModuleUtil {
+            luts,
+            ffs,
+            bram36: bram,
+            uram,
+        }
+    }
+
+    /// DMA engine: buffers in URAM + per-buffer descriptor logic.
+    pub fn dma(&self) -> ModuleUtil {
+        let n = self.cfg.dma.n_buffers as f64;
+        ModuleUtil {
+            luts: 173.0 * n,
+            ffs: 86.4 * n,
+            bram36: 0.0,
+            uram: 0.8 * n,
+        }
+    }
+
+    /// Request Reductor: CAM temp buffer (LUT-hungry per entry) + RRSH
+    /// XOR-hash table in URAM.
+    pub fn request_reductor(&self) -> ModuleUtil {
+        let tb = self.cfg.rr.temp_buffer_entries as f64;
+        let rrsh = self.cfg.rr.rrsh_entries as f64;
+        ModuleUtil {
+            luts: 120.0 * tb + 0.1 * rrsh,
+            ffs: 40.0 * tb + 0.8 * rrsh,
+            bram36: 0.0,
+            uram: (rrsh / 256.0).ceil(),
+        }
+    }
+
+    /// One LMB = cache + DMA + RR + glue.
+    pub fn lmb(&self) -> ModuleUtil {
+        let glue = ModuleUtil {
+            luts: 1_000.0,
+            ffs: 900.0,
+            bram36: 0.0,
+            uram: 0.0,
+        };
+        self.cache()
+            .add(&self.dma())
+            .add(&self.request_reductor())
+            .add(&glue)
+    }
+
+    /// Request router: arbitration + data fan-out, grows with ports.
+    pub fn router(&self) -> ModuleUtil {
+        let ports = self.cfg.n_lmbs as f64;
+        ModuleUtil {
+            luts: 3_400.0 + 180.0 * ports,
+            ffs: 4_000.0 + 120.0 * ports,
+            bram36: 0.0,
+            uram: 0.0,
+        }
+    }
+
+    /// Complete system: n LMBs + router.
+    pub fn system(&self) -> ModuleUtil {
+        self.lmb().scale(self.cfg.n_lmbs as f64).add(&self.router())
+    }
+}
+
+/// Render paper Table II for a list of configurations.
+pub fn table2(configs: &[&SystemConfig]) -> String {
+    let mut t = Table::new(&[
+        "Module", "Configuration", "LUT(%)", "FF(%)", "BRAM(%)", "URAM(%)",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for cfg in configs {
+        let m = ResourceModel::new(cfg);
+        let rows: [(&str, String, ModuleUtil); 5] = [
+            (
+                "Cache",
+                format!(
+                    "{}-way, {} lines, {}b",
+                    cfg.cache.associativity, cfg.cache.lines, cfg.cache.line_bits
+                ),
+                m.cache(),
+            ),
+            (
+                "DMA Engine",
+                format!("{} buffers x {} B", cfg.dma.n_buffers, cfg.dma.buffer_bytes),
+                m.dma(),
+            ),
+            (
+                "Request Reductor",
+                format!(
+                    "RRSH {}, TB {}",
+                    cfg.rr.rrsh_entries, cfg.rr.temp_buffer_entries
+                ),
+                m.request_reductor(),
+            ),
+            ("LMB", "cache + DMA + RR".to_string(), m.lmb()),
+            (
+                "Complete System",
+                format!("{} LMB(s)", cfg.n_lmbs),
+                m.system(),
+            ),
+        ];
+        for (name, spec, util) in rows {
+            let p = util.percent(&m.dev);
+            t.row(&[
+                format!("{} ({})", name, cfg.label),
+                spec,
+                format!("{:.2}", p[0]),
+                format!("{:.2}", p[1]),
+                format!("{:.2}", p[2]),
+                format!("{:.2}", p[3]),
+            ]);
+        }
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Assert a modeled percentage is within `tol_pp` percentage points
+    /// of the paper's value.
+    fn close(pct: f64, paper: f64, tol_pp: f64, what: &str) {
+        assert!(
+            (pct - paper).abs() <= tol_pp,
+            "{what}: model {pct:.3}% vs paper {paper:.3}% (tol ±{tol_pp}pp)"
+        );
+    }
+
+    #[test]
+    fn config_a_matches_paper_table2() {
+        let cfg = SystemConfig::config_a();
+        let m = ResourceModel::new(&cfg);
+        let c = m.cache().percent(&m.dev);
+        close(c[0], 1.87, 0.15, "cache-A LUT");
+        close(c[1], 1.24, 0.15, "cache-A FF");
+        close(c[2], 0.24, 0.15, "cache-A BRAM");
+        close(c[3], 1.25, 0.15, "cache-A URAM");
+        let d = m.dma().percent(&m.dev);
+        close(d[0], 0.04, 0.02, "dma LUT");
+        close(d[1], 0.01, 0.02, "dma FF");
+        close(d[3], 0.25, 0.05, "dma URAM");
+        let r = m.request_reductor().percent(&m.dev);
+        close(r[0], 0.08, 0.03, "rr LUT");
+        close(r[1], 0.10, 0.03, "rr FF");
+        close(r[3], 1.25, 0.1, "rr URAM");
+        let l = m.lmb().percent(&m.dev);
+        close(l[0], 2.03, 0.2, "lmb-A LUT");
+        close(l[1], 1.41, 0.2, "lmb-A FF");
+        close(l[3], 2.75, 0.2, "lmb-A URAM");
+        let s = m.system().percent(&m.dev);
+        close(s[0], 2.25, 0.25, "system-A LUT");
+        close(s[1], 1.54, 0.25, "system-A FF");
+        close(s[3], 2.75, 0.25, "system-A URAM");
+    }
+
+    #[test]
+    fn config_b_matches_paper_table2() {
+        let cfg = SystemConfig::config_b();
+        let m = ResourceModel::new(&cfg);
+        let c = m.cache().percent(&m.dev);
+        close(c[0], 0.65, 0.15, "cache-B LUT");
+        close(c[1], 0.64, 0.15, "cache-B FF");
+        close(c[2], 0.06, 0.1, "cache-B BRAM");
+        close(c[3], 0.63, 0.1, "cache-B URAM");
+        let l = m.lmb().percent(&m.dev);
+        close(l[0], 0.85, 0.2, "lmb-B LUT");
+        close(l[1], 0.81, 0.2, "lmb-B FF");
+        close(l[3], 2.13, 0.2, "lmb-B URAM");
+        let s = m.system().percent(&m.dev);
+        close(s[0], 3.61, 0.4, "system-B LUT");
+        close(s[1], 3.35, 0.4, "system-B FF");
+        close(s[2], 0.24, 0.15, "system-B BRAM");
+        close(s[3], 8.52, 0.5, "system-B URAM");
+    }
+
+    #[test]
+    fn scaling_trends_are_monotone() {
+        // Bigger cache ⇒ more of everything storage-ish.
+        let a = SystemConfig::config_a();
+        let mut bigger = a.clone();
+        bigger.cache.lines *= 2;
+        let ra = ResourceModel::new(&a).cache();
+        let rb = ResourceModel::new(&bigger).cache();
+        assert!(rb.luts > ra.luts);
+        assert!(rb.uram > ra.uram);
+        // More DMA buffers ⇒ more LUTs.
+        let mut dmas = a.clone();
+        dmas.dma.n_buffers = 8;
+        assert!(ResourceModel::new(&dmas).dma().luts > ResourceModel::new(&a).dma().luts);
+    }
+
+    #[test]
+    fn table2_renders_both_configs() {
+        let a = SystemConfig::config_a();
+        let b = SystemConfig::config_b();
+        let s = table2(&[&a, &b]);
+        assert!(s.contains("Cache (config-a)"));
+        assert!(s.contains("Complete System (config-b)"));
+        assert!(s.contains("LUT(%)"));
+    }
+}

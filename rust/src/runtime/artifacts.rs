@@ -1,0 +1,132 @@
+//! Artifact discovery + manifest parsing.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Shapes of one AOT entry point (monomorphic — fixed at lowering time).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntryShapes {
+    pub file: String,
+    pub batch: usize,
+    pub rank: usize,
+    /// Fused entry only.
+    pub i_tile: Option<usize>,
+    pub j: Option<usize>,
+    pub k: Option<usize>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub partials: EntryShapes,
+    pub fused: Option<EntryShapes>,
+}
+
+impl Manifest {
+    /// Load and validate a manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read {}/manifest.json: {e}", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let entries = j
+            .get("entries")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?;
+        let parse_entry = |name: &str| -> Result<EntryShapes> {
+            let e = entries
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("manifest missing entry {name}"))?;
+            let get = |k: &str| e.get(k).and_then(Json::as_usize);
+            Ok(EntryShapes {
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?
+                    .to_string(),
+                batch: get("batch").ok_or_else(|| anyhow::anyhow!("{name}: missing batch"))?,
+                rank: get("rank").ok_or_else(|| anyhow::anyhow!("{name}: missing rank"))?,
+                i_tile: get("i_tile"),
+                j: get("j"),
+                k: get("k"),
+            })
+        };
+        let partials = parse_entry("mttkrp_partials")?;
+        let fused = parse_entry("mttkrp_fused").ok();
+        anyhow::ensure!(
+            dir.join(&partials.file).exists(),
+            "artifact {} missing — run `make artifacts`",
+            partials.file
+        );
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            partials,
+            fused,
+        })
+    }
+
+    pub fn partials_path(&self) -> PathBuf {
+        self.dir.join(&self.partials.file)
+    }
+
+    pub fn fused_path(&self) -> Option<PathBuf> {
+        self.fused.as_ref().map(|f| self.dir.join(&f.file))
+    }
+}
+
+/// Locate the artifacts directory: `$MEMSYS_ARTIFACTS`, else `artifacts/`
+/// relative to the working dir or its ancestors (so tests work from any
+/// cargo working directory).
+pub fn find_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("MEMSYS_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_when_artifacts_built() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.partials.batch > 0);
+        assert!(m.partials.rank > 0);
+        assert!(m.partials_path().exists());
+        if let Some(f) = &m.fused {
+            assert!(f.i_tile.is_some());
+            assert!(m.fused_path().unwrap().exists());
+        }
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load(Path::new("/nonexistent/nowhere")).is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_is_error() {
+        let dir = std::env::temp_dir().join("memsys_artifacts_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{\"entries\": {}}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Batch MTTKRP executor over the AOT artifacts.
+//!
+//! Mirrors the paper's PE pipeline in software: for each batch of B
+//! nonzeros, *gather* the two factor rows (the irregular accesses the
+//! memory system serves), run the AOT-compiled partials kernel through
+//! PJRT (the PE compute), and *scatter-accumulate* into output fibers
+//! (Algorithm 3's `temp_Y` writeback). Tail batches are padded with
+//! zero-valued nonzeros, which contribute nothing (validated by
+//! python/tests and `zero_padding` here).
+
+use std::time::Instant;
+
+use crate::mttkrp::operand_modes;
+use crate::tensor::{CooTensor, DenseMatrix, Mode};
+use crate::Result;
+
+use super::artifacts::Manifest;
+use super::pjrt::{literal_f32, PjrtRuntime};
+
+/// Counters for the compute path.
+#[derive(Debug, Clone, Default)]
+pub struct BatchComputeStats {
+    pub batches: u64,
+    pub nnz: u64,
+    pub padded_lanes: u64,
+    pub execute_seconds: f64,
+    pub gather_seconds: f64,
+    pub scatter_seconds: f64,
+}
+
+/// MTTKRP executor bound to the `mttkrp_partials` artifact.
+pub struct MttkrpExecutor {
+    rt: PjrtRuntime,
+    batch: usize,
+    rank: usize,
+    pub stats: BatchComputeStats,
+    // Reused per-batch buffers (no allocation on the hot path).
+    vals_buf: Vec<f32>,
+    d_buf: Vec<f32>,
+    c_buf: Vec<f32>,
+}
+
+impl MttkrpExecutor {
+    /// Load artifacts and build the executor.
+    pub fn new(manifest: &Manifest) -> Result<MttkrpExecutor> {
+        let mut rt = PjrtRuntime::cpu()?;
+        rt.load_hlo_text("partials", &manifest.partials_path())?;
+        let batch = manifest.partials.batch;
+        let rank = manifest.partials.rank;
+        Ok(MttkrpExecutor {
+            rt,
+            batch,
+            rank,
+            stats: BatchComputeStats::default(),
+            vals_buf: vec![0.0; batch],
+            d_buf: vec![0.0; batch * rank],
+            c_buf: vec![0.0; batch * rank],
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Mode-`mode` MTTKRP over `t` through the PJRT compute path.
+    ///
+    /// The executor's rank (fixed at AOT time) must equal the factor
+    /// rank.
+    pub fn mttkrp(
+        &mut self,
+        t: &CooTensor,
+        mode: Mode,
+        m1: &DenseMatrix,
+        m2: &DenseMatrix,
+    ) -> Result<DenseMatrix> {
+        anyhow::ensure!(
+            m1.cols == self.rank && m2.cols == self.rank,
+            "factor rank {} != AOT rank {} — re-run `make artifacts` with --rank",
+            m1.cols,
+            self.rank
+        );
+        let (om1, om2) = operand_modes(mode);
+        anyhow::ensure!(
+            m1.rows as u64 == t.dim(om1) && m2.rows as u64 == t.dim(om2),
+            "operand shape mismatch"
+        );
+        let r = self.rank;
+        let b = self.batch;
+        let mut out = DenseMatrix::zeros(t.dim(mode) as usize, r);
+        let n = t.nnz();
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + b).min(n);
+            let filled = hi - lo;
+            // Gather phase.
+            let g0 = Instant::now();
+            self.vals_buf[..filled].copy_from_slice(&t.vals[lo..hi]);
+            self.vals_buf[filled..].fill(0.0); // zero-padding lanes
+            for (bi, z) in (lo..hi).enumerate() {
+                let j = t.coord(z, om1) as usize;
+                let k = t.coord(z, om2) as usize;
+                self.d_buf[bi * r..(bi + 1) * r].copy_from_slice(m1.row(j));
+                self.c_buf[bi * r..(bi + 1) * r].copy_from_slice(m2.row(k));
+            }
+            // Padded rows may hold stale data; vals=0 nullifies them.
+            self.stats.gather_seconds += g0.elapsed().as_secs_f64();
+
+            // PE compute via PJRT.
+            let e0 = Instant::now();
+            let partials = self.rt.execute(
+                "partials",
+                &[
+                    literal_f32(&self.vals_buf, &[b as i64])?,
+                    literal_f32(&self.d_buf, &[b as i64, r as i64])?,
+                    literal_f32(&self.c_buf, &[b as i64, r as i64])?,
+                ],
+            )?;
+            let pvec = partials
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("partials to_vec: {e:?}"))?;
+            self.stats.execute_seconds += e0.elapsed().as_secs_f64();
+
+            // Scatter-accumulate into output fibers.
+            let s0 = Instant::now();
+            for (bi, z) in (lo..hi).enumerate() {
+                let oi = t.coord(z, mode) as usize;
+                let dst = out.row_mut(oi);
+                let src = &pvec[bi * r..(bi + 1) * r];
+                for x in 0..r {
+                    dst[x] += src[x];
+                }
+            }
+            self.stats.scatter_seconds += s0.elapsed().as_secs_f64();
+
+            self.stats.batches += 1;
+            self.stats.nnz += filled as u64;
+            self.stats.padded_lanes += (b - filled) as u64;
+            lo = hi;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::mttkrp_seq;
+    use crate::runtime::artifacts::find_artifacts_dir;
+    use crate::util::rng::Rng;
+
+    fn executor() -> Option<MttkrpExecutor> {
+        let dir = find_artifacts_dir()?;
+        let m = Manifest::load(&dir).ok()?;
+        MttkrpExecutor::new(&m).ok()
+    }
+
+    #[test]
+    fn matches_rust_reference_all_modes() {
+        let Some(mut ex) = executor() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let r = ex.rank();
+        let mut rng = Rng::new(100);
+        let t = CooTensor::random(&mut rng, [40, 30, 35], 3000);
+        let a = DenseMatrix::random(&mut rng, 40, r);
+        let d = DenseMatrix::random(&mut rng, 30, r);
+        let c = DenseMatrix::random(&mut rng, 35, r);
+        for (mode, m1, m2) in [(Mode::I, &d, &c), (Mode::J, &a, &c), (Mode::K, &a, &d)] {
+            let got = ex.mttkrp(&t, mode, m1, m2).unwrap();
+            let want = mttkrp_seq(&t, mode, m1, m2);
+            let diff = got.max_abs_diff(&want);
+            assert!(diff < 1e-3, "mode {mode:?} diff {diff}");
+        }
+        assert!(ex.stats.batches >= 3);
+        assert_eq!(ex.stats.nnz, 3 * t.nnz() as u64);
+    }
+
+    #[test]
+    fn handles_tiny_tensor_with_padding() {
+        let Some(mut ex) = executor() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let r = ex.rank();
+        let mut rng = Rng::new(101);
+        let t = CooTensor::random(&mut rng, [4, 5, 6], 10);
+        let d = DenseMatrix::random(&mut rng, 5, r);
+        let c = DenseMatrix::random(&mut rng, 6, r);
+        let got = ex.mttkrp(&t, Mode::I, &d, &c).unwrap();
+        let want = mttkrp_seq(&t, Mode::I, &d, &c);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+        assert!(ex.stats.padded_lanes > 0, "tail batch must be padded");
+    }
+
+    #[test]
+    fn rank_mismatch_is_error() {
+        let Some(mut ex) = executor() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let bad_rank = ex.rank() + 1;
+        let mut rng = Rng::new(102);
+        let t = CooTensor::random(&mut rng, [4, 4, 4], 8);
+        let d = DenseMatrix::random(&mut rng, 4, bad_rank);
+        let c = DenseMatrix::random(&mut rng, 4, bad_rank);
+        assert!(ex.mttkrp(&t, Mode::I, &d, &c).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! Python never runs here — the artifacts are self-contained HLO text
+//! (the interchange format that survives the jax≥0.5 / xla_extension
+//! 0.5.1 proto-id mismatch; see DESIGN.md §3 and /opt/xla-example).
+
+mod artifacts;
+mod compute;
+mod pjrt;
+
+pub use artifacts::{find_artifacts_dir, Manifest};
+pub use compute::{BatchComputeStats, MttkrpExecutor};
+pub use pjrt::{literal_f32 as pjrt_literal_f32, literal_i32 as pjrt_literal_i32, PjrtRuntime};

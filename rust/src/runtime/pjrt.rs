@@ -1,0 +1,132 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::Result;
+
+/// A PJRT client with a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact under `name`.
+    pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
+        anyhow::ensure!(path.exists(), "artifact {} missing", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute `name` with the given input literals. The AOT path lowers
+    /// with `return_tuple=True`, so the single output is unwrapped from a
+    /// 1-tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("executable {name:?} not loaded"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e:?}"))?;
+        lit.to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {shape:?} != len {}", data.len());
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(shape)
+        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal (rank-1).
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::{find_artifacts_dir, Manifest};
+
+    #[test]
+    fn loads_and_runs_partials_artifact() {
+        let Some(dir) = find_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        rt.load_hlo_text("partials", &m.partials_path()).unwrap();
+        assert!(rt.is_loaded("partials"));
+        let (b, r) = (m.partials.batch, m.partials.rank);
+        let vals = vec![2.0f32; b];
+        let d = vec![3.0f32; b * r];
+        let c = vec![0.5f32; b * r];
+        let out = rt
+            .execute(
+                "partials",
+                &[
+                    literal_f32(&vals, &[b as i64]).unwrap(),
+                    literal_f32(&d, &[b as i64, r as i64]).unwrap(),
+                    literal_f32(&c, &[b as i64, r as i64]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let v = out.to_vec::<f32>().unwrap();
+        assert_eq!(v.len(), b * r);
+        assert!(v.iter().all(|&x| (x - 3.0).abs() < 1e-6), "2*3*0.5 = 3");
+    }
+
+    #[test]
+    fn unknown_executable_errors() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+}

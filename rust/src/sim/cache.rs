@@ -1,0 +1,333 @@
+//! Non-blocking set-associative cache (§IV-B).
+//!
+//! * 3-stage hit pipeline ("Our non-blocking cache uses a 3-stage pipeline
+//!   to achieve high frequency").
+//! * Line width = memory-interface data width (512 bit = 64 B) — "We keep
+//!   the cache-line width similar to the data width of DRAM Interface IP".
+//! * Whole cache-*lines* are returned toward the Request Reductor; the RR
+//!   fans individual elements out to PEs (§IV-B).
+//! * Misses allocate [`mshr`] entries; the *conventional* MSHR used by the
+//!   cache-only baseline has a bounded secondary-miss capacity, which is
+//!   exactly the bottleneck §V-D blames for the cache-only system's loss
+//!   ("conventional MSHR can not handle a large number of secondary cache
+//!   misses without losing the performance").
+//! * Loads only: MTTKRP never reads back what it stores during one mode's
+//!   sweep (input structures are read-only, §IV), so stores are
+//!   write-through/no-allocate and bypass the tag array.
+
+use crate::config::CacheConfig;
+use crate::util::log2;
+
+use super::dram::IdGen;
+use super::mshr::{Mshr, MshrOutcome};
+use super::{Cycle, MemReq, ReqId};
+
+/// Result of a load presented to the cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheAccess {
+    /// In the array; data available after the hit pipeline.
+    Hit { ready_at: Cycle },
+    /// Primary miss: `fill_req` must be forwarded to the router/DRAM.
+    Miss { fill_req: MemReq },
+    /// Secondary miss merged into an existing MSHR entry.
+    Merged,
+    /// Structural stall (MSHR full / secondary cap reached). Retry later.
+    Blocked,
+}
+
+/// Cache statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub primary_misses: u64,
+    pub merged_misses: u64,
+    pub blocked: u64,
+    pub evictions: u64,
+    pub fills: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.primary_misses + self.merged_misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let a = self.accesses();
+        if a == 0 {
+            0.0
+        } else {
+            self.hits as f64 / a as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Way {
+    tag: u64,
+    valid: bool,
+    /// LRU stamp (higher = more recent).
+    lru: u64,
+}
+
+/// Set-associative, non-blocking, load-only cache.
+pub struct Cache {
+    cfg: CacheConfig,
+    ways: Vec<Way>, // sets × assoc, row-major by set
+    sets: usize,
+    set_mask: u64,
+    line_shift: u32,
+    lru_clock: u64,
+    mshr: Mshr,
+    pub stats: CacheStats,
+    /// Port id used for fill requests (the LMB index).
+    port: usize,
+}
+
+/// Token identifying a waiter blocked on a line fill (caller-defined).
+pub type WaiterToken = u64;
+
+impl Cache {
+    pub fn new(cfg: &CacheConfig, port: usize) -> Cache {
+        let sets = cfg.sets();
+        Cache {
+            ways: vec![Way::default(); cfg.lines],
+            sets,
+            set_mask: sets as u64 - 1,
+            line_shift: log2(cfg.line_bytes()),
+            lru_clock: 0,
+            mshr: Mshr::new(cfg.mshr_entries, cfg.mshr_secondary_cap),
+            stats: CacheStats::default(),
+            cfg: cfg.clone(),
+            port,
+        }
+    }
+
+    #[inline]
+    pub fn line_of(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.cfg.line_bytes()
+    }
+
+    /// Present a load for `addr`; `token` identifies the waiter to release
+    /// when the line arrives (unused on hits).
+    pub fn load(
+        &mut self,
+        addr: u64,
+        token: WaiterToken,
+        now: Cycle,
+        ids: &mut IdGen,
+    ) -> CacheAccess {
+        let line = self.line_of(addr);
+        let set = (line & self.set_mask) as usize;
+        let tag = line >> log2(self.sets as u64);
+        self.lru_clock += 1;
+        // Tag probe.
+        let base = set * self.cfg.associativity;
+        for w in 0..self.cfg.associativity {
+            let way = &mut self.ways[base + w];
+            if way.valid && way.tag == tag {
+                way.lru = self.lru_clock;
+                self.stats.hits += 1;
+                return CacheAccess::Hit {
+                    ready_at: now + self.cfg.pipeline_stages,
+                };
+            }
+        }
+        // Miss path → MSHR.
+        match self.mshr.lookup_or_allocate(line, token) {
+            MshrOutcome::Allocated(id_slot) => {
+                self.stats.primary_misses += 1;
+                let id = ids.next();
+                self.mshr.set_req_id(id_slot, id);
+                CacheAccess::Miss {
+                    fill_req: MemReq {
+                        id,
+                        addr: line << self.line_shift,
+                        bytes: self.cfg.line_bytes() as u32,
+                        is_write: false,
+                        port: self.port,
+                    },
+                }
+            }
+            MshrOutcome::Merged => {
+                self.stats.merged_misses += 1;
+                CacheAccess::Merged
+            }
+            MshrOutcome::Full => {
+                self.stats.blocked += 1;
+                CacheAccess::Blocked
+            }
+        }
+    }
+
+    /// A line fill returned from DRAM: install it, free the MSHR entry,
+    /// and return the tokens waiting on it (data is forwarded to the RR /
+    /// PEs `pipeline_stages` later; the caller applies that).
+    pub fn fill(&mut self, req_id: ReqId) -> Option<(u64, Vec<WaiterToken>)> {
+        let (line, waiters) = self.mshr.complete(req_id)?;
+        self.install(line);
+        self.stats.fills += 1;
+        Some((line, waiters))
+    }
+
+    fn install(&mut self, line: u64) {
+        let set = (line & self.set_mask) as usize;
+        let tag = line >> log2(self.sets as u64);
+        let base = set * self.cfg.associativity;
+        self.lru_clock += 1;
+        // Prefer an invalid way; otherwise evict LRU.
+        let mut victim = base;
+        let mut best_lru = u64::MAX;
+        for w in 0..self.cfg.associativity {
+            let way = &self.ways[base + w];
+            if !way.valid {
+                victim = base + w;
+                break;
+            }
+            if way.lru < best_lru {
+                best_lru = way.lru;
+                victim = base + w;
+            }
+        }
+        if self.ways[victim].valid {
+            self.stats.evictions += 1;
+        }
+        self.ways[victim] = Way {
+            tag,
+            valid: true,
+            lru: self.lru_clock,
+        };
+    }
+
+    /// True if no misses are outstanding.
+    pub fn quiescent(&self) -> bool {
+        self.mshr.is_empty()
+    }
+
+    /// Outstanding primary misses.
+    pub fn outstanding(&self) -> usize {
+        self.mshr.occupancy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(assoc: usize, lines: usize) -> (Cache, IdGen) {
+        let cfg = CacheConfig {
+            associativity: assoc,
+            lines,
+            line_bits: 512,
+            pipeline_stages: 3,
+            mshr_entries: 4,
+            mshr_secondary_cap: 2,
+        };
+        (Cache::new(&cfg, 0), IdGen::default())
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let (mut c, mut ids) = cache(2, 64);
+        let r = c.load(0x1000, 1, 0, &mut ids);
+        let CacheAccess::Miss { fill_req } = r else {
+            panic!("expected miss, got {r:?}")
+        };
+        assert_eq!(fill_req.addr, 0x1000);
+        assert_eq!(fill_req.bytes, 64);
+        let (line, waiters) = c.fill(fill_req.id).unwrap();
+        assert_eq!(line, c.line_of(0x1000));
+        assert_eq!(waiters, vec![1]);
+        // Same line (different offset) now hits through the 3-stage pipe.
+        match c.load(0x1008, 2, 10, &mut ids) {
+            CacheAccess::Hit { ready_at } => assert_eq!(ready_at, 13),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.primary_misses, 1);
+    }
+
+    #[test]
+    fn secondary_miss_merges_until_cap() {
+        let (mut c, mut ids) = cache(2, 64);
+        let CacheAccess::Miss { fill_req } = c.load(0x2000, 1, 0, &mut ids) else {
+            panic!()
+        };
+        // cap = 2 secondary waiters.
+        assert_eq!(c.load(0x2010, 2, 0, &mut ids), CacheAccess::Merged);
+        assert_eq!(c.load(0x2020, 3, 0, &mut ids), CacheAccess::Merged);
+        assert_eq!(c.load(0x2030, 4, 0, &mut ids), CacheAccess::Blocked);
+        let (_, waiters) = c.fill(fill_req.id).unwrap();
+        assert_eq!(waiters, vec![1, 2, 3]);
+        assert_eq!(c.stats.merged_misses, 2);
+        assert_eq!(c.stats.blocked, 1);
+    }
+
+    #[test]
+    fn mshr_full_blocks_new_primary_misses() {
+        let (mut c, mut ids) = cache(2, 64);
+        for i in 0..4u64 {
+            assert!(matches!(
+                c.load(0x10_000 + i * 64, i, 0, &mut ids),
+                CacheAccess::Miss { .. }
+            ));
+        }
+        assert_eq!(c.load(0x20_000, 99, 0, &mut ids), CacheAccess::Blocked);
+        assert_eq!(c.outstanding(), 4);
+    }
+
+    #[test]
+    fn lru_eviction_within_set() {
+        // Direct-mapped 4-line cache: sets 0..3, line i maps to set i%4.
+        let (mut c, mut ids) = cache(1, 4);
+        let CacheAccess::Miss { fill_req: f1 } = c.load(0, 1, 0, &mut ids) else {
+            panic!()
+        };
+        c.fill(f1.id).unwrap();
+        assert!(matches!(c.load(0, 2, 1, &mut ids), CacheAccess::Hit { .. }));
+        // Same set (line 4 * 64 bytes * 4 sets apart), evicts line 0.
+        let conflict_addr = 4 * 64;
+        let CacheAccess::Miss { fill_req: f2 } = c.load(conflict_addr, 3, 2, &mut ids) else {
+            panic!()
+        };
+        c.fill(f2.id).unwrap();
+        assert_eq!(c.stats.evictions, 1);
+        // Original line is gone.
+        assert!(matches!(c.load(0, 4, 3, &mut ids), CacheAccess::Miss { .. }));
+    }
+
+    #[test]
+    fn two_way_set_keeps_both_lines() {
+        let (mut c, mut ids) = cache(2, 8); // 4 sets × 2 ways
+        let a = 0u64;
+        let b = 4 * 64; // same set, different tag
+        for (addr, tok) in [(a, 1u64), (b, 2)] {
+            if let CacheAccess::Miss { fill_req } = c.load(addr, tok, 0, &mut ids) {
+                c.fill(fill_req.id).unwrap();
+            }
+        }
+        assert!(matches!(c.load(a, 3, 5, &mut ids), CacheAccess::Hit { .. }));
+        assert!(matches!(c.load(b, 4, 6, &mut ids), CacheAccess::Hit { .. }));
+        assert_eq!(c.stats.evictions, 0);
+    }
+
+    #[test]
+    fn hit_rate_accounting() {
+        let (mut c, mut ids) = cache(2, 64);
+        let CacheAccess::Miss { fill_req } = c.load(0, 1, 0, &mut ids) else {
+            panic!()
+        };
+        c.fill(fill_req.id).unwrap();
+        for i in 0..3 {
+            assert!(matches!(
+                c.load(i * 8, 10 + i, 1, &mut ids),
+                CacheAccess::Hit { .. }
+            ));
+        }
+        assert!((c.stats.hit_rate() - 0.75).abs() < 1e-9);
+        assert!(c.quiescent());
+    }
+}

@@ -1,0 +1,357 @@
+//! Local Memory Block (LMB) — "the basic building blocks of our proposed
+//! memory system. A LMB has a Request Reductor, non-blocking cache, and a
+//! DMA Engine. Each LMB connects to one or more PEs." (§IV)
+//!
+//! This module composes the three units and owns the LMB's request
+//! traffic toward the router. The *routing policy* — which access class
+//! takes which path — lives here too:
+//!
+//! * proposed system: elements → RR→cache, fibers/stores → DMA;
+//! * cache-only baseline: everything → cache (fibers split into lines,
+//!   conventional MSHR semantics, stores write-through);
+//! * DMA-only baseline: everything → DMA (elements become beat-sized
+//!   bursts with garbage).
+
+use std::collections::VecDeque;
+
+use crate::config::{SystemConfig, SystemKind};
+#[allow(unused_imports)]
+use crate::config::FabricType;
+
+use super::cache::{Cache, CacheAccess};
+use super::dma::DmaEngine;
+use super::dram::IdGen;
+use super::request_reductor::{RequestReductor, RrResult};
+use super::stats::LmbStats;
+use super::{Cycle, MemReq, ReqId};
+
+/// A completed PE-visible access part.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Delivery {
+    pub token: u64,
+    pub at: Cycle,
+}
+
+/// Outcome of presenting an access to the LMB.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LmbOutcome {
+    /// Completion time already known (temp-buffer or cache hit).
+    Ready { at: Cycle },
+    /// In flight; a [`Delivery`] will surface later.
+    Pending,
+    /// Structural stall — caller retries next cycle.
+    Stall,
+}
+
+/// A cache line headed to the RR at a known future cycle (cache hits).
+#[derive(Debug, Clone, Copy)]
+pub struct LineEvent {
+    pub lmb: usize,
+    pub line: u64,
+    pub at: Cycle,
+}
+
+/// One Local Memory Block.
+pub struct Lmb {
+    pub idx: usize,
+    kind: SystemKind,
+    pub cache: Cache,
+    pub rr: RequestReductor,
+    pub dma: DmaEngine,
+    /// Fill/write requests waiting to enter the router.
+    outbox: VecDeque<MemReq>,
+    /// RR line loads the cache was too blocked to take.
+    retry_lines: VecDeque<u64>,
+    line_bytes: u64,
+}
+
+impl Lmb {
+    pub fn new(cfg: &SystemConfig, idx: usize) -> Lmb {
+        let pes_per_lmb = cfg.pes_per_lmb();
+        // The DMA-only baseline keeps the same engines; its §V-D cost is
+        // what DMA cannot do — exploit temporal locality, and avoid
+        // garbage on sub-beat requests — not reduced concurrency.
+        let dma_depth = 4;
+        Lmb {
+            idx,
+            kind: cfg.kind,
+            cache: Cache::new(&cfg.cache, idx),
+            rr: RequestReductor::new(&cfg.rr, cfg.cache.line_bytes(), pes_per_lmb),
+            dma: DmaEngine::with_pipeline(&cfg.dma, cfg.dram.beat_bytes(), idx, dma_depth),
+            outbox: VecDeque::new(),
+            retry_lines: VecDeque::new(),
+            line_bytes: cfg.cache.line_bytes(),
+        }
+    }
+
+    /// Element load on the proposed path (RR → cache).
+    pub fn element_load(
+        &mut self,
+        addr: u64,
+        token: u64,
+        now: Cycle,
+        ids: &mut IdGen,
+        line_events: &mut Vec<LineEvent>,
+    ) -> LmbOutcome {
+        debug_assert_eq!(self.kind, SystemKind::Proposed);
+        match self.rr.element_load(addr, token, now) {
+            RrResult::Served { ready_at } => LmbOutcome::Ready { at: ready_at },
+            RrResult::Absorbed => LmbOutcome::Pending,
+            RrResult::Stall => LmbOutcome::Stall,
+            RrResult::ForwardLine { line } => {
+                self.line_to_cache(line, now, ids, line_events);
+                LmbOutcome::Pending
+            }
+        }
+    }
+
+    /// Present an RR line request to the cache (used for both the fast
+    /// path and stalled retries).
+    fn line_to_cache(
+        &mut self,
+        line: u64,
+        now: Cycle,
+        ids: &mut IdGen,
+        line_events: &mut Vec<LineEvent>,
+    ) {
+        match self.cache.load(line * self.line_bytes, line, now, ids) {
+            CacheAccess::Hit { ready_at } => line_events.push(LineEvent {
+                lmb: self.idx,
+                line,
+                at: ready_at,
+            }),
+            CacheAccess::Miss { fill_req } => self.outbox.push_back(fill_req),
+            CacheAccess::Merged => {} // already pending in the cache
+            CacheAccess::Blocked => self.retry_lines.push_back(line),
+        }
+    }
+
+    /// Direct cache load (cache-only baseline): `token` is a PE token.
+    pub fn cache_load_direct(&mut self, addr: u64, token: u64, now: Cycle, ids: &mut IdGen) -> LmbOutcome {
+        debug_assert_eq!(self.kind, SystemKind::CacheOnly);
+        match self.cache.load(addr, token, now, ids) {
+            CacheAccess::Hit { ready_at } => LmbOutcome::Ready { at: ready_at },
+            CacheAccess::Miss { fill_req } => {
+                self.outbox.push_back(fill_req);
+                LmbOutcome::Pending
+            }
+            CacheAccess::Merged => LmbOutcome::Pending,
+            CacheAccess::Blocked => LmbOutcome::Stall,
+        }
+    }
+
+    /// Fiber transfer via the DMA engine (proposed + both fiber paths of
+    /// the DMA-only baseline).
+    pub fn dma_transfer(&mut self, addr: u64, bytes: u32, token: u64, is_write: bool) -> LmbOutcome {
+        if self.dma.submit(token, addr, bytes, is_write) {
+            LmbOutcome::Pending
+        } else {
+            LmbOutcome::Stall
+        }
+    }
+
+    /// Write-through store used by the cache-only baseline (no allocate).
+    pub fn store_through(&mut self, addr: u64, bytes: u32, ids: &mut IdGen) -> ReqId {
+        let id = ids.next();
+        self.outbox.push_back(MemReq {
+            id,
+            addr: addr - addr % self.line_bytes.min(64),
+            bytes,
+            is_write: true,
+            port: self.idx,
+        });
+        id
+    }
+
+    /// Per-cycle housekeeping: move DMA queue into buffers, retry blocked
+    /// RR lines.
+    pub fn tick(&mut self, now: Cycle, ids: &mut IdGen, line_events: &mut Vec<LineEvent>) {
+        self.dma.tick(ids);
+        while let Some(req) = self.dma.pop_request() {
+            self.outbox.push_back(req);
+        }
+        // One blocked RR line retried per cycle (single cache port).
+        if let Some(line) = self.retry_lines.pop_front() {
+            self.line_to_cache(line, now, ids, line_events);
+        }
+    }
+
+    /// A cache line reached the RR: release waiters.
+    pub fn line_ready(&mut self, line: u64, now: Cycle) -> Vec<Delivery> {
+        self.rr
+            .line_arrived(line, now)
+            .into_iter()
+            .map(|(token, at)| Delivery { token, at })
+            .collect()
+    }
+
+    /// A DRAM completion for this port. Returns PE deliveries (and may
+    /// push RR line events for freshly filled lines on the proposed path).
+    pub fn on_dram_completion(
+        &mut self,
+        id: ReqId,
+        done_at: Cycle,
+        line_events: &mut Vec<LineEvent>,
+    ) -> Vec<Delivery> {
+        // DMA transfer?
+        if let Some((token, at)) = self.dma.on_complete(id, done_at) {
+            return vec![Delivery { token, at }];
+        }
+        // Cache fill?
+        if let Some((line, waiters)) = self.cache.fill(id) {
+            match self.kind {
+                SystemKind::Proposed => {
+                    // Waiters are RR line tokens — deliver the line to the
+                    // RR after the cache pipeline.
+                    for w in waiters {
+                        debug_assert_eq!(w, line);
+                        line_events.push(LineEvent {
+                            lmb: self.idx,
+                            line: w,
+                            at: done_at + 3,
+                        });
+                    }
+                }
+                SystemKind::CacheOnly => {
+                    return waiters
+                        .into_iter()
+                        .map(|token| Delivery {
+                            token,
+                            at: done_at + 3,
+                        })
+                        .collect();
+                }
+                _ => unreachable!("cache unused in {:?}", self.kind),
+            }
+        }
+        Vec::new()
+    }
+
+    /// Next outgoing request toward the router, if any.
+    pub fn pop_request(&mut self) -> Option<MemReq> {
+        self.outbox.pop_front()
+    }
+
+    pub fn has_requests(&self) -> bool {
+        !self.outbox.is_empty()
+    }
+
+    pub fn quiescent(&self) -> bool {
+        self.outbox.is_empty()
+            && self.retry_lines.is_empty()
+            && self.cache.quiescent()
+            && self.dma.is_idle()
+            && self.rr.outstanding() == 0
+    }
+
+    pub fn stats(&self) -> LmbStats {
+        LmbStats {
+            cache: self.cache.stats.clone(),
+            rr: self.rr.stats.clone(),
+            dma: self.dma.stats.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lmb(kind: SystemKind) -> (Lmb, IdGen) {
+        let mut cfg = SystemConfig::config_a();
+        cfg.kind = kind;
+        (Lmb::new(&cfg, 0), IdGen::default())
+    }
+
+    #[test]
+    fn proposed_element_flow_via_rr_cache_dram() {
+        let (mut l, mut ids) = lmb(SystemKind::Proposed);
+        let mut evs = Vec::new();
+        // First element: RR forwards, cache misses → request in outbox.
+        assert_eq!(
+            l.element_load(0, 1, 0, &mut ids, &mut evs),
+            LmbOutcome::Pending
+        );
+        let req = l.pop_request().expect("fill request");
+        assert_eq!(req.bytes, 64);
+        // Second element of the same line: absorbed by RRSH.
+        assert_eq!(
+            l.element_load(16, 2, 1, &mut ids, &mut evs),
+            LmbOutcome::Pending
+        );
+        // DRAM completes → line event → RR release.
+        let d = l.on_dram_completion(req.id, 100, &mut evs);
+        assert!(d.is_empty());
+        assert_eq!(evs.len(), 1);
+        let deliveries = l.line_ready(evs[0].line, evs[0].at);
+        assert_eq!(deliveries.len(), 2);
+        assert!(deliveries.iter().any(|d| d.token == 1));
+        assert!(deliveries.iter().any(|d| d.token == 2));
+        // Third element of that line: temp-buffer hit.
+        match l.element_load(32, 3, 200, &mut ids, &mut evs) {
+            LmbOutcome::Ready { at } => assert!(at > 200),
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dma_path_and_completion() {
+        let (mut l, mut ids) = lmb(SystemKind::Proposed);
+        let mut evs = Vec::new();
+        assert_eq!(
+            l.dma_transfer(0x10080, 128, 7, false),
+            LmbOutcome::Pending
+        );
+        l.tick(0, &mut ids, &mut evs);
+        let req = l.pop_request().expect("dma burst");
+        assert_eq!(req.addr, 0x10080);
+        let d = l.on_dram_completion(req.id, 55, &mut evs);
+        assert_eq!(d, vec![Delivery { token: 7, at: 55 }]);
+    }
+
+    #[test]
+    fn dma_only_backpressures_at_capacity() {
+        let (mut l, mut ids) = lmb(SystemKind::DmaOnly);
+        let mut evs = Vec::new();
+        // 4 buffers × pipeline depth 4 → 16 accepted, 17th stalls.
+        for t in 0..16 {
+            assert_eq!(l.dma_transfer(t * 64, 64, t, false), LmbOutcome::Pending);
+        }
+        assert_eq!(l.dma_transfer(4096, 64, 99, false), LmbOutcome::Stall);
+        l.tick(0, &mut ids, &mut evs);
+        assert!(l.pop_request().is_some());
+    }
+
+    #[test]
+    fn cache_only_direct_loads() {
+        let (mut l, mut ids) = lmb(SystemKind::CacheOnly);
+        assert_eq!(l.cache_load_direct(0, 9, 0, &mut ids), LmbOutcome::Pending);
+        let req = l.pop_request().unwrap();
+        let mut evs = Vec::new();
+        let d = l.on_dram_completion(req.id, 80, &mut evs);
+        assert_eq!(d, vec![Delivery { token: 9, at: 83 }]);
+        // Now hits.
+        match l.cache_load_direct(16, 10, 90, &mut ids) {
+            LmbOutcome::Ready { at } => assert_eq!(at, 93),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn store_through_issues_write() {
+        let (mut l, mut ids) = lmb(SystemKind::CacheOnly);
+        l.store_through(0x30000, 128, &mut ids);
+        let req = l.pop_request().unwrap();
+        assert!(req.is_write);
+        assert_eq!(req.bytes, 128);
+    }
+
+    #[test]
+    fn quiescent_tracks_all_subunits() {
+        let (mut l, mut ids) = lmb(SystemKind::Proposed);
+        assert!(l.quiescent());
+        let mut evs = Vec::new();
+        l.element_load(0, 1, 0, &mut ids, &mut evs);
+        assert!(!l.quiescent());
+    }
+}

@@ -1,0 +1,168 @@
+//! Conventional Miss Status Holding Registers.
+//!
+//! This is the structure the paper's cache-only baseline relies on and the
+//! RRSH replaces: a small fully-associative table of outstanding line
+//! fills, each tracking a bounded list of secondary waiters. When either
+//! the table or a waiter list is full the cache must stall — the exact
+//! failure mode §V-D describes for MTTKRP fiber streams.
+
+use super::cache::WaiterToken;
+use super::ReqId;
+
+/// Outcome of presenting a miss to the MSHR.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MshrOutcome {
+    /// New entry allocated (slot index returned) — issue the fill.
+    Allocated(usize),
+    /// Joined an existing entry as a secondary miss.
+    Merged,
+    /// Table or waiter list full — structural stall.
+    Full,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    line: u64,
+    req_id: ReqId,
+    waiters: Vec<WaiterToken>,
+    valid: bool,
+}
+
+/// A conventional MSHR file.
+pub struct Mshr {
+    entries: Vec<Entry>,
+    secondary_cap: usize,
+    occupancy: usize,
+}
+
+impl Mshr {
+    pub fn new(n_entries: usize, secondary_cap: usize) -> Mshr {
+        Mshr {
+            entries: (0..n_entries)
+                .map(|_| Entry {
+                    line: 0,
+                    req_id: 0,
+                    waiters: Vec::new(),
+                    valid: false,
+                })
+                .collect(),
+            secondary_cap,
+            occupancy: 0,
+        }
+    }
+
+    /// Present a missing `line`; `token` waits for its fill.
+    pub fn lookup_or_allocate(&mut self, line: u64, token: WaiterToken) -> MshrOutcome {
+        // Fully-associative lookup.
+        let mut free = None;
+        for (idx, e) in self.entries.iter_mut().enumerate() {
+            if e.valid && e.line == line {
+                // `waiters` holds the primary + secondaries; cap counts
+                // secondaries only.
+                if e.waiters.len() >= 1 + self.secondary_cap {
+                    return MshrOutcome::Full;
+                }
+                e.waiters.push(token);
+                return MshrOutcome::Merged;
+            }
+            if !e.valid && free.is_none() {
+                free = Some(idx);
+            }
+        }
+        match free {
+            Some(idx) => {
+                let e = &mut self.entries[idx];
+                e.valid = true;
+                e.line = line;
+                e.req_id = 0;
+                e.waiters.clear();
+                e.waiters.push(token);
+                self.occupancy += 1;
+                MshrOutcome::Allocated(idx)
+            }
+            None => MshrOutcome::Full,
+        }
+    }
+
+    /// Record the DRAM request id of a just-allocated entry.
+    pub fn set_req_id(&mut self, slot: usize, id: ReqId) {
+        debug_assert!(self.entries[slot].valid);
+        self.entries[slot].req_id = id;
+    }
+
+    /// A fill completed: free the entry and return (line, waiters).
+    pub fn complete(&mut self, id: ReqId) -> Option<(u64, Vec<WaiterToken>)> {
+        for e in &mut self.entries {
+            if e.valid && e.req_id == id {
+                e.valid = false;
+                self.occupancy -= 1;
+                return Some((e.line, std::mem::take(&mut e.waiters)));
+            }
+        }
+        None
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.occupancy == 0
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.occupancy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_merge_complete_cycle() {
+        let mut m = Mshr::new(2, 2);
+        let MshrOutcome::Allocated(slot) = m.lookup_or_allocate(7, 100) else {
+            panic!()
+        };
+        m.set_req_id(slot, 42);
+        assert_eq!(m.lookup_or_allocate(7, 101), MshrOutcome::Merged);
+        assert_eq!(m.occupancy(), 1);
+        let (line, waiters) = m.complete(42).unwrap();
+        assert_eq!(line, 7);
+        assert_eq!(waiters, vec![100, 101]);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn secondary_cap_enforced() {
+        let mut m = Mshr::new(1, 1);
+        let MshrOutcome::Allocated(s) = m.lookup_or_allocate(3, 1) else {
+            panic!()
+        };
+        m.set_req_id(s, 9);
+        assert_eq!(m.lookup_or_allocate(3, 2), MshrOutcome::Merged);
+        assert_eq!(m.lookup_or_allocate(3, 3), MshrOutcome::Full);
+    }
+
+    #[test]
+    fn table_capacity_enforced() {
+        let mut m = Mshr::new(2, 4);
+        assert!(matches!(m.lookup_or_allocate(1, 1), MshrOutcome::Allocated(_)));
+        assert!(matches!(m.lookup_or_allocate(2, 2), MshrOutcome::Allocated(_)));
+        assert_eq!(m.lookup_or_allocate(3, 3), MshrOutcome::Full);
+    }
+
+    #[test]
+    fn complete_unknown_id_is_none() {
+        let mut m = Mshr::new(1, 1);
+        assert!(m.complete(5).is_none());
+    }
+
+    #[test]
+    fn slots_recycle_after_completion() {
+        let mut m = Mshr::new(1, 0);
+        let MshrOutcome::Allocated(s) = m.lookup_or_allocate(1, 1) else {
+            panic!()
+        };
+        m.set_req_id(s, 11);
+        m.complete(11).unwrap();
+        assert!(matches!(m.lookup_or_allocate(2, 2), MshrOutcome::Allocated(_)));
+    }
+}

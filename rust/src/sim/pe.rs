@@ -1,0 +1,393 @@
+//! PE front ends — the compute-fabric side of the memory system.
+//!
+//! A front end replays one [`PeTrace`]: it keeps a decoupling window of
+//! in-flight nonzeros (Type-1: the systolic array's pipeline depth;
+//! Type-2: each PE's load queue), issues each nonzero's accesses to the
+//! memory system, waits for the loads, spends the compute cycles, and
+//! retires. The *system* decides where each access goes (cache / DMA /
+//! direct) — the front end only tracks dependency state, which is why the
+//! same PE model drives the proposed system and all three baselines.
+
+use std::collections::VecDeque;
+
+use crate::trace::{Access, NnzWork, PeTrace};
+
+use super::Cycle;
+
+/// Access slots within a nonzero: 0 = element, 1/2 = fibers, 3 = store.
+pub const ACC_ELEM: usize = 0;
+pub const ACC_FIB1: usize = 1;
+pub const ACC_FIB2: usize = 2;
+pub const ACC_STORE: usize = 3;
+
+/// Pack a completion token: (pe, window slot, access index).
+#[inline]
+pub fn pack_token(pe: usize, slot: usize, acc: usize) -> u64 {
+    ((pe as u64) << 24) | ((slot as u64) << 4) | acc as u64
+}
+
+/// Unpack a completion token.
+#[inline]
+pub fn unpack_token(t: u64) -> (usize, usize, usize) {
+    ((t >> 24) as usize, ((t >> 4) & 0xF_FFFF) as usize, (t & 0xF) as usize)
+}
+
+#[derive(Debug, Clone)]
+struct NnzSlot {
+    work: NnzWork,
+    /// Whether each access has been handed to the memory system.
+    issued: [bool; 4],
+    /// Outstanding sub-parts per access (cache-only splits fibers into
+    /// lines). 0 ⇒ complete (for issued accesses / absent store).
+    parts_left: [u16; 4],
+    /// Cycle at which compute finishes (set once all loads complete).
+    compute_done: Option<Cycle>,
+    /// Accesses (elem, fibers, store) not yet fully complete.
+    outstanding: u8,
+    /// Cycle each access was issued (for latency accounting).
+    issued_at: [Cycle; 4],
+}
+
+impl NnzSlot {
+    fn new(work: NnzWork) -> NnzSlot {
+        NnzSlot {
+            work,
+            issued: [false, false, false, work.store.is_none()],
+            parts_left: [1, 1, 1, u16::from(work.store.is_some())],
+            compute_done: None,
+            outstanding: 3 + u8::from(work.store.is_some()),
+            issued_at: [0; 4],
+        }
+    }
+
+    fn loads_done(&self) -> bool {
+        (0..3).all(|a| self.issued[a] && self.parts_left[a] == 0)
+    }
+
+    fn store_done(&self) -> bool {
+        self.issued[ACC_STORE] && self.parts_left[ACC_STORE] == 0
+    }
+}
+
+/// Per-access-class latency accumulators (issue → last part complete).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub total: u64,
+    pub max: u64,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, lat: u64) {
+        self.count += 1;
+        self.total += lat;
+        self.max = self.max.max(lat);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &LatencyStats) {
+        self.count += o.count;
+        self.total += o.total;
+        self.max = self.max.max(o.max);
+    }
+}
+
+/// Statistics per front end.
+#[derive(Debug, Clone, Default)]
+pub struct PeStats {
+    pub retired: u64,
+    pub issued_accesses: u64,
+    pub stall_cycles: u64,
+    /// Latency by access slot class: [element, fiber-load, fiber-load,
+    /// store] — index with ACC_*.
+    pub latency: [LatencyStats; 4],
+}
+
+/// One PE front end (Type-1: the shared TLU/MLU/MSU; Type-2: one PE).
+pub struct PeFrontEnd {
+    pub pe: usize,
+    /// LMB / router port this front end is attached to.
+    pub port: usize,
+    trace: PeTrace,
+    cursor: usize,
+    window: Vec<Option<NnzSlot>>,
+    /// Unissued (slot, acc) accesses in program order — avoids the
+    /// O(window × 4) scan per issue attempt (§Perf L3 opt #1).
+    pending: VecDeque<(u32, u8)>,
+    /// Slots whose accesses all completed, with their compute-done cycle
+    /// — retire() scans these instead of the window (§Perf L3 opt #3).
+    retirable: Vec<(Cycle, u32)>,
+    occupied: usize,
+    /// Accesses this front end may issue per cycle.
+    pub issue_width: usize,
+    compute_cycles: Cycle,
+    pub stats: PeStats,
+}
+
+impl PeFrontEnd {
+    pub fn new(
+        trace: PeTrace,
+        port: usize,
+        window: usize,
+        issue_width: usize,
+        compute_cycles: Cycle,
+    ) -> PeFrontEnd {
+        PeFrontEnd {
+            pe: trace.pe,
+            port,
+            trace,
+            cursor: 0,
+            window: vec![None; window.max(1)],
+            pending: VecDeque::new(),
+            retirable: Vec::new(),
+            occupied: 0,
+            issue_width: issue_width.max(1),
+            compute_cycles,
+            stats: PeStats::default(),
+        }
+    }
+
+    /// Admit nonzeros from the trace into free window slots (in order).
+    pub fn fill_window(&mut self) {
+        if self.occupied == self.window.len() || self.cursor >= self.trace.work.len() {
+            return;
+        }
+        for slot in 0..self.window.len() {
+            if self.window[slot].is_none() {
+                if self.cursor >= self.trace.work.len() {
+                    break;
+                }
+                self.occupied += 1;
+                let work = self.trace.work[self.cursor];
+                self.window[slot] = Some(NnzSlot::new(work));
+                self.cursor += 1;
+                for acc in [ACC_ELEM, ACC_FIB1, ACC_FIB2] {
+                    self.pending.push_back((slot as u32, acc as u8));
+                }
+                if work.store.is_some() {
+                    self.pending.push_back((slot as u32, ACC_STORE as u8));
+                }
+            }
+        }
+    }
+
+    /// Next unissued access in program order (front of the pending
+    /// queue). Returns (slot, acc index, access).
+    pub fn next_unissued(&self) -> Option<(usize, usize, Access)> {
+        let &(slot, acc) = self.pending.front()?;
+        let (si, acc) = (slot as usize, acc as usize);
+        let s = self.window[si].as_ref().expect("pending entry has live slot");
+        let a = match acc {
+            ACC_ELEM => s.work.elem,
+            ACC_FIB1 => s.work.fibers[0],
+            ACC_FIB2 => s.work.fibers[1],
+            _ => s.work.store.expect("store slot pre-marked when absent"),
+        };
+        Some((si, acc, a))
+    }
+
+    /// Mark an access as issued with `parts` outstanding sub-requests.
+    /// Must be the access `next_unissued` just returned (program order).
+    pub fn mark_issued_at(&mut self, slot: usize, acc: usize, parts: u16, now: Cycle) {
+        self.mark_issued(slot, acc, parts);
+        if let Some(s) = self.window[slot].as_mut() {
+            s.issued_at[acc] = now;
+        }
+    }
+
+    /// Mark an access as issued with `parts` outstanding sub-requests.
+    /// Must be the access `next_unissued` just returned (program order).
+    pub fn mark_issued(&mut self, slot: usize, acc: usize, parts: u16) {
+        debug_assert_eq!(
+            self.pending.front(),
+            Some(&(slot as u32, acc as u8)),
+            "mark_issued out of order"
+        );
+        self.pending.pop_front();
+        let s = self.window[slot].as_mut().expect("slot occupied");
+        debug_assert!(!s.issued[acc]);
+        s.issued[acc] = true;
+        s.parts_left[acc] = parts;
+        self.stats.issued_accesses += 1;
+    }
+
+    /// One sub-part of (slot, acc) completed at `now`. Returns true when
+    /// the whole access (all parts) is now complete.
+    pub fn part_done(&mut self, slot: usize, acc: usize, now: Cycle) -> bool {
+        let Some(s) = self.window[slot].as_mut() else {
+            return false; // late completion after forced retire (doesn't happen in practice)
+        };
+        debug_assert!(s.issued[acc] && s.parts_left[acc] > 0);
+        s.parts_left[acc] -= 1;
+        let complete = s.parts_left[acc] == 0;
+        if complete {
+            self.stats.latency[acc].record(now.saturating_sub(s.issued_at[acc]));
+            s.outstanding -= 1;
+            if s.compute_done.is_none() && s.loads_done() {
+                s.compute_done = Some(now + self.compute_cycles);
+            }
+            if s.outstanding == 0 {
+                let done = s.compute_done.expect("loads done implies compute scheduled");
+                self.retirable.push((done, slot as u32));
+            }
+        }
+        complete
+    }
+
+    /// Retire finished slots; returns how many retired this call.
+    pub fn retire(&mut self, now: Cycle) -> u64 {
+        if self.retirable.is_empty() {
+            return 0;
+        }
+        let mut n = 0;
+        let mut i = 0;
+        while i < self.retirable.len() {
+            let (done, slot) = self.retirable[i];
+            if done <= now {
+                self.retirable.swap_remove(i);
+                debug_assert!(self.window[slot as usize].is_some());
+                self.window[slot as usize] = None;
+                self.occupied -= 1;
+                n += 1;
+            } else {
+                i += 1;
+            }
+        }
+        self.stats.retired += n;
+        n
+    }
+
+    /// All trace work admitted and completed.
+    pub fn done(&self) -> bool {
+        self.cursor >= self.trace.work.len() && self.window.iter().all(Option::is_none)
+    }
+
+    pub fn total_work(&self) -> usize {
+        self.trace.work.len()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.window.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::AccessClass;
+
+    fn work(z: u64, with_store: bool) -> NnzWork {
+        let a = |class, addr| Access {
+            class,
+            addr,
+            bytes: 16,
+        };
+        NnzWork {
+            elem: a(AccessClass::TensorElem, z * 16),
+            fibers: [
+                a(AccessClass::FiberLoad, 0x10000 + z * 128),
+                a(AccessClass::FiberLoad, 0x20000 + z * 128),
+            ],
+            store: with_store.then(|| a(AccessClass::FiberStore, 0x30000)),
+        }
+    }
+
+    fn fe(n: usize, window: usize) -> PeFrontEnd {
+        let trace = PeTrace {
+            pe: 0,
+            work: (0..n as u64).map(|z| work(z, z % 2 == 0)).collect(),
+        };
+        PeFrontEnd::new(trace, 0, window, 2, 1)
+    }
+
+    #[test]
+    fn token_pack_unpack() {
+        for (pe, slot, acc) in [(0, 0, 0), (3, 17, 3), (255, 1023, 2)] {
+            assert_eq!(unpack_token(pack_token(pe, slot, acc)), (pe, slot, acc));
+        }
+    }
+
+    #[test]
+    fn lifecycle_issue_complete_retire() {
+        let mut fe = fe(1, 4);
+        fe.fill_window();
+        assert_eq!(fe.in_flight(), 1);
+        // Issue all 4 accesses (elem, 2 fibers, store).
+        let mut seen = Vec::new();
+        while let Some((slot, acc, _a)) = fe.next_unissued() {
+            fe.mark_issued(slot, acc, 1);
+            seen.push(acc);
+        }
+        assert_eq!(seen, vec![ACC_ELEM, ACC_FIB1, ACC_FIB2, ACC_STORE]);
+        // Complete loads at t=10 → compute done at 11.
+        fe.part_done(0, ACC_ELEM, 10);
+        fe.part_done(0, ACC_FIB1, 10);
+        fe.part_done(0, ACC_FIB2, 10);
+        assert_eq!(fe.retire(11), 0, "store still outstanding");
+        fe.part_done(0, ACC_STORE, 12);
+        assert_eq!(fe.retire(10), 0, "compute not yet done at 10");
+        assert_eq!(fe.retire(12), 1);
+        assert!(fe.done());
+    }
+
+    #[test]
+    fn storeless_work_needs_only_loads() {
+        let mut fe = fe(2, 1); // window 1: z=0 (store), then z=1 (no store)
+        fe.fill_window();
+        while let Some((s, a, _)) = fe.next_unissued() {
+            fe.mark_issued(s, a, 1);
+            fe.part_done(s, a, 5);
+        }
+        fe.retire(6);
+        fe.fill_window();
+        // Second item has no store: 3 accesses only.
+        let mut count = 0;
+        while let Some((s, a, _)) = fe.next_unissued() {
+            fe.mark_issued(s, a, 1);
+            fe.part_done(s, a, 8);
+            count += 1;
+        }
+        assert_eq!(count, 3);
+        assert_eq!(fe.retire(9), 1);
+        assert!(fe.done());
+    }
+
+    #[test]
+    fn multipart_access_completes_after_all_parts() {
+        let mut fe = fe(1, 2);
+        fe.fill_window();
+        let (s, a, _) = fe.next_unissued().unwrap();
+        fe.mark_issued(s, a, 3); // e.g. fiber split into 3 lines
+        fe.part_done(s, a, 1);
+        fe.part_done(s, a, 2);
+        // Not done yet: next_unissued moves to the next access meanwhile.
+        let (_, a2, _) = fe.next_unissued().unwrap();
+        assert_ne!(a2, a);
+        fe.part_done(s, a, 3);
+        // Access a now complete (no panic, no double count).
+    }
+
+    #[test]
+    fn window_limits_inflight() {
+        let mut fe = fe(10, 3);
+        fe.fill_window();
+        assert_eq!(fe.in_flight(), 3);
+        // Drain one, refill admits exactly one more.
+        while let Some((s, a, _)) = fe.next_unissued() {
+            fe.mark_issued(s, a, 1);
+        }
+        for acc in 0..4 {
+            fe.part_done(0, acc, 4);
+        }
+        assert_eq!(fe.retire(20), 1);
+        fe.fill_window();
+        assert_eq!(fe.in_flight(), 3);
+    }
+}

@@ -1,0 +1,199 @@
+//! Request Router (§IV-D): "(a) receive memory requests from different
+//! LMB units and forward them to the DRAM interface IP, (b) forward the
+//! data coming from external memory to the LMB units."
+//!
+//! Round-robin arbitration over the LMB ports, one command per user-clock
+//! cycle into the memory controller (matching the single MIG command
+//! channel), with backpressure when the controller queue is full.
+
+use std::collections::VecDeque;
+
+use super::dram::Dram;
+use super::{Cycle, MemReq, MemResp};
+
+/// Router statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    pub forwarded: u64,
+    pub backpressure_cycles: u64,
+    pub per_port_forwarded: Vec<u64>,
+}
+
+/// The request router between LMBs and the DRAM interface IP.
+pub struct Router {
+    /// Per-port ingress queues (filled by LMBs / direct PE ports).
+    ingress: Vec<VecDeque<MemReq>>,
+    /// Round-robin pointer.
+    rr_next: usize,
+    /// Commands the router may forward per cycle (MIG: 1).
+    cmds_per_cycle: usize,
+    pub stats: RouterStats,
+}
+
+impl Router {
+    pub fn new(n_ports: usize, cmds_per_cycle: usize) -> Router {
+        Router {
+            ingress: (0..n_ports).map(|_| VecDeque::new()).collect(),
+            rr_next: 0,
+            cmds_per_cycle: cmds_per_cycle.max(1),
+            stats: RouterStats {
+                per_port_forwarded: vec![0; n_ports],
+                ..RouterStats::default()
+            },
+        }
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.ingress.len()
+    }
+
+    /// Enqueue a request from port `req.port`.
+    pub fn push(&mut self, req: MemReq) {
+        debug_assert!(req.port < self.ingress.len());
+        self.ingress[req.port].push_back(req);
+    }
+
+    /// Ingress occupancy of one port (for LMB backpressure decisions).
+    pub fn port_depth(&self, port: usize) -> usize {
+        self.ingress[port].len()
+    }
+
+    /// Forward up to `cmds_per_cycle` requests into the DRAM controller,
+    /// round-robin across ports.
+    pub fn tick(&mut self, dram: &mut Dram, now: Cycle) {
+        let n = self.ingress.len();
+        let mut forwarded = 0;
+        let mut scanned = 0;
+        while forwarded < self.cmds_per_cycle && scanned < n {
+            let port = (self.rr_next + scanned) % n;
+            if let Some(req) = self.ingress[port].front() {
+                if !dram.can_accept() {
+                    self.stats.backpressure_cycles += 1;
+                    return;
+                }
+                let req = *req;
+                self.ingress[port].pop_front();
+                dram.push(req, now);
+                self.stats.forwarded += 1;
+                self.stats.per_port_forwarded[port] += 1;
+                forwarded += 1;
+                // Advance RR past the port we just served.
+                self.rr_next = (port + 1) % n;
+                scanned = 0;
+                continue;
+            }
+            scanned += 1;
+        }
+    }
+
+    /// Split DRAM completions back out by port (the data return path).
+    pub fn route_completions(
+        completions: Vec<MemResp>,
+        per_port: &mut [Vec<MemResp>],
+    ) {
+        for resp in completions {
+            per_port[resp.port].push(resp);
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.ingress.iter().all(VecDeque::is_empty)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    fn req(id: u64, port: usize) -> MemReq {
+        MemReq {
+            id,
+            addr: id * 64,
+            bytes: 64,
+            is_write: false,
+            port,
+        }
+    }
+
+    #[test]
+    fn round_robin_fairness() {
+        let mut r = Router::new(4, 1);
+        let mut dram = Dram::new(&DramConfig::mig_u250());
+        // Port 0 floods; ports 1-3 each submit one.
+        for i in 0..8 {
+            r.push(req(100 + i, 0));
+        }
+        for p in 1..4 {
+            r.push(req(p as u64, p));
+        }
+        // After 4 cycles of arbitration every port got a turn.
+        for c in 0..4 {
+            r.tick(&mut dram, c);
+        }
+        assert_eq!(r.stats.forwarded, 4);
+        for p in 0..4 {
+            assert!(
+                r.stats.per_port_forwarded[p] >= 1,
+                "port {p} starved: {:?}",
+                r.stats.per_port_forwarded
+            );
+        }
+    }
+
+    #[test]
+    fn backpressure_when_dram_full() {
+        let cfg = DramConfig {
+            max_outstanding: 2,
+            ..DramConfig::mig_u250()
+        };
+        let mut dram = Dram::new(&cfg);
+        let mut r = Router::new(1, 1);
+        for i in 0..4 {
+            r.push(req(i, 0));
+        }
+        r.tick(&mut dram, 0);
+        r.tick(&mut dram, 1);
+        r.tick(&mut dram, 2); // controller full
+        assert_eq!(r.stats.forwarded, 2);
+        assert!(r.stats.backpressure_cycles >= 1);
+        assert_eq!(r.port_depth(0), 2);
+    }
+
+    #[test]
+    fn completion_routing_by_port() {
+        let completions = vec![
+            MemResp {
+                id: 1,
+                port: 0,
+                done_at: 5,
+            },
+            MemResp {
+                id: 2,
+                port: 1,
+                done_at: 6,
+            },
+            MemResp {
+                id: 3,
+                port: 0,
+                done_at: 7,
+            },
+        ];
+        let mut per_port = vec![Vec::new(), Vec::new()];
+        Router::route_completions(completions, &mut per_port);
+        assert_eq!(per_port[0].len(), 2);
+        assert_eq!(per_port[1].len(), 1);
+        assert_eq!(per_port[1][0].id, 2);
+    }
+
+    #[test]
+    fn multi_cmd_router_forwards_more() {
+        let mut r = Router::new(2, 2);
+        let mut dram = Dram::new(&DramConfig::mig_u250());
+        r.push(req(1, 0));
+        r.push(req(2, 1));
+        r.tick(&mut dram, 0);
+        assert_eq!(r.stats.forwarded, 2);
+        assert!(r.is_idle());
+    }
+}

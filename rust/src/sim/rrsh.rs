@@ -1,0 +1,163 @@
+//! Recent Request Status Holder (RRSH) — stage 2 of the Request Reductor.
+//!
+//! "RRSH keeps the status of recently forwarded requests to the cache. If
+//! the incoming read request belongs to one of the pending cache-line
+//! requests, the PE id and address are kept in the RRSH. When a
+//! cache-reply reaches the RRSH, the pending requests corresponding to
+//! that cache line are satisfied ... It drastically reduces the memory
+//! traffic to the cache." (§IV-C)
+//!
+//! Unlike a conventional MSHR, the RRSH sits *in front of* the cache and
+//! absorbs secondary misses with a wide waiter list (width ∝ number of
+//! PEs × elements per line, §IV-C1), implemented over the XOR-based hash
+//! table.
+
+use super::xor_hash::{InsertOutcome, XorHashTable};
+
+/// Waiter token: (pe, per-PE bookkeeping id) packed by the caller.
+pub type RrshToken = u64;
+
+/// Outcome of presenting an element request's line to the RRSH.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RrshOutcome {
+    /// Line not pending: entry created, forward ONE line request to cache.
+    Forward,
+    /// Line already pending: request absorbed, no cache traffic.
+    Absorbed,
+    /// Hash conflict or waiter list full — stall this PE for a cycle.
+    Stall,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Pending {
+    waiters: Vec<RrshToken>,
+}
+
+/// The RRSH unit.
+pub struct Rrsh {
+    table: XorHashTable<Pending>,
+    /// Max waiters per line: tag width + one slot per PE per element slot
+    /// (§IV-C1: table width ∝ tag + n_PEs, connected RR × elements/line).
+    waiter_cap: usize,
+    pub stat_forwarded: u64,
+    pub stat_absorbed: u64,
+    pub stat_stalls: u64,
+}
+
+impl Rrsh {
+    /// `entries` = table capacity (paper: 4096 ∝ cache lines / assoc);
+    /// `n_pes`, `elems_per_line` size the waiter list.
+    pub fn new(entries: usize, n_pes: usize, elems_per_line: usize) -> Rrsh {
+        Rrsh {
+            table: XorHashTable::new(entries.next_power_of_two()),
+            waiter_cap: (n_pes * elems_per_line).max(4),
+            stat_forwarded: 0,
+            stat_absorbed: 0,
+            stat_stalls: 0,
+        }
+    }
+
+    /// Present an element request for cache line `line`.
+    pub fn request(&mut self, line: u64, token: RrshToken) -> RrshOutcome {
+        if let Some(p) = self.table.get_mut(line) {
+            if p.waiters.len() >= self.waiter_cap {
+                self.stat_stalls += 1;
+                return RrshOutcome::Stall;
+            }
+            p.waiters.push(token);
+            self.stat_absorbed += 1;
+            return RrshOutcome::Absorbed;
+        }
+        match self.table.insert(
+            line,
+            Pending {
+                waiters: vec![token],
+            },
+        ) {
+            InsertOutcome::Inserted => {
+                self.stat_forwarded += 1;
+                RrshOutcome::Forward
+            }
+            InsertOutcome::Exists => unreachable!("checked above"),
+            InsertOutcome::Conflict => {
+                self.stat_stalls += 1;
+                RrshOutcome::Stall
+            }
+        }
+    }
+
+    /// A cache line arrived: release and return all its waiters.
+    pub fn complete(&mut self, line: u64) -> Vec<RrshToken> {
+        self.table
+            .remove(line)
+            .map(|p| p.waiters)
+            .unwrap_or_default()
+    }
+
+    /// Is this line already being tracked?
+    pub fn pending(&self, line: u64) -> bool {
+        self.table.get(line).is_some()
+    }
+
+    pub fn outstanding_lines(&self) -> usize {
+        self.table.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_request_forwards_rest_absorbed() {
+        let mut r = Rrsh::new(64, 4, 4);
+        assert_eq!(r.request(10, 1), RrshOutcome::Forward);
+        assert_eq!(r.request(10, 2), RrshOutcome::Absorbed);
+        assert_eq!(r.request(10, 3), RrshOutcome::Absorbed);
+        assert_eq!(r.stat_forwarded, 1);
+        assert_eq!(r.stat_absorbed, 2);
+        assert!(r.pending(10));
+        let w = r.complete(10);
+        assert_eq!(w, vec![1, 2, 3]);
+        assert!(!r.pending(10));
+        // After completion a new request to the same line forwards again.
+        assert_eq!(r.request(10, 4), RrshOutcome::Forward);
+    }
+
+    #[test]
+    fn waiter_cap_stalls() {
+        let mut r = Rrsh::new(64, 1, 4); // cap = 4
+        assert_eq!(r.request(5, 0), RrshOutcome::Forward);
+        for t in 1..4 {
+            assert_eq!(r.request(5, t), RrshOutcome::Absorbed);
+        }
+        assert_eq!(r.request(5, 9), RrshOutcome::Stall);
+        assert_eq!(r.stat_stalls, 1);
+    }
+
+    #[test]
+    fn traffic_reduction_on_element_stream() {
+        // 4 PEs sweeping a COO stream: 16 elements per line region,
+        // 64 lines. Cache traffic = forwarded lines only.
+        let mut r = Rrsh::new(4096, 4, 4);
+        let mut cache_traffic = 0;
+        for z in 0..1024u64 {
+            let line = z / 4;
+            match r.request(line, z) {
+                RrshOutcome::Forward => cache_traffic += 1,
+                RrshOutcome::Absorbed => {}
+                RrshOutcome::Stall => panic!("unexpected stall"),
+            }
+            if z % 4 == 3 {
+                r.complete(line);
+            }
+        }
+        assert_eq!(cache_traffic, 256, "1 line request per 4 elements");
+    }
+
+    #[test]
+    fn complete_unknown_line_empty() {
+        let mut r = Rrsh::new(16, 2, 4);
+        assert!(r.complete(99).is_empty());
+    }
+}

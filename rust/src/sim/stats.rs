@@ -1,0 +1,173 @@
+//! Simulation report: the paper's metric (total memory access time) plus
+//! per-component counters for analysis and ablations.
+
+use crate::util::json::Json;
+
+use super::cache::CacheStats;
+use super::dma::DmaStats;
+use super::dram::DramStats;
+use super::pe::LatencyStats;
+use super::request_reductor::RrStats;
+use super::Cycle;
+
+/// Per-LMB statistics snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct LmbStats {
+    pub cache: CacheStats,
+    pub rr: RrStats,
+    pub dma: DmaStats,
+}
+
+/// Complete result of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// System label (e.g. "config-a" / "config-a-cache-only").
+    pub label: String,
+    /// Workload name (e.g. "synth01").
+    pub workload: String,
+    /// The paper's Fig. 4 metric: total memory access time in user-clock
+    /// cycles (makespan from first issue to last completion).
+    pub total_cycles: Cycle,
+    /// Nonzeros processed.
+    pub nnz: u64,
+    /// PE-visible accesses served (elements + fibers + stores).
+    pub accesses: u64,
+    /// Bytes the PEs asked for (excl. alignment garbage).
+    pub requested_bytes: u64,
+    pub dram: DramStats,
+    pub lmbs: Vec<LmbStats>,
+    /// PE-observed latency per access slot: [element, fiber-load,
+    /// fiber-load, store] — the paper's per-class "minimum latency" view.
+    pub latency: [LatencyStats; 4],
+    /// Wall-clock seconds the simulation itself took (host time).
+    pub host_seconds: f64,
+}
+
+impl SimReport {
+    /// Simulated memory bandwidth actually delivered (bytes/cycle).
+    pub fn bytes_per_cycle(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            (self.dram.read_bytes + self.dram.write_bytes) as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Nonzeros processed per cycle (the compute-side view).
+    pub fn nnz_per_cycle(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Speedup of this run relative to a baseline run on the same
+    /// workload (baseline_cycles / self_cycles) — Fig. 4's y-axis.
+    pub fn speedup_over(&self, baseline: &SimReport) -> f64 {
+        assert_eq!(self.workload, baseline.workload, "speedup across workloads");
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            baseline.total_cycles as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Aggregate cache hit rate over all LMBs.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let (mut h, mut a) = (0u64, 0u64);
+        for l in &self.lmbs {
+            h += l.cache.hits;
+            a += l.cache.accesses();
+        }
+        if a == 0 {
+            0.0
+        } else {
+            h as f64 / a as f64
+        }
+    }
+
+    /// Mean PE-observed latency of element loads (cycles).
+    pub fn elem_latency_mean(&self) -> f64 {
+        self.latency[0].mean()
+    }
+
+    /// Mean PE-observed latency of fiber loads (cycles).
+    pub fn fiber_latency_mean(&self) -> f64 {
+        let (a, b) = (&self.latency[1], &self.latency[2]);
+        let n = a.count + b.count;
+        if n == 0 {
+            0.0
+        } else {
+            (a.total + b.total) as f64 / n as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("elem_latency_mean", Json::num(self.elem_latency_mean())),
+            ("fiber_latency_mean", Json::num(self.fiber_latency_mean())),
+            ("workload", Json::str(self.workload.clone())),
+            ("total_cycles", Json::num(self.total_cycles as f64)),
+            ("nnz", Json::num(self.nnz as f64)),
+            ("accesses", Json::num(self.accesses as f64)),
+            ("requested_bytes", Json::num(self.requested_bytes as f64)),
+            ("bytes_per_cycle", Json::num(self.bytes_per_cycle())),
+            ("nnz_per_cycle", Json::num(self.nnz_per_cycle())),
+            ("cache_hit_rate", Json::num(self.cache_hit_rate())),
+            (
+                "dram",
+                Json::obj(vec![
+                    ("reads", Json::num(self.dram.reads as f64)),
+                    ("writes", Json::num(self.dram.writes as f64)),
+                    ("read_bytes", Json::num(self.dram.read_bytes as f64)),
+                    ("write_bytes", Json::num(self.dram.write_bytes as f64)),
+                    ("row_hit_rate", Json::num(self.dram.row_hit_rate())),
+                ]),
+            ),
+            ("host_seconds", Json::num(self.host_seconds)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cycles: Cycle) -> SimReport {
+        SimReport {
+            label: "x".into(),
+            workload: "w".into(),
+            total_cycles: cycles,
+            nnz: 100,
+            accesses: 400,
+            requested_bytes: 6400,
+            dram: DramStats {
+                read_bytes: 5000,
+                write_bytes: 1000,
+                ..Default::default()
+            },
+            lmbs: vec![],
+            latency: Default::default(),
+            host_seconds: 0.0,
+        }
+    }
+
+    #[test]
+    fn derived_metrics() {
+        let r = report(1000);
+        assert!((r.bytes_per_cycle() - 6.0).abs() < 1e-12);
+        assert!((r.nnz_per_cycle() - 0.1).abs() < 1e-12);
+        let base = report(3500);
+        assert!((base.speedup_over(&base) - 1.0).abs() < 1e-12);
+        assert!((r.speedup_over(&base) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_round_trip_fields() {
+        let j = report(10).to_json();
+        assert_eq!(j.get("total_cycles").unwrap().as_usize(), Some(10));
+        assert!(j.get("dram").unwrap().get("row_hit_rate").is_some());
+    }
+}

@@ -1,0 +1,172 @@
+//! CISS-like compressed interleaved layout (Tensaurus' Compressed
+//! Interleaved Sparse Slice is "also a variation of COO format", §V-A1).
+//!
+//! The format interleaves the nonzeros of `n_channels` slices so a
+//! systolic fabric (Type-1) streams one element per channel per beat.
+//! The simulator uses it to generate Type-1 element streams whose address
+//! pattern is sequential per channel — the layout the paper's cache path
+//! is designed around.
+
+use super::coo::{CooTensor, Mode, COO_ELEM_BYTES};
+
+/// One interleaved element (flattened back to coordinates + value).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CissElem {
+    pub i: u32,
+    pub j: u32,
+    pub k: u32,
+    pub val: f32,
+    /// Which interleave channel the element belongs to.
+    pub channel: u16,
+    /// Marks the last element of a slice run (fiber boundary signal the
+    /// compute fabric uses to flush its output fiber).
+    pub end_of_slice: bool,
+}
+
+/// A tensor re-laid-out in interleaved slice order.
+#[derive(Debug, Clone)]
+pub struct CissTensor {
+    pub dims: [u64; 3],
+    pub n_channels: usize,
+    pub elems: Vec<CissElem>,
+    pub name: String,
+}
+
+impl CissTensor {
+    /// Build from a COO tensor sorted along `mode`. Slices along `mode`
+    /// are dealt round-robin to channels, then the channel streams are
+    /// interleaved element-by-element.
+    pub fn from_coo(t: &CooTensor, mode: Mode, n_channels: usize) -> CissTensor {
+        assert!(n_channels > 0);
+        let mut sorted = t.clone();
+        if sorted.sorted_mode != Some(mode) {
+            sorted.sort_mode(mode);
+        }
+        // Slice boundaries along the sorted mode.
+        let n = sorted.nnz();
+        let mut slices: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        for z in 1..=n {
+            if z == n || sorted.coord(z, mode) != sorted.coord(start, mode) {
+                slices.push((start, z));
+                start = z;
+            }
+        }
+        // Deal slices round-robin to channels.
+        let mut channels: Vec<Vec<CissElem>> = vec![Vec::new(); n_channels];
+        for (s_idx, &(lo, hi)) in slices.iter().enumerate() {
+            let ch = s_idx % n_channels;
+            for z in lo..hi {
+                let (i, j, k) = sorted.coords(z);
+                channels[ch].push(CissElem {
+                    i,
+                    j,
+                    k,
+                    val: sorted.vals[z],
+                    channel: ch as u16,
+                    end_of_slice: z + 1 == hi,
+                });
+            }
+        }
+        // Interleave: one element per channel per beat.
+        let mut elems = Vec::with_capacity(n);
+        let mut cursors = vec![0usize; n_channels];
+        let mut remaining = n;
+        while remaining > 0 {
+            for ch in 0..n_channels {
+                if cursors[ch] < channels[ch].len() {
+                    elems.push(channels[ch][cursors[ch]]);
+                    cursors[ch] += 1;
+                    remaining -= 1;
+                }
+            }
+        }
+        CissTensor {
+            dims: sorted.dims,
+            n_channels,
+            elems,
+            name: format!("{}-ciss{}", t.name, n_channels),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.elems.len()
+    }
+
+    /// Byte address of interleaved element `z` (stored contiguously,
+    /// 16 B/element like the COO stream).
+    #[inline]
+    pub fn elem_addr(&self, z: usize) -> u64 {
+        z as u64 * COO_ELEM_BYTES
+    }
+
+    /// Recover a COO tensor (for correctness checks).
+    pub fn to_coo(&self) -> CooTensor {
+        let mut t = CooTensor::new(&self.name, self.dims);
+        for e in &self.elems {
+            t.push(e.i, e.j, e.k, e.val);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrips_all_nonzeros() {
+        let mut rng = Rng::new(4);
+        let t = CooTensor::random(&mut rng, [8, 8, 8], 64);
+        let c = CissTensor::from_coo(&t, Mode::I, 4);
+        assert_eq!(c.nnz(), t.nnz());
+        let mut back = c.to_coo();
+        back.sum_duplicates();
+        let mut orig = t.clone();
+        orig.sum_duplicates();
+        assert_eq!(back.nnz(), orig.nnz());
+        let sum_a: f32 = back.vals.iter().sum();
+        let sum_b: f32 = orig.vals.iter().sum();
+        assert!((sum_a - sum_b).abs() < 1e-4);
+    }
+
+    #[test]
+    fn slices_stay_within_one_channel() {
+        let mut rng = Rng::new(5);
+        let t = CooTensor::random(&mut rng, [6, 16, 16], 120);
+        let c = CissTensor::from_coo(&t, Mode::I, 3);
+        // All elements with the same i share a channel.
+        let mut chan_of_i = std::collections::HashMap::new();
+        for e in &c.elems {
+            let prev = chan_of_i.insert(e.i, e.channel);
+            if let Some(p) = prev {
+                assert_eq!(p, e.channel, "slice i={} split across channels", e.i);
+            }
+        }
+    }
+
+    #[test]
+    fn end_of_slice_flags_count_matches_slices() {
+        let mut t = CooTensor::new("s", [4, 4, 4]);
+        t.push(0, 0, 0, 1.0);
+        t.push(0, 1, 0, 1.0);
+        t.push(2, 0, 0, 1.0);
+        t.push(3, 1, 2, 1.0);
+        let c = CissTensor::from_coo(&t, Mode::I, 2);
+        let ends = c.elems.iter().filter(|e| e.end_of_slice).count();
+        assert_eq!(ends, 3); // slices: i=0 (2 elems), i=2, i=3
+    }
+
+    #[test]
+    fn interleaving_alternates_channels_at_head() {
+        let mut rng = Rng::new(6);
+        let t = CooTensor::random(&mut rng, [16, 8, 8], 100);
+        let c = CissTensor::from_coo(&t, Mode::I, 4);
+        // The first 4 elements must be 4 distinct channels (all non-empty
+        // at this size).
+        let head: Vec<u16> = c.elems[..4].iter().map(|e| e.channel).collect();
+        let set: std::collections::HashSet<_> = head.iter().collect();
+        assert_eq!(set.len(), 4, "head channels {head:?}");
+    }
+}

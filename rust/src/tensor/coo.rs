@@ -1,0 +1,306 @@
+//! COO (coordinate) sparse tensor — the storage format the paper's
+//! accelerators consume ("all the FPGA or CGRA based implementations use a
+//! variation of COO format", §IV-E).
+//!
+//! Each nonzero is `(i, j, k, value)`; one stored element is 16 bytes
+//! (3 × u32 coordinates + f32 value), matching §V-A1.
+
+use crate::util::rng::Rng;
+
+/// Which mode the MTTKRP output is computed along (mode-n MTTKRP updates
+/// the mode-n factor matrix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    I,
+    J,
+    K,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 3] = [Mode::I, Mode::J, Mode::K];
+
+    pub fn index(&self) -> usize {
+        match self {
+            Mode::I => 0,
+            Mode::J => 1,
+            Mode::K => 2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::I => "i",
+            Mode::J => "j",
+            Mode::K => "k",
+        }
+    }
+}
+
+/// Size in bytes of one stored COO element (i, j, k, val @ 4 B each), §V-A1.
+pub const COO_ELEM_BYTES: u64 = 16;
+
+/// A third-order sparse tensor in COO format.
+///
+/// Kept as structure-of-arrays for cache-friendly sweeps; the *stored*
+/// layout (what the simulator's address map sees) is array-of-structures,
+/// 16 B per element, as in the paper.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooTensor {
+    pub dims: [u64; 3],
+    pub ind_i: Vec<u32>,
+    pub ind_j: Vec<u32>,
+    pub ind_k: Vec<u32>,
+    pub vals: Vec<f32>,
+    /// Mode the nonzeros are currently sorted along (None = unsorted).
+    pub sorted_mode: Option<Mode>,
+    /// Human-readable dataset name (e.g. "synth01").
+    pub name: String,
+}
+
+impl CooTensor {
+    /// Create an empty tensor with the given dimensions.
+    pub fn new(name: &str, dims: [u64; 3]) -> CooTensor {
+        CooTensor {
+            dims,
+            ind_i: Vec::new(),
+            ind_j: Vec::new(),
+            ind_k: Vec::new(),
+            vals: Vec::new(),
+            sorted_mode: None,
+            name: name.to_string(),
+        }
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Density = nnz / (I·J·K).
+    pub fn density(&self) -> f64 {
+        let cells = self.dims[0] as f64 * self.dims[1] as f64 * self.dims[2] as f64;
+        if cells == 0.0 {
+            0.0
+        } else {
+            self.nnz() as f64 / cells
+        }
+    }
+
+    /// Stored size in bytes (COO, 16 B/element).
+    pub fn stored_bytes(&self) -> u64 {
+        self.nnz() as u64 * COO_ELEM_BYTES
+    }
+
+    /// Push one nonzero (invalidates sortedness).
+    pub fn push(&mut self, i: u32, j: u32, k: u32, v: f32) {
+        debug_assert!((i as u64) < self.dims[0], "i {i} out of range {:?}", self.dims);
+        debug_assert!((j as u64) < self.dims[1], "j {j} out of range {:?}", self.dims);
+        debug_assert!((k as u64) < self.dims[2], "k {k} out of range {:?}", self.dims);
+        self.ind_i.push(i);
+        self.ind_j.push(j);
+        self.ind_k.push(k);
+        self.vals.push(v);
+        self.sorted_mode = None;
+    }
+
+    /// Coordinates of nonzero `z` in mode order `(mode, other1, other2)`.
+    #[inline]
+    pub fn coords(&self, z: usize) -> (u32, u32, u32) {
+        (self.ind_i[z], self.ind_j[z], self.ind_k[z])
+    }
+
+    /// The coordinate of nonzero `z` along `mode`.
+    #[inline]
+    pub fn coord(&self, z: usize, mode: Mode) -> u32 {
+        match mode {
+            Mode::I => self.ind_i[z],
+            Mode::J => self.ind_j[z],
+            Mode::K => self.ind_k[z],
+        }
+    }
+
+    /// Dimension along `mode`.
+    pub fn dim(&self, mode: Mode) -> u64 {
+        self.dims[mode.index()]
+    }
+
+    /// Sort nonzeros along `mode` (stable lexicographic with the other two
+    /// modes as tie-breakers) — the matricization order accelerators use so
+    /// output-fiber writes are consolidated (Algorithm 3's `current_I`).
+    pub fn sort_mode(&mut self, mode: Mode) {
+        let n = self.nnz();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let key = |z: usize| -> (u32, u32, u32) {
+            let (i, j, k) = self.coords(z);
+            match mode {
+                Mode::I => (i, j, k),
+                Mode::J => (j, k, i),
+                Mode::K => (k, i, j),
+            }
+        };
+        order.sort_by_key(|&z| key(z as usize));
+        self.permute(&order);
+        self.sorted_mode = Some(mode);
+    }
+
+    /// Apply a permutation (order[dst] = src).
+    fn permute(&mut self, order: &[u32]) {
+        let take = |src: &Vec<u32>| -> Vec<u32> {
+            order.iter().map(|&z| src[z as usize]).collect()
+        };
+        self.ind_i = take(&self.ind_i);
+        self.ind_j = take(&self.ind_j);
+        self.ind_k = take(&self.ind_k);
+        self.vals = order.iter().map(|&z| self.vals[z as usize]).collect();
+    }
+
+    /// Verify sortedness along `mode`.
+    pub fn is_sorted_mode(&self, mode: Mode) -> bool {
+        (1..self.nnz()).all(|z| self.coord(z - 1, mode) <= self.coord(z, mode))
+    }
+
+    /// Deduplicate identical coordinates by summing values (requires any
+    /// full sort first; does its own lexicographic sort).
+    pub fn sum_duplicates(&mut self) {
+        let n = self.nnz();
+        if n == 0 {
+            return;
+        }
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&z| self.coords(z as usize));
+        self.permute(&order);
+        let mut w = 0usize;
+        for z in 1..n {
+            if self.coords(z) == self.coords(w) {
+                self.vals[w] += self.vals[z];
+            } else {
+                w += 1;
+                self.ind_i[w] = self.ind_i[z];
+                self.ind_j[w] = self.ind_j[z];
+                self.ind_k[w] = self.ind_k[z];
+                self.vals[w] = self.vals[z];
+            }
+        }
+        self.truncate(w + 1);
+        self.sorted_mode = Some(Mode::I);
+    }
+
+    fn truncate(&mut self, len: usize) {
+        self.ind_i.truncate(len);
+        self.ind_j.truncate(len);
+        self.ind_k.truncate(len);
+        self.vals.truncate(len);
+    }
+
+    /// Number of distinct indices along `mode` (= number of output fibers
+    /// touched by mode-`mode` MTTKRP).
+    pub fn distinct_along(&self, mode: Mode) -> usize {
+        let mut seen: Vec<u32> = (0..self.nnz()).map(|z| self.coord(z, mode)).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    /// Byte address of stored element `z` relative to the tensor base.
+    #[inline]
+    pub fn elem_addr(&self, z: usize) -> u64 {
+        z as u64 * COO_ELEM_BYTES
+    }
+
+    /// A small random tensor for tests.
+    pub fn random(rng: &mut Rng, dims: [u64; 3], nnz: usize) -> CooTensor {
+        let mut t = CooTensor::new("random", dims);
+        for _ in 0..nnz {
+            t.push(
+                rng.gen_range(dims[0]) as u32,
+                rng.gen_range(dims[1]) as u32,
+                rng.gen_range(dims[2]) as u32,
+                rng.gen_f32_range(-1.0, 1.0),
+            );
+        }
+        t.sum_duplicates();
+        t.sort_mode(Mode::I);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> CooTensor {
+        let mut t = CooTensor::new("toy", [4, 5, 6]);
+        t.push(3, 0, 0, 1.0);
+        t.push(1, 2, 3, 2.0);
+        t.push(1, 0, 5, 3.0);
+        t.push(0, 4, 2, 4.0);
+        t
+    }
+
+    #[test]
+    fn push_and_counts() {
+        let t = toy();
+        assert_eq!(t.nnz(), 4);
+        assert_eq!(t.stored_bytes(), 64);
+        assert!((t.density() - 4.0 / 120.0).abs() < 1e-12);
+        assert_eq!(t.elem_addr(2), 32);
+    }
+
+    #[test]
+    fn sort_modes() {
+        for mode in Mode::ALL {
+            let mut t = toy();
+            t.sort_mode(mode);
+            assert!(t.is_sorted_mode(mode), "not sorted along {:?}", mode);
+            assert_eq!(t.sorted_mode, Some(mode));
+            // Values follow their coordinates.
+            let total: f32 = t.vals.iter().sum();
+            assert_eq!(total, 10.0);
+        }
+    }
+
+    #[test]
+    fn sort_is_lexicographic_with_tiebreakers() {
+        let mut t = CooTensor::new("tie", [2, 4, 4]);
+        t.push(1, 3, 0, 1.0);
+        t.push(1, 0, 2, 2.0);
+        t.push(1, 0, 1, 3.0);
+        t.sort_mode(Mode::I);
+        assert_eq!(t.ind_j, vec![0, 0, 3]);
+        assert_eq!(t.ind_k, vec![1, 2, 0]);
+        assert_eq!(t.vals, vec![3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn dedup_sums_values() {
+        let mut t = CooTensor::new("dup", [2, 2, 2]);
+        t.push(1, 1, 1, 1.5);
+        t.push(0, 0, 0, 1.0);
+        t.push(1, 1, 1, 2.5);
+        t.sum_duplicates();
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.coords(0), (0, 0, 0));
+        assert_eq!(t.vals[1], 4.0);
+    }
+
+    #[test]
+    fn distinct_along_counts_fibers() {
+        let t = toy();
+        assert_eq!(t.distinct_along(Mode::I), 3); // i ∈ {0,1,3}
+        assert_eq!(t.distinct_along(Mode::J), 3); // j ∈ {0,2,4}
+        assert_eq!(t.distinct_along(Mode::K), 4);
+    }
+
+    #[test]
+    fn random_tensor_in_bounds_sorted() {
+        let mut rng = Rng::new(1);
+        let t = CooTensor::random(&mut rng, [10, 11, 12], 200);
+        assert!(t.nnz() <= 200);
+        assert!(t.nnz() > 100); // dedup shouldn't kill most of them
+        assert!(t.is_sorted_mode(Mode::I));
+        for z in 0..t.nnz() {
+            let (i, j, k) = t.coords(z);
+            assert!((i as u64) < 10 && (j as u64) < 11 && (k as u64) < 12);
+        }
+    }
+}

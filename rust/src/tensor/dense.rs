@@ -1,0 +1,233 @@
+//! Dense factor matrices in row-major order — "the dense matrices use a
+//! row-major format ... because the MTTKRP algorithm encourages row-wise
+//! matrix accesses" (§IV-A). Element size 4 B (f32), rank R per row (§V-A1).
+
+use crate::util::rng::Rng;
+
+/// Bytes per dense element (§V-A1: "keeping each element 4 Byte").
+pub const DENSE_ELEM_BYTES: u64 = 4;
+
+/// Row-major dense matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Uniform random in [0,1) — standard CP-ALS init.
+    pub fn random(rng: &mut Rng, rows: usize, cols: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(rows, cols);
+        for v in &mut m.data {
+            *v = rng.gen_f32();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// A row (fiber) as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Byte address of row `r` relative to the matrix base (row-major).
+    #[inline]
+    pub fn row_addr(&self, r: usize) -> u64 {
+        r as u64 * self.row_bytes()
+    }
+
+    /// Bytes per row (= fiber length in bytes = R·4).
+    #[inline]
+    pub fn row_bytes(&self) -> u64 {
+        self.cols as u64 * DENSE_ELEM_BYTES
+    }
+
+    /// Total stored bytes.
+    pub fn stored_bytes(&self) -> u64 {
+        self.rows as u64 * self.row_bytes()
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+
+    /// Gram matrix AᵀA (R×R) — used by CP-ALS normal equations.
+    pub fn gram(&self) -> DenseMatrix {
+        let r = self.cols;
+        let mut g = DenseMatrix::zeros(r, r);
+        for row in 0..self.rows {
+            let x = self.row(row);
+            for a in 0..r {
+                let xa = x[a];
+                if xa == 0.0 {
+                    continue;
+                }
+                for b in a..r {
+                    g.data[a * r + b] += xa * x[b];
+                }
+            }
+        }
+        // Mirror the upper triangle.
+        for a in 0..r {
+            for b in 0..a {
+                g.data[a * r + b] = g.data[b * r + a];
+            }
+        }
+        g
+    }
+
+    /// Elementwise (Hadamard) product — `C^TC * D^TD` in Algorithm 1.
+    pub fn hadamard(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Normalize each column to unit 2-norm; returns the norms (λ).
+    pub fn normalize_columns(&mut self) -> Vec<f32> {
+        let mut norms = vec![0f32; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = self.at(r, c);
+                norms[c] += v * v;
+            }
+        }
+        for n in &mut norms {
+            *n = n.sqrt();
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if norms[c] > 1e-20 {
+                    *self.at_mut(r, c) /= norms[c];
+                }
+            }
+        }
+        norms
+    }
+
+    /// Max absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_addressing() {
+        let mut m = DenseMatrix::zeros(3, 4);
+        *m.at_mut(1, 2) = 5.0;
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.data[6], 5.0);
+        assert_eq!(m.row_addr(2), 32);
+        assert_eq!(m.row_bytes(), 16);
+        assert_eq!(m.stored_bytes(), 48);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn gram_is_correct_small() {
+        // A = [[1,2],[3,4]]; AᵀA = [[10,14],[14,20]]
+        let m = DenseMatrix {
+            rows: 2,
+            cols: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let g = m.gram();
+        assert_eq!(g.data, vec![10.0, 14.0, 14.0, 20.0]);
+    }
+
+    #[test]
+    fn hadamard_elementwise() {
+        let a = DenseMatrix {
+            rows: 1,
+            cols: 3,
+            data: vec![1.0, 2.0, 3.0],
+        };
+        let b = DenseMatrix {
+            rows: 1,
+            cols: 3,
+            data: vec![4.0, 5.0, 6.0],
+        };
+        assert_eq!(a.hadamard(&b).data, vec![4.0, 10.0, 18.0]);
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut m = DenseMatrix {
+            rows: 2,
+            cols: 2,
+            data: vec![3.0, 0.0, 4.0, 2.0],
+        };
+        let norms = m.normalize_columns();
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert!((norms[1] - 2.0).abs() < 1e-6);
+        // Column 0 now (0.6, 0.8).
+        assert!((m.at(0, 0) - 0.6).abs() < 1e-6);
+        assert!((m.at(1, 0) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fro_norm_and_diff() {
+        let a = DenseMatrix {
+            rows: 1,
+            cols: 2,
+            data: vec![3.0, 4.0],
+        };
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        let b = DenseMatrix {
+            rows: 1,
+            cols: 2,
+            data: vec![3.5, 4.0],
+        };
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_in_unit_interval() {
+        let mut rng = Rng::new(2);
+        let m = DenseMatrix::random(&mut rng, 10, 10);
+        assert!(m.data.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,128 @@
+//! `.tns` text I/O (FROSTT-style: one `i j k value` line per nonzero,
+//! 1-based indices) so external tensors can be fed to the system.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use super::coo::CooTensor;
+use crate::Result;
+
+/// Write a tensor in FROSTT `.tns` format (1-based indices).
+pub fn write_tns(t: &CooTensor, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for z in 0..t.nnz() {
+        let (i, j, k) = t.coords(z);
+        writeln!(w, "{} {} {} {}", i + 1, j + 1, k + 1, t.vals[z])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a 3-mode FROSTT `.tns` file. Dimensions are inferred from the
+/// maximum index per mode unless `dims` is given.
+pub fn read_tns(path: &Path, dims: Option<[u64; 3]>) -> Result<CooTensor> {
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().to_string())
+        .unwrap_or_else(|| "tns".into());
+    let mut is = Vec::new();
+    let mut js = Vec::new();
+    let mut ks = Vec::new();
+    let mut vs = Vec::new();
+    let mut max = [0u64; 3];
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let mut idx = [0u64; 3];
+        for m in &mut idx {
+            *m = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("{}:{}: too few fields", path.display(), lineno + 1))?
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("{}:{}: bad index: {e}", path.display(), lineno + 1))?;
+            anyhow::ensure!(*m >= 1, "{}:{}: indices are 1-based", path.display(), lineno + 1);
+        }
+        let v: f32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}:{}: missing value", path.display(), lineno + 1))?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{}:{}: bad value: {e}", path.display(), lineno + 1))?;
+        for (m, &x) in max.iter_mut().zip(&idx) {
+            *m = (*m).max(x);
+        }
+        is.push((idx[0] - 1) as u32);
+        js.push((idx[1] - 1) as u32);
+        ks.push((idx[2] - 1) as u32);
+        vs.push(v);
+    }
+    let dims = dims.unwrap_or(max);
+    anyhow::ensure!(
+        dims[0] >= max[0] && dims[1] >= max[1] && dims[2] >= max[2],
+        "given dims {dims:?} smaller than data extent {max:?}"
+    );
+    let mut t = CooTensor::new(&name, dims);
+    t.ind_i = is;
+    t.ind_j = js;
+    t.ind_k = ks;
+    t.vals = vs;
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::coo::Mode;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_tns() {
+        let mut rng = Rng::new(8);
+        let mut t = CooTensor::random(&mut rng, [10, 12, 14], 80);
+        t.sort_mode(Mode::I);
+        let dir = std::env::temp_dir().join("memsys_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tns");
+        write_tns(&t, &path).unwrap();
+        let back = read_tns(&path, Some(t.dims)).unwrap();
+        assert_eq!(back.nnz(), t.nnz());
+        for z in 0..t.nnz() {
+            assert_eq!(back.coords(z), t.coords(z));
+            assert!((back.vals[z] - t.vals[z]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn infers_dims_and_skips_comments() {
+        let dir = std::env::temp_dir().join("memsys_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.tns");
+        std::fs::write(&path, "# header\n2 3 4 1.5\n% other comment\n1 1 1 -2\n").unwrap();
+        let t = read_tns(&path, None).unwrap();
+        assert_eq!(t.dims, [2, 3, 4]);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.coords(0), (1, 2, 3));
+        assert_eq!(t.vals[1], -2.0);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        let dir = std::env::temp_dir().join("memsys_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("short.tns");
+        std::fs::write(&p1, "1 2 3\n").unwrap();
+        assert!(read_tns(&p1, None).is_err());
+        let p2 = dir.join("zero.tns");
+        std::fs::write(&p2, "0 1 1 2.0\n").unwrap();
+        assert!(read_tns(&p2, None).is_err(), "0-based index must fail");
+        let p3 = dir.join("dims.tns");
+        std::fs::write(&p3, "5 1 1 2.0\n").unwrap();
+        assert!(read_tns(&p3, Some([2, 2, 2])).is_err(), "extent check");
+    }
+}

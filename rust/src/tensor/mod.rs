@@ -1,0 +1,16 @@
+//! Sparse-tensor substrate: COO tensors, CISS-like interleaved layout,
+//! synthetic dataset generators (paper Table III), dense factor matrices,
+//! `.tns` I/O, and nonzero partitioning for parallel PEs (Algorithm 3).
+
+pub mod ciss;
+pub mod coo;
+pub mod dense;
+pub mod gen;
+pub mod io;
+pub mod partition;
+
+pub use ciss::CissTensor;
+pub use coo::{CooTensor, Mode};
+pub use dense::DenseMatrix;
+pub use gen::{synth_01, synth_02, GenParams, TensorSpec};
+pub use partition::{partition_by_nnz, Partition};

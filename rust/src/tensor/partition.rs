@@ -1,0 +1,161 @@
+//! Nonzero partitioning for parallel PEs (Algorithm 3: "for each
+//! partition_q parallel do ... for z = 0 to M/p").
+//!
+//! Partitions are contiguous ranges of the mode-sorted nonzero stream,
+//! balanced by nnz, and — critically for the paper's consistency argument
+//! (§IV: "Only the PEs connected to the same LMB update the same output
+//! fiber") — aligned to output-fiber boundaries so no output row spans
+//! two partitions.
+
+use super::coo::{CooTensor, Mode};
+
+/// One PE's share of the nonzero stream: the half-open range `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Partition {
+    pub pe: usize,
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Partition {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+/// Split `t` (sorted along `mode`) into `p` contiguous partitions balanced
+/// by nnz and aligned to `mode`-fiber boundaries.
+///
+/// Guarantees:
+/// * partitions are disjoint, ordered, and cover `[0, nnz)`;
+/// * no output index (coordinate along `mode`) appears in two partitions;
+/// * sizes are within one fiber of the balanced target.
+pub fn partition_by_nnz(t: &CooTensor, mode: Mode, p: usize) -> Vec<Partition> {
+    assert!(p > 0);
+    assert!(
+        t.sorted_mode == Some(mode) || t.is_sorted_mode(mode),
+        "tensor must be sorted along {mode:?} before partitioning"
+    );
+    let n = t.nnz();
+    let mut parts = Vec::with_capacity(p);
+    let target = n as f64 / p as f64;
+    let mut start = 0usize;
+    for pe in 0..p {
+        let ideal_end = if pe + 1 == p {
+            n
+        } else {
+            ((pe + 1) as f64 * target).round() as usize
+        };
+        // Advance end to the next fiber boundary (do not split an output row).
+        let mut end = ideal_end.clamp(start, n);
+        while end > start && end < n && t.coord(end, mode) == t.coord(end - 1, mode) {
+            end += 1;
+        }
+        parts.push(Partition { pe, start, end });
+        start = end;
+    }
+    // The last partition absorbs any remainder.
+    if let Some(last) = parts.last_mut() {
+        last.end = n;
+    }
+    parts
+}
+
+/// Check the fiber-alignment invariant (used by property tests).
+pub fn partitions_fiber_aligned(t: &CooTensor, mode: Mode, parts: &[Partition]) -> bool {
+    for w in parts.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if a.end != b.start {
+            return false;
+        }
+        if !a.is_empty() && !b.is_empty() && t.coord(a.end - 1, mode) == t.coord(b.start, mode) {
+            return false;
+        }
+    }
+    !parts.is_empty()
+        && parts[0].start == 0
+        && parts.last().unwrap().end == t.nnz()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sorted_random(seed: u64, dims: [u64; 3], nnz: usize) -> CooTensor {
+        let mut rng = Rng::new(seed);
+        let mut t = CooTensor::random(&mut rng, dims, nnz);
+        t.sort_mode(Mode::I);
+        t
+    }
+
+    #[test]
+    fn covers_disjoint_ordered() {
+        let t = sorted_random(1, [32, 16, 16], 500);
+        let parts = partition_by_nnz(&t, Mode::I, 4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].start, 0);
+        assert_eq!(parts.last().unwrap().end, t.nnz());
+        for w in parts.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn no_fiber_spans_two_partitions() {
+        let t = sorted_random(2, [20, 8, 8], 400);
+        let parts = partition_by_nnz(&t, Mode::I, 4);
+        assert!(partitions_fiber_aligned(&t, Mode::I, &parts));
+        // Direct check of the invariant.
+        for w in parts.windows(2) {
+            if !w[0].is_empty() && !w[1].is_empty() {
+                assert_ne!(
+                    t.coord(w[0].end - 1, Mode::I),
+                    t.coord(w[1].start, Mode::I)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roughly_balanced() {
+        let t = sorted_random(3, [128, 32, 32], 4000);
+        let parts = partition_by_nnz(&t, Mode::I, 8);
+        let target = t.nnz() / 8;
+        for p in &parts {
+            // Balance within a generous factor (fiber alignment shifts
+            // boundaries; fibers here are small).
+            assert!(
+                p.len() < target * 2 + 64,
+                "partition {} too large: {}",
+                p.pe,
+                p.len()
+            );
+        }
+    }
+
+    #[test]
+    fn single_partition_and_more_parts_than_fibers() {
+        let t = sorted_random(4, [4, 8, 8], 100);
+        let one = partition_by_nnz(&t, Mode::I, 1);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len(), t.nnz());
+        // p > #fibers: some partitions may be empty, but coverage holds.
+        let many = partition_by_nnz(&t, Mode::I, 16);
+        assert!(partitions_fiber_aligned(&t, Mode::I, &many));
+        let total: usize = many.iter().map(|p| p.len()).sum();
+        assert_eq!(total, t.nnz());
+    }
+
+    #[test]
+    fn works_along_other_modes() {
+        let mut t = sorted_random(5, [16, 24, 12], 600);
+        t.sort_mode(Mode::J);
+        let parts = partition_by_nnz(&t, Mode::J, 3);
+        assert!(partitions_fiber_aligned(&t, Mode::J, &parts));
+    }
+}

@@ -1,0 +1,129 @@
+//! Address map over the memory-interface IP's 31-bit byte-address space:
+//! `[tensor | matrix-1 | matrix-2 | output]`, each region aligned to the
+//! DRAM row size so streams from different structures never share a row.
+
+use crate::tensor::coo::COO_ELEM_BYTES;
+use crate::util::round_up;
+
+/// Byte layout of the four MTTKRP data structures in external memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AddressMap {
+    pub tensor_base: u64,
+    pub tensor_bytes: u64,
+    pub m1_base: u64,
+    pub m1_bytes: u64,
+    pub m2_base: u64,
+    pub m2_bytes: u64,
+    pub out_base: u64,
+    pub out_bytes: u64,
+    /// Fiber length in bytes (R·4).
+    pub fiber_bytes: u64,
+    /// Region alignment used (DRAM row bytes).
+    pub align: u64,
+}
+
+impl AddressMap {
+    /// Lay out a tensor with `nnz` elements and factor matrices with
+    /// `m1_rows`/`m2_rows`/`out_rows` rows of rank `rank`.
+    pub fn new(
+        nnz: u64,
+        m1_rows: u64,
+        m2_rows: u64,
+        out_rows: u64,
+        rank: usize,
+        align: u64,
+    ) -> AddressMap {
+        let fiber_bytes = rank as u64 * 4;
+        let tensor_bytes = nnz * COO_ELEM_BYTES;
+        let m1_bytes = m1_rows * fiber_bytes;
+        let m2_bytes = m2_rows * fiber_bytes;
+        let out_bytes = out_rows * fiber_bytes;
+        let tensor_base = 0;
+        let m1_base = round_up(tensor_base + tensor_bytes, align);
+        let m2_base = round_up(m1_base + m1_bytes, align);
+        let out_base = round_up(m2_base + m2_bytes, align);
+        AddressMap {
+            tensor_base,
+            tensor_bytes,
+            m1_base,
+            m1_bytes,
+            m2_base,
+            m2_bytes,
+            out_base,
+            out_bytes,
+            fiber_bytes,
+            align,
+        }
+    }
+
+    /// Address of stored tensor element `z` (COO / CISS stream order).
+    #[inline]
+    pub fn elem(&self, z: u64) -> u64 {
+        self.tensor_base + z * COO_ELEM_BYTES
+    }
+
+    /// Address of row `r` of input matrix 1 (row-major).
+    #[inline]
+    pub fn m1_row(&self, r: u64) -> u64 {
+        self.m1_base + r * self.fiber_bytes
+    }
+
+    /// Address of row `r` of input matrix 2.
+    #[inline]
+    pub fn m2_row(&self, r: u64) -> u64 {
+        self.m2_base + r * self.fiber_bytes
+    }
+
+    /// Address of output row `r`.
+    #[inline]
+    pub fn out_row(&self, r: u64) -> u64 {
+        self.out_base + r * self.fiber_bytes
+    }
+
+    /// Total mapped bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.out_base + self.out_bytes
+    }
+
+    /// True if the layout fits a 31-bit address space (MIG on U250).
+    pub fn fits_addr_bits(&self, bits: usize) -> bool {
+        self.total_bytes() <= 1u64 << bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_ordered_aligned_disjoint() {
+        let m = AddressMap::new(1000, 50, 60, 70, 32, 8192);
+        assert_eq!(m.tensor_base, 0);
+        assert_eq!(m.fiber_bytes, 128);
+        assert!(m.m1_base >= m.tensor_bytes);
+        assert_eq!(m.m1_base % 8192, 0);
+        assert_eq!(m.m2_base % 8192, 0);
+        assert_eq!(m.out_base % 8192, 0);
+        assert!(m.m2_base >= m.m1_base + m.m1_bytes);
+        assert!(m.out_base >= m.m2_base + m.m2_bytes);
+    }
+
+    #[test]
+    fn element_and_row_addressing() {
+        let m = AddressMap::new(10, 4, 4, 4, 8, 4096);
+        assert_eq!(m.elem(0), 0);
+        assert_eq!(m.elem(3), 48);
+        assert_eq!(m.m1_row(2) - m.m1_base, 64);
+        assert_eq!(m.out_row(1) - m.out_base, 32);
+    }
+
+    #[test]
+    fn addr_width_check() {
+        let small = AddressMap::new(1000, 10, 10, 10, 8, 4096);
+        assert!(small.fits_addr_bits(31));
+        // Synth-02-at-full-scale-like sizes exceed 2 GiB.
+        let huge = AddressMap::new(144_000_000, 3_000_000, 25_000_000, 2_000_000, 32, 8192);
+        assert!(!huge.fits_addr_bits(31));
+        assert!(huge.fits_addr_bits(34));
+    }
+}

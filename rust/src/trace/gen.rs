@@ -1,0 +1,264 @@
+//! Workload generation: tensor + fabric type → per-PE request streams.
+//!
+//! * **Type-1** (systolic, Tensaurus-like): a single point of access per
+//!   data structure — one shared Tensor Loading Unit streams the CISS-
+//!   interleaved elements, one Matrix Loading Unit streams fibers, one
+//!   Matrix Store Unit drains output fibers. We model the three shared
+//!   units as ONE PE front end (pe 0) whose stream interleaves slices.
+//! * **Type-2** (Algorithm 3): `p` independent PEs, each replaying its
+//!   fiber-aligned partition of the mode-sorted COO stream.
+
+use super::amap::AddressMap;
+use super::{Access, AccessClass, NnzWork, PeTrace};
+use crate::config::FabricType;
+use crate::mttkrp::operand_modes;
+use crate::tensor::{partition_by_nnz, CissTensor, CooTensor, Mode};
+
+/// A complete simulator workload: per-PE streams + the address map +
+/// summary counters.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub fabric: FabricType,
+    pub rank: usize,
+    pub amap: AddressMap,
+    pub pe_traces: Vec<PeTrace>,
+    pub nnz: usize,
+}
+
+impl Workload {
+    pub fn n_accesses(&self) -> usize {
+        self.pe_traces.iter().map(PeTrace::n_accesses).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.pe_traces.iter().map(PeTrace::total_bytes).sum()
+    }
+}
+
+/// Build the mode-`mode` MTTKRP workload for `t` on a `fabric` fabric with
+/// `n_pes` PEs and rank `rank`. `row_align` is the DRAM row size used to
+/// align regions (pass `DramConfig::row_bytes`).
+pub fn workload_from_tensor(
+    t: &CooTensor,
+    mode: Mode,
+    fabric: FabricType,
+    n_pes: usize,
+    rank: usize,
+    row_align: u64,
+) -> Workload {
+    let (om1, om2) = operand_modes(mode);
+    let amap = AddressMap::new(
+        t.nnz() as u64,
+        t.dim(om1),
+        t.dim(om2),
+        t.dim(mode),
+        rank,
+        row_align,
+    );
+    let mut sorted = t.clone();
+    if !sorted.is_sorted_mode(mode) {
+        sorted.sort_mode(mode);
+    }
+    let pe_traces = match fabric {
+        FabricType::Type1 => type1_trace(&sorted, mode, om1, om2, n_pes, &amap),
+        FabricType::Type2 => type2_traces(&sorted, mode, om1, om2, n_pes, &amap),
+    };
+    Workload {
+        name: t.name.clone(),
+        fabric,
+        rank,
+        amap,
+        pe_traces,
+        nnz: sorted.nnz(),
+    }
+}
+
+fn access(class: AccessClass, addr: u64, bytes: u64) -> Access {
+    Access {
+        class,
+        addr,
+        bytes: bytes as u32,
+    }
+}
+
+/// Work item for nonzero stream position `pos` whose element lives at
+/// stream address `pos` (Type-1 streams CISS order, Type-2 COO order).
+#[allow(clippy::too_many_arguments)]
+fn work_item(
+    amap: &AddressMap,
+    pos: u64,
+    j: u64,
+    k: u64,
+    store_row: Option<u64>,
+) -> NnzWork {
+    NnzWork {
+        elem: access(AccessClass::TensorElem, amap.elem(pos), 16),
+        fibers: [
+            access(AccessClass::FiberLoad, amap.m1_row(j), amap.fiber_bytes),
+            access(AccessClass::FiberLoad, amap.m2_row(k), amap.fiber_bytes),
+        ],
+        store: store_row
+            .map(|r| access(AccessClass::FiberStore, amap.out_row(r), amap.fiber_bytes)),
+    }
+}
+
+/// Type-1: one shared front end streaming the CISS-interleaved elements.
+/// Stores fire on `end_of_slice` markers (the systolic array drains the
+/// finished output fiber through the shared MSU).
+fn type1_trace(
+    t: &CooTensor,
+    _mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    n_pes: usize,
+    amap: &AddressMap,
+) -> Vec<PeTrace> {
+    // The CISS layout interleaves slices over the systolic columns.
+    let ciss = CissTensor::from_coo(t, _mode, n_pes.max(1));
+    let mut work = Vec::with_capacity(ciss.nnz());
+    for (pos, e) in ciss.elems.iter().enumerate() {
+        let (c1, c2) = match (om1, om2) {
+            (Mode::J, Mode::K) => (e.j, e.k),
+            (Mode::I, Mode::K) => (e.i, e.k),
+            (Mode::I, Mode::J) => (e.i, e.j),
+            _ => unreachable!("operand modes are always cyclic"),
+        };
+        let out_idx = match _mode {
+            Mode::I => e.i,
+            Mode::J => e.j,
+            Mode::K => e.k,
+        };
+        work.push(work_item(
+            amap,
+            pos as u64,
+            c1 as u64,
+            c2 as u64,
+            e.end_of_slice.then_some(out_idx as u64),
+        ));
+    }
+    vec![PeTrace { pe: 0, work }]
+}
+
+/// Type-2: independent PEs over fiber-aligned partitions (Algorithm 3).
+/// Stores fire when the output index changes and at partition end.
+fn type2_traces(
+    t: &CooTensor,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    n_pes: usize,
+    amap: &AddressMap,
+) -> Vec<PeTrace> {
+    let parts = partition_by_nnz(t, mode, n_pes);
+    let mut traces = Vec::with_capacity(parts.len());
+    for part in parts {
+        let mut work = Vec::with_capacity(part.len());
+        for z in part.start..part.end {
+            let j = t.coord(z, om1) as u64;
+            let k = t.coord(z, om2) as u64;
+            let oi = t.coord(z, mode) as u64;
+            // Algorithm 3 writes temp_Y back when indI changes; in the
+            // request stream that is a store attached to the *last*
+            // element of each fiber run.
+            let is_last_of_fiber =
+                z + 1 == part.end || t.coord(z + 1, mode) as u64 != oi;
+            work.push(work_item(amap, z as u64, j, k, is_last_of_fiber.then_some(oi)));
+        }
+        traces.push(PeTrace { pe: part.pe, work });
+    }
+    traces
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tensor(seed: u64) -> CooTensor {
+        let mut rng = Rng::new(seed);
+        CooTensor::random(&mut rng, [32, 24, 28], 600)
+    }
+
+    #[test]
+    fn type2_covers_all_nonzeros_once() {
+        let t = tensor(60);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type2, 4, 32, 8192);
+        assert_eq!(w.pe_traces.len(), 4);
+        let total: usize = w.pe_traces.iter().map(|p| p.work.len()).sum();
+        assert_eq!(total, t.nnz());
+        assert_eq!(w.nnz, t.nnz());
+    }
+
+    #[test]
+    fn type1_single_front_end() {
+        let t = tensor(61);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type1, 4, 32, 8192);
+        assert_eq!(w.pe_traces.len(), 1, "Type-1 has one point of access");
+        assert_eq!(w.pe_traces[0].work.len(), t.nnz());
+    }
+
+    #[test]
+    fn store_count_equals_fiber_count_type2() {
+        let t = tensor(62);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type2, 4, 32, 8192);
+        let stores: usize = w
+            .pe_traces
+            .iter()
+            .flat_map(|p| &p.work)
+            .filter(|x| x.store.is_some())
+            .count();
+        // Fiber-aligned partitions ⇒ exactly one store per distinct i.
+        assert_eq!(stores, t.distinct_along(Mode::I));
+    }
+
+    #[test]
+    fn store_count_equals_slice_count_type1() {
+        let t = tensor(63);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type1, 4, 32, 8192);
+        let stores: usize = w.pe_traces[0]
+            .work
+            .iter()
+            .filter(|x| x.store.is_some())
+            .count();
+        assert_eq!(stores, t.distinct_along(Mode::I));
+    }
+
+    #[test]
+    fn addresses_fall_in_their_regions() {
+        let t = tensor(64);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type2, 2, 16, 8192);
+        let a = &w.amap;
+        for p in &w.pe_traces {
+            for x in &p.work {
+                assert!(x.elem.addr < a.m1_base);
+                assert!(x.fibers[0].addr >= a.m1_base && x.fibers[0].addr < a.m2_base);
+                assert!(x.fibers[1].addr >= a.m2_base && x.fibers[1].addr < a.out_base);
+                if let Some(s) = x.store {
+                    assert!(s.addr >= a.out_base);
+                    assert_eq!(s.bytes as u64, a.fiber_bytes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn elements_are_sequential_per_stream() {
+        let t = tensor(65);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type1, 4, 32, 8192);
+        let addrs: Vec<u64> = w.pe_traces[0].work.iter().map(|x| x.elem.addr).collect();
+        for (i, pair) in addrs.windows(2).enumerate() {
+            assert_eq!(pair[1] - pair[0], 16, "gap at {i}");
+        }
+    }
+
+    #[test]
+    fn other_mode_workloads() {
+        let t = tensor(66);
+        let w = workload_from_tensor(&t, Mode::J, FabricType::Type2, 4, 8, 8192);
+        // Output rows indexed by j (dim 24), operands by i (32) and k (28).
+        assert_eq!(w.amap.fiber_bytes, 32);
+        let total: usize = w.pe_traces.iter().map(|p| p.work.len()).sum();
+        assert_eq!(total, t.nnz());
+    }
+}

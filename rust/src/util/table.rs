@@ -1,0 +1,130 @@
+//! ASCII table renderer for experiment outputs (Table II/III, Fig. 4 rows).
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table with a header row.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            aligns: headers.iter().map(|_| Align::Left).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Set per-column alignment (defaults to left).
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with `| col | col |` borders.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let sep = {
+            let mut s = String::from("+");
+            for w in &widths {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&render_row(&self.headers, &widths, &self.aligns));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row, &widths, &self.aligns));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+fn render_row(cells: &[String], widths: &[usize], aligns: &[Align]) -> String {
+    let mut s = String::from("|");
+    for ((c, w), a) in cells.iter().zip(widths).zip(aligns) {
+        let pad = w - c.chars().count();
+        match a {
+            Align::Left => {
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+            }
+            Align::Right => {
+                s.push_str(&" ".repeat(pad + 1));
+                s.push_str(c);
+                s.push(' ');
+            }
+        }
+        s.push('|');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_with_alignment() {
+        let mut t = Table::new(&["name", "value"]).aligns(&[Align::Left, Align::Right]);
+        t.row_strs(&["alpha", "1"]);
+        t.row_strs(&["b", "12345"]);
+        let s = t.render();
+        assert!(s.contains("| alpha |     1 |"), "got:\n{s}");
+        assert!(s.contains("| b     | 12345 |"), "got:\n{s}");
+        // Borders present.
+        assert!(s.starts_with('+'));
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_row_width_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Integration: the coordinator layer — full-stack accelerator runs and
+//! the timed CP-ALS driver (experiment E6 at test scale).
+
+use mttkrp_memsys::config::{SystemConfig, SystemKind};
+use mttkrp_memsys::coordinator::{run_accelerator, TimedCpAls};
+use mttkrp_memsys::mttkrp::CpAlsOptions;
+use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
+use mttkrp_memsys::tensor::{CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(&find_artifacts_dir()?).ok()
+}
+
+#[test]
+fn accelerator_run_consistent_across_system_kinds() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let r = m.partials.rank;
+    let mut rng = Rng::new(400);
+    let t = CooTensor::random(&mut rng, [48, 3000, 5000], 3000);
+    let d = DenseMatrix::random(&mut rng, 3000, r);
+    let c = DenseMatrix::random(&mut rng, 5000, r);
+    let mut norms = Vec::new();
+    for kind in [SystemKind::Proposed, SystemKind::IpOnly] {
+        let cfg = SystemConfig::config_b().as_baseline(kind);
+        let (out, report) = run_accelerator(&cfg, &m, &t, Mode::I, &d, &c).unwrap();
+        // Numerics must be identical regardless of the memory system —
+        // timing and data paths are decoupled by design.
+        norms.push(out.fro_norm());
+        assert!(report.max_diff_vs_reference < 2e-3);
+        assert!(report.sim.total_cycles > 0);
+    }
+    assert!((norms[0] - norms[1]).abs() < 1e-9);
+}
+
+#[test]
+fn timed_als_full_pipeline_fit_improves() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let rank = m.partials.rank;
+    let mut rng = Rng::new(401);
+    // Low-rank-ish structured tensor so the fit visibly improves.
+    let t = CooTensor::random(&mut rng, [24, 30, 36], 3000);
+    let driver = TimedCpAls::new(SystemConfig::config_b(), m);
+    let report = driver
+        .run(
+            &t,
+            CpAlsOptions {
+                rank,
+                max_iters: 4,
+                fit_tol: 0.0,
+                seed: 3,
+            },
+        )
+        .unwrap();
+    assert_eq!(report.als.iters.len(), 4);
+    let first = report.als.iters.first().unwrap().rel_error;
+    let last = report.als.iters.last().unwrap().rel_error;
+    assert!(last <= first + 1e-6, "rel_error {first} → {last}");
+    // Timing must cover all three modes.
+    assert_eq!(report.per_mode_sim.len(), 3);
+    for s in &report.per_mode_sim {
+        assert!(s.total_cycles > 0);
+        assert_eq!(s.nnz, t.nnz() as u64);
+    }
+}
+
+#[test]
+fn config_a_and_b_both_drive_the_accelerator() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let r = m.partials.rank;
+    let mut rng = Rng::new(402);
+    let t = CooTensor::random(&mut rng, [32, 800, 900], 1500);
+    let d = DenseMatrix::random(&mut rng, 800, r);
+    let c = DenseMatrix::random(&mut rng, 900, r);
+    for cfg in [SystemConfig::config_a(), SystemConfig::config_b()] {
+        let (_, report) = run_accelerator(&cfg, &m, &t, Mode::I, &d, &c).unwrap();
+        assert!(report.max_diff_vs_reference < 2e-3, "{}", cfg.label);
+    }
+}

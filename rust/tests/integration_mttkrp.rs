@@ -1,0 +1,134 @@
+//! Cross-validation of every MTTKRP implementation (Algorithm 2,
+//! Algorithm 3, fiber Eq. 3/4) and CP-ALS over them.
+
+use mttkrp_memsys::mttkrp::fiber::{mttkrp_fiber_eq3, mttkrp_fiber_eq4};
+use mttkrp_memsys::mttkrp::seq::mttkrp_seq_f64;
+use mttkrp_memsys::mttkrp::{mttkrp_parallel, mttkrp_seq, CpAls, CpAlsOptions};
+use mttkrp_memsys::tensor::{CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::util::rng::Rng;
+
+fn setup(seed: u64, dims: [u64; 3], nnz: usize, r: usize) -> (CooTensor, DenseMatrix, DenseMatrix) {
+    let mut rng = Rng::new(seed);
+    let t = CooTensor::random(&mut rng, dims, nnz);
+    let d = DenseMatrix::random(&mut rng, dims[1] as usize, r);
+    let c = DenseMatrix::random(&mut rng, dims[2] as usize, r);
+    (t, d, c)
+}
+
+#[test]
+fn all_variants_agree_with_f64_oracle() {
+    let (t, d, c) = setup(200, [50, 40, 45], 5000, 16);
+    let oracle = mttkrp_seq_f64(&t, Mode::I, &d, &c);
+    let variants: Vec<(&str, DenseMatrix)> = vec![
+        ("alg2", mttkrp_seq(&t, Mode::I, &d, &c)),
+        ("alg3-p1", mttkrp_parallel(&t, Mode::I, &d, &c, 1)),
+        ("alg3-p4", mttkrp_parallel(&t, Mode::I, &d, &c, 4)),
+        ("alg3-p7", mttkrp_parallel(&t, Mode::I, &d, &c, 7)),
+        ("eq3", mttkrp_fiber_eq3(&t, Mode::I, &d, &c)),
+        ("eq4", mttkrp_fiber_eq4(&t, Mode::I, &d, &c)),
+    ];
+    for (name, got) in variants {
+        for (x, (g, o)) in got.data.iter().zip(&oracle).enumerate() {
+            assert!(
+                (*g as f64 - o).abs() < 2e-3,
+                "{name} idx {x}: {g} vs oracle {o}"
+            );
+        }
+    }
+}
+
+#[test]
+fn modes_j_and_k_agree_across_variants() {
+    let mut rng = Rng::new(201);
+    let t0 = CooTensor::random(&mut rng, [20, 24, 28], 2000);
+    let a = DenseMatrix::random(&mut rng, 20, 8);
+    let d = DenseMatrix::random(&mut rng, 24, 8);
+    let c = DenseMatrix::random(&mut rng, 28, 8);
+    for (mode, m1, m2) in [(Mode::J, &a, &c), (Mode::K, &a, &d)] {
+        let mut t = t0.clone();
+        t.sort_mode(mode);
+        let reference = mttkrp_seq(&t, mode, m1, m2);
+        let par = mttkrp_parallel(&t, mode, m1, m2, 4);
+        let e3 = mttkrp_fiber_eq3(&t, mode, m1, m2);
+        assert!(par.max_abs_diff(&reference) < 1e-3, "{mode:?} parallel");
+        assert!(e3.max_abs_diff(&reference) < 1e-3, "{mode:?} eq3");
+    }
+}
+
+#[test]
+fn cp_als_recovers_low_rank_structure() {
+    // Exact rank-3 tensor: CP-ALS at rank 4 must fit it almost perfectly.
+    let mut rng = Rng::new(202);
+    let rank = 3;
+    let (i, j, k) = (14, 12, 10);
+    let a = DenseMatrix::random(&mut rng, i, rank);
+    let d = DenseMatrix::random(&mut rng, j, rank);
+    let c = DenseMatrix::random(&mut rng, k, rank);
+    let mut t = CooTensor::new("lr", [i as u64, j as u64, k as u64]);
+    for ii in 0..i {
+        for jj in 0..j {
+            for kk in 0..k {
+                let mut v = 0f32;
+                for x in 0..rank {
+                    v += a.at(ii, x) * d.at(jj, x) * c.at(kk, x);
+                }
+                t.push(ii as u32, jj as u32, kk as u32, v);
+            }
+        }
+    }
+    let mut als = CpAls::new(
+        &t,
+        CpAlsOptions {
+            rank: 4,
+            max_iters: 40,
+            fit_tol: 1e-10,
+            seed: 9,
+        },
+    );
+    let report = als.run();
+    let final_err = report.iters.last().unwrap().rel_error;
+    assert!(final_err < 0.05, "rank-3 data should fit: err {final_err}");
+}
+
+#[test]
+fn cp_als_error_never_increases_materially() {
+    let mut rng = Rng::new(203);
+    let t = CooTensor::random(&mut rng, [16, 16, 16], 800);
+    let mut als = CpAls::new(
+        &t,
+        CpAlsOptions {
+            rank: 6,
+            max_iters: 12,
+            fit_tol: 0.0,
+            seed: 2,
+        },
+    );
+    let report = als.run();
+    for w in report.iters.windows(2) {
+        assert!(
+            w[1].rel_error <= w[0].rel_error + 5e-3,
+            "ALS error rose: {} → {}",
+            w[0].rel_error,
+            w[1].rel_error
+        );
+    }
+}
+
+#[test]
+fn parallel_partition_counts_scale_with_fibers() {
+    // Degenerate shapes: single fiber, all-same-i, p > nnz.
+    let mut t = CooTensor::new("deg", [1, 8, 8]);
+    for z in 0..20 {
+        t.push(0, z % 8, (z / 3) % 8, 1.0);
+    }
+    t.sum_duplicates();
+    t.sort_mode(Mode::I);
+    let mut rng = Rng::new(204);
+    let d = DenseMatrix::random(&mut rng, 8, 4);
+    let c = DenseMatrix::random(&mut rng, 8, 4);
+    let seq = mttkrp_seq(&t, Mode::I, &d, &c);
+    for p in [1, 2, 16] {
+        let par = mttkrp_parallel(&t, Mode::I, &d, &c, p);
+        assert!(par.max_abs_diff(&seq) < 1e-4, "p={p}");
+    }
+}

@@ -1,0 +1,132 @@
+//! Integration: artifacts → PJRT → numerics, including the fused entry
+//! point, against the pure-Rust reference. Skips (with a message) when
+//! artifacts haven't been built.
+
+use mttkrp_memsys::mttkrp::mttkrp_seq;
+use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest, MttkrpExecutor, PjrtRuntime};
+use mttkrp_memsys::tensor::{CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = find_artifacts_dir()?;
+    Manifest::load(&dir).ok()
+}
+
+#[test]
+fn partials_artifact_numerics() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    rt.load_hlo_text("partials", &m.partials_path()).unwrap();
+    let (b, r) = (m.partials.batch, m.partials.rank);
+    let mut rng = Rng::new(300);
+    let vals: Vec<f32> = (0..b).map(|_| rng.gen_f32_range(-2.0, 2.0)).collect();
+    let d: Vec<f32> = (0..b * r).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let c: Vec<f32> = (0..b * r).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let out = rt
+        .execute(
+            "partials",
+            &[
+                mttkrp_memsys::runtime::pjrt_literal_f32(&vals, &[b as i64]).unwrap(),
+                mttkrp_memsys::runtime::pjrt_literal_f32(&d, &[b as i64, r as i64]).unwrap(),
+                mttkrp_memsys::runtime::pjrt_literal_f32(&c, &[b as i64, r as i64]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = out.to_vec::<f32>().unwrap();
+    for bi in (0..b).step_by(97) {
+        for x in (0..r).step_by(7) {
+            let want = vals[bi] * d[bi * r + x] * c[bi * r + x];
+            let g = got[bi * r + x];
+            assert!((g - want).abs() < 1e-5, "({bi},{x}): {g} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn fused_artifact_numerics_if_present() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let Some(fused) = m.fused.clone() else {
+        eprintln!("skipping: fused entry not in manifest");
+        return;
+    };
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    rt.load_hlo_text("fused", &m.fused_path().unwrap()).unwrap();
+    let (b, r) = (fused.batch, fused.rank);
+    let (i_tile, j, k) = (
+        fused.i_tile.unwrap(),
+        fused.j.unwrap(),
+        fused.k.unwrap(),
+    );
+    let mut rng = Rng::new(301);
+    let vals: Vec<f32> = (0..b).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let j_idx: Vec<i32> = (0..b).map(|_| rng.gen_usize(0, j) as i32).collect();
+    let k_idx: Vec<i32> = (0..b).map(|_| rng.gen_usize(0, k) as i32).collect();
+    let d: Vec<f32> = (0..j * r).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    let c: Vec<f32> = (0..k * r).map(|_| rng.gen_f32_range(-1.0, 1.0)).collect();
+    // One-hot selection: nonzero bi lands in output row bi % i_tile.
+    let mut sel = vec![0f32; i_tile * b];
+    for bi in 0..b {
+        sel[(bi % i_tile) * b + bi] = 1.0;
+    }
+    let out = rt
+        .execute(
+            "fused",
+            &[
+                mttkrp_memsys::runtime::pjrt_literal_f32(&vals, &[b as i64]).unwrap(),
+                mttkrp_memsys::runtime::pjrt_literal_i32(&j_idx),
+                mttkrp_memsys::runtime::pjrt_literal_i32(&k_idx),
+                mttkrp_memsys::runtime::pjrt_literal_f32(&d, &[j as i64, r as i64]).unwrap(),
+                mttkrp_memsys::runtime::pjrt_literal_f32(&c, &[k as i64, r as i64]).unwrap(),
+                mttkrp_memsys::runtime::pjrt_literal_f32(&sel, &[i_tile as i64, b as i64])
+                    .unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = out.to_vec::<f32>().unwrap();
+    assert_eq!(got.len(), i_tile * r);
+    // Reference scatter in f64.
+    let mut want = vec![0f64; i_tile * r];
+    for bi in 0..b {
+        let row = bi % i_tile;
+        for x in 0..r {
+            want[row * r + x] += vals[bi] as f64
+                * d[j_idx[bi] as usize * r + x] as f64
+                * c[k_idx[bi] as usize * r + x] as f64;
+        }
+    }
+    for idx in 0..i_tile * r {
+        assert!(
+            (got[idx] as f64 - want[idx]).abs() < 1e-3,
+            "idx {idx}: {} vs {}",
+            got[idx],
+            want[idx]
+        );
+    }
+}
+
+#[test]
+fn executor_matches_reference_on_multiple_batches() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut exec = MttkrpExecutor::new(&m).unwrap();
+    let r = exec.rank();
+    let mut rng = Rng::new(302);
+    // > 2 batches of work.
+    let nnz = exec.batch_size() * 2 + 531;
+    let t = CooTensor::random(&mut rng, [64, 500, 700], nnz);
+    let d = DenseMatrix::random(&mut rng, 500, r);
+    let c = DenseMatrix::random(&mut rng, 700, r);
+    let got = exec.mttkrp(&t, Mode::I, &d, &c).unwrap();
+    let want = mttkrp_seq(&t, Mode::I, &d, &c);
+    assert!(got.max_abs_diff(&want) < 2e-3);
+    assert!(exec.stats.batches >= 3);
+    assert!(exec.stats.padded_lanes > 0);
+}

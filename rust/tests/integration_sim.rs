@@ -1,0 +1,231 @@
+//! Integration tests: full memory-system simulations across variants,
+//! configurations, fabrics and datasets — conservation, ordering, and
+//! paper-shape invariants.
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::tensor::{gen, CooTensor, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::rng::Rng;
+
+fn hyper_sparse(seed: u64, nnz: usize) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    CooTensor::random(&mut rng, [128, 30_000, 50_000], nnz)
+}
+
+fn wl(t: &CooTensor, fabric: FabricType, cfg: &SystemConfig) -> mttkrp_memsys::trace::Workload {
+    workload_from_tensor(t, Mode::I, fabric, cfg.pe.n_pes, cfg.pe.rank, cfg.dram.row_bytes)
+}
+
+#[test]
+fn every_variant_serves_every_access_both_fabrics() {
+    let t = hyper_sparse(1, 2000);
+    for fabric in [FabricType::Type1, FabricType::Type2] {
+        let base = match fabric {
+            FabricType::Type1 => SystemConfig::config_a(),
+            FabricType::Type2 => SystemConfig::config_b(),
+        };
+        let w = wl(&t, fabric, &base);
+        let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
+        for kind in SystemKind::ALL {
+            let mut cfg = base.as_baseline(kind);
+            cfg.pe.fabric = fabric;
+            let rep = simulate(&cfg, &w);
+            assert_eq!(rep.accesses, expected, "{fabric:?}/{kind:?} lost accesses");
+            assert_eq!(rep.nnz, t.nnz() as u64);
+        }
+    }
+}
+
+#[test]
+fn fig4_ordering_holds_on_synthetic_datasets() {
+    // The paper's qualitative result at small scale on both datasets.
+    for t in [gen::synth_01(0.001), gen::synth_02(0.001)] {
+        let base = SystemConfig::config_b();
+        let w = wl(&t, FabricType::Type2, &base);
+        let runs: Vec<_> = SystemKind::ALL
+            .iter()
+            .map(|&k| (k, simulate(&base.as_baseline(k), &w)))
+            .collect();
+        let cycles = |k: SystemKind| {
+            runs.iter().find(|(kk, _)| *kk == k).unwrap().1.total_cycles
+        };
+        assert!(cycles(SystemKind::Proposed) < cycles(SystemKind::DmaOnly));
+        assert!(cycles(SystemKind::Proposed) < cycles(SystemKind::CacheOnly));
+        assert!(cycles(SystemKind::Proposed) < cycles(SystemKind::IpOnly));
+        assert!(cycles(SystemKind::DmaOnly) < cycles(SystemKind::IpOnly));
+        // Headline factor in a sane band (paper: 3.5×).
+        let speedup =
+            cycles(SystemKind::IpOnly) as f64 / cycles(SystemKind::Proposed) as f64;
+        assert!(
+            (2.0..6.0).contains(&speedup),
+            "{}: proposed vs ip-only {speedup:.2} out of band",
+            t.name
+        );
+    }
+}
+
+#[test]
+fn dram_write_traffic_covers_all_stores_exactly_for_dma_paths() {
+    let t = hyper_sparse(3, 1500);
+    let cfg = SystemConfig::config_b();
+    let w = wl(&t, FabricType::Type2, &cfg);
+    let store_bytes: u64 = w
+        .pe_traces
+        .iter()
+        .flat_map(|p| &p.work)
+        .filter_map(|x| x.store.map(|s| s.bytes as u64))
+        .sum();
+    let rep = simulate(&cfg, &w);
+    // Proposed stores go via DMA: aligned up to beats, no write combining.
+    assert!(rep.dram.write_bytes >= store_bytes);
+    assert!(rep.dram.write_bytes <= store_bytes * 2 + 4096);
+}
+
+#[test]
+fn proposed_moves_fewer_bytes_than_dma_only() {
+    // The RR/cache path de-duplicates element lines; DMA-only re-reads
+    // every element with garbage (§V-D).
+    let t = hyper_sparse(4, 2500);
+    let cfg = SystemConfig::config_b();
+    let w = wl(&t, FabricType::Type2, &cfg);
+    let prop = simulate(&cfg, &w);
+    let dma = simulate(&cfg.as_baseline(SystemKind::DmaOnly), &w);
+    assert!(
+        prop.dram.read_bytes < dma.dram.read_bytes,
+        "proposed {} !< dma-only {}",
+        prop.dram.read_bytes,
+        dma.dram.read_bytes
+    );
+}
+
+#[test]
+fn rr_absorbs_most_element_traffic() {
+    let t = gen::synth_01(0.001);
+    let cfg = SystemConfig::config_b();
+    let w = wl(&t, FabricType::Type2, &cfg);
+    let rep = simulate(&cfg, &w);
+    let (mut forwarded, mut absorbed_or_served) = (0u64, 0u64);
+    for l in &rep.lmbs {
+        forwarded += l.rr.forwarded;
+        absorbed_or_served += l.rr.absorbed + l.rr.served_temp;
+    }
+    // 4 × 16 B elements per 64 B line ⇒ ~3 of 4 element reads must never
+    // reach the cache.
+    let ratio = absorbed_or_served as f64 / (forwarded + absorbed_or_served) as f64;
+    assert!(ratio > 0.5, "RR traffic reduction only {ratio:.2}");
+}
+
+#[test]
+fn more_lmbs_do_not_hurt_type2() {
+    let t = hyper_sparse(5, 2500);
+    let mut one = SystemConfig::config_b();
+    one.n_lmbs = 1;
+    let mut four = SystemConfig::config_b();
+    four.n_lmbs = 4;
+    let w = wl(&t, FabricType::Type2, &four);
+    let r1 = simulate(&one, &w);
+    let r4 = simulate(&four, &w);
+    assert!(
+        r4.total_cycles <= r1.total_cycles * 11 / 10,
+        "4 LMBs ({}) should not be slower than 1 ({})",
+        r4.total_cycles,
+        r1.total_cycles
+    );
+}
+
+#[test]
+fn empty_and_tiny_workloads_terminate() {
+    let mut t = CooTensor::new("tiny", [4, 4, 4]);
+    t.push(1, 2, 3, 1.0);
+    t.sort_mode(Mode::I);
+    for kind in SystemKind::ALL {
+        let cfg = SystemConfig::config_b().as_baseline(kind);
+        let w = wl(&t, FabricType::Type2, &cfg);
+        let rep = simulate(&cfg, &w);
+        assert!(rep.total_cycles > 0);
+        assert_eq!(rep.nnz, 1);
+    }
+}
+
+#[test]
+fn deterministic_given_same_inputs() {
+    let t = hyper_sparse(6, 1200);
+    let cfg = SystemConfig::config_a();
+    let w = wl(&t, FabricType::Type1, &cfg);
+    let a = simulate(&cfg, &w);
+    let b = simulate(&cfg, &w);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.dram.reads, b.dram.reads);
+    assert_eq!(a.dram.row_hits, b.dram.row_hits);
+}
+
+#[test]
+fn latency_accounting_is_sane_and_favours_the_cached_element_path() {
+    let t = gen::synth_01(0.001);
+    let cfg = SystemConfig::config_b();
+    let w = wl(&t, FabricType::Type2, &cfg);
+    let rep = simulate(&cfg, &w);
+    // Latencies recorded for every class that has traffic.
+    assert_eq!(
+        rep.latency[0].count,
+        t.nnz() as u64,
+        "every element load measured"
+    );
+    assert!(rep.elem_latency_mean() > 0.0);
+    assert!(rep.fiber_latency_mean() > 0.0);
+    // The proposed design's point: element loads (RR temp-buffer/RRSH +
+    // cache) complete with *lower* PE-observed latency than random DRAM
+    // fiber bursts.
+    assert!(
+        rep.elem_latency_mean() < rep.fiber_latency_mean(),
+        "elements {:.1} !< fibers {:.1}",
+        rep.elem_latency_mean(),
+        rep.fiber_latency_mean()
+    );
+}
+
+#[test]
+fn proposed_trades_latency_for_throughput_vs_ip_only() {
+    // Little's law in action: ip-only keeps individual accesses fast
+    // (almost no queueing — it can't issue enough of them), while the
+    // proposed system runs deep queues (higher per-access latency) and
+    // wins on throughput, which is what the Fig. 4 metric measures.
+    let t = gen::synth_01(0.001);
+    let cfg = SystemConfig::config_b();
+    let w = wl(&t, FabricType::Type2, &cfg);
+    let prop = simulate(&cfg, &w);
+    let ip = simulate(&cfg.as_baseline(SystemKind::IpOnly), &w);
+    assert!(
+        prop.nnz_per_cycle() > 2.0 * ip.nnz_per_cycle(),
+        "proposed throughput {:.4} should dwarf ip-only {:.4}",
+        prop.nnz_per_cycle(),
+        ip.nnz_per_cycle()
+    );
+    // Sanity on the latency side: ip-only's per-access latency is near
+    // the raw DRAM round trip (little queueing).
+    assert!(
+        ip.elem_latency_mean() < 150.0,
+        "ip-only elem latency {:.1} unexpectedly queue-bound",
+        ip.elem_latency_mean()
+    );
+}
+
+#[test]
+fn speedups_are_stable_across_scales() {
+    // §Sensitivity: Fig. 4 ratios must hold as the dataset scales.
+    let mut ratios = Vec::new();
+    for scale in [0.0005, 0.002] {
+        let t = gen::synth_01(scale);
+        let cfg = SystemConfig::config_b();
+        let w = wl(&t, FabricType::Type2, &cfg);
+        let prop = simulate(&cfg, &w);
+        let ip = simulate(&cfg.as_baseline(SystemKind::IpOnly), &w);
+        ratios.push(prop.speedup_over(&ip));
+    }
+    let (a, b) = (ratios[0], ratios[1]);
+    assert!(
+        (a / b - 1.0).abs() < 0.25,
+        "speedup drifted across scales: {a:.2} vs {b:.2}"
+    );
+}

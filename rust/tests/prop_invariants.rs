@@ -1,0 +1,201 @@
+//! Property tests (in-tree harness, `util::prop`) over the substrate
+//! invariants: partitioning, tensor transforms, traces, linalg.
+
+use mttkrp_memsys::config::FabricType;
+use mttkrp_memsys::mttkrp::linalg::{cholesky, matmul, solve_gram};
+use mttkrp_memsys::mttkrp::{mttkrp_parallel, mttkrp_seq};
+use mttkrp_memsys::tensor::partition::partitions_fiber_aligned;
+use mttkrp_memsys::tensor::{partition_by_nnz, CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::prop::check;
+use mttkrp_memsys::util::rng::Rng;
+use mttkrp_memsys::{prop_assert, prop_assert_eq};
+
+fn random_tensor(rng: &mut Rng) -> CooTensor {
+    let dims = [
+        rng.gen_range(30) + 2,
+        rng.gen_range(40) + 2,
+        rng.gen_range(50) + 2,
+    ];
+    let nnz = rng.gen_usize(1, 400);
+    CooTensor::random(rng, dims, nnz)
+}
+
+#[test]
+fn prop_partitions_cover_disjoint_fiber_aligned() {
+    check(
+        "partitions cover/disjoint/aligned",
+        60,
+        |rng| {
+            let t = random_tensor(rng);
+            let p = rng.gen_usize(1, 9);
+            (t, p)
+        },
+        |(t, p)| {
+            let parts = partition_by_nnz(t, Mode::I, *p);
+            prop_assert_eq!(parts.len(), *p, "partition count");
+            prop_assert!(
+                partitions_fiber_aligned(t, Mode::I, &parts),
+                "not fiber aligned"
+            );
+            let total: usize = parts.iter().map(|x| x.len()).sum();
+            prop_assert_eq!(total, t.nnz(), "coverage");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sort_preserves_multiset_and_orders() {
+    check(
+        "sort preserves nnz multiset",
+        40,
+        |rng| {
+            let t = random_tensor(rng);
+            let mode = match rng.gen_range(3) {
+                0 => Mode::I,
+                1 => Mode::J,
+                _ => Mode::K,
+            };
+            (t, mode)
+        },
+        |(t, mode)| {
+            let mut sorted = t.clone();
+            sorted.sort_mode(*mode);
+            prop_assert!(sorted.is_sorted_mode(*mode), "not sorted");
+            prop_assert_eq!(sorted.nnz(), t.nnz(), "nnz changed");
+            let mut a: Vec<_> = (0..t.nnz())
+                .map(|z| (t.coords(z), t.vals[z].to_bits()))
+                .collect();
+            let mut b: Vec<_> = (0..sorted.nnz())
+                .map(|z| (sorted.coords(z), sorted.vals[z].to_bits()))
+                .collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            prop_assert_eq!(a, b, "multiset changed");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_mttkrp_equals_sequential() {
+    check(
+        "alg3 == alg2",
+        30,
+        |rng| {
+            let t = random_tensor(rng);
+            let r = rng.gen_usize(1, 12);
+            let d = DenseMatrix::random(rng, t.dims[1] as usize, r);
+            let c = DenseMatrix::random(rng, t.dims[2] as usize, r);
+            let p = rng.gen_usize(1, 7);
+            (t, d, c, p)
+        },
+        |(t, d, c, p)| {
+            let seq = mttkrp_seq(t, Mode::I, d, c);
+            let par = mttkrp_parallel(t, Mode::I, d, c, *p);
+            let diff = par.max_abs_diff(&seq);
+            prop_assert!(diff < 1e-3, "diff {diff} at p={p}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_trace_covers_every_nonzero_and_store_per_fiber() {
+    check(
+        "trace coverage",
+        30,
+        |rng| {
+            let t = random_tensor(rng);
+            let fabric = if rng.gen_bool(0.5) {
+                FabricType::Type1
+            } else {
+                FabricType::Type2
+            };
+            let pes = rng.gen_usize(1, 6);
+            (t, fabric, pes)
+        },
+        |(t, fabric, pes)| {
+            let w = workload_from_tensor(t, Mode::I, *fabric, *pes, 16, 8192);
+            let total: usize = w.pe_traces.iter().map(|p| p.work.len()).sum();
+            prop_assert_eq!(total, t.nnz(), "work items");
+            let stores: usize = w
+                .pe_traces
+                .iter()
+                .flat_map(|p| &p.work)
+                .filter(|x| x.store.is_some())
+                .count();
+            prop_assert_eq!(
+                stores,
+                t.distinct_along(Mode::I),
+                "one store per output fiber"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gram_solve_roundtrip() {
+    check(
+        "X = solve(X·G, G)",
+        30,
+        |rng| {
+            let r = rng.gen_usize(2, 10);
+            let rows = rng.gen_usize(r + 1, 30);
+            let m = DenseMatrix::random(rng, rows, r);
+            let x_rows = rng.gen_usize(1, 8);
+            let x = DenseMatrix::random(rng, x_rows, r);
+            (m, x)
+        },
+        |(m, x)| {
+            let g = m.gram();
+            prop_assert!(cholesky(&g).is_some(), "gram not SPD");
+            let b = matmul(x, &g);
+            let solved = solve_gram(&b, &g);
+            let diff = solved.max_abs_diff(x);
+            // Conditioning varies; bound scaled by the gram norm.
+            let tol = 1e-2 * (1.0 + g.fro_norm() as f32);
+            prop_assert!(diff < tol, "solve diff {diff} (tol {tol})");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dedup_is_idempotent_and_value_preserving() {
+    check(
+        "sum_duplicates",
+        40,
+        |rng| {
+            let dims = [8, 8, 8];
+            let mut t = CooTensor::new("dup", dims);
+            for _ in 0..rng.gen_usize(1, 120) {
+                t.push(
+                    rng.gen_range(8) as u32,
+                    rng.gen_range(8) as u32,
+                    rng.gen_range(8) as u32,
+                    rng.gen_f32_range(-1.0, 1.0),
+                );
+            }
+            t
+        },
+        |t| {
+            let total: f64 = t.vals.iter().map(|&v| v as f64).sum();
+            let mut d = t.clone();
+            d.sum_duplicates();
+            let total_d: f64 = d.vals.iter().map(|&v| v as f64).sum();
+            prop_assert!((total - total_d).abs() < 1e-3, "value mass changed");
+            let mut coords: Vec<_> = (0..d.nnz()).map(|z| d.coords(z)).collect();
+            coords.sort_unstable();
+            let n = coords.len();
+            coords.dedup();
+            prop_assert_eq!(coords.len(), n, "duplicates remain");
+            let mut dd = d.clone();
+            dd.sum_duplicates();
+            prop_assert_eq!(dd.nnz(), d.nnz(), "not idempotent");
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,165 @@
+//! Property tests over the memory-system simulator: conservation, hit
+//! accounting, and cross-variant sanity on randomized tensors and
+//! configurations.
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::tensor::{CooTensor, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::prop::check;
+use mttkrp_memsys::util::rng::Rng;
+use mttkrp_memsys::{prop_assert, prop_assert_eq};
+
+fn random_case(rng: &mut Rng) -> (CooTensor, SystemConfig) {
+    let dims = [
+        rng.gen_range(60) + 4,
+        rng.gen_range(5000) + 100,
+        rng.gen_range(8000) + 100,
+    ];
+    let nnz = rng.gen_usize(20, 800);
+    let t = CooTensor::random(rng, dims, nnz);
+    let mut cfg = if rng.gen_bool(0.5) {
+        SystemConfig::config_a()
+    } else {
+        SystemConfig::config_b()
+    };
+    // Randomize the synthesis-time knobs within valid ranges.
+    cfg.dma.n_buffers = 1 << rng.gen_range(3); // 1..4
+    cfg.cache.lines = 1024 << rng.gen_range(3); // 1K..4K lines
+    cfg.cache.associativity = 1 << rng.gen_range(2); // 1 or 2
+    cfg.rr.rrsh_entries = 512 << rng.gen_range(3);
+    cfg.rr.temp_buffer_entries = rng.gen_usize(2, 16);
+    cfg.pe.max_inflight = rng.gen_usize(2, 16);
+    cfg.pe.fabric = if cfg.n_lmbs == 1 {
+        FabricType::Type1
+    } else {
+        FabricType::Type2
+    };
+    cfg.validate().expect("randomized config must be valid");
+    (t, cfg)
+}
+
+#[test]
+fn prop_all_accesses_served_all_variants() {
+    check(
+        "conservation across variants",
+        12,
+        |rng| random_case(rng),
+        |(t, cfg)| {
+            let w = workload_from_tensor(
+                t,
+                Mode::I,
+                cfg.pe.fabric,
+                cfg.pe.n_pes,
+                cfg.pe.rank,
+                cfg.dram.row_bytes,
+            );
+            let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
+            for kind in SystemKind::ALL {
+                let rep = simulate(&cfg.as_baseline(kind), &w);
+                prop_assert_eq!(rep.accesses, expected, "{kind:?} conservation");
+                prop_assert!(rep.total_cycles > 0, "{kind:?} zero cycles");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_dram_reads_bounded_by_requested_and_alignment() {
+    check(
+        "dram read bounds",
+        12,
+        |rng| random_case(rng),
+        |(t, cfg)| {
+            let w = workload_from_tensor(
+                t,
+                Mode::I,
+                cfg.pe.fabric,
+                cfg.pe.n_pes,
+                cfg.pe.rank,
+                cfg.dram.row_bytes,
+            );
+            let rep = simulate(cfg, &w);
+            // Reads can't exceed the aligned footprint of every load
+            // (each load ≤ one 64 B-aligned burst via cache or DMA).
+            let load_bound: u64 = w
+                .pe_traces
+                .iter()
+                .flat_map(|p| &p.work)
+                .flat_map(|x| x.accesses())
+                .filter(|a| !a.class.is_write())
+                .map(|a| ((a.bytes as u64 + 127) / 64) * 64)
+                .sum();
+            prop_assert!(
+                rep.dram.read_bytes <= load_bound,
+                "read {} > bound {load_bound}",
+                rep.dram.read_bytes
+            );
+            prop_assert!(rep.dram.read_bytes > 0, "no reads at all");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_row_hit_rate_is_a_rate_and_bus_not_overcommitted() {
+    check(
+        "dram stats sanity",
+        12,
+        |rng| random_case(rng),
+        |(t, cfg)| {
+            let w = workload_from_tensor(
+                t,
+                Mode::I,
+                cfg.pe.fabric,
+                cfg.pe.n_pes,
+                cfg.pe.rank,
+                cfg.dram.row_bytes,
+            );
+            let rep = simulate(cfg, &w);
+            let hr = rep.dram.row_hit_rate();
+            prop_assert!((0.0..=1.0).contains(&hr), "row hit rate {hr}");
+            // Data moved can't exceed one beat per busy bus cycle.
+            let moved = rep.dram.read_bytes + rep.dram.write_bytes;
+            prop_assert!(
+                moved <= rep.dram.busy_bus_cycles * 64,
+                "bus overcommitted: {moved} bytes in {} busy cycles",
+                rep.dram.busy_bus_cycles
+            );
+            prop_assert!(
+                rep.dram.busy_bus_cycles <= rep.total_cycles + 1,
+                "bus busy longer than the run"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_proposed_never_loses_to_ip_only() {
+    check(
+        "proposed ≤ ip-only",
+        10,
+        |rng| random_case(rng),
+        |(t, cfg)| {
+            let w = workload_from_tensor(
+                t,
+                Mode::I,
+                cfg.pe.fabric,
+                cfg.pe.n_pes,
+                cfg.pe.rank,
+                cfg.dram.row_bytes,
+            );
+            let prop = simulate(cfg, &w);
+            let ip = simulate(&cfg.as_baseline(SystemKind::IpOnly), &w);
+            prop_assert!(
+                prop.total_cycles <= ip.total_cycles * 11 / 10,
+                "proposed {} vs ip-only {}",
+                prop.total_cycles,
+                ip.total_cycles
+            );
+            Ok(())
+        },
+    );
+}
