@@ -34,7 +34,8 @@ fn main() -> anyhow::Result<()> {
         FabricType::Type1 => SystemConfig::config_a(),
         FabricType::Type2 => SystemConfig::config_b(),
     };
-    let w = workload_from_tensor(&t, Mode::I, fabric, cfg.pe.n_pes, cfg.pe.rank, cfg.dram.row_bytes);
+    let w =
+        workload_from_tensor(&t, Mode::I, fabric, cfg.pe.n_pes, cfg.pe.rank, cfg.dram.row_bytes);
 
     // --- Access mix (the §IV analysis). -------------------------------
     let mut count: HashMap<AccessClass, (u64, u64)> = HashMap::new();

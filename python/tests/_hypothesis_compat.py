@@ -1,0 +1,85 @@
+"""Hypothesis when available, a deterministic fallback when not.
+
+CI installs the real ``hypothesis`` and gets full randomized sweeps. The
+offline build image does not ship it, and the repo rule is to gate
+missing dependencies rather than let collection crash — so this module
+re-exports the real API when importable and otherwise substitutes a
+small, seeded, deterministic runner for the subset the tests use
+(``given``, ``settings``, ``st.integers``, ``st.sampled_from``).
+
+The fallback is a smoke-level sweep (a handful of fixed examples), not a
+replacement for hypothesis's shrinking search — which is exactly the
+right trade for an environment where the dependency cannot be installed.
+"""
+
+try:  # pragma: no cover - exercised implicitly by which env runs it
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    # Examples per @given test in fallback mode: enough to cover several
+    # shape combinations, small enough to keep the offline run fast.
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    st = _Strategies()
+
+    def settings(max_examples=None, **_ignored):
+        """Record the example budget on the (already @given-wrapped) fn."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):  # noqa: ANN002 - mirrors fn
+                requested = getattr(wrapper, "_max_examples", None)
+                n = min(requested or _FALLBACK_EXAMPLES, _FALLBACK_EXAMPLES)
+                rng = random.Random(0xC0FFEE)
+                for example in range(n):
+                    drawn = {
+                        name: strat.draw(rng)
+                        for name, strat in strategy_kwargs.items()
+                    }
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:  # re-raise with the example
+                        raise AssertionError(
+                            f"fallback example {example}: {drawn!r}: {e}"
+                        ) from e
+
+            # pytest resolves parameters via inspect.signature, which
+            # follows __wrapped__ back to fn and would then demand a
+            # fixture per strategy argument; present a zero-arg facade
+            # instead (the strategies supply every argument).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

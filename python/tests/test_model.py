@@ -4,7 +4,7 @@ does it (pad → block → accumulate tiles)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile import model
 from compile.kernels import ref

@@ -81,6 +81,99 @@ impl FabricType {
     }
 }
 
+/// Interconnect topology between the request ports and the DRAM
+/// channels (multi-channel generalization of the paper's single request
+/// router; see `sim::fabric`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    /// Full crossbar: every port arbitrates directly at every channel
+    /// (one-cycle arbitration, no store-and-forward hops). With one
+    /// channel this is exactly the paper's request router.
+    Crossbar,
+    /// Fabric nodes in a row; requests hop node-to-node over per-link
+    /// bounded queues.
+    Line,
+    /// Like `Line` but closed into a ring; requests take the shortest
+    /// direction.
+    Ring,
+}
+
+impl TopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Crossbar => "crossbar",
+            TopologyKind::Line => "line",
+            TopologyKind::Ring => "ring",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TopologyKind> {
+        match s {
+            "crossbar" | "xbar" => Some(TopologyKind::Crossbar),
+            "line" => Some(TopologyKind::Line),
+            "ring" => Some(TopologyKind::Ring),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [TopologyKind; 3] = [
+        TopologyKind::Crossbar,
+        TopologyKind::Line,
+        TopologyKind::Ring,
+    ];
+}
+
+/// Multi-channel interconnect parameters (`sim::fabric`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InterconnectConfig {
+    /// Independent DRAM channels behind the fabric (power of two;
+    /// 1 = the paper's single memory-interface IP).
+    pub channels: usize,
+    /// How ports reach channels.
+    pub topology: TopologyKind,
+    /// Requests one directed fabric link can forward per cycle
+    /// (line/ring store-and-forward links only).
+    pub link_width: usize,
+    /// Store-and-forward queue depth per directed link.
+    pub link_queue: usize,
+    /// Channel-interleave granularity of the physical address space in
+    /// bytes (power of two).
+    pub interleave_bytes: u64,
+}
+
+impl InterconnectConfig {
+    /// The seed configuration: one channel behind a crossbar — exactly
+    /// the paper's single `Router -> Dram` pipe.
+    pub fn single_channel() -> InterconnectConfig {
+        InterconnectConfig {
+            channels: 1,
+            topology: TopologyKind::Crossbar,
+            link_width: 1,
+            link_queue: 16,
+            interleave_bytes: 4096,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !is_pow2(self.channels as u64) {
+            return Err(format!(
+                "interconnect: channels {} must be a power of two",
+                self.channels
+            ));
+        }
+        if self.link_width == 0 || self.link_queue == 0 {
+            return Err("interconnect: link_width and link_queue must be > 0".into());
+        }
+        if !is_pow2(self.interleave_bytes) {
+            return Err(format!(
+                "interconnect: interleave_bytes {} must be a power of two",
+                self.interleave_bytes
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Cache parameters (paper Table II rows "Cache").
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CacheConfig {
@@ -262,6 +355,7 @@ pub struct SystemConfig {
     pub dma: DmaConfig,
     pub rr: RrConfig,
     pub dram: DramConfig,
+    pub interconnect: InterconnectConfig,
     pub pe: PeConfig,
     /// Human label ("config-a", "config-b", ...).
     pub label: String,
@@ -292,6 +386,7 @@ impl SystemConfig {
                 pipeline_stages: 2,
             },
             dram: DramConfig::mig_u250(),
+            interconnect: InterconnectConfig::single_channel(),
             pe: PeConfig {
                 n_pes: 4,
                 fabric: FabricType::Type1,
@@ -342,6 +437,7 @@ impl SystemConfig {
         self.dma.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.rr.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.dram.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.interconnect.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.pe.validate().map_err(|e| format!("{}: {e}", self.label))?;
         Ok(())
     }
@@ -351,6 +447,13 @@ impl SystemConfig {
         let parse_usize =
             |v: &str| v.parse::<usize>().map_err(|e| format!("{key}={v}: {e}"));
         let parse_u64 = |v: &str| v.parse::<u64>().map_err(|e| format!("{key}={v}: {e}"));
+        // Interconnect shorthands (`--channels 4` on the CLI).
+        let key = match key {
+            "channels" => "interconnect.channels",
+            "topology" => "interconnect.topology",
+            "link_width" => "interconnect.link_width",
+            other => other,
+        };
         match key {
             "system.kind" => {
                 self.kind =
@@ -374,6 +477,16 @@ impl SystemConfig {
             }
             "pe.compute_cycles_per_nnz" => self.pe.compute_cycles_per_nnz = parse_u64(value)?,
             "pe.max_inflight" => self.pe.max_inflight = parse_usize(value)?,
+            "interconnect.channels" => self.interconnect.channels = parse_usize(value)?,
+            "interconnect.topology" => {
+                self.interconnect.topology = TopologyKind::from_name(value)
+                    .ok_or(format!("unknown topology {value:?}"))?
+            }
+            "interconnect.link_width" => self.interconnect.link_width = parse_usize(value)?,
+            "interconnect.link_queue" => self.interconnect.link_queue = parse_usize(value)?,
+            "interconnect.interleave_bytes" => {
+                self.interconnect.interleave_bytes = parse_u64(value)?
+            }
             "dram.t_row_hit" => self.dram.t_row_hit = parse_u64(value)?,
             "dram.t_row_miss" => self.dram.t_row_miss = parse_u64(value)?,
             "dram.t_controller" => self.dram.t_controller = parse_u64(value)?,
@@ -428,6 +541,16 @@ impl SystemConfig {
                         "temp_buffer_entries",
                         Json::num(self.rr.temp_buffer_entries as f64),
                     ),
+                ]),
+            ),
+            (
+                "interconnect",
+                Json::obj(vec![
+                    ("channels", Json::num(self.interconnect.channels as f64)),
+                    ("topology", Json::str(self.interconnect.topology.name())),
+                    ("link_width", Json::num(self.interconnect.link_width as f64)),
+                    ("link_queue", Json::num(self.interconnect.link_queue as f64)),
+                    ("interleave_bytes", Json::num(self.interconnect.interleave_bytes as f64)),
                 ]),
             ),
             (
@@ -528,6 +651,57 @@ mod tests {
         assert_eq!(cfg.cache.lines, 1024);
         assert_eq!(cfg.pe.rank, 16);
         assert!(SystemConfig::from_kv("nope", "").is_err());
+    }
+
+    #[test]
+    fn interconnect_defaults_reproduce_seed_single_channel() {
+        let a = SystemConfig::config_a();
+        assert_eq!(a.interconnect.channels, 1);
+        assert_eq!(a.interconnect.topology, TopologyKind::Crossbar);
+        let b = SystemConfig::config_b();
+        assert_eq!(b.interconnect, InterconnectConfig::single_channel());
+    }
+
+    #[test]
+    fn interconnect_overrides_and_aliases() {
+        let mut c = SystemConfig::config_b();
+        c.apply_override("interconnect.channels", "4").unwrap();
+        c.apply_override("topology", "ring").unwrap();
+        c.apply_override("link_width", "2").unwrap();
+        c.apply_override("interconnect.interleave_bytes", "8192").unwrap();
+        assert_eq!(c.interconnect.channels, 4);
+        assert_eq!(c.interconnect.topology, TopologyKind::Ring);
+        assert_eq!(c.interconnect.link_width, 2);
+        assert_eq!(c.interconnect.interleave_bytes, 8192);
+        c.validate().unwrap();
+        assert!(c.apply_override("topology", "torus").is_err());
+
+        c.interconnect.channels = 3;
+        assert!(c.validate().is_err());
+        c.interconnect.channels = 2;
+        c.interconnect.interleave_bytes = 1000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn topology_names_round_trip() {
+        for t in TopologyKind::ALL {
+            assert_eq!(TopologyKind::from_name(t.name()), Some(t));
+        }
+        let xbar = TopologyKind::from_name("xbar");
+        assert_eq!(xbar, Some(TopologyKind::Crossbar));
+        assert_eq!(TopologyKind::from_name("mesh"), None);
+    }
+
+    #[test]
+    fn json_dump_has_interconnect_fields() {
+        let mut c = SystemConfig::config_a();
+        c.interconnect.channels = 4;
+        let j = c.to_json();
+        let ic = j.get("interconnect").unwrap();
+        assert_eq!(ic.get("channels").unwrap().as_usize(), Some(4));
+        assert_eq!(ic.get("topology").unwrap().as_str(), Some("crossbar"));
+        assert_eq!(ic.get("link_queue").unwrap().as_usize(), Some(16));
     }
 
     #[test]

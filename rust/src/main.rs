@@ -59,6 +59,7 @@ USAGE: mttkrp-memsys <subcommand> [--options]
   table2                              Table II resource model
   table3    [--scale 1.0]             Table III dataset summary
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
+            [--channels N] [--topology crossbar|line|ring] [--link_width W]
             [--scale 0.01] [--dataset synth01|synth02] [--<section.key> v]
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
@@ -91,6 +92,12 @@ fn preset(args: &Args) -> anyhow::Result<SystemConfig> {
     for (k, v) in args.options() {
         if k.contains('.') {
             cfg.apply_override(k, v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+    }
+    // Interconnect shorthands: `--channels 4 --topology ring --link_width 2`.
+    for key in ["channels", "topology", "link_width"] {
+        if let Some(v) = args.get(key) {
+            cfg.apply_override(key, v).map_err(|e| anyhow::anyhow!(e))?;
         }
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;

@@ -38,7 +38,13 @@ pub fn operand_modes(mode: Mode) -> (Mode, Mode) {
 }
 
 /// Validate operand shapes for a mode-`mode` MTTKRP over `t`.
-pub fn check_shapes(t: &CooTensor, mode: Mode, m1: &DenseMatrix, m2: &DenseMatrix, out: &DenseMatrix) {
+pub fn check_shapes(
+    t: &CooTensor,
+    mode: Mode,
+    m1: &DenseMatrix,
+    m2: &DenseMatrix,
+    out: &DenseMatrix,
+) {
     let (om1, om2) = operand_modes(mode);
     assert_eq!(m1.rows as u64, t.dim(om1), "first operand rows != dim {om1:?}");
     assert_eq!(m2.rows as u64, t.dim(om2), "second operand rows != dim {om2:?}");

@@ -106,7 +106,12 @@ mod tests {
     use crate::mttkrp::seq::mttkrp_seq;
     use crate::util::rng::Rng;
 
-    fn setup(seed: u64, dims: [u64; 3], nnz: usize, r: usize) -> (CooTensor, DenseMatrix, DenseMatrix) {
+    fn setup(
+        seed: u64,
+        dims: [u64; 3],
+        nnz: usize,
+        r: usize,
+    ) -> (CooTensor, DenseMatrix, DenseMatrix) {
         let mut rng = Rng::new(seed);
         let t = CooTensor::random(&mut rng, dims, nnz);
         let d = DenseMatrix::random(&mut rng, dims[1] as usize, r);

@@ -7,6 +7,10 @@
 
 mod artifacts;
 mod compute;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 mod pjrt;
 
 pub use artifacts::{find_artifacts_dir, Manifest};

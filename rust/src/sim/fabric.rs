@@ -1,0 +1,830 @@
+//! Multi-channel interconnect fabric between the request ports (LMBs /
+//! direct PE ports) and N independent DRAM channels.
+//!
+//! The paper's memory system funnels every LMB through one request
+//! router into a single memory-interface IP ([`super::router`]). This
+//! module generalizes that pipe into a routed fabric, the enabler for
+//! HBM-style many-channel parts:
+//!
+//! * a [`Topology`] trait ([`Crossbar`], [`Line`], [`Ring`]) describing
+//!   how ports reach channels;
+//! * cycle-accurate store-and-forward transport: one cycle per hop,
+//!   [`InterconnectConfig::link_width`] requests per directed link per
+//!   cycle, bounded per-link queues with backpressure;
+//! * channel interleaving of the physical address space via
+//!   [`ChannelMap`] — each channel runs its own [`Dram`] model (banks,
+//!   bus, controller queue), so aggregate bandwidth scales with
+//!   `channels`.
+//!
+//! With `channels = 1` and the crossbar topology the fabric reduces
+//! exactly — cycle for cycle — to the seed `Router -> Dram` pipe (the
+//! egress arbitration below is the same round-robin loop), which keeps
+//! the paper's Fig. 4 / Table II/III benches valid; a regression test
+//! pins this equivalence against [`super::router::Router`] on a fixed
+//! trace.
+//!
+//! Replies return directly to the issuing port on completion (as in the
+//! seed router, whose data return path is combinational); only the
+//! request path is hop-accurate.
+
+use std::collections::VecDeque;
+
+use crate::config::{DramConfig, InterconnectConfig, TopologyKind};
+
+use super::dram::{ChannelMap, Dram, DramStats};
+use super::{Cycle, MemReq, MemResp};
+
+/// Static routing view of an interconnect topology over `nodes` fabric
+/// nodes (one node per DRAM channel; ports attach round-robin).
+pub trait Topology {
+    fn name(&self) -> &'static str;
+
+    /// Node where requests from `port` enter the fabric.
+    fn ingress_node(&self, port: usize, nodes: usize) -> usize {
+        port % nodes
+    }
+
+    /// Next node on the route from `at` toward `dest`, or `None` when
+    /// the request is delivered locally (crossbars deliver everywhere).
+    fn next_hop(&self, at: usize, dest: usize, nodes: usize) -> Option<usize>;
+
+    /// All directed store-and-forward links (from, to).
+    fn links(&self, nodes: usize) -> Vec<(usize, usize)>;
+
+    /// Fabric hops from `port`'s ingress node to channel `dest`.
+    fn route_hops(&self, port: usize, dest: usize, nodes: usize) -> usize {
+        let mut at = self.ingress_node(port, nodes);
+        let mut hops = 0;
+        while let Some(next) = self.next_hop(at, dest, nodes) {
+            at = next;
+            hops += 1;
+            assert!(hops <= nodes, "{}: routing loop {at}->{dest}", self.name());
+        }
+        hops
+    }
+}
+
+/// Full crossbar: every port arbitrates at every channel in one cycle.
+pub struct Crossbar;
+
+impl Topology for Crossbar {
+    fn name(&self) -> &'static str {
+        "crossbar"
+    }
+
+    fn next_hop(&self, _at: usize, _dest: usize, _nodes: usize) -> Option<usize> {
+        None
+    }
+
+    fn links(&self, _nodes: usize) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+}
+
+/// Nodes in a row; requests walk node-to-node toward their channel.
+pub struct Line;
+
+impl Topology for Line {
+    fn name(&self) -> &'static str {
+        "line"
+    }
+
+    fn next_hop(&self, at: usize, dest: usize, _nodes: usize) -> Option<usize> {
+        match dest.cmp(&at) {
+            std::cmp::Ordering::Equal => None,
+            std::cmp::Ordering::Greater => Some(at + 1),
+            std::cmp::Ordering::Less => Some(at - 1),
+        }
+    }
+
+    fn links(&self, nodes: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for i in 0..nodes.saturating_sub(1) {
+            out.push((i, i + 1));
+            out.push((i + 1, i));
+        }
+        out
+    }
+}
+
+/// A line closed into a ring; requests take the shortest direction
+/// (ties go clockwise).
+pub struct Ring;
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn next_hop(&self, at: usize, dest: usize, nodes: usize) -> Option<usize> {
+        if at == dest {
+            return None;
+        }
+        let cw = (dest + nodes - at) % nodes;
+        let ccw = (at + nodes - dest) % nodes;
+        if cw <= ccw {
+            Some((at + 1) % nodes)
+        } else {
+            Some((at + nodes - 1) % nodes)
+        }
+    }
+
+    fn links(&self, nodes: usize) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for i in 0..nodes {
+            let j = (i + 1) % nodes;
+            if i == j {
+                continue;
+            }
+            if !out.contains(&(i, j)) {
+                out.push((i, j));
+            }
+            if !out.contains(&(j, i)) {
+                out.push((j, i));
+            }
+        }
+        out
+    }
+}
+
+/// The static routing table for a topology kind.
+pub fn topology_of(kind: TopologyKind) -> &'static dyn Topology {
+    match kind {
+        TopologyKind::Crossbar => &Crossbar,
+        TopologyKind::Line => &Line,
+        TopologyKind::Ring => &Ring,
+    }
+}
+
+/// Per-directed-link counters. For the crossbar these are the virtual
+/// port→channel links (bandwidth 1 request/cycle); for line/ring they
+/// are the physical node→node links (bandwidth `link_width`).
+#[derive(Debug, Clone, Default)]
+pub struct LinkStats {
+    /// Human label, e.g. `p0->ch2` (crossbar) or `n1->n2` (line/ring).
+    pub label: String,
+    /// Requests that crossed this link.
+    pub forwarded: u64,
+    /// Cycles a ready request could not cross (link budget exhausted,
+    /// downstream queue full, or — crossbar — channel controller full).
+    pub stall_cycles: u64,
+}
+
+impl LinkStats {
+    /// Fraction of the link's request bandwidth used over a run.
+    pub fn utilization(&self, total_cycles: Cycle, link_width: usize) -> f64 {
+        if total_cycles == 0 {
+            0.0
+        } else {
+            self.forwarded as f64 / (total_cycles as f64 * link_width.max(1) as f64)
+        }
+    }
+}
+
+/// Fabric-level statistics.
+#[derive(Debug, Clone, Default)]
+pub struct FabricStats {
+    /// Requests delivered into a DRAM channel controller.
+    pub forwarded: u64,
+    /// Cycles an egress arbiter was blocked by a full channel controller.
+    pub backpressure_cycles: u64,
+    /// Total store-and-forward link traversals (0 for crossbar).
+    pub hops: u64,
+    pub per_port_forwarded: Vec<u64>,
+    pub per_channel_forwarded: Vec<u64>,
+    pub links: Vec<LinkStats>,
+}
+
+/// Where an egress arbiter may pull requests from at one fabric node.
+#[derive(Debug, Clone, Copy)]
+enum Source {
+    /// Ingress queue of a port attached to this node (crossbar: every
+    /// port is visible at every node).
+    Port(usize),
+    /// Arrival queue of an incoming link (by link id).
+    Link(usize),
+}
+
+/// The interconnect fabric: ingress ports, routed transport, and N
+/// independent DRAM channels.
+pub struct Fabric {
+    kind: TopologyKind,
+    chmap: ChannelMap,
+    channels: Vec<Dram>,
+    /// Per-port ingress queues (filled by LMBs / direct PE ports).
+    ingress: Vec<VecDeque<MemReq>>,
+    /// Store-and-forward link queues, entries tagged with the cycle the
+    /// hop completes (line/ring; empty for crossbar).
+    links: Vec<VecDeque<(MemReq, Cycle)>>,
+    /// Link id by (from, to) node pair.
+    link_id: Vec<Vec<Option<usize>>>,
+    /// Egress arbitration sources per node (line/ring).
+    sources: Vec<Vec<Source>>,
+    /// Per-channel egress round-robin pointer.
+    rr_egress: Vec<usize>,
+    /// Per-node hop round-robin pointer (line/ring).
+    rr_hop: Vec<usize>,
+    /// Commands each channel controller accepts per cycle (MIG: 1).
+    cmds_per_cycle: usize,
+    link_width: usize,
+    link_queue_cap: usize,
+    pub stats: FabricStats,
+}
+
+impl Fabric {
+    pub fn new(n_ports: usize, ic: &InterconnectConfig, dram: &DramConfig) -> Fabric {
+        ic.validate().expect("invalid interconnect config");
+        let nodes = ic.channels;
+        let topo = topology_of(ic.topology);
+        let phys = topo.links(nodes);
+        let mut link_id = vec![vec![None; nodes]; nodes];
+        let mut link_stats = Vec::new();
+        for (lid, &(from, to)) in phys.iter().enumerate() {
+            link_id[from][to] = Some(lid);
+            link_stats.push(LinkStats {
+                label: format!("n{from}->n{to}"),
+                ..LinkStats::default()
+            });
+        }
+        if matches!(ic.topology, TopologyKind::Crossbar) {
+            // Virtual port→channel links (direct arbitration, no queues).
+            for p in 0..n_ports {
+                for c in 0..nodes {
+                    link_stats.push(LinkStats {
+                        label: format!("p{p}->ch{c}"),
+                        ..LinkStats::default()
+                    });
+                }
+            }
+        }
+        // Egress sources per node: attached ports first (in port order),
+        // then incoming links. With one node this is exactly the seed
+        // router's port scan order.
+        let mut sources = vec![Vec::new(); nodes];
+        for p in 0..n_ports {
+            sources[topo.ingress_node(p, nodes)].push(Source::Port(p));
+        }
+        for (lid, &(_, to)) in phys.iter().enumerate() {
+            sources[to].push(Source::Link(lid));
+        }
+        Fabric {
+            kind: ic.topology,
+            chmap: ChannelMap::new(ic.channels, ic.interleave_bytes),
+            channels: (0..ic.channels).map(|_| Dram::new(dram)).collect(),
+            ingress: (0..n_ports).map(|_| VecDeque::new()).collect(),
+            links: (0..phys.len()).map(|_| VecDeque::new()).collect(),
+            link_id,
+            sources,
+            rr_egress: vec![0; nodes],
+            rr_hop: vec![0; nodes],
+            cmds_per_cycle: 1,
+            link_width: ic.link_width,
+            link_queue_cap: ic.link_queue,
+            stats: FabricStats {
+                per_port_forwarded: vec![0; n_ports],
+                per_channel_forwarded: vec![0; nodes],
+                links: link_stats,
+                ..FabricStats::default()
+            },
+        }
+    }
+
+    pub fn n_ports(&self) -> usize {
+        self.ingress.len()
+    }
+
+    pub fn n_channels(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Enqueue a request from port `req.port`.
+    pub fn push(&mut self, req: MemReq) {
+        debug_assert!(req.port < self.ingress.len());
+        self.ingress[req.port].push_back(req);
+    }
+
+    /// Ingress occupancy of one port (for LMB backpressure decisions).
+    pub fn port_depth(&self, port: usize) -> usize {
+        self.ingress[port].len()
+    }
+
+    /// Advance every DRAM channel to `now`, collecting completions.
+    pub fn tick_memory(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
+        for ch in &mut self.channels {
+            ch.tick(now, completions);
+        }
+    }
+
+    /// Move requests through the fabric for one cycle: egress into the
+    /// channel controllers, then one store-and-forward hop per link.
+    /// Returns true if anything moved.
+    pub fn route(&mut self, now: Cycle) -> bool {
+        match self.kind {
+            TopologyKind::Crossbar => self.route_crossbar(now),
+            TopologyKind::Line | TopologyKind::Ring => self.route_store_forward(now),
+        }
+    }
+
+    /// Crossbar: per-channel round-robin over all port queues — the seed
+    /// router's arbitration loop, one instance per channel.
+    fn route_crossbar(&mut self, now: Cycle) -> bool {
+        let n = self.ingress.len();
+        let nch = self.channels.len();
+        let mut moved = false;
+        for c in 0..nch {
+            let mut forwarded = 0;
+            let mut scanned = 0;
+            while forwarded < self.cmds_per_cycle && scanned < n {
+                let port = (self.rr_egress[c] + scanned) % n;
+                let Some(&req) = self.ingress[port].front() else {
+                    scanned += 1;
+                    continue;
+                };
+                let (ch, local) = self.chmap.decode(req.addr);
+                if ch != c {
+                    scanned += 1;
+                    continue;
+                }
+                if !self.channels[c].can_accept() {
+                    self.stats.backpressure_cycles += 1;
+                    self.stats.links[port * nch + c].stall_cycles += 1;
+                    break;
+                }
+                self.ingress[port].pop_front();
+                self.stats.links[port * nch + c].forwarded += 1;
+                self.deliver(MemReq { addr: local, ..req }, c, now);
+                forwarded += 1;
+                moved = true;
+                // Advance RR past the port we just served.
+                self.rr_egress[c] = (port + 1) % n;
+                scanned = 0;
+            }
+        }
+        moved
+    }
+
+    /// Line/ring: requests drain into their node's channel when they
+    /// arrive, otherwise advance one link toward it (one cycle per hop,
+    /// `link_width` per link per cycle, bounded queues).
+    fn route_store_forward(&mut self, now: Cycle) -> bool {
+        let nodes = self.channels.len();
+        let topo = topology_of(self.kind);
+        let mut moved = false;
+        // Phase 1: egress at each node.
+        for node in 0..nodes {
+            let nsrc = self.sources[node].len();
+            if nsrc == 0 {
+                continue;
+            }
+            let mut forwarded = 0;
+            let mut scanned = 0;
+            while forwarded < self.cmds_per_cycle && scanned < nsrc {
+                let si = (self.rr_egress[node] + scanned) % nsrc;
+                let Some((req, dest)) = self.source_head(node, si, now) else {
+                    scanned += 1;
+                    continue;
+                };
+                if dest != node {
+                    scanned += 1;
+                    continue;
+                }
+                if !self.channels[node].can_accept() {
+                    self.stats.backpressure_cycles += 1;
+                    break;
+                }
+                self.pop_source(node, si);
+                let (_, local) = self.chmap.decode(req.addr);
+                self.deliver(MemReq { addr: local, ..req }, node, now);
+                forwarded += 1;
+                moved = true;
+                self.rr_egress[node] = (si + 1) % nsrc;
+                scanned = 0;
+            }
+        }
+        // Phase 2: hop in-transit requests one link forward.
+        let mut budget = vec![self.link_width; self.links.len()];
+        for node in 0..nodes {
+            let nsrc = self.sources[node].len();
+            if nsrc == 0 {
+                continue;
+            }
+            let start = self.rr_hop[node];
+            let mut advanced = false;
+            for k in 0..nsrc {
+                let si = (start + k) % nsrc;
+                let Some((req, dest)) = self.source_head(node, si, now) else {
+                    continue;
+                };
+                if dest == node {
+                    continue; // waiting on egress (channel backpressure)
+                }
+                let next = topo
+                    .next_hop(node, dest, nodes)
+                    .expect("non-local request must have a next hop");
+                let lid = self.link_id[node][next].expect("route uses a physical link");
+                if budget[lid] == 0 || self.links[lid].len() >= self.link_queue_cap {
+                    self.stats.links[lid].stall_cycles += 1;
+                    continue;
+                }
+                self.pop_source(node, si);
+                self.links[lid].push_back((req, now + 1));
+                budget[lid] -= 1;
+                self.stats.links[lid].forwarded += 1;
+                self.stats.hops += 1;
+                moved = true;
+                if !advanced {
+                    self.rr_hop[node] = (si + 1) % nsrc;
+                    advanced = true;
+                }
+            }
+        }
+        moved
+    }
+
+    /// Head request of one egress source, with its destination node.
+    /// Link entries become visible one cycle after the hop.
+    fn source_head(&self, node: usize, si: usize, now: Cycle) -> Option<(MemReq, usize)> {
+        match self.sources[node][si] {
+            Source::Port(p) => {
+                let req = *self.ingress[p].front()?;
+                Some((req, self.chmap.decode(req.addr).0))
+            }
+            Source::Link(l) => match self.links[l].front() {
+                Some(&(req, ready)) if ready <= now => Some((req, self.chmap.decode(req.addr).0)),
+                _ => None,
+            },
+        }
+    }
+
+    fn pop_source(&mut self, node: usize, si: usize) {
+        match self.sources[node][si] {
+            Source::Port(p) => {
+                self.ingress[p].pop_front();
+            }
+            Source::Link(l) => {
+                self.links[l].pop_front();
+            }
+        }
+    }
+
+    /// Hand a request (already rewritten to its channel-local address)
+    /// to channel `ch`'s controller.
+    fn deliver(&mut self, req: MemReq, ch: usize, now: Cycle) {
+        self.stats.per_port_forwarded[req.port] += 1;
+        self.stats.per_channel_forwarded[ch] += 1;
+        self.stats.forwarded += 1;
+        self.channels[ch].push(req, now);
+    }
+
+    /// Earliest in-flight DRAM completion across all channels.
+    pub fn next_completion(&self) -> Option<Cycle> {
+        self.channels.iter().filter_map(Dram::next_event).min()
+    }
+
+    /// Earliest future cycle a queued DRAM request could issue, across
+    /// all channels (run-loop idle fast-forward).
+    pub fn next_schedule_time(&self, now: Cycle) -> Option<Cycle> {
+        self.channels.iter().filter_map(|d| d.next_schedule_time(now)).min()
+    }
+
+    /// Earliest future cycle at which fabric transport itself can make
+    /// progress. `None` for the crossbar (ingress→controller transfer is
+    /// combinational within [`Fabric::route`], so the DRAM-side events
+    /// fully cover its wakeups — exactly the seed router's candidates).
+    pub fn next_transit_time(&self, now: Cycle) -> Option<Cycle> {
+        if matches!(self.kind, TopologyKind::Crossbar) {
+            return None;
+        }
+        let mut t: Option<Cycle> = None;
+        // Deliberately conservative: a non-empty ingress queue pins the
+        // fast-forward to the next cycle even when the head is blocked
+        // on a chain that bottoms out in a DRAM event (already covered
+        // by the other candidates). Costs host time in backpressured
+        // line/ring phases, never correctness.
+        if self.ingress.iter().any(|q| !q.is_empty()) {
+            t = Some(now + 1);
+        }
+        for l in &self.links {
+            if let Some(&(_, ready)) = l.front() {
+                let c = ready.max(now + 1);
+                t = Some(t.map_or(c, |x| x.min(c)));
+            }
+        }
+        t
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.ingress.iter().all(VecDeque::is_empty)
+            && self.links.iter().all(VecDeque::is_empty)
+            && self.channels.iter().all(Dram::is_idle)
+    }
+
+    /// Per-channel DRAM statistics snapshots.
+    pub fn channel_stats(&self) -> Vec<DramStats> {
+        self.channels.iter().map(|d| d.stats.clone()).collect()
+    }
+
+    /// All channels folded into one aggregate (the seed report's view).
+    pub fn aggregate_dram_stats(&self) -> DramStats {
+        let mut agg = DramStats::default();
+        for d in &self.channels {
+            agg.merge(&d.stats);
+        }
+        agg
+    }
+
+    /// Request bandwidth of one link, for utilization reporting.
+    pub fn link_width(&self) -> usize {
+        match self.kind {
+            TopologyKind::Crossbar => 1,
+            _ => self.link_width,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::router::Router;
+
+    fn req(id: u64, addr: u64, port: usize) -> MemReq {
+        MemReq {
+            id,
+            addr,
+            bytes: 64,
+            is_write: false,
+            port,
+        }
+    }
+
+    fn ic(channels: usize, topology: TopologyKind) -> InterconnectConfig {
+        InterconnectConfig {
+            channels,
+            topology,
+            ..InterconnectConfig::single_channel()
+        }
+    }
+
+    // --- route computation ---------------------------------------------
+
+    #[test]
+    fn crossbar_routes_are_direct() {
+        let t = Crossbar;
+        for at in 0..4 {
+            for dest in 0..4 {
+                assert_eq!(t.next_hop(at, dest, 4), None);
+            }
+        }
+        assert!(t.links(4).is_empty());
+        assert_eq!(t.route_hops(3, 2, 4), 0);
+    }
+
+    #[test]
+    fn line_routes_walk_monotonically() {
+        let t = Line;
+        assert_eq!(t.next_hop(0, 3, 4), Some(1));
+        assert_eq!(t.next_hop(1, 3, 4), Some(2));
+        assert_eq!(t.next_hop(3, 0, 4), Some(2));
+        assert_eq!(t.next_hop(2, 2, 4), None);
+        // port p enters at node p % nodes; hops = |entry - dest|.
+        assert_eq!(t.route_hops(0, 3, 4), 3);
+        assert_eq!(t.route_hops(5, 0, 4), 1);
+        assert_eq!(t.links(4).len(), 6); // 3 pairs, both directions
+        assert_eq!(t.links(1).len(), 0);
+    }
+
+    #[test]
+    fn ring_takes_shortest_direction() {
+        let t = Ring;
+        // 0 -> 3 on 4 nodes: counter-clockwise is 1 hop.
+        assert_eq!(t.next_hop(0, 3, 4), Some(3));
+        // 0 -> 1: clockwise 1 hop.
+        assert_eq!(t.next_hop(0, 1, 4), Some(1));
+        // Tie (0 -> 2 on 4 nodes) goes clockwise.
+        assert_eq!(t.next_hop(0, 2, 4), Some(1));
+        assert_eq!(t.route_hops(0, 3, 4), 1);
+        assert_eq!(t.route_hops(0, 2, 4), 2);
+        assert_eq!(t.links(4).len(), 8);
+        assert_eq!(t.links(2).len(), 2);
+        assert_eq!(t.links(1).len(), 0);
+    }
+
+    #[test]
+    fn ring_routes_always_terminate() {
+        for nodes in [1usize, 2, 4, 8] {
+            for port in 0..8 {
+                for dest in 0..nodes {
+                    let hops = Ring.route_hops(port, dest, nodes);
+                    assert!(hops <= nodes / 2, "ring hop count {hops} too long");
+                }
+            }
+        }
+    }
+
+    // --- transport ------------------------------------------------------
+
+    /// Drive arrivals through the seed Router -> Dram pipe with the
+    /// system run-loop's ordering; returns sorted (id, done_at).
+    fn drive_router(arrivals: &[(Cycle, MemReq)], n_ports: usize) -> Vec<(u64, Cycle)> {
+        let mut dram = Dram::new(&DramConfig::mig_u250());
+        let mut router = Router::new(n_ports, 1);
+        let mut out = Vec::new();
+        let mut completions = Vec::new();
+        let mut i = 0;
+        for now in 0..1_000_000u64 {
+            completions.clear();
+            dram.tick(now, &mut completions);
+            out.extend(completions.iter().map(|c| (c.id, c.done_at)));
+            while i < arrivals.len() && arrivals[i].0 <= now {
+                router.push(arrivals[i].1);
+                i += 1;
+            }
+            router.tick(&mut dram, now);
+            if i == arrivals.len() && router.is_idle() && dram.is_idle() {
+                break;
+            }
+        }
+        assert_eq!(out.len(), arrivals.len(), "router run did not drain");
+        out.sort_unstable();
+        out
+    }
+
+    /// Same loop through the fabric.
+    fn drive_fabric(
+        arrivals: &[(Cycle, MemReq)],
+        n_ports: usize,
+        ic: &InterconnectConfig,
+    ) -> (Vec<(u64, Cycle)>, FabricStats) {
+        let mut fab = Fabric::new(n_ports, ic, &DramConfig::mig_u250());
+        let mut out = Vec::new();
+        let mut completions = Vec::new();
+        let mut i = 0;
+        for now in 0..1_000_000u64 {
+            completions.clear();
+            fab.tick_memory(now, &mut completions);
+            out.extend(completions.iter().map(|c| (c.id, c.done_at)));
+            while i < arrivals.len() && arrivals[i].0 <= now {
+                fab.push(arrivals[i].1);
+                i += 1;
+            }
+            fab.route(now);
+            if i == arrivals.len() && fab.is_idle() {
+                break;
+            }
+        }
+        assert_eq!(out.len(), arrivals.len(), "fabric run did not drain");
+        out.sort_unstable();
+        (out, fab.stats)
+    }
+
+    /// A mixed trace: four ports, streams + scatters + a write burst.
+    fn mixed_trace() -> Vec<(Cycle, MemReq)> {
+        let mut tr = Vec::new();
+        let mut id = 0u64;
+        for g in 0..64u64 {
+            for port in 0..4usize {
+                id += 1;
+                let addr = match port {
+                    0 => g * 64,                               // stream
+                    1 => (g * 1_048_576 + g * 64) % (1 << 30), // row scatter
+                    2 => 262_144 + g * 4096,                   // granule hops
+                    _ => 524_288 + (g % 8) * 64,               // reuse
+                };
+                let mut r = req(id, addr, port);
+                r.is_write = port == 3 && g % 4 == 0;
+                tr.push((g / 2, r));
+            }
+        }
+        tr
+    }
+
+    #[test]
+    fn single_channel_crossbar_is_bit_identical_to_seed_router() {
+        let tr = mixed_trace();
+        let want = drive_router(&tr, 4);
+        let (got, stats) = drive_fabric(&tr, 4, &ic(1, TopologyKind::Crossbar));
+        assert_eq!(got, want, "fabric must replay the seed router");
+        assert_eq!(stats.forwarded, tr.len() as u64);
+        assert_eq!(stats.hops, 0);
+    }
+
+    #[test]
+    fn single_channel_line_and_ring_also_degenerate_to_seed_router() {
+        // With one node there is nothing to hop: every topology must
+        // collapse to the same arbitration loop.
+        let tr = mixed_trace();
+        let want = drive_router(&tr, 4);
+        for topo in [TopologyKind::Line, TopologyKind::Ring] {
+            let (got, stats) = drive_fabric(&tr, 4, &ic(1, topo));
+            assert_eq!(got, want, "{topo:?} with 1 channel diverged from seed");
+            assert_eq!(stats.hops, 0);
+        }
+    }
+
+    #[test]
+    fn interleaving_spreads_traffic_over_all_channels() {
+        let tr = mixed_trace();
+        let (done, stats) = drive_fabric(&tr, 4, &ic(4, TopologyKind::Crossbar));
+        assert_eq!(done.len(), tr.len());
+        for (c, n) in stats.per_channel_forwarded.iter().enumerate() {
+            assert!(*n > 0, "channel {c} got no traffic");
+        }
+        let total: u64 = stats.per_channel_forwarded.iter().sum();
+        assert_eq!(total, tr.len() as u64);
+    }
+
+    #[test]
+    fn four_channels_beat_one_on_parallel_streams() {
+        let tr = mixed_trace();
+        let (one, _) = drive_fabric(&tr, 4, &ic(1, TopologyKind::Crossbar));
+        let (four, _) = drive_fabric(&tr, 4, &ic(4, TopologyKind::Crossbar));
+        let makespan = |v: &[(u64, Cycle)]| v.iter().map(|&(_, t)| t).max().unwrap();
+        assert!(
+            makespan(&four) < makespan(&one),
+            "4-channel crossbar {} !< single channel {}",
+            makespan(&four),
+            makespan(&one)
+        );
+    }
+
+    #[test]
+    fn store_and_forward_hops_are_counted_and_delayed() {
+        // 2-node line, port 0 at node 0 sends everything to channel 1:
+        // every request crosses link n0->n1 exactly once.
+        let icfg = ic(2, TopologyKind::Line);
+        let tr: Vec<(Cycle, MemReq)> = (0..8u64)
+            .map(|i| (0, req(i + 1, 4096 + i * 8192 * 2, 0))) // granule 1, 3, 5... all channel 1
+            .collect();
+        // granule of addr 4096+i*16384 with interleave 4096: (addr/4096) % 2 == 1.
+        let (done, stats) = drive_fabric(&tr, 1, &icfg);
+        assert_eq!(done.len(), 8);
+        assert_eq!(stats.hops, 8);
+        let fwd: u64 = stats
+            .links
+            .iter()
+            .filter(|l| l.label == "n0->n1")
+            .map(|l| l.forwarded)
+            .sum();
+        assert_eq!(fwd, 8);
+        // And the hop adds at least one cycle versus a crossbar.
+        let (xbar, _) = drive_fabric(&tr, 1, &ic(2, TopologyKind::Crossbar));
+        let makespan = |v: &[(u64, Cycle)]| v.iter().map(|&(_, t)| t).max().unwrap();
+        assert!(makespan(&done) > makespan(&xbar));
+    }
+
+    #[test]
+    fn narrow_link_backpressures_and_still_drains() {
+        // 4-node line, all traffic from port 0 (node 0) to channel 3:
+        // three hops per request over width-1, depth-1 links.
+        let icfg = InterconnectConfig {
+            channels: 4,
+            topology: TopologyKind::Line,
+            link_width: 1,
+            link_queue: 1,
+            interleave_bytes: 4096,
+        };
+        let tr: Vec<(Cycle, MemReq)> = (0..16u64)
+            .map(|i| (0, req(i + 1, 3 * 4096 + i * 4 * 4096, 0))) // granule ≡ 3 (mod 4)
+            .collect();
+        let (done, stats) = drive_fabric(&tr, 1, &icfg);
+        assert_eq!(done.len(), 16, "must drain despite backpressure");
+        assert_eq!(stats.hops, 16 * 3);
+        let stalls: u64 = stats.links.iter().map(|l| l.stall_cycles).sum();
+        assert!(stalls > 0, "depth-1 links must report contention");
+    }
+
+    #[test]
+    fn crossbar_reports_per_virtual_link_counters() {
+        let tr = mixed_trace();
+        let (_, stats) = drive_fabric(&tr, 4, &ic(2, TopologyKind::Crossbar));
+        assert_eq!(stats.links.len(), 4 * 2);
+        let total: u64 = stats.links.iter().map(|l| l.forwarded).sum();
+        assert_eq!(total, tr.len() as u64);
+        // Utilization is a sane fraction.
+        for l in &stats.links {
+            let u = l.utilization(10_000, 1);
+            assert!((0.0..=1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn fabric_backpressures_ports_like_the_router() {
+        let mut fab = Fabric::new(
+            2,
+            &ic(1, TopologyKind::Crossbar),
+            &DramConfig {
+                max_outstanding: 2,
+                ..DramConfig::mig_u250()
+            },
+        );
+        for i in 0..4 {
+            fab.push(req(i + 1, i * 64, 0));
+        }
+        fab.route(0);
+        fab.route(1);
+        fab.route(2); // controller full
+        assert_eq!(fab.stats.forwarded, 2);
+        assert!(fab.stats.backpressure_cycles >= 1);
+        assert_eq!(fab.port_depth(0), 2);
+    }
+}

@@ -127,7 +127,13 @@ impl Lmb {
     }
 
     /// Direct cache load (cache-only baseline): `token` is a PE token.
-    pub fn cache_load_direct(&mut self, addr: u64, token: u64, now: Cycle, ids: &mut IdGen) -> LmbOutcome {
+    pub fn cache_load_direct(
+        &mut self,
+        addr: u64,
+        token: u64,
+        now: Cycle,
+        ids: &mut IdGen,
+    ) -> LmbOutcome {
         debug_assert_eq!(self.kind, SystemKind::CacheOnly);
         match self.cache.load(addr, token, now, ids) {
             CacheAccess::Hit { ready_at } => LmbOutcome::Ready { at: ready_at },
@@ -142,7 +148,13 @@ impl Lmb {
 
     /// Fiber transfer via the DMA engine (proposed + both fiber paths of
     /// the DMA-only baseline).
-    pub fn dma_transfer(&mut self, addr: u64, bytes: u32, token: u64, is_write: bool) -> LmbOutcome {
+    pub fn dma_transfer(
+        &mut self,
+        addr: u64,
+        bytes: u32,
+        token: u64,
+        is_write: bool,
+    ) -> LmbOutcome {
         if self.dma.submit(token, addr, bytes, is_write) {
             LmbOutcome::Pending
         } else {

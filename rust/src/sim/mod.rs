@@ -3,14 +3,19 @@
 //! Component map (paper figure → module):
 //!
 //! * Fig. 1 overall architecture → [`system`] (composition + run loop)
-//! * Fig. 1 "Request Router"    → [`router`]
+//! * Fig. 1 "Request Router"    → [`router`] (single-channel reference)
+//! * interconnect fabric        → [`fabric`] (multi-channel
+//!   generalization of the router: [`fabric::Topology`] crossbar / line /
+//!   ring over N interleaved DRAM channels with per-link bandwidth
+//!   tracking; `channels = 1` + crossbar replays [`router`] exactly)
 //! * Fig. 1 "LMB"               → [`lmb`]
 //! * Fig. 2 "DMA Engine"        → [`dma`]
 //! * Fig. 3 "Request Reductor"  → [`request_reductor`] ([`temp_buffer`]
 //!   CAM stage + [`rrsh`] stage over an [`xor_hash`] table)
 //! * §IV-B non-blocking cache   → [`cache`] (+ conventional [`mshr`] for
 //!   the cache-only baseline)
-//! * DRAM interface IP + DDR4   → [`dram`]
+//! * DRAM interface IP + DDR4   → [`dram`] (one instance per channel;
+//!   [`dram::ChannelMap`] interleaves the physical address space)
 //! * compute fabrics (Type-1/2) → [`pe`]
 //!
 //! One simulated cycle = one user-clock cycle of the memory interface IP
@@ -22,6 +27,7 @@
 pub mod cache;
 pub mod dma;
 pub mod dram;
+pub mod fabric;
 pub mod lmb;
 pub mod mshr;
 pub mod pe;
@@ -33,6 +39,7 @@ pub mod system;
 pub mod temp_buffer;
 pub mod xor_hash;
 
+pub use fabric::{Fabric, FabricStats, LinkStats};
 pub use stats::SimReport;
 pub use system::{simulate, MemorySystem};
 

@@ -6,6 +6,7 @@ use crate::util::json::Json;
 use super::cache::CacheStats;
 use super::dma::DmaStats;
 use super::dram::DramStats;
+use super::fabric::FabricStats;
 use super::pe::LatencyStats;
 use super::request_reductor::RrStats;
 use super::Cycle;
@@ -34,7 +35,14 @@ pub struct SimReport {
     pub accesses: u64,
     /// Bytes the PEs asked for (excl. alignment garbage).
     pub requested_bytes: u64,
+    /// Aggregate over all DRAM channels (the seed single-MIG view).
     pub dram: DramStats,
+    /// Per-channel DRAM counters (one entry per interconnect channel).
+    pub channels: Vec<DramStats>,
+    /// Interconnect fabric counters (per-port, per-channel, per-link).
+    pub fabric: FabricStats,
+    /// Request bandwidth of one fabric link (for link utilization).
+    pub link_width: usize,
     pub lmbs: Vec<LmbStats>,
     /// PE-observed latency per access slot: [element, fiber-load,
     /// fiber-load, store] — the paper's per-class "minimum latency" view.
@@ -92,6 +100,29 @@ impl SimReport {
         self.latency[0].mean()
     }
 
+    /// Per-channel data-bus utilization (busy beats / makespan).
+    pub fn channel_bus_utilization(&self) -> Vec<f64> {
+        self.channels
+            .iter()
+            .map(|c| {
+                if self.total_cycles == 0 {
+                    0.0
+                } else {
+                    c.busy_bus_cycles as f64 / self.total_cycles as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Highest per-link request-bandwidth utilization in the fabric.
+    pub fn max_link_utilization(&self) -> f64 {
+        self.fabric
+            .links
+            .iter()
+            .map(|l| l.utilization(self.total_cycles, self.link_width))
+            .fold(0.0, f64::max)
+    }
+
     /// Mean PE-observed latency of fiber loads (cycles).
     pub fn fiber_latency_mean(&self) -> f64 {
         let (a, b) = (&self.latency[1], &self.latency[2]);
@@ -126,7 +157,59 @@ impl SimReport {
                     ("row_hit_rate", Json::num(self.dram.row_hit_rate())),
                 ]),
             ),
+            ("channels", self.channels_json()),
+            ("fabric", self.fabric_json()),
             ("host_seconds", Json::num(self.host_seconds)),
+        ])
+    }
+
+    /// Per-channel DRAM counters + bus utilization as a JSON array.
+    fn channels_json(&self) -> Json {
+        let utils = self.channel_bus_utilization();
+        let rows = self
+            .channels
+            .iter()
+            .zip(utils)
+            .map(|(c, util)| {
+                Json::obj(vec![
+                    ("reads", Json::num(c.reads as f64)),
+                    ("writes", Json::num(c.writes as f64)),
+                    ("read_bytes", Json::num(c.read_bytes as f64)),
+                    ("write_bytes", Json::num(c.write_bytes as f64)),
+                    ("row_hit_rate", Json::num(c.row_hit_rate())),
+                    ("bus_utilization", Json::num(util)),
+                ])
+            })
+            .collect();
+        Json::arr(rows)
+    }
+
+    /// Interconnect counters, including per-link utilization.
+    fn fabric_json(&self) -> Json {
+        let links = self
+            .fabric
+            .links
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("label", Json::str(l.label.clone())),
+                    ("forwarded", Json::num(l.forwarded as f64)),
+                    ("stall_cycles", Json::num(l.stall_cycles as f64)),
+                    (
+                        "utilization",
+                        Json::num(l.utilization(self.total_cycles, self.link_width)),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("forwarded", Json::num(self.fabric.forwarded as f64)),
+            (
+                "backpressure_cycles",
+                Json::num(self.fabric.backpressure_cycles as f64),
+            ),
+            ("hops", Json::num(self.fabric.hops as f64)),
+            ("links", Json::arr(links)),
         ])
     }
 }
@@ -148,6 +231,20 @@ mod tests {
                 write_bytes: 1000,
                 ..Default::default()
             },
+            channels: vec![
+                DramStats {
+                    read_bytes: 5000,
+                    busy_bus_cycles: 250,
+                    ..Default::default()
+                },
+                DramStats {
+                    write_bytes: 1000,
+                    busy_bus_cycles: 750,
+                    ..Default::default()
+                },
+            ],
+            fabric: FabricStats::default(),
+            link_width: 1,
             lmbs: vec![],
             latency: Default::default(),
             host_seconds: 0.0,
@@ -169,5 +266,19 @@ mod tests {
         let j = report(10).to_json();
         assert_eq!(j.get("total_cycles").unwrap().as_usize(), Some(10));
         assert!(j.get("dram").unwrap().get("row_hit_rate").is_some());
+        let chans = j.get("channels").unwrap().as_arr().unwrap();
+        assert_eq!(chans.len(), 2);
+        assert!(chans[0].get("bus_utilization").is_some());
+        assert!(j.get("fabric").unwrap().get("links").is_some());
+    }
+
+    #[test]
+    fn per_channel_utilization_derives_from_makespan() {
+        let r = report(1000);
+        let util = r.channel_bus_utilization();
+        assert_eq!(util.len(), 2);
+        assert!((util[0] - 0.25).abs() < 1e-12);
+        assert!((util[1] - 0.75).abs() < 1e-12);
+        assert_eq!(r.max_link_utilization(), 0.0); // no links recorded
     }
 }

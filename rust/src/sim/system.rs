@@ -19,10 +19,10 @@ use std::time::Instant;
 use crate::config::{FabricType, SystemConfig, SystemKind};
 use crate::trace::{AccessClass, Workload};
 
-use super::dram::{Dram, IdGen};
+use super::dram::IdGen;
+use super::fabric::Fabric;
 use super::lmb::{Delivery, Lmb, LmbOutcome};
 use super::pe::{pack_token, unpack_token, PeFrontEnd};
-use super::router::Router;
 use super::stats::SimReport;
 use super::{Cycle, MemReq};
 
@@ -39,8 +39,8 @@ struct PartialIssue {
 /// The composed memory system under simulation.
 pub struct MemorySystem {
     cfg: SystemConfig,
-    dram: Dram,
-    router: Router,
+    /// Interconnect fabric + the DRAM channels behind it.
+    fabric: Fabric,
     lmbs: Vec<Lmb>,
     pes: Vec<PeFrontEnd>,
     partials: Vec<Option<PartialIssue>>,
@@ -98,8 +98,7 @@ impl MemorySystem {
             .collect::<Vec<_>>();
         let n_pes = pes.len();
         MemorySystem {
-            dram: Dram::new(&cfg.dram),
-            router: Router::new(n_ports, 1),
+            fabric: Fabric::new(n_ports, &cfg.interconnect, &cfg.dram),
             lmbs,
             pes,
             partials: vec![None; n_pes],
@@ -141,9 +140,9 @@ impl MemorySystem {
         loop {
             let mut progress = false;
 
-            // 1. DRAM completions.
+            // 1. DRAM completions (all channels).
             completions.clear();
-            self.dram.tick(now, &mut completions);
+            self.fabric.tick_memory(now, &mut completions);
             for resp in completions.drain(..) {
                 progress = true;
                 if let Some(token) = self.direct.remove(&resp.id) {
@@ -195,21 +194,20 @@ impl MemorySystem {
                 self.line_events.push(Reverse((ev.at, ev.lmb, ev.line)));
             }
 
-            // 5. LMB outboxes → router (bounded ingress per port).
+            // 5. LMB outboxes → fabric (bounded ingress per port).
             for li in 0..self.lmbs.len() {
                 while self.lmbs[li].has_requests()
-                    && self.router.port_depth(li) < self.port_cap
+                    && self.fabric.port_depth(li) < self.port_cap
                 {
                     let req = self.lmbs[li].pop_request().unwrap();
-                    self.router.push(req);
+                    self.fabric.push(req);
                     progress = true;
                 }
             }
 
-            // 6. Router → DRAM.
-            let routed_before = self.router.stats.forwarded;
-            self.router.tick(&mut self.dram, now);
-            progress |= self.router.stats.forwarded != routed_before;
+            // 6. Fabric transport: egress into the channel controllers +
+            //    one store-and-forward hop per link.
+            progress |= self.fabric.route(now);
 
             // 7. PE issue + retire.
             for pe_idx in 0..self.pes.len() {
@@ -228,15 +226,17 @@ impl MemorySystem {
 
             // 9. Advance time: next cycle on progress, else jump to the
             //    next scheduled event (DRAM completion, delivery, line
-            //    event, or the next time a queued DRAM request can issue).
+            //    event, the next time a queued DRAM request can issue, or
+            //    — line/ring — the next fabric hop).
             if progress {
                 now += 1;
             } else {
                 let next = [
                     self.deliveries.peek().map(|Reverse((c, _))| *c),
                     self.line_events.peek().map(|Reverse((c, _, _))| *c),
-                    self.dram.next_event(),
-                    self.dram.next_schedule_time(now),
+                    self.fabric.next_completion(),
+                    self.fabric.next_schedule_time(now),
+                    self.fabric.next_transit_time(now),
                 ]
                 .into_iter()
                 .flatten()
@@ -270,7 +270,10 @@ impl MemorySystem {
             nnz: self.pes.iter().map(|p| p.total_work() as u64).sum(),
             accesses: self.accesses_served,
             requested_bytes: self.requested_bytes,
-            dram: self.dram.stats.clone(),
+            dram: self.fabric.aggregate_dram_stats(),
+            channels: self.fabric.channel_stats(),
+            fabric: self.fabric.stats.clone(),
+            link_width: self.fabric.link_width(),
             lmbs: self.lmbs.iter().map(Lmb::stats).collect(),
             host_seconds: host_t0.elapsed().as_secs_f64(),
         }
@@ -278,8 +281,7 @@ impl MemorySystem {
 
     fn finished(&self) -> bool {
         self.pes.iter().all(PeFrontEnd::done)
-            && self.dram.is_idle()
-            && self.router.is_idle()
+            && self.fabric.is_idle()
             && self.deliveries.is_empty()
             && self.line_events.is_empty()
             && self.lmbs.iter().all(Lmb::quiescent)
@@ -386,7 +388,8 @@ impl MemorySystem {
             SystemKind::CacheOnly => match access.class {
                 AccessClass::FiberStore => {
                     // Write-through, no allocate.
-                    let id = self.lmbs[port].store_through(access.addr, access.bytes, &mut self.ids);
+                    let id =
+                        self.lmbs[port].store_through(access.addr, access.bytes, &mut self.ids);
                     self.direct.insert(id, token);
                     self.direct_outstanding[port] += 1;
                     DispatchResult::Issued { parts: 1 }
@@ -414,7 +417,7 @@ impl MemorySystem {
                 // outstanding per port.
                 let total_outstanding: usize = self.direct_outstanding.iter().sum();
                 if total_outstanding >= self.direct_limit
-                    || self.router.port_depth(port) >= self.port_cap
+                    || self.fabric.port_depth(port) >= self.port_cap
                 {
                     return DispatchResult::Stall;
                 }
@@ -422,7 +425,7 @@ impl MemorySystem {
                 let start = access.addr - access.addr % beat;
                 let end = crate::util::round_up(access.addr + access.bytes as u64, beat);
                 let id = self.ids.next();
-                self.router.push(MemReq {
+                self.fabric.push(MemReq {
                     id,
                     addr: start,
                     bytes: (end - start) as u32,

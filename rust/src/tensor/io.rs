@@ -44,7 +44,9 @@ pub fn read_tns(path: &Path, dims: Option<[u64; 3]>) -> Result<CooTensor> {
         for m in &mut idx {
             *m = it
                 .next()
-                .ok_or_else(|| anyhow::anyhow!("{}:{}: too few fields", path.display(), lineno + 1))?
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{}:{}: too few fields", path.display(), lineno + 1)
+                })?
                 .parse::<u64>()
                 .map_err(|e| anyhow::anyhow!("{}:{}: bad index: {e}", path.display(), lineno + 1))?;
             anyhow::ensure!(*m >= 1, "{}:{}: indices are 1-based", path.display(), lineno + 1);

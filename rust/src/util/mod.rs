@@ -13,7 +13,7 @@ pub mod table;
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Round `a` up to the next multiple of `b`.

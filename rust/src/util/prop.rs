@@ -36,7 +36,8 @@ where
         let input = gen(&mut rng);
         if let Err(msg) = prop(&input) {
             panic!(
-                "property {name:?} failed (seed={base_seed:#x} case={case}, case_seed={seed:#x}):\n  {msg}\n  input: {input:?}"
+                "property {name:?} failed (seed={base_seed:#x} case={case}, \
+                 case_seed={seed:#x}):\n  {msg}\n  input: {input:?}"
             );
         }
     }

@@ -1,0 +1,170 @@
+//! Integration tests for the multi-channel interconnect fabric: full
+//! system runs across channel counts and topologies — conservation,
+//! accounting consistency, the seed-equivalence operating point, and the
+//! multi-channel speedup the fabric exists to deliver.
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind, TopologyKind};
+use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::tensor::{gen, CooTensor, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::rng::Rng;
+
+fn wl(t: &CooTensor, cfg: &SystemConfig) -> mttkrp_memsys::trace::Workload {
+    workload_from_tensor(
+        t,
+        Mode::I,
+        cfg.pe.fabric,
+        cfg.pe.n_pes,
+        cfg.pe.rank,
+        cfg.dram.row_bytes,
+    )
+}
+
+fn with_fabric(base: &SystemConfig, channels: usize, topo: TopologyKind) -> SystemConfig {
+    let mut cfg = base.clone();
+    cfg.interconnect.channels = channels;
+    cfg.interconnect.topology = topo;
+    cfg.label = format!("{}-{}ch-{}", cfg.label, channels, topo.name());
+    cfg
+}
+
+#[test]
+fn every_topology_and_channel_count_serves_every_access() {
+    let mut rng = Rng::new(21);
+    let t = CooTensor::random(&mut rng, [96, 20_000, 30_000], 1500);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
+    for channels in [1usize, 2, 4] {
+        for topo in TopologyKind::ALL {
+            let cfg = with_fabric(&base, channels, topo);
+            let rep = simulate(&cfg, &w);
+            assert_eq!(
+                rep.accesses, expected,
+                "{channels}ch/{topo:?} lost accesses"
+            );
+            assert_eq!(rep.channels.len(), channels);
+        }
+    }
+}
+
+#[test]
+fn baselines_also_run_on_multi_channel_fabrics() {
+    let mut rng = Rng::new(22);
+    let t = CooTensor::random(&mut rng, [64, 10_000, 20_000], 800);
+    let base = with_fabric(&SystemConfig::config_b(), 4, TopologyKind::Crossbar);
+    let w = wl(&t, &base);
+    for kind in SystemKind::ALL {
+        let cfg = base.as_baseline(kind);
+        let rep = simulate(&cfg, &w);
+        assert!(rep.total_cycles > 0, "{kind:?} did not run");
+        assert_eq!(rep.nnz, t.nnz() as u64);
+    }
+}
+
+#[test]
+fn four_channels_strictly_reduce_memory_access_time() {
+    // The acceptance criterion: on the Fig. 4 workload, channels=4 must
+    // strictly beat the seed single channel for the proposed system.
+    let t = gen::synth_01(0.001);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    let one = simulate(&with_fabric(&base, 1, TopologyKind::Crossbar), &w);
+    let four = simulate(&with_fabric(&base, 4, TopologyKind::Crossbar), &w);
+    assert!(
+        four.total_cycles < one.total_cycles,
+        "4 channels ({}) must strictly beat 1 channel ({})",
+        four.total_cycles,
+        one.total_cycles
+    );
+    // And the traffic must actually spread over the channels.
+    let busy: Vec<u64> = four.channels.iter().map(|c| c.reads + c.writes).collect();
+    assert!(busy.iter().all(|&n| n > 0), "idle channel: {busy:?}");
+}
+
+#[test]
+fn aggregate_dram_stats_equal_sum_of_channels() {
+    let t = gen::synth_01(0.001);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    for topo in TopologyKind::ALL {
+        let rep = simulate(&with_fabric(&base, 4, topo), &w);
+        let reads: u64 = rep.channels.iter().map(|c| c.reads).sum();
+        let writes: u64 = rep.channels.iter().map(|c| c.writes).sum();
+        let read_bytes: u64 = rep.channels.iter().map(|c| c.read_bytes).sum();
+        let write_bytes: u64 = rep.channels.iter().map(|c| c.write_bytes).sum();
+        assert_eq!(rep.dram.reads, reads, "{topo:?} reads");
+        assert_eq!(rep.dram.writes, writes, "{topo:?} writes");
+        assert_eq!(rep.dram.read_bytes, read_bytes, "{topo:?} read bytes");
+        assert_eq!(rep.dram.write_bytes, write_bytes, "{topo:?} write bytes");
+        assert_eq!(rep.fabric.forwarded, reads + writes, "{topo:?} forwards");
+    }
+}
+
+#[test]
+fn store_and_forward_topologies_record_hops_and_link_traffic() {
+    let t = gen::synth_01(0.001);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    for topo in [TopologyKind::Line, TopologyKind::Ring] {
+        let rep = simulate(&with_fabric(&base, 4, topo), &w);
+        assert!(rep.fabric.hops > 0, "{topo:?}: no hops on 4 nodes");
+        let link_fwd: u64 = rep.fabric.links.iter().map(|l| l.forwarded).sum();
+        assert_eq!(link_fwd, rep.fabric.hops, "{topo:?} hop accounting");
+        assert!(rep.max_link_utilization() > 0.0);
+        // Ring never needs more hops than line on the same node count.
+        assert!(rep.total_cycles > 0);
+    }
+    // Crossbar takes no hops at all.
+    let xbar = simulate(&with_fabric(&base, 4, TopologyKind::Crossbar), &w);
+    assert_eq!(xbar.fabric.hops, 0);
+}
+
+#[test]
+fn multi_channel_runs_are_deterministic() {
+    let mut rng = Rng::new(23);
+    let t = CooTensor::random(&mut rng, [64, 10_000, 20_000], 900);
+    let cfg = with_fabric(&SystemConfig::config_b(), 4, TopologyKind::Ring);
+    let w = wl(&t, &cfg);
+    let a = simulate(&cfg, &w);
+    let b = simulate(&cfg, &w);
+    assert_eq!(a.total_cycles, b.total_cycles);
+    assert_eq!(a.fabric.hops, b.fabric.hops);
+    assert_eq!(a.dram.reads, b.dram.reads);
+}
+
+#[test]
+fn single_channel_default_config_matches_explicit_single_channel() {
+    // The default (seed) config IS channels=1 crossbar; spelling it out
+    // explicitly must not change a single cycle.
+    let t = gen::synth_01(0.001);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    let implicit = simulate(&base, &w);
+    let explicit = simulate(&with_fabric(&base, 1, TopologyKind::Crossbar), &w);
+    assert_eq!(implicit.total_cycles, explicit.total_cycles);
+    assert_eq!(implicit.dram.reads, explicit.dram.reads);
+    assert_eq!(implicit.dram.row_hits, explicit.dram.row_hits);
+}
+
+#[test]
+fn type1_config_a_also_scales_with_channels() {
+    let t = gen::synth_01(0.001);
+    let base = SystemConfig::config_a();
+    let w = workload_from_tensor(
+        &t,
+        Mode::I,
+        FabricType::Type1,
+        base.pe.n_pes,
+        base.pe.rank,
+        base.dram.row_bytes,
+    );
+    let one = simulate(&with_fabric(&base, 1, TopologyKind::Crossbar), &w);
+    let four = simulate(&with_fabric(&base, 4, TopologyKind::Crossbar), &w);
+    assert!(
+        four.total_cycles <= one.total_cycles,
+        "channels must not hurt config-a: {} vs {}",
+        four.total_cycles,
+        one.total_cycles
+    );
+}
