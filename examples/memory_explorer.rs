@@ -4,14 +4,17 @@
 //! memory-access time together with the resource/frequency models, i.e.
 //! the trade surface an FPGA engineer would explore before synthesis.
 //!
+//! Each sweep is a declarative `experiment::Sweep` over one axis (the
+//! cache-geometry sweep zips lines × associativity), run in parallel
+//! with deterministic row order.
+//!
 //! Run: `cargo run --release --example memory_explorer -- [--quick]
-//!       [--scale 0.005] [--dataset synth01]`
+//!       [--scale 0.005] [--dataset synth01] [--mode i|j|k]`
 
-use mttkrp_memsys::config::{FabricType, SystemConfig};
-use mttkrp_memsys::resource::{max_frequency_mhz, ResourceModel};
-use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::gen;
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::{Scenario, Sweep};
+use mttkrp_memsys::resource::ResourceModel;
+use mttkrp_memsys::tensor::Mode;
 use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::table::{Align, Table};
 
@@ -19,40 +22,34 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(false);
     let quick = args.flag("quick");
     let scale = args.get_f64("scale", if quick { 0.002 } else { 0.005 });
-    let t = match args.get_str("dataset", "synth01").as_str() {
-        "synth02" => gen::synth_02(scale),
-        _ => gen::synth_01(scale),
-    };
-    println!(
-        "exploring on {} scale {scale} (nnz {})\n",
-        t.name,
-        t.nnz()
-    );
+    let mode = Mode::from_name(&args.get_str("mode", "i"))
+        .ok_or_else(|| anyhow::anyhow!("--mode i|j|k"))?;
+    let base_b = SystemConfig::config_b();
+    let scenario = Scenario::dataset(&args.get_str("dataset", "synth01"), scale)
+        .map_err(anyhow::Error::msg)?
+        .mode(mode)
+        .for_config(&base_b);
+    let t = scenario.tensor();
+    println!("exploring on {} scale {scale} (nnz {})\n", t.name, t.nnz());
+    // Warm the workload cache once; sweeps 1 and 2 share it via clones.
+    scenario.workload();
 
     // --- Sweep 1: DMA buffers per LMB (paper: saturates after 4). -----
     println!("DMA buffers per LMB (Config-B, Type-2) — §V-C saturation claim:");
     let mut tab = Table::new(&["dma buffers", "mem cycles", "speedup vs 1", "fmax (MHz)"])
         .aligns(&[Align::Right, Align::Right, Align::Right, Align::Right]);
-    let dma_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 6, 8] };
-    let mut base_cycles = None;
-    for &n in dma_counts {
-        let mut cfg = SystemConfig::config_b();
-        cfg.dma.n_buffers = n;
-        let w = workload_from_tensor(
-            &t,
-            mttkrp_memsys::tensor::Mode::I,
-            FabricType::Type2,
-            cfg.pe.n_pes,
-            cfg.pe.rank,
-            cfg.dram.row_bytes,
-        );
-        let rep = simulate(&cfg, &w);
-        let base = *base_cycles.get_or_insert(rep.total_cycles);
+    let dma_counts: &[&str] = if quick { &["1", "4"] } else { &["1", "2", "4", "6", "8"] };
+    let runs = Sweep::new(base_b.clone(), scenario.clone())
+        .axis("dma.n_buffers", dma_counts)
+        .run()
+        .map_err(anyhow::Error::msg)?;
+    let base_cycles = runs.runs[0].report.total_cycles;
+    for run in &runs.runs {
         tab.row(&[
-            n.to_string(),
-            rep.total_cycles.to_string(),
-            format!("{:.2}x", base as f64 / rep.total_cycles as f64),
-            format!("{:.0}", max_frequency_mhz(&cfg)),
+            run.axis("dma.n_buffers").unwrap().to_string(),
+            run.report.total_cycles.to_string(),
+            format!("{:.2}x", base_cycles as f64 / run.report.total_cycles as f64),
+            format!("{:.0}", run.fmax_mhz),
         ]);
     }
     println!("{}\n", tab.render());
@@ -65,24 +62,17 @@ fn main() -> anyhow::Result<()> {
         Align::Right,
         Align::Right,
     ]);
-    let lmb_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
-    for &n in lmb_counts {
-        let mut cfg = SystemConfig::config_b();
-        cfg.n_lmbs = n;
-        let w = workload_from_tensor(
-            &t,
-            mttkrp_memsys::tensor::Mode::I,
-            FabricType::Type2,
-            cfg.pe.n_pes,
-            cfg.pe.rank,
-            cfg.dram.row_bytes,
-        );
-        let rep = simulate(&cfg, &w);
-        let m = ResourceModel::new(&cfg);
+    let lmb_counts: &[&str] = if quick { &["1", "4"] } else { &["1", "2", "4"] };
+    let runs = Sweep::new(base_b, scenario.clone())
+        .axis("system.n_lmbs", lmb_counts)
+        .run()
+        .map_err(anyhow::Error::msg)?;
+    for run in &runs.runs {
+        let m = ResourceModel::new(&run.cfg);
         let p = m.system().percent(&m.dev);
         tab.row(&[
-            n.to_string(),
-            rep.total_cycles.to_string(),
+            run.axis("system.n_lmbs").unwrap().to_string(),
+            run.report.total_cycles.to_string(),
             format!("{:.2}", p[0]),
             format!("{:.2}", p[3]),
         ]);
@@ -99,30 +89,23 @@ fn main() -> anyhow::Result<()> {
             Align::Right,
             Align::Right,
         ]);
-    let geoms: &[(usize, usize)] = if quick {
-        &[(8192, 2)]
+    let geoms: &[&[&str]] = if quick {
+        &[&["8192", "2"]]
     } else {
-        &[(2048, 1), (4096, 1), (8192, 2), (16384, 2)]
+        &[&["2048", "1"], &["4096", "1"], &["8192", "2"], &["16384", "2"]]
     };
-    for &(lines, assoc) in geoms {
-        let mut cfg = SystemConfig::config_a();
-        cfg.cache.lines = lines;
-        cfg.cache.associativity = assoc;
-        let w = workload_from_tensor(
-            &t,
-            mttkrp_memsys::tensor::Mode::I,
-            FabricType::Type1,
-            cfg.pe.n_pes,
-            cfg.pe.rank,
-            cfg.dram.row_bytes,
-        );
-        let rep = simulate(&cfg, &w);
+    let base_a = SystemConfig::config_a();
+    let runs = Sweep::new(base_a.clone(), scenario.for_config(&base_a))
+        .zip_axis(&["cache.lines", "cache.associativity"], geoms)
+        .run()
+        .map_err(anyhow::Error::msg)?;
+    for run in &runs.runs {
         tab.row(&[
-            lines.to_string(),
-            assoc.to_string(),
-            rep.total_cycles.to_string(),
-            format!("{:.1}", 100.0 * rep.cache_hit_rate()),
-            format!("{:.0}", max_frequency_mhz(&cfg)),
+            run.axis("cache.lines").unwrap().to_string(),
+            run.axis("cache.associativity").unwrap().to_string(),
+            run.report.total_cycles.to_string(),
+            format!("{:.1}", 100.0 * run.report.cache_hit_rate()),
+            format!("{:.0}", run.fmax_mhz),
         ]);
     }
     println!("{}", tab.render());

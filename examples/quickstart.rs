@@ -10,16 +10,17 @@
 
 use mttkrp_memsys::config::{SystemConfig, SystemKind};
 use mttkrp_memsys::coordinator::run_accelerator;
+use mttkrp_memsys::experiment::{run_one, Scenario};
 use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
-use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{gen, DenseMatrix, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::tensor::{DenseMatrix, Mode};
 use mttkrp_memsys::util::rng::Rng;
 use mttkrp_memsys::util::{fmt_bytes, fmt_count};
 
 fn main() -> anyhow::Result<()> {
     // 1. Workload: Synth 01 at 1/200 scale (fast; ratios are scale-free).
-    let t = gen::synth_01(0.005);
+    let cfg = SystemConfig::config_b();
+    let scenario = Scenario::synth01(0.005).for_config(&cfg);
+    let t = scenario.tensor();
     println!(
         "tensor {}: dims {:?}, nnz {}, {}",
         t.name,
@@ -29,17 +30,8 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 2. Memory-system timing: proposed (Config-B) vs the naive baseline.
-    let cfg = SystemConfig::config_b();
-    let w = workload_from_tensor(
-        &t,
-        Mode::I,
-        cfg.pe.fabric,
-        cfg.pe.n_pes,
-        cfg.pe.rank,
-        cfg.dram.row_bytes,
-    );
-    let proposed = simulate(&cfg, &w);
-    let ip_only = simulate(&cfg.as_baseline(SystemKind::IpOnly), &w);
+    let proposed = run_one(&cfg, &scenario);
+    let ip_only = run_one(&cfg.as_baseline(SystemKind::IpOnly), &scenario);
     println!(
         "memory access time: proposed {} cycles, ip-only {} cycles → {:.2}x speedup",
         fmt_count(proposed.total_cycles),

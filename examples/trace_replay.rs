@@ -12,9 +12,9 @@
 use std::collections::HashMap;
 
 use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
-use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{gen, io, Mode};
-use mttkrp_memsys::trace::{workload_from_tensor, AccessClass};
+use mttkrp_memsys::experiment::{run_one, Scenario};
+use mttkrp_memsys::tensor::{io, Mode};
+use mttkrp_memsys::trace::AccessClass;
 use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::table::{Align, Table};
 use mttkrp_memsys::util::{fmt_bytes, fmt_count};
@@ -23,19 +23,19 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse_env(false);
     let fabric = FabricType::from_name(&args.get_str("fabric", "type2"))
         .ok_or_else(|| anyhow::anyhow!("--fabric type1|type2"))?;
-    let t = if let Some(path) = args.get("tns") {
-        let mut t = io::read_tns(std::path::Path::new(path), None)?;
-        t.sort_mode(Mode::I);
-        t
-    } else {
-        gen::synth_01(args.get_f64("scale", 0.002))
-    };
     let cfg = match fabric {
         FabricType::Type1 => SystemConfig::config_a(),
         FabricType::Type2 => SystemConfig::config_b(),
     };
-    let w =
-        workload_from_tensor(&t, Mode::I, fabric, cfg.pe.n_pes, cfg.pe.rank, cfg.dram.row_bytes);
+    let scenario = if let Some(path) = args.get("tns") {
+        let mut t = io::read_tns(std::path::Path::new(path), None)?;
+        t.sort_mode(Mode::I);
+        Scenario::from_tensor(t)
+    } else {
+        Scenario::synth01(args.get_f64("scale", 0.002))
+    }
+    .for_config(&cfg);
+    let w = scenario.workload();
 
     // --- Access mix (the §IV analysis). -------------------------------
     let mut count: HashMap<AccessClass, (u64, u64)> = HashMap::new();
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     }
     println!(
         "trace for {} ({:?}, {} front end(s)):",
-        t.name,
+        w.name,
         fabric,
         w.pe_traces.len()
     );
@@ -98,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         } else {
             cfg.as_baseline(kind)
         };
-        let rep = simulate(&c, &w);
+        let rep = run_one(&c, &scenario);
         println!(
             "  {:<10} {} cycles  ({:.2} B/cycle, DRAM row-hit {:.1}%)",
             kind.name(),

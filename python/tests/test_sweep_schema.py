@@ -1,0 +1,100 @@
+"""Schema check for the Rust sweep runner's JSON-lines output
+(`mttkrp-memsys sweep ... --out runs.jsonl`, or a `RunSet::write_jsonl`
+dump from the figure benches).
+
+Validates the contract machine consumers rely on: one standalone JSON
+record per line carrying `label` / `axes` / `total_cycles` (mirrored
+inside the full `report`), and — whenever a `system` axis is present —
+speedups consistent with the paper's Fig. 4 ordering (the proposed LMB
+system beats every baseline on the same workload).
+
+Runs against the file named by `MEMSYS_SWEEP_JSONL` when set (CI's
+bench-smoke job produces one with a tiny grid) and always against the
+committed sample. Needs no third-party deps beyond pytest.
+"""
+
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+SAMPLE = Path(__file__).parent / "data" / "sweep_sample.jsonl"
+
+REQUIRED_TOP_LEVEL = ("label", "axes", "config", "fmax_mhz", "total_cycles", "report")
+
+
+def _paths():
+    paths = [SAMPLE]
+    env = os.environ.get("MEMSYS_SWEEP_JSONL")
+    if env:
+        paths.append(Path(env))
+    return paths
+
+
+def _load(path):
+    if not path.exists():
+        if path == SAMPLE:
+            pytest.skip(f"committed sample {path} not found")
+        # An operator-requested file (MEMSYS_SWEEP_JSONL) that is missing
+        # is a broken pipeline, not a reason to skip: fail loudly so the
+        # CI schema gate cannot silently go toothless.
+        pytest.fail(f"MEMSYS_SWEEP_JSONL={path} does not exist")
+    records = [json.loads(line) for line in path.read_text().splitlines() if line.strip()]
+    assert records, f"{path} is empty"
+    return records
+
+
+@pytest.mark.parametrize("path", _paths(), ids=lambda p: p.name)
+def test_records_carry_the_documented_schema(path):
+    for rec in _load(path):
+        for key in REQUIRED_TOP_LEVEL:
+            assert key in rec, f"missing {key!r} in {rec.get('label')!r}"
+        assert isinstance(rec["label"], str) and rec["label"]
+        assert isinstance(rec["axes"], dict)
+        for axis, value in rec["axes"].items():
+            assert isinstance(axis, str) and isinstance(value, str), (axis, value)
+        assert rec["total_cycles"] > 0
+        assert rec["fmax_mhz"] > 0
+        report = rec["report"]
+        assert isinstance(report, dict)
+        assert report["total_cycles"] == rec["total_cycles"], "top-level mirror"
+        assert isinstance(report["workload"], str) and report["workload"]
+        assert isinstance(rec["config"], dict) and "kind" in rec["config"]
+
+
+@pytest.mark.parametrize("path", _paths(), ids=lambda p: p.name)
+def test_system_axis_speedups_follow_fig4_ordering(path):
+    records = _load(path)
+    # Group runs that differ only in the `system` axis (one Fig. 4
+    # category per group) and compare their cycle counts.
+    groups = {}
+    for rec in records:
+        axes = rec["axes"]
+        if "system" not in axes:
+            continue
+        key = tuple(sorted((k, v) for k, v in axes.items() if k != "system"))
+        groups.setdefault(key, {})[axes["system"]] = rec["total_cycles"]
+    if not any("proposed" in g and len(g) > 1 for g in groups.values()):
+        pytest.skip("no proposed-vs-baseline pairs in this sweep")
+    for key, by_system in groups.items():
+        proposed = by_system.get("proposed")
+        if proposed is None:
+            continue
+        for baseline, cycles in by_system.items():
+            if baseline == "proposed":
+                continue
+            speedup = cycles / proposed
+            assert speedup > 1.0, (
+                f"category {key}: proposed ({proposed}) must beat "
+                f"{baseline} ({cycles}), got {speedup:.2f}x"
+            )
+
+
+def test_sample_runs_within_paper_band():
+    # The committed sample mirrors the paper's headline factors, so the
+    # parser above is exercised against realistic magnitudes.
+    by_system = {r["axes"]["system"]: r["total_cycles"] for r in _load(SAMPLE)}
+    assert set(by_system) == {"ip-only", "cache-only", "dma-only", "proposed"}
+    headline = by_system["ip-only"] / by_system["proposed"]
+    assert 2.0 < headline < 6.0, f"ip-only/proposed {headline:.2f} out of band"

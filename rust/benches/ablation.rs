@@ -4,57 +4,59 @@
 //!   in an LMB saturates after 4 DMAs" (+ the fmax cost of going past 4);
 //! * §IV-E: cache size influences the maximum operating frequency;
 //! * RRSH vs conventional MSHR: what the Request Reductor buys.
+//!
+//! All three run through the `experiment` API: the DMA sweep and the
+//! MSHR-generosity ladder are `Sweep`s, the cache-size table is a
+//! model-only `Sweep::grid`.
 
-use mttkrp_memsys::config::{FabricType, SystemConfig};
+use mttkrp_memsys::config::{SystemConfig, SystemKind};
+use mttkrp_memsys::experiment::{run_one, Scenario, Sweep};
 use mttkrp_memsys::resource::max_frequency_mhz;
-use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{gen, Mode};
-use mttkrp_memsys::trace::{workload_from_tensor, Workload};
 use mttkrp_memsys::util::bench::section;
 use mttkrp_memsys::util::table::{Align, Table};
-
-fn workload(scale: f64, fabric: FabricType, cfg: &SystemConfig) -> Workload {
-    let t = gen::synth_01(scale);
-    workload_from_tensor(&t, Mode::I, fabric, cfg.pe.n_pes, cfg.pe.rank, cfg.dram.row_bytes)
-}
 
 fn main() {
     let scale: f64 = std::env::var("MEMSYS_BENCH_SCALE")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.002);
+    let base = SystemConfig::config_b();
+    let scenario = Scenario::synth01(scale).for_config(&base);
+    // Build the workload once up front; every sweep/run below shares the
+    // cached Arc through its scenario clone.
+    scenario.workload();
 
     // --- E4: DMA-count sweep. -----------------------------------------
     section("E4 — DMA buffers per LMB (saturation after 4, §V-C)");
     let mut t = Table::new(&["dma buffers", "mem cycles", "gain vs prev", "fmax MHz", "eff. speed"])
         .aligns(&[Align::Right; 5]);
-    let base = SystemConfig::config_b();
-    let w = workload(scale, FabricType::Type2, &base);
+    let runs = Sweep::new(base.clone(), scenario.clone())
+        .axis("dma.n_buffers", &["1", "2", "4", "6", "8"])
+        .run()
+        .expect("dma sweep");
     let mut prev: Option<u64> = None;
     let mut gain_at_4 = 0.0;
     let mut gain_past_4 = 0.0;
-    for n in [1usize, 2, 4, 6, 8] {
-        let mut cfg = base.clone();
-        cfg.dma.n_buffers = n;
-        let rep = simulate(&cfg, &w);
-        let fmax = max_frequency_mhz(&cfg);
-        let gain = prev.map(|p| p as f64 / rep.total_cycles as f64);
-        if n == 4 {
+    for run in &runs.runs {
+        let n = run.axis("dma.n_buffers").unwrap();
+        let cycles = run.report.total_cycles;
+        let gain = prev.map(|p| p as f64 / cycles as f64);
+        if n == "4" {
             gain_at_4 = gain.unwrap_or(1.0);
         }
-        if n == 8 {
+        if n == "8" {
             gain_past_4 = gain.unwrap_or(1.0);
         }
         // "Effective" accounts for the frequency penalty: cycles/fmax.
-        let eff = 300.0 / fmax * rep.total_cycles as f64;
+        let eff = 300.0 / run.fmax_mhz * cycles as f64;
         t.row(&[
             n.to_string(),
-            rep.total_cycles.to_string(),
+            cycles.to_string(),
             gain.map(|g| format!("{g:.3}x")).unwrap_or_else(|| "—".into()),
-            format!("{fmax:.0}"),
+            format!("{:.0}", run.fmax_mhz),
             format!("{eff:.0}"),
         ]);
-        prev = Some(rep.total_cycles);
+        prev = Some(cycles);
     }
     println!("{}", t.render());
     assert!(
@@ -63,15 +65,18 @@ fn main() {
     );
     println!("saturation confirmed: 2→4 gain {gain_at_4:.3}x, 6→8 gain {gain_past_4:.3}x\n");
 
-    // --- E5: cache size vs frequency. -----------------------------------
+    // --- E5: cache size vs frequency (model only, no simulation). -------
     section("E5 — cache size vs max frequency (§IV-E)");
     let mut t =
         Table::new(&["cache lines", "capacity KiB", "fmax MHz"]).aligns(&[Align::Right; 3]);
+    let grid = Sweep::new(SystemConfig::config_a(), scenario.clone())
+        .axis("cache.lines", &["2048", "4096", "8192", "16384", "32768"])
+        .grid()
+        .expect("cache grid");
     let mut last = f64::INFINITY;
-    for lines in [2048usize, 4096, 8192, 16384, 32768] {
-        let mut cfg = SystemConfig::config_a();
-        cfg.cache.lines = lines;
-        let f = max_frequency_mhz(&cfg);
+    for point in &grid {
+        let lines = point.cfg.cache.lines;
+        let f = max_frequency_mhz(&point.cfg);
         t.row(&[
             lines.to_string(),
             (lines * 64 / 1024).to_string(),
@@ -89,21 +94,26 @@ fn main() {
         Align::Right,
         Align::Right,
     ]);
-    let prop = simulate(&base, &w);
+    let prop = run_one(&base, &scenario);
     t.row(&[
         "proposed (RRSH absorbs secondaries)".into(),
         prop.total_cycles.to_string(),
         "1.00x".into(),
     ]);
-    for (entries, cap) in [(8usize, 1usize), (8, 4), (16, 8), (32, 16)] {
-        let mut cfg = base.as_baseline(mttkrp_memsys::config::SystemKind::CacheOnly);
-        cfg.cache.mshr_entries = entries;
-        cfg.cache.mshr_secondary_cap = cap;
-        let rep = simulate(&cfg, &w);
+    let mshr_runs = Sweep::new(base.as_baseline(SystemKind::CacheOnly), scenario)
+        .zip_axis(
+            &["cache.mshr_entries", "cache.mshr_secondary_cap"],
+            &[&["8", "1"], &["8", "4"], &["16", "8"], &["32", "16"]],
+        )
+        .run()
+        .expect("mshr sweep");
+    for run in &mshr_runs.runs {
+        let entries = run.axis("cache.mshr_entries").unwrap();
+        let cap = run.axis("cache.mshr_secondary_cap").unwrap();
         t.row(&[
             format!("cache-only, MSHR {entries} entries / {cap} secondaries"),
-            rep.total_cycles.to_string(),
-            format!("{:.2}x", rep.total_cycles as f64 / prop.total_cycles as f64),
+            run.report.total_cycles.to_string(),
+            format!("{:.2}x", run.report.total_cycles as f64 / prop.total_cycles as f64),
         ]);
     }
     println!("{}", t.render());

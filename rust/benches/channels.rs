@@ -1,6 +1,7 @@
 //! Bench: interconnect-fabric sweep — total memory access time of the
 //! proposed system as the number of independent DRAM channels and the
-//! fabric topology vary, on the paper's Config-B / Synth-01 workload.
+//! fabric topology vary, on the paper's Config-B / Synth-01 workload —
+//! one `experiment::Sweep` over the `channels` × `topology` axes.
 //!
 //! The `channels=1, topology=crossbar` row is the seed single-MIG
 //! configuration (the Fig. 4 / Table II/III operating point); the sweep
@@ -8,12 +9,11 @@
 //! stops being a single command channel. Per-channel bus utilization and
 //! the hottest link show where each topology saturates.
 //!
-//! `MEMSYS_BENCH_SCALE` (default 0.005) sets the dataset scale.
+//! `MEMSYS_BENCH_SCALE` (default 0.005) sets the dataset scale. Set
+//! `MEMSYS_BENCH_JSON=<path>` to also dump the RunSet as JSON-lines.
 
-use mttkrp_memsys::config::{SystemConfig, TopologyKind};
-use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{gen, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::{Scenario, Sweep};
 use mttkrp_memsys::util::bench::section;
 use mttkrp_memsys::util::table::{Align, Table};
 
@@ -27,15 +27,12 @@ fn main() {
     ));
 
     let base = SystemConfig::config_b();
-    let t = gen::synth_01(scale);
-    let w = workload_from_tensor(
-        &t,
-        Mode::I,
-        base.pe.fabric,
-        base.pe.n_pes,
-        base.pe.rank,
-        base.dram.row_bytes,
-    );
+    let scenario = Scenario::synth01(scale).for_config(&base);
+    let runs = Sweep::new(base, scenario)
+        .axis("channels", &["1", "2", "4", "8"])
+        .axis("topology", &["crossbar", "line", "ring"])
+        .run()
+        .expect("channels sweep");
 
     let mut table = Table::new(&[
         "channels",
@@ -56,42 +53,33 @@ fn main() {
         Align::Right,
     ]);
 
-    let mut baseline_cycles = 0u64;
-    let mut four_channel_xbar_cycles = 0u64;
-    for &channels in &[1usize, 2, 4, 8] {
-        for topo in TopologyKind::ALL {
-            let mut cfg = base.clone();
-            cfg.interconnect.channels = channels;
-            cfg.interconnect.topology = topo;
-            cfg.label = format!("config-b-{}ch-{}", channels, topo.name());
-            let rep = simulate(&cfg, &w);
-            if channels == 1 && topo == TopologyKind::Crossbar {
-                baseline_cycles = rep.total_cycles;
-            }
-            if channels == 4 && topo == TopologyKind::Crossbar {
-                four_channel_xbar_cycles = rep.total_cycles;
-            }
-            let max_bus = rep.channel_bus_utilization().into_iter().fold(0.0, f64::max);
-            table.row(&[
-                channels.to_string(),
-                topo.name().to_string(),
-                rep.total_cycles.to_string(),
-                if baseline_cycles > 0 {
-                    format!("{:.2}x", baseline_cycles as f64 / rep.total_cycles as f64)
-                } else {
-                    "-".to_string()
-                },
-                format!("{:.0}%", max_bus * 100.0),
-                format!("{:.0}%", rep.max_link_utilization() * 100.0),
-                rep.fabric.hops.to_string(),
-            ]);
-        }
+    let baseline = runs
+        .get(&[("channels", "1"), ("topology", "crossbar")])
+        .expect("seed operating point in grid");
+    let baseline_cycles = baseline.report.total_cycles;
+    for run in &runs.runs {
+        let rep = &run.report;
+        let max_bus = rep.channel_bus_utilization().into_iter().fold(0.0, f64::max);
+        table.row(&[
+            run.axis("channels").unwrap().to_string(),
+            run.axis("topology").unwrap().to_string(),
+            rep.total_cycles.to_string(),
+            format!("{:.2}x", baseline_cycles as f64 / rep.total_cycles as f64),
+            format!("{:.0}%", max_bus * 100.0),
+            format!("{:.0}%", rep.max_link_utilization() * 100.0),
+            rep.fabric.hops.to_string(),
+        ]);
     }
     println!("{}", table.render());
 
     // The acceptance invariant this bench locks in: adding channels must
     // strictly reduce total memory access time at the seed operating
     // point (the workload is memory-bound by construction).
+    let four_channel_xbar_cycles = runs
+        .get(&[("channels", "4"), ("topology", "crossbar")])
+        .expect("4-channel crossbar in grid")
+        .report
+        .total_cycles;
     assert!(baseline_cycles > 0 && four_channel_xbar_cycles > 0);
     assert!(
         four_channel_xbar_cycles < baseline_cycles,
@@ -102,4 +90,8 @@ fn main() {
         "\n4-channel crossbar speedup over the seed single channel: {:.2}x",
         baseline_cycles as f64 / four_channel_xbar_cycles as f64
     );
+    if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
+        runs.write_jsonl(std::path::Path::new(&path)).expect("write jsonl");
+        println!("wrote {} JSON-lines to {path}", runs.len());
+    }
 }

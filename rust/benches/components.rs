@@ -3,15 +3,14 @@
 //! XOR hash) plus whole-simulation requests/second. These are the §Perf
 //! numbers for the L3 layer (EXPERIMENTS.md §Perf).
 
-use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::config::{SystemConfig, SystemKind};
+use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::sim::cache::Cache;
 use mttkrp_memsys::sim::dram::{Dram, IdGen};
 use mttkrp_memsys::sim::rrsh::Rrsh;
 use mttkrp_memsys::sim::temp_buffer::TempBuffer;
 use mttkrp_memsys::sim::xor_hash::XorHashTable;
 use mttkrp_memsys::sim::{simulate, MemReq};
-use mttkrp_memsys::tensor::{gen, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
 use mttkrp_memsys::util::bench::{black_box, section, Bench};
 use mttkrp_memsys::util::rng::Rng;
 
@@ -111,20 +110,13 @@ fn main() {
     }
 
     section("end-to-end simulation speed (simulated PE accesses per host second)");
-    let t = gen::synth_01(0.002);
+    let scenario = Scenario::synth01(0.002).for_config(&SystemConfig::config_b());
+    let w = scenario.workload();
     for (kind, label) in [
         (SystemKind::Proposed, "proposed/config-b"),
         (SystemKind::IpOnly, "ip-only"),
     ] {
         let cfg = SystemConfig::config_b().as_baseline(kind);
-        let w = workload_from_tensor(
-            &t,
-            Mode::I,
-            FabricType::Type2,
-            cfg.pe.n_pes,
-            cfg.pe.rank,
-            cfg.dram.row_bytes,
-        );
         let accesses = w.n_accesses() as u64;
         b.run(&format!("simulate {label}"), accesses, || {
             black_box(simulate(&cfg, &w));

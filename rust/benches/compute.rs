@@ -2,23 +2,23 @@
 //! executor (L1/L2 through the runtime), in nonzeros/second. This is the
 //! §Perf evidence that the PJRT batch path amortizes its call overhead.
 
+use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::mttkrp::fiber::{mttkrp_fiber_eq3, mttkrp_fiber_eq4};
 use mttkrp_memsys::mttkrp::{mttkrp_parallel, mttkrp_seq};
 use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest, MttkrpExecutor};
-use mttkrp_memsys::tensor::{CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::tensor::{DenseMatrix, Mode};
 use mttkrp_memsys::util::bench::{black_box, section, Bench};
 use mttkrp_memsys::util::rng::Rng;
 
 fn main() {
-    let mut rng = Rng::new(77);
     // Rank must match the AOT artifact (default 32).
     let rank = find_artifacts_dir()
         .and_then(|d| Manifest::load(&d).ok())
         .map(|m| m.partials.rank)
         .unwrap_or(32);
     let dims = [512u64, 4096, 4096];
-    let nnz = 200_000;
-    let t = CooTensor::random(&mut rng, dims, nnz);
+    let t = Scenario::random(dims, 200_000, 77).tensor();
+    let mut rng = Rng::new(78);
     let d = DenseMatrix::random(&mut rng, dims[1] as usize, rank);
     let c = DenseMatrix::random(&mut rng, dims[2] as usize, rank);
     let n = t.nnz() as u64;

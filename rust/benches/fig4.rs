@@ -1,15 +1,15 @@
 //! Bench: regenerate paper **Figure 4** — memory-access-time speedup of
 //! {cache-only, DMA-only, proposed} over the commercial-memory-controller
 //! (IP-only) baseline, for all four categories
-//! (Config-A/Type-1 and Config-B/Type-2 × Synth-01/Synth-02).
+//! (Config-A/Type-1 and Config-B/Type-2 × Synth-01/Synth-02) — as one
+//! parallel `experiment::Sweep`.
 //!
 //! `MEMSYS_BENCH_SCALE` (default 0.005) sets the dataset scale; the
-//! speedups are scale-free (EXPERIMENTS.md §Sensitivity).
+//! speedups are scale-free (EXPERIMENTS.md §Sensitivity). Set
+//! `MEMSYS_BENCH_JSON=<path>` to also dump the RunSet as JSON-lines.
 
-use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
-use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{gen, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::{Scenario, Sweep};
 use mttkrp_memsys::util::bench::section;
 use mttkrp_memsys::util::table::{Align, Table};
 
@@ -19,6 +19,13 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.005);
     section(&format!("Figure 4 — speedup over IP-only (scale {scale})"));
+
+    let runs = Sweep::new(SystemConfig::config_a(), Scenario::synth01(scale))
+        .zip_axis(&["preset", "fabric"], &[&["a", "type1"], &["b", "type2"]])
+        .axis("dataset", &["synth01", "synth02"])
+        .axis("system", &["ip-only", "cache-only", "dma-only", "proposed"])
+        .run()
+        .expect("fig4 sweep");
 
     let mut table = Table::new(&[
         "category",
@@ -37,41 +44,29 @@ fn main() {
         Align::Right,
     ]);
 
-    for (cfg_base, fabric, label) in [
-        (SystemConfig::config_a(), FabricType::Type1, "A_1"),
-        (SystemConfig::config_b(), FabricType::Type2, "B_2"),
-    ] {
-        for (tensor, tname) in [(gen::synth_01(scale), "S1"), (gen::synth_02(scale), "S2")] {
-            let w = workload_from_tensor(
-                &tensor,
-                Mode::I,
-                fabric,
-                cfg_base.pe.n_pes,
-                cfg_base.pe.rank,
-                cfg_base.dram.row_bytes,
-            );
-            let run = |kind: SystemKind| {
-                let mut c = cfg_base.as_baseline(kind);
-                c.pe.fabric = fabric;
-                simulate(&c, &w)
+    for (preset, label) in [("a", "A_1"), ("b", "B_2")] {
+        for (ds, tname) in [("synth01", "S1"), ("synth02", "S2")] {
+            let cell = |system: &str| {
+                runs.get(&[("preset", preset), ("dataset", ds), ("system", system)])
+                    .expect("sweep covers the fig4 grid")
             };
-            let ip = run(SystemKind::IpOnly);
-            let cache = run(SystemKind::CacheOnly);
-            let dma = run(SystemKind::DmaOnly);
-            let prop = run(SystemKind::Proposed);
+            let ip = cell("ip-only");
+            let cache = cell("cache-only");
+            let dma = cell("dma-only");
+            let prop = cell("proposed");
             table.row(&[
                 format!("{label}_{tname}"),
-                ip.total_cycles.to_string(),
-                format!("{:.2}x", cache.speedup_over(&ip)),
-                format!("{:.2}x", dma.speedup_over(&ip)),
-                format!("{:.2}x", prop.speedup_over(&ip)),
+                ip.report.total_cycles.to_string(),
+                format!("{:.2}x", cache.report.speedup_over(&ip.report)),
+                format!("{:.2}x", dma.report.speedup_over(&ip.report)),
+                format!("{:.2}x", prop.report.speedup_over(&ip.report)),
                 "~3.5x".to_string(),
             ]);
             // The ordering the paper claims must hold in every category.
             assert!(
-                prop.total_cycles < cache.total_cycles
-                    && prop.total_cycles < dma.total_cycles
-                    && prop.total_cycles < ip.total_cycles,
+                prop.report.total_cycles < cache.report.total_cycles
+                    && prop.report.total_cycles < dma.report.total_cycles
+                    && prop.report.total_cycles < ip.report.total_cycles,
                 "{label}_{tname}: proposed must win its category"
             );
         }
@@ -81,4 +76,8 @@ fn main() {
         "\npaper Fig. 4 summary: proposed ≈3.5× vs IP-only, ≈2× vs cache-only, \
          ≈1.26× vs DMA-only\n(see EXPERIMENTS.md E1 for the paper-vs-measured discussion)"
     );
+    if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
+        runs.write_jsonl(std::path::Path::new(&path)).expect("write jsonl");
+        println!("wrote {} JSON-lines to {path}", runs.len());
+    }
 }

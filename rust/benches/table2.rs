@@ -3,7 +3,7 @@
 //! the calibrated analytic resource model, side by side with the paper's
 //! published percentages.
 
-use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::preset;
 use mttkrp_memsys::resource::{table2, ResourceModel};
 use mttkrp_memsys::util::bench::section;
 use mttkrp_memsys::util::table::{Align, Table};
@@ -24,8 +24,8 @@ const PAPER: &[(&str, &str, [f64; 4])] = &[
 
 fn main() {
     section("Table II — resource utilization model vs paper");
-    let a = SystemConfig::config_a();
-    let b = SystemConfig::config_b();
+    let a = preset("a").expect("paper preset a");
+    let b = preset("b").expect("paper preset b");
     println!("{}\n", table2(&[&a, &b]));
 
     section("model vs paper, per cell");

@@ -1,0 +1,79 @@
+//! First-class experiment API — the one way drivers (CLI subcommands,
+//! benches, examples, integration tests) compose the simulator.
+//!
+//! Three layers, mirroring how the paper's design is "configured during
+//! the synthesis step" and evaluated as a grid of variants (Fig. 4):
+//!
+//! * [`Scenario`] — *what* is simulated: dataset (name/scale/seed),
+//!   MTTKRP mode, fabric type, PE geometry → a cached [`crate::trace::Workload`].
+//! * [`Sweep`] — *which variants*: a declarative cartesian grid over
+//!   named config axes (`system`, `preset`, `channels`, `topology`, any
+//!   `apply_override` key) and scenario axes (`dataset`, `scale`,
+//!   `mode`, `fabric`), executed by a multi-threaded runner with
+//!   deterministic (grid-order) results.
+//! * [`RunSet`] — *the results*: baseline/speedup lookups, ASCII table
+//!   rendering, and JSON-lines serialization for machine consumers.
+//!
+//! ```no_run
+//! use mttkrp_memsys::config::SystemConfig;
+//! use mttkrp_memsys::experiment::{Scenario, Sweep};
+//!
+//! let base = SystemConfig::config_b();
+//! let scenario = Scenario::synth01(0.002).for_config(&base);
+//! let runs = Sweep::new(base, scenario)
+//!     .axis("system", &["ip-only", "proposed"])
+//!     .axis("channels", &["1", "4"])
+//!     .threads(4)
+//!     .run()
+//!     .unwrap();
+//! println!("{}", runs.to_table(Some(("system", "ip-only"))).render());
+//! ```
+
+mod runset;
+mod scenario;
+mod sweep;
+
+pub use runset::{Run, RunSet};
+pub use scenario::{Scenario, TensorSource, DATASETS};
+pub use sweep::{default_threads, Point, Sweep};
+
+use crate::config::SystemConfig;
+use crate::sim::SimReport;
+
+/// Resolve a paper preset by name (`a`/`config-a`, `b`/`config-b`).
+pub fn preset(name: &str) -> Result<SystemConfig, String> {
+    match name {
+        "a" | "config-a" => Ok(SystemConfig::config_a()),
+        "b" | "config-b" => Ok(SystemConfig::config_b()),
+        other => Err(format!("unknown preset {other:?} (expected a|b)")),
+    }
+}
+
+/// Simulate a single (config, scenario) pair — the degenerate sweep.
+pub fn run_one(cfg: &SystemConfig, scenario: &Scenario) -> SimReport {
+    crate::sim::simulate(cfg, &scenario.workload())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemKind;
+
+    #[test]
+    fn preset_resolution() {
+        assert_eq!(preset("a").unwrap().label, "config-a");
+        assert_eq!(preset("config-b").unwrap().label, "config-b");
+        assert!(preset("c").is_err());
+    }
+
+    #[test]
+    fn run_one_equals_an_axis_less_sweep() {
+        let cfg = SystemConfig::config_b().as_baseline(SystemKind::DmaOnly);
+        let scenario = Scenario::random([40, 3_000, 5_000], 300, 3).for_config(&cfg);
+        let single = run_one(&cfg, &scenario);
+        let sweep = Sweep::new(cfg, scenario).threads(1).run().unwrap();
+        assert_eq!(sweep.len(), 1);
+        assert_eq!(sweep.runs[0].report.total_cycles, single.total_cycles);
+        assert_eq!(sweep.runs[0].report.accesses, single.accesses);
+    }
+}

@@ -1,0 +1,237 @@
+//! RunSet: the result of a [`super::Sweep`] — one [`Run`] per grid
+//! point, in grid order — with baseline/speedup lookups, an ASCII table
+//! view, and JSON-lines serialization (one `SimReport` + its axes per
+//! line) so experiments produce machine-readable output.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+use crate::config::SystemConfig;
+use crate::sim::SimReport;
+use crate::util::json::Json;
+use crate::util::table::{Align, Table};
+
+/// One executed grid point.
+#[derive(Debug, Clone)]
+pub struct Run {
+    /// `(axis key, value)` pairs in axis-declaration order.
+    pub axes: Vec<(String, String)>,
+    /// The fully-resolved config this run simulated.
+    pub cfg: SystemConfig,
+    /// Modelled maximum operating frequency of `cfg` (§IV-E).
+    pub fmax_mhz: f64,
+    pub report: SimReport,
+}
+
+impl Run {
+    /// Value this run took on `axis`, if the sweep had that axis.
+    pub fn axis(&self, name: &str) -> Option<&str> {
+        self.axes.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// `key=value key=value` label (falls back to the config label for
+    /// an axis-less single run).
+    pub fn label(&self) -> String {
+        if self.axes.is_empty() {
+            return self.cfg.label.clone();
+        }
+        let mut out = String::new();
+        for (i, (k, v)) in self.axes.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+        }
+        out
+    }
+
+    /// True when this run matches every `(axis, value)` selector.
+    pub fn matches(&self, sel: &[(&str, &str)]) -> bool {
+        sel.iter().all(|(k, v)| self.axis(k) == Some(*v))
+    }
+
+    /// One JSON-lines record: label + axes + resolved config + report
+    /// (`total_cycles` is mirrored at top level for cheap consumers).
+    pub fn to_json(&self) -> Json {
+        let axes: BTreeMap<String, Json> = self
+            .axes
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+            .collect();
+        Json::obj(vec![
+            ("label", Json::str(self.label())),
+            ("axes", Json::Obj(axes)),
+            ("config", self.cfg.to_json()),
+            ("fmax_mhz", Json::num(self.fmax_mhz)),
+            ("total_cycles", Json::num(self.report.total_cycles as f64)),
+            ("report", self.report.to_json()),
+        ])
+    }
+}
+
+/// All runs of one sweep, in deterministic grid order.
+#[derive(Debug, Clone)]
+pub struct RunSet {
+    /// Flattened axis keys in declaration order.
+    pub axis_names: Vec<String>,
+    pub runs: Vec<Run>,
+}
+
+impl RunSet {
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// First run matching every `(axis, value)` selector.
+    pub fn get(&self, sel: &[(&str, &str)]) -> Option<&Run> {
+        self.runs.iter().find(|r| r.matches(sel))
+    }
+
+    /// The run that differs from `run` only in `axis`, where it takes
+    /// `value` — the Fig. 4-style within-category baseline.
+    pub fn baseline_for(&self, run: &Run, axis: &str, value: &str) -> Option<&Run> {
+        self.runs.iter().find(|b| {
+            b.axis(axis) == Some(value)
+                && run
+                    .axes
+                    .iter()
+                    .all(|(k, v)| k == axis || b.axis(k) == Some(v.as_str()))
+        })
+    }
+
+    /// Speedup of `run` over its within-category baseline
+    /// (`baseline_cycles / run_cycles`; 1.0 for the baseline itself).
+    /// Computed as a plain cycle ratio — baselining a scenario axis
+    /// (e.g. `dataset`) compares across workloads by explicit request,
+    /// so the within-workload assert of `SimReport::speedup_over` does
+    /// not apply here.
+    pub fn speedup_over_baseline(&self, run: &Run, axis: &str, value: &str) -> Option<f64> {
+        let baseline = self.baseline_for(run, axis, value)?;
+        if run.report.total_cycles == 0 {
+            return None;
+        }
+        Some(baseline.report.total_cycles as f64 / run.report.total_cycles as f64)
+    }
+
+    /// ASCII table: one row per run (axes, cycles, optional speedup over
+    /// the `(axis, value)` baseline, modelled fmax).
+    pub fn to_table(&self, baseline: Option<(&str, &str)>) -> Table {
+        let mut headers: Vec<&str> = self.axis_names.iter().map(String::as_str).collect();
+        headers.push("cycles");
+        if baseline.is_some() {
+            headers.push("speedup");
+        }
+        headers.push("fmax (MHz)");
+        let mut aligns = vec![Align::Left; self.axis_names.len()];
+        aligns.resize(headers.len(), Align::Right);
+        let mut table = Table::new(&headers).aligns(&aligns);
+        for run in &self.runs {
+            let mut row: Vec<String> = self
+                .axis_names
+                .iter()
+                .map(|n| run.axis(n).unwrap_or("-").to_string())
+                .collect();
+            row.push(run.report.total_cycles.to_string());
+            if let Some((axis, value)) = baseline {
+                row.push(match self.speedup_over_baseline(run, axis, value) {
+                    Some(s) => format!("{s:.2}x"),
+                    None => "-".to_string(),
+                });
+            }
+            row.push(format!("{:.0}", run.fmax_mhz));
+            table.row(&row);
+        }
+        table
+    }
+
+    /// JSON-lines: one compact record per run, grid order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for run in &self.runs {
+            out.push_str(&run.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write [`RunSet::to_jsonl`] to `path`.
+    pub fn write_jsonl(&self, path: &Path) -> io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::{Scenario, Sweep};
+
+    fn tiny_runset() -> RunSet {
+        Sweep::new(SystemConfig::config_b(), Scenario::random([48, 4_000, 6_000], 350, 5))
+            .axis("system", &["ip-only", "proposed"])
+            .axis("dma.n_buffers", &["1", "4"])
+            .threads(2)
+            .run()
+            .unwrap()
+    }
+
+    #[test]
+    fn get_baseline_and_speedup() {
+        let rs = tiny_runset();
+        assert_eq!(rs.len(), 4);
+        let prop = rs.get(&[("system", "proposed"), ("dma.n_buffers", "4")]).unwrap();
+        let base = rs.baseline_for(prop, "system", "ip-only").unwrap();
+        assert_eq!(base.axis("system"), Some("ip-only"));
+        assert_eq!(base.axis("dma.n_buffers"), Some("4"), "other axes must match");
+        let s = rs.speedup_over_baseline(prop, "system", "ip-only").unwrap();
+        let expect = base.report.total_cycles as f64 / prop.report.total_cycles as f64;
+        assert!((s - expect).abs() < 1e-12, "speedup must pair the right baseline");
+        let own = rs.speedup_over_baseline(base, "system", "ip-only").unwrap();
+        assert!((own - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_has_axes_cycles_and_speedup_columns() {
+        let rs = tiny_runset();
+        let rendered = rs.to_table(Some(("system", "ip-only"))).render();
+        assert!(rendered.contains("system"));
+        assert!(rendered.contains("dma.n_buffers"));
+        assert!(rendered.contains("cycles"));
+        assert!(rendered.contains("speedup"));
+        assert!(rendered.contains("1.00x"));
+    }
+
+    #[test]
+    fn jsonl_round_trips_with_schema_fields() {
+        let rs = tiny_runset();
+        let jsonl = rs.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), rs.len());
+        for (line, run) in lines.iter().zip(&rs.runs) {
+            let rec = Json::parse(line).unwrap();
+            assert_eq!(rec.get("label").unwrap().as_str(), Some(run.label().as_str()));
+            let axes = rec.get("axes").unwrap();
+            assert_eq!(
+                axes.get("system").unwrap().as_str(),
+                Some(run.axis("system").unwrap())
+            );
+            assert_eq!(
+                rec.get("total_cycles").unwrap().as_usize(),
+                Some(run.report.total_cycles as usize)
+            );
+            let report = rec.get("report").unwrap();
+            assert_eq!(
+                report.get("total_cycles").unwrap().as_usize(),
+                Some(run.report.total_cycles as usize)
+            );
+            assert!(rec.get("config").unwrap().get("kind").is_some());
+            assert!(rec.get("fmax_mhz").unwrap().as_f64().is_some());
+        }
+    }
+}

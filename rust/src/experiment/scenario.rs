@@ -1,0 +1,380 @@
+//! Scenario: a declarative description of *what* is simulated — dataset
+//! (name / scale / seed), MTTKRP mode, compute-fabric type, and PE-front-
+//! end geometry — which lazily produces a cached [`Workload`].
+//!
+//! The builder replaces the hand-rolled six-positional-argument
+//! `workload_from_tensor` call every driver used to repeat; geometry
+//! (PE count, rank, DRAM row alignment) is normally copied from a
+//! [`SystemConfig`] via [`Scenario::for_config`] so the workload always
+//! matches the system it is replayed on.
+
+use std::sync::{Arc, OnceLock};
+
+use crate::config::{FabricType, SystemConfig};
+use crate::tensor::gen::{self, GenParams};
+use crate::tensor::{CooTensor, Mode};
+use crate::trace::{workload_from_tensor, Workload};
+use crate::util::rng::Rng;
+
+/// Where the scenario's tensor comes from.
+#[derive(Debug, Clone)]
+pub enum TensorSource {
+    /// A named Table III dataset (`synth01` / `synth02`), generated at
+    /// the scenario's scale.
+    Synth { name: String },
+    /// Uniform-random COO (tests and microbenches).
+    Random { dims: [u64; 3], nnz: usize, seed: u64 },
+    /// A pre-built tensor (e.g. loaded from a `.tns` file).
+    Owned(Arc<CooTensor>),
+}
+
+/// Datasets [`Scenario::dataset`] resolves by name.
+pub const DATASETS: [&str; 2] = ["synth01", "synth02"];
+
+/// Single source of truth for the valid dataset-scale range.
+pub(crate) fn check_scale(scale: f64) -> Result<(), String> {
+    if scale <= 0.0 || scale > 1.0 {
+        return Err(format!("dataset scale {scale} must be in (0, 1]"));
+    }
+    Ok(())
+}
+
+/// Builder for one simulation scenario; produces a cached [`Workload`].
+///
+/// Cloning is cheap and carries the caches: a clone whose knobs are not
+/// changed shares the already-built tensor/workload `Arc`s.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub(crate) source: TensorSource,
+    /// Dataset scale in (0, 1] (`Synth` sources only).
+    pub(crate) scale: f64,
+    /// Generator seed override (`Synth` sources only).
+    pub(crate) seed: Option<u64>,
+    pub(crate) mode: Mode,
+    pub(crate) fabric: FabricType,
+    pub(crate) n_pes: usize,
+    pub(crate) rank: usize,
+    pub(crate) row_align: u64,
+    tensor_cache: OnceLock<Arc<CooTensor>>,
+    workload_cache: OnceLock<Arc<Workload>>,
+}
+
+impl Scenario {
+    fn from_source(source: TensorSource) -> Scenario {
+        Scenario {
+            source,
+            scale: 1.0,
+            seed: None,
+            mode: Mode::I,
+            fabric: FabricType::Type2,
+            n_pes: 4,
+            rank: 32,
+            row_align: 8192,
+            tensor_cache: OnceLock::new(),
+            workload_cache: OnceLock::new(),
+        }
+    }
+
+    /// A named dataset (see [`DATASETS`]) at `scale`.
+    pub fn dataset(name: &str, scale: f64) -> Result<Scenario, String> {
+        if !DATASETS.contains(&name) {
+            return Err(format!("unknown dataset {name:?} (expected {DATASETS:?})"));
+        }
+        check_scale(scale)?;
+        let mut s = Scenario::from_source(TensorSource::Synth { name: name.to_string() });
+        s.set_scale(scale);
+        Ok(s)
+    }
+
+    /// Paper Synth-01 at `scale`.
+    pub fn synth01(scale: f64) -> Scenario {
+        Scenario::dataset("synth01", scale).unwrap()
+    }
+
+    /// Paper Synth-02 at `scale`.
+    pub fn synth02(scale: f64) -> Scenario {
+        Scenario::dataset("synth02", scale).unwrap()
+    }
+
+    /// A uniform-random tensor (tests / microbenches).
+    pub fn random(dims: [u64; 3], nnz: usize, seed: u64) -> Scenario {
+        Scenario::from_source(TensorSource::Random { dims, nnz, seed })
+    }
+
+    /// Wrap an existing tensor (e.g. read from a `.tns` file).
+    pub fn from_tensor(t: CooTensor) -> Scenario {
+        Scenario::from_source(TensorSource::Owned(Arc::new(t)))
+    }
+
+    // --- builder knobs (each invalidates the affected caches) ---------
+
+    /// MTTKRP mode (which factor matrix is produced). Default `i`.
+    pub fn mode(mut self, mode: Mode) -> Scenario {
+        self.set_mode(mode);
+        self
+    }
+
+    /// Compute-fabric type; decides the trace shape. Default `type2`.
+    pub fn fabric(mut self, fabric: FabricType) -> Scenario {
+        self.set_fabric(fabric);
+        self
+    }
+
+    /// Number of PE front ends. Default 4.
+    pub fn n_pes(mut self, n: usize) -> Scenario {
+        if self.n_pes != n {
+            self.n_pes = n;
+            self.invalidate_workload();
+        }
+        self
+    }
+
+    /// Rank R (elements per factor fiber). Default 32.
+    pub fn rank(mut self, rank: usize) -> Scenario {
+        if self.rank != rank {
+            self.rank = rank;
+            self.invalidate_workload();
+        }
+        self
+    }
+
+    /// DRAM-row alignment of the address-map regions. Default 8192.
+    pub fn row_align(mut self, bytes: u64) -> Scenario {
+        if self.row_align != bytes {
+            self.row_align = bytes;
+            self.invalidate_workload();
+        }
+        self
+    }
+
+    /// Dataset scale in (0, 1] (`Synth` sources only).
+    pub fn scale(mut self, scale: f64) -> Scenario {
+        check_scale(scale).unwrap();
+        self.set_scale(scale);
+        self
+    }
+
+    /// Generator seed override (`Synth` sources only).
+    pub fn seed(mut self, seed: u64) -> Scenario {
+        if self.seed != Some(seed) {
+            self.seed = Some(seed);
+            self.invalidate_tensor();
+        }
+        self
+    }
+
+    /// Copy fabric type and front-end geometry from a system config so
+    /// the workload matches the system it will be replayed on.
+    pub fn for_config(mut self, cfg: &SystemConfig) -> Scenario {
+        self.set_fabric(cfg.pe.fabric);
+        self.sync_geometry(cfg);
+        self
+    }
+
+    // --- in-place mutators (sweep axis application) --------------------
+
+    pub(crate) fn set_dataset(&mut self, name: &str) -> Result<(), String> {
+        if !DATASETS.contains(&name) {
+            return Err(format!("unknown dataset {name:?} (expected {DATASETS:?})"));
+        }
+        if !matches!(&self.source, TensorSource::Synth { name: n } if n == name) {
+            self.source = TensorSource::Synth { name: name.to_string() };
+            self.invalidate_tensor();
+        }
+        Ok(())
+    }
+
+    pub(crate) fn set_scale(&mut self, scale: f64) {
+        if self.scale != scale {
+            self.scale = scale;
+            self.invalidate_tensor();
+        }
+    }
+
+    pub(crate) fn set_mode(&mut self, mode: Mode) {
+        if self.mode != mode {
+            self.mode = mode;
+            self.invalidate_workload();
+        }
+    }
+
+    pub(crate) fn set_fabric(&mut self, fabric: FabricType) {
+        if self.fabric != fabric {
+            self.fabric = fabric;
+            self.invalidate_workload();
+        }
+    }
+
+    /// Align PE count, rank and row alignment with `cfg` (the tensor and
+    /// its cache survive; the workload is rebuilt only on change).
+    pub(crate) fn sync_geometry(&mut self, cfg: &SystemConfig) {
+        if self.n_pes != cfg.pe.n_pes
+            || self.rank != cfg.pe.rank
+            || self.row_align != cfg.dram.row_bytes
+        {
+            self.n_pes = cfg.pe.n_pes;
+            self.rank = cfg.pe.rank;
+            self.row_align = cfg.dram.row_bytes;
+            self.invalidate_workload();
+        }
+    }
+
+    fn invalidate_workload(&mut self) {
+        self.workload_cache = OnceLock::new();
+    }
+
+    fn invalidate_tensor(&mut self) {
+        self.tensor_cache = OnceLock::new();
+        self.invalidate_workload();
+    }
+
+    // --- products ------------------------------------------------------
+
+    /// Dataset name ("synth01", "random", or the owned tensor's name).
+    pub fn dataset_name(&self) -> String {
+        match &self.source {
+            TensorSource::Synth { name } => name.clone(),
+            TensorSource::Random { .. } => "random".to_string(),
+            TensorSource::Owned(t) => t.name.clone(),
+        }
+    }
+
+    /// Deduplication key: everything that shapes the workload. Two
+    /// scenarios with equal keys produce identical workloads (except for
+    /// distinct [`TensorSource::Owned`] tensors that share name, dims and
+    /// nnz — sweeps never vary owned tensors, so this cannot happen
+    /// within one sweep).
+    pub fn key(&self) -> String {
+        let src = match &self.source {
+            TensorSource::Synth { name } => {
+                format!("{name}@{}+{:?}", self.scale, self.seed)
+            }
+            TensorSource::Random { dims, nnz, seed } => {
+                format!("random-{}x{}x{}-n{nnz}-s{seed}", dims[0], dims[1], dims[2])
+            }
+            TensorSource::Owned(t) => {
+                format!("owned-{}-{:?}-n{}", t.name, t.dims, t.nnz())
+            }
+        };
+        format!(
+            "{src}|mode-{}|{}|pes{}|r{}|row{}",
+            self.mode.name(),
+            self.fabric.name(),
+            self.n_pes,
+            self.rank,
+            self.row_align
+        )
+    }
+
+    /// The scenario's tensor (built once, then cached).
+    pub fn tensor(&self) -> Arc<CooTensor> {
+        if let TensorSource::Owned(t) = &self.source {
+            return t.clone();
+        }
+        self.tensor_cache.get_or_init(|| Arc::new(self.generate_tensor())).clone()
+    }
+
+    fn generate_tensor(&self) -> CooTensor {
+        match &self.source {
+            TensorSource::Synth { name } => {
+                // Same spec + params as `gen::synth_01` / `gen::synth_02`.
+                let (spec, mut params) = match name.as_str() {
+                    "synth02" => (
+                        gen::SYNTH_02,
+                        GenParams { skew: 0.8, cluster_frac: 0.2, ..GenParams::default() },
+                    ),
+                    _ => (gen::SYNTH_01, GenParams::default()),
+                };
+                if let Some(seed) = self.seed {
+                    params.seed = seed;
+                }
+                gen::generate(&spec.scaled(self.scale), &params)
+            }
+            TensorSource::Random { dims, nnz, seed } => {
+                let mut rng = Rng::new(*seed);
+                CooTensor::random(&mut rng, *dims, *nnz)
+            }
+            TensorSource::Owned(_) => unreachable!("owned tensors are returned directly"),
+        }
+    }
+
+    /// The per-PE request streams for this scenario (built once, then
+    /// cached; clones share the cache until a knob changes).
+    pub fn workload(&self) -> Arc<Workload> {
+        self.workload_cache
+            .get_or_init(|| {
+                let t = self.tensor();
+                Arc::new(workload_from_tensor(
+                    &t,
+                    self.mode,
+                    self.fabric,
+                    self.n_pes,
+                    self.rank,
+                    self.row_align,
+                ))
+            })
+            .clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_cached_and_clones_share_it() {
+        let s = Scenario::random([32, 500, 800], 300, 7);
+        let a = s.workload();
+        let b = s.workload();
+        assert!(Arc::ptr_eq(&a, &b), "second build must hit the cache");
+        let c = s.clone().workload();
+        assert!(Arc::ptr_eq(&a, &c), "clones share the cached workload");
+    }
+
+    #[test]
+    fn knob_changes_invalidate_the_right_caches() {
+        let s = Scenario::random([32, 500, 800], 300, 7);
+        let t = s.tensor();
+        let w = s.workload();
+        // Mode change rebuilds the workload but keeps the tensor.
+        let s2 = s.clone().mode(Mode::J);
+        assert!(Arc::ptr_eq(&t, &s2.tensor()));
+        assert!(!Arc::ptr_eq(&w, &s2.workload()));
+        // No-op setter keeps both caches.
+        let s3 = s.clone().mode(Mode::I).n_pes(4);
+        assert!(Arc::ptr_eq(&w, &s3.workload()));
+    }
+
+    #[test]
+    fn synth_scenarios_match_the_gen_shortcuts() {
+        let t = Scenario::synth01(0.0005).tensor();
+        assert_eq!(*t, gen::synth_01(0.0005));
+        let t2 = Scenario::synth02(0.0002).tensor();
+        assert_eq!(*t2, gen::synth_02(0.0002));
+        assert!(Scenario::dataset("synth03", 0.1).is_err());
+    }
+
+    #[test]
+    fn for_config_copies_fabric_and_geometry() {
+        let cfg = SystemConfig::config_a();
+        let s = Scenario::synth01(0.001).for_config(&cfg);
+        assert_eq!(s.fabric, FabricType::Type1);
+        assert_eq!(s.n_pes, cfg.pe.n_pes);
+        assert_eq!(s.rank, cfg.pe.rank);
+        assert_eq!(s.row_align, cfg.dram.row_bytes);
+        let w = s.workload();
+        assert_eq!(w.fabric, FabricType::Type1);
+        assert_eq!(w.pe_traces.len(), 1, "Type-1 has one shared front end");
+    }
+
+    #[test]
+    fn keys_distinguish_workload_shaping_knobs() {
+        let s = Scenario::synth01(0.001);
+        assert_ne!(s.key(), s.clone().mode(Mode::J).key());
+        assert_ne!(s.key(), s.clone().fabric(FabricType::Type1).key());
+        assert_ne!(s.key(), s.clone().scale(0.002).key());
+        assert_ne!(s.key(), s.clone().seed(9).key());
+        assert_ne!(s.key(), Scenario::synth02(0.001).key());
+        assert_eq!(s.key(), s.clone().key());
+    }
+}

@@ -1,0 +1,343 @@
+//! Sweep: a declarative cartesian grid over configuration and scenario
+//! axes, executed by a multi-threaded runner with deterministic result
+//! order (grid order, independent of thread count).
+//!
+//! Every `simulate` call is independent, so the fig4/channels-style
+//! grids are embarrassingly parallel: workers pull grid points from an
+//! atomic cursor and write into per-point slots. Distinct workloads are
+//! built once up front and shared read-only across workers.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::config::{FabricType, SystemConfig, SystemKind};
+use crate::resource::max_frequency_mhz;
+use crate::sim::simulate;
+use crate::tensor::Mode;
+use crate::trace::Workload;
+
+use super::runset::{Run, RunSet};
+use super::{preset, Scenario};
+
+/// One grid dimension: one config/scenario key (or several zipped keys
+/// that advance together) and the value tuples it takes.
+#[derive(Debug, Clone)]
+struct Axis {
+    keys: Vec<String>,
+    values: Vec<Vec<String>>,
+}
+
+/// One fully-resolved grid point, ready to simulate.
+#[derive(Debug, Clone)]
+pub struct Point {
+    /// `(axis key, value)` in axis-declaration order.
+    pub axes: Vec<(String, String)>,
+    pub cfg: SystemConfig,
+    pub scenario: Scenario,
+}
+
+/// A declarative experiment grid over a base config + scenario.
+///
+/// Axis keys are applied in declaration order to a fresh clone of the
+/// base pair for every grid point:
+///
+/// * `preset` — replace the whole config (`a` / `b`); declare it first.
+/// * `system` — derive a §V-B baseline variant (`ip-only`, `cache-only`,
+///   `dma-only`, `proposed`).
+/// * `dataset`, `scale`, `mode` — scenario knobs (which tensor, at what
+///   scale, which MTTKRP mode).
+/// * `fabric` — compute-fabric type (sets both the scenario trace shape
+///   and `pe.fabric`).
+/// * anything else — a [`SystemConfig::apply_override`] key, including
+///   the `channels` / `topology` / `link_width` shorthands.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    base: SystemConfig,
+    scenario: Scenario,
+    axes: Vec<Axis>,
+    threads: usize,
+}
+
+/// Worker count the runner defaults to (the machine's parallelism).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl Sweep {
+    pub fn new(base: SystemConfig, scenario: Scenario) -> Sweep {
+        Sweep { base, scenario, axes: Vec::new(), threads: default_threads() }
+    }
+
+    /// Add a cartesian axis: `key` takes each of `values` in turn.
+    pub fn axis<S: AsRef<str>>(mut self, key: &str, values: &[S]) -> Sweep {
+        self.axes.push(Axis {
+            keys: vec![key.to_string()],
+            values: values.iter().map(|v| vec![v.as_ref().to_string()]).collect(),
+        });
+        self
+    }
+
+    /// Add a zipped axis: the keys advance together through the value
+    /// tuples (one grid dimension), e.g. paired
+    /// `cache.lines`/`cache.associativity` geometries.
+    pub fn zip_axis(mut self, keys: &[&str], values: &[&[&str]]) -> Sweep {
+        for row in values {
+            assert_eq!(row.len(), keys.len(), "zip_axis value tuple width");
+        }
+        self.axes.push(Axis {
+            keys: keys.iter().map(|k| k.to_string()).collect(),
+            values: values
+                .iter()
+                .map(|row| row.iter().map(|v| v.to_string()).collect())
+                .collect(),
+        });
+        self
+    }
+
+    /// Worker-thread count (results are deterministic regardless).
+    pub fn threads(mut self, n: usize) -> Sweep {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Flattened axis key names, in declaration order.
+    pub fn axis_names(&self) -> Vec<String> {
+        self.axes.iter().flat_map(|a| a.keys.iter().cloned()).collect()
+    }
+
+    /// Resolve every grid point (row-major: the first axis varies
+    /// slowest). Fails fast on unknown/duplicate keys, bad values, or
+    /// invalid configs.
+    pub fn grid(&self) -> Result<Vec<Point>, String> {
+        let names = self.axis_names();
+        for (i, name) in names.iter().enumerate() {
+            if names[..i].contains(name) {
+                return Err(format!("duplicate axis key {name:?}"));
+            }
+        }
+        let counts: Vec<usize> = self.axes.iter().map(|a| a.values.len()).collect();
+        for (axis, &n) in self.axes.iter().zip(&counts) {
+            if n == 0 {
+                return Err(format!("axis {:?} has no values", axis.keys.join("+")));
+            }
+        }
+        let total: usize = counts.iter().product();
+        let mut points = Vec::with_capacity(total);
+        for flat in 0..total {
+            let mut idx = flat;
+            let mut sel = vec![0usize; self.axes.len()];
+            for ai in (0..self.axes.len()).rev() {
+                sel[ai] = idx % counts[ai];
+                idx /= counts[ai];
+            }
+            let mut cfg = self.base.clone();
+            let mut scenario = self.scenario.clone();
+            let mut axes_kv = Vec::new();
+            for (axis, &vi) in self.axes.iter().zip(&sel) {
+                for (key, value) in axis.keys.iter().zip(&axis.values[vi]) {
+                    apply_axis(&mut cfg, &mut scenario, key, value)
+                        .map_err(|e| format!("axis {key}={value}: {e}"))?;
+                    axes_kv.push((key.clone(), value.clone()));
+                }
+            }
+            // One source of truth each way: the scenario decides the
+            // fabric type, the config decides the front-end geometry.
+            cfg.pe.fabric = scenario.fabric;
+            scenario.sync_geometry(&cfg);
+            cfg.validate().map_err(|e| format!("grid point {axes_kv:?}: {e}"))?;
+            points.push(Point { axes: axes_kv, cfg, scenario });
+        }
+        Ok(points)
+    }
+
+    /// Execute the grid and collect a [`RunSet`] in grid order.
+    pub fn run(&self) -> Result<RunSet, String> {
+        let points = self.grid()?;
+        // One lock per distinct workload: the first worker to reach a
+        // key builds it, racers on the same key block only on that key,
+        // and distinct workloads build in parallel with the simulations.
+        let mut workloads: HashMap<String, OnceLock<Arc<Workload>>> = HashMap::new();
+        for p in &points {
+            workloads.entry(p.scenario.key()).or_default();
+        }
+        let slots: Vec<OnceLock<Run>> = (0..points.len()).map(|_| OnceLock::new()).collect();
+        let cursor = AtomicUsize::new(0);
+        // `grid` yields ≥ 1 point (an empty axis list is a single run).
+        let workers = self.threads.clamp(1, points.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let p = &points[i];
+                    let w = workloads[&p.scenario.key()].get_or_init(|| p.scenario.workload());
+                    let report = simulate(&p.cfg, w);
+                    let run = Run {
+                        axes: p.axes.clone(),
+                        fmax_mhz: max_frequency_mhz(&p.cfg),
+                        cfg: p.cfg.clone(),
+                        report,
+                    };
+                    slots[i].set(run).expect("each slot is filled once");
+                });
+            }
+        });
+        let runs = slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("worker filled every slot"))
+            .collect();
+        Ok(RunSet { axis_names: self.axis_names(), runs })
+    }
+}
+
+/// Apply one axis assignment to the (config, scenario) pair.
+fn apply_axis(
+    cfg: &mut SystemConfig,
+    scenario: &mut Scenario,
+    key: &str,
+    value: &str,
+) -> Result<(), String> {
+    match key {
+        "preset" => {
+            *cfg = preset(value)?;
+            scenario.set_fabric(cfg.pe.fabric);
+        }
+        "system" => {
+            let kind = SystemKind::from_name(value)
+                .ok_or_else(|| format!("unknown system {value:?}"))?;
+            *cfg = cfg.as_baseline(kind);
+        }
+        "dataset" => scenario.set_dataset(value)?,
+        "scale" => {
+            let scale: f64 = value.parse().map_err(|e| format!("scale {value:?}: {e}"))?;
+            super::scenario::check_scale(scale)?;
+            scenario.set_scale(scale);
+        }
+        "mode" => {
+            let mode = Mode::from_name(value)
+                .ok_or_else(|| format!("unknown mode {value:?} (i|j|k)"))?;
+            scenario.set_mode(mode);
+        }
+        "fabric" | "pe.fabric" => {
+            let fabric = FabricType::from_name(value)
+                .ok_or_else(|| format!("unknown fabric {value:?}"))?;
+            scenario.set_fabric(fabric);
+            cfg.pe.fabric = fabric;
+        }
+        _ => cfg.apply_override(key, value)?,
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyKind;
+
+    fn tiny_scenario() -> Scenario {
+        Scenario::random([48, 4_000, 6_000], 400, 11)
+    }
+
+    #[test]
+    fn grid_is_row_major_and_resolves_axes() {
+        let sweep = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .axis("system", &["ip-only", "proposed"])
+            .axis("channels", &["1", "2"]);
+        let grid = sweep.grid().unwrap();
+        assert_eq!(grid.len(), 4);
+        let kv: Vec<_> = grid
+            .iter()
+            .map(|p| (p.axes[0].1.as_str(), p.axes[1].1.as_str()))
+            .collect();
+        assert_eq!(
+            kv,
+            [("ip-only", "1"), ("ip-only", "2"), ("proposed", "1"), ("proposed", "2")]
+        );
+        assert_eq!(grid[0].cfg.kind, SystemKind::IpOnly);
+        assert_eq!(grid[3].cfg.kind, SystemKind::Proposed);
+        assert_eq!(grid[3].cfg.interconnect.channels, 2);
+    }
+
+    #[test]
+    fn zip_axis_advances_keys_together() {
+        let sweep = Sweep::new(SystemConfig::config_a(), tiny_scenario())
+            .zip_axis(&["cache.lines", "cache.associativity"], &[&["4096", "1"], &["8192", "2"]]);
+        let grid = sweep.grid().unwrap();
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].cfg.cache.lines, 4096);
+        assert_eq!(grid[0].cfg.cache.associativity, 1);
+        assert_eq!(grid[1].cfg.cache.lines, 8192);
+        assert_eq!(grid[1].cfg.cache.associativity, 2);
+        assert_eq!(sweep.axis_names(), ["cache.lines", "cache.associativity"]);
+    }
+
+    #[test]
+    fn scenario_axes_shape_the_workload() {
+        let base = SystemConfig::config_b();
+        let sweep = Sweep::new(base, Scenario::synth01(0.0005))
+            .axis("fabric", &["type1", "type2"])
+            .axis("mode", &["i", "j"]);
+        let grid = sweep.grid().unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].cfg.pe.fabric, FabricType::Type1);
+        assert_eq!(grid[0].scenario.fabric, FabricType::Type1);
+        assert_eq!(grid[0].scenario.mode, Mode::I);
+        assert_eq!(grid[1].scenario.mode, Mode::J);
+        assert_eq!(grid[3].cfg.pe.fabric, FabricType::Type2);
+        // Keys separate the distinct workloads (fabric and mode both
+        // shape the trace) and match where the grid points agree.
+        assert_ne!(grid[0].scenario.key(), grid[1].scenario.key());
+        assert_ne!(grid[0].scenario.key(), grid[2].scenario.key());
+    }
+
+    #[test]
+    fn bad_axes_fail_fast() {
+        let s = tiny_scenario();
+        let base = SystemConfig::config_b();
+        let try_axis = |key: &str, val: &str| {
+            Sweep::new(base.clone(), s.clone()).axis(key, &[val]).grid()
+        };
+        assert!(try_axis("system", "warp-drive").is_err());
+        assert!(try_axis("bogus.key", "1").is_err());
+        assert!(try_axis("mode", "q").is_err());
+        assert!(try_axis("scale", "2.0").is_err());
+        // Invalid resolved config (3 channels is not a power of two).
+        assert!(try_axis("channels", "3").is_err());
+    }
+
+    #[test]
+    fn duplicate_axis_keys_are_rejected() {
+        let err = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .axis("channels", &["1"])
+            .axis("channels", &["2"])
+            .grid()
+            .unwrap_err();
+        assert!(err.contains("duplicate axis"), "{err}");
+        let err = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .zip_axis(&["cache.lines", "cache.lines"], &[&["2048", "4096"]])
+            .grid()
+            .unwrap_err();
+        assert!(err.contains("duplicate axis"), "{err}");
+    }
+
+    #[test]
+    fn empty_grid_is_a_single_point() {
+        let sweep = Sweep::new(SystemConfig::config_b(), tiny_scenario());
+        let grid = sweep.grid().unwrap();
+        assert_eq!(grid.len(), 1);
+        assert!(grid[0].axes.is_empty());
+    }
+
+    #[test]
+    fn topology_shorthand_axis_applies() {
+        let sweep = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .axis("channels", &["2"])
+            .axis("topology", &["ring"]);
+        let grid = sweep.grid().unwrap();
+        assert_eq!(grid[0].cfg.interconnect.topology, TopologyKind::Ring);
+        assert_eq!(grid[0].cfg.interconnect.channels, 2);
+    }
+}

@@ -16,7 +16,8 @@
 //! ## Layer map
 //!
 //! * **L3 (this crate)** — event loop, memory-system simulation, batching,
-//!   routing, CLI, metrics.
+//!   routing, CLI, metrics. Drivers compose simulations through the
+//!   [`experiment`] API (scenario builder + parallel sweep runner).
 //! * **L2 (python/compile/model.py)** — batched spMTTKRP JAX graph.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (partials +
 //!   scatter-as-matmul), lowered with `interpret=True` into the same HLO.
@@ -29,6 +30,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod experiment;
 pub mod mttkrp;
 pub mod resource;
 pub mod runtime;

@@ -1,24 +1,28 @@
 //! `mttkrp-memsys` — CLI for the reconfigurable-memory-system
-//! reproduction.
+//! reproduction. Every simulating subcommand composes the simulator
+//! through the `experiment` API (Scenario → Sweep → RunSet).
 //!
 //! Subcommands:
 //!   fig4       Regenerate the paper's Fig. 4 speedup comparison.
 //!   table2     Print the Table II resource-utilization model.
 //!   table3     Print the Table III dataset summary.
 //!   simulate   Run one memory-system simulation (config + workload).
+//!   sweep      Run a config/scenario grid in parallel; table + JSON-lines.
 //!   mttkrp     Run one MTTKRP through the full stack (sim + PJRT).
 //!   als        Timed CP-ALS (experiment E6).
 //!   gen        Generate a synthetic tensor to a .tns file.
 //!   freq       Max-frequency model sweep (§IV-E ablation).
 
-use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use std::sync::Arc;
+
+use mttkrp_memsys::config::{SystemConfig, SystemKind};
 use mttkrp_memsys::coordinator::TimedCpAls;
+use mttkrp_memsys::experiment::{self, default_threads, Scenario, Sweep};
 use mttkrp_memsys::mttkrp::CpAlsOptions;
 use mttkrp_memsys::resource::{max_frequency_mhz, table2};
 use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
 use mttkrp_memsys::sim::simulate;
 use mttkrp_memsys::tensor::{gen, io, CooTensor, DenseMatrix, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
 use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::rng::Rng;
 use mttkrp_memsys::util::table::{Align, Table};
@@ -31,6 +35,7 @@ fn main() {
         Some("table2") => cmd_table2(),
         Some("table3") => cmd_table3(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("als") => cmd_als(&args),
         Some("gen") => cmd_gen(&args),
@@ -55,12 +60,18 @@ fn print_usage() {
 
 USAGE: mttkrp-memsys <subcommand> [--options]
 
-  fig4      [--scale 0.01]            Fig. 4 speedups (all systems × configs × datasets)
+  fig4      [--scale 0.01] [--mode i|j|k]  Fig. 4 speedups (systems × configs × datasets)
   table2                              Table II resource model
   table3    [--scale 1.0]             Table III dataset summary
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
-            [--channels N] [--topology crossbar|line|ring] [--link_width W]
-            [--scale 0.01] [--dataset synth01|synth02] [--<section.key> v]
+            [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
+            [--link_width W] [--scale 0.01] [--dataset synth01|synth02]
+            [--<section.key> v]
+  sweep     --axis key=v1,v2,... [--axis ...] [--threads N]
+            [--baseline axis=value] [--out runs.jsonl]
+            [--preset b] [--dataset synth01] [--scale 0.01] [--mode i|j|k]
+            (axes: system, preset, dataset, scale, mode, fabric, channels,
+             topology, link_width, and any --<section.key> override key)
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
   gen       --out t.tns [--dataset synth01] [--scale 0.01]
@@ -68,21 +79,22 @@ USAGE: mttkrp-memsys <subcommand> [--options]
     );
 }
 
-fn load_tensor(args: &Args) -> CooTensor {
-    let scale = args.get_f64("scale", 0.01);
-    match args.get_str("dataset", "synth01").as_str() {
-        "synth02" => gen::synth_02(scale),
-        _ => gen::synth_01(scale),
-    }
+/// `--mode i|j|k` (default: mode-1/`i`, the paper's evaluation mode).
+fn mode_arg(args: &Args) -> anyhow::Result<Mode> {
+    let name = args.get_str("mode", "i");
+    Mode::from_name(&name).ok_or_else(|| anyhow::anyhow!("unknown mode {name:?} (i|j|k)"))
 }
 
-fn preset(args: &Args) -> anyhow::Result<SystemConfig> {
-    let name = args.get_str("preset", "b");
-    let mut cfg = match name.as_str() {
-        "a" | "config-a" => SystemConfig::config_a(),
-        "b" | "config-b" => SystemConfig::config_b(),
-        other => anyhow::bail!("unknown preset {other:?}"),
-    };
+/// `--dataset`/`--scale`/`--mode` → a Scenario shaped for `cfg`.
+fn scenario_arg(args: &Args, cfg: &SystemConfig) -> anyhow::Result<Scenario> {
+    let name = args.get_str("dataset", "synth01");
+    let scale = args.get_f64("scale", 0.01);
+    let scenario = Scenario::dataset(&name, scale).map_err(anyhow::Error::msg)?;
+    Ok(scenario.mode(mode_arg(args)?).for_config(cfg))
+}
+
+fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
+    let mut cfg = experiment::preset(&args.get_str("preset", "b")).map_err(anyhow::Error::msg)?;
     if let Some(sys) = args.get("system") {
         let kind = SystemKind::from_name(sys)
             .ok_or_else(|| anyhow::anyhow!("unknown system {sys:?}"))?;
@@ -104,6 +116,13 @@ fn preset(args: &Args) -> anyhow::Result<SystemConfig> {
     Ok(cfg)
 }
 
+fn load_tensor(args: &Args) -> anyhow::Result<Arc<CooTensor>> {
+    let name = args.get_str("dataset", "synth01");
+    let scale = args.get_f64("scale", 0.01);
+    let scenario = Scenario::dataset(&name, scale).map_err(anyhow::Error::msg)?;
+    Ok(scenario.tensor())
+}
+
 fn manifest() -> anyhow::Result<Manifest> {
     let dir = find_artifacts_dir()
         .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?;
@@ -112,7 +131,20 @@ fn manifest() -> anyhow::Result<Manifest> {
 
 fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
     let scale = args.get_f64("scale", 0.01);
+    let mode = mode_arg(args)?;
     println!("Fig. 4 — memory-access-time speedup over IP-only (scale {scale})\n");
+    if mode != Mode::I {
+        println!("(MTTKRP mode {})\n", mode.name());
+    }
+    // The paper's grid: (Config-A/Type-1, Config-B/Type-2) × dataset ×
+    // system variant, one sweep, IP-only as the per-category baseline.
+    let runs = Sweep::new(SystemConfig::config_a(), Scenario::synth01(scale).mode(mode))
+        .zip_axis(&["preset", "fabric"], &[&["a", "type1"], &["b", "type2"]])
+        .axis("dataset", &["synth01", "synth02"])
+        .axis("system", &["ip-only", "cache-only", "dma-only", "proposed"])
+        .threads(args.get_usize("threads", default_threads()))
+        .run()
+        .map_err(anyhow::Error::msg)?;
     let mut table = Table::new(&["category", "ip-only", "cache-only", "dma-only", "proposed"])
         .aligns(&[
             Align::Left,
@@ -121,38 +153,19 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
             Align::Right,
             Align::Right,
         ]);
-    for (cfg_base, fabric, label) in [
-        (SystemConfig::config_a(), FabricType::Type1, "A_1"),
-        (SystemConfig::config_b(), FabricType::Type2, "B_2"),
-    ] {
+    for (preset, label) in [("a", "A_1"), ("b", "B_2")] {
         for (ds, tname) in [("synth01", "S1"), ("synth02", "S2")] {
-            let t = match ds {
-                "synth02" => gen::synth_02(scale),
-                _ => gen::synth_01(scale),
+            let cell = |system: &str| {
+                runs.get(&[("preset", preset), ("dataset", ds), ("system", system)])
+                    .expect("sweep covers the fig4 grid")
             };
-            let w = workload_from_tensor(
-                &t,
-                Mode::I,
-                fabric,
-                cfg_base.pe.n_pes,
-                cfg_base.pe.rank,
-                cfg_base.dram.row_bytes,
-            );
-            let reports: Vec<_> = SystemKind::ALL
-                .iter()
-                .map(|&k| {
-                    let mut c = cfg_base.as_baseline(k);
-                    c.pe.fabric = fabric;
-                    simulate(&c, &w)
-                })
-                .collect();
-            let ip = &reports[0];
+            let ip = cell("ip-only");
             table.row(&[
                 format!("{label}_{tname}"),
                 "1.00".to_string(),
-                format!("{:.2}", reports[1].speedup_over(ip)),
-                format!("{:.2}", reports[2].speedup_over(ip)),
-                format!("{:.2}", reports[3].speedup_over(ip)),
+                format!("{:.2}", cell("cache-only").report.speedup_over(&ip.report)),
+                format!("{:.2}", cell("dma-only").report.speedup_over(&ip.report)),
+                format!("{:.2}", cell("proposed").report.speedup_over(&ip.report)),
             ]);
         }
     }
@@ -162,8 +175,8 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_table2() -> anyhow::Result<()> {
-    let a = SystemConfig::config_a();
-    let b = SystemConfig::config_b();
+    let a = experiment::preset("a").map_err(anyhow::Error::msg)?;
+    let b = experiment::preset("b").map_err(anyhow::Error::msg)?;
     println!("Table II — module configuration and resource utilization (model)\n");
     println!("{}", table2(&[&a, &b]));
     Ok(())
@@ -191,20 +204,13 @@ fn cmd_table3(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = preset(args)?;
-    let t = load_tensor(args);
-    let w = workload_from_tensor(
-        &t,
-        Mode::I,
-        cfg.pe.fabric,
-        cfg.pe.n_pes,
-        cfg.pe.rank,
-        cfg.dram.row_bytes,
-    );
+    let cfg = preset_cfg(args)?;
+    let scenario = scenario_arg(args, &cfg)?;
+    let w = scenario.workload();
     println!(
         "workload: {} nnz={} accesses={} bytes={}",
-        t.name,
-        fmt_count(t.nnz() as u64),
+        w.name,
+        fmt_count(w.nnz as u64),
         fmt_count(w.n_accesses() as u64),
         fmt_bytes(w.total_bytes())
     );
@@ -213,11 +219,71 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let cfg = preset_cfg(args)?;
+    let scenario = scenario_arg(args, &cfg)?;
+    let threads = args.get_usize("threads", default_threads());
+    let mut sweep = Sweep::new(cfg, scenario).threads(threads);
+    let specs = args.get_all("axis");
+    anyhow::ensure!(
+        !specs.is_empty(),
+        "at least one --axis required, e.g. --axis system=ip-only,proposed"
+    );
+    let mut has_preset_axis = false;
+    for spec in specs {
+        let (key, vals) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--axis wants key=v1,v2,..., got {spec:?}"))?;
+        let values: Vec<&str> = vals.split(',').filter(|v| !v.is_empty()).collect();
+        anyhow::ensure!(!values.is_empty(), "axis {key:?} has no values");
+        has_preset_axis |= key == "preset";
+        sweep = sweep.axis(key, &values);
+    }
+    // A preset axis rebuilds the config from scratch at every grid
+    // point, so base-level config flags would be silently lost.
+    let has_base_overrides = args.options().any(|(k, _)| k.contains('.'))
+        || ["system", "channels", "topology", "link_width"]
+            .iter()
+            .any(|k| args.get(k).is_some());
+    if has_preset_axis && has_base_overrides {
+        eprintln!(
+            "warning: --axis preset=... resets the config per grid point; base --system, \
+             --<section.key>, --channels/--topology/--link_width flags are ignored there"
+        );
+    }
+    let baseline = match args.get("baseline") {
+        Some(spec) => Some(
+            spec.split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--baseline wants axis=value, got {spec:?}"))?,
+        ),
+        None => None,
+    };
+    let wall_t0 = std::time::Instant::now();
+    let runs = sweep.run().map_err(anyhow::Error::msg)?;
+    let wall = wall_t0.elapsed().as_secs_f64();
+    println!("{}", runs.to_table(baseline).render());
+    let sim_host: f64 = runs.runs.iter().map(|r| r.report.host_seconds).sum();
+    println!(
+        "\n{} runs in {wall:.2}s wall ({sim_host:.2}s of simulation across {threads} threads)",
+        runs.len()
+    );
+    if let Some(path) = args.get("out") {
+        runs.write_jsonl(std::path::Path::new(path))?;
+        println!("wrote {} JSON-lines to {path}", runs.len());
+    }
+    Ok(())
+}
+
 fn cmd_mttkrp(args: &Args) -> anyhow::Result<()> {
-    let cfg = preset(args)?;
+    let cfg = preset_cfg(args)?;
     let man = manifest()?;
-    let mut t = load_tensor(args);
-    t.sort_mode(Mode::I);
+    let mut t = load_tensor(args)?;
+    // Generated tensors are already mode-I sorted; clone only if not.
+    if !t.is_sorted_mode(Mode::I) {
+        let mut sorted = (*t).clone();
+        sorted.sort_mode(Mode::I);
+        t = Arc::new(sorted);
+    }
     let r = man.partials.rank;
     let mut rng = Rng::new(args.get_u64("seed", 7));
     let d = DenseMatrix::random(&mut rng, t.dims[1] as usize, r);
@@ -229,9 +295,9 @@ fn cmd_mttkrp(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_als(args: &Args) -> anyhow::Result<()> {
-    let cfg = preset(args)?;
+    let cfg = preset_cfg(args)?;
     let man = manifest()?;
-    let t = load_tensor(args);
+    let t = load_tensor(args)?;
     let opts = CpAlsOptions {
         rank: man.partials.rank,
         max_iters: args.get_usize("iters", 10),
@@ -257,7 +323,7 @@ fn cmd_als(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_gen(args: &Args) -> anyhow::Result<()> {
-    let t = load_tensor(args);
+    let t = load_tensor(args)?;
     let out = args
         .get("out")
         .ok_or_else(|| anyhow::anyhow!("--out <file.tns> required"))?;
@@ -273,6 +339,18 @@ fn cmd_gen(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_freq() -> anyhow::Result<()> {
     println!("max-frequency model (§IV-E): DMA-count and cache-size sweeps\n");
+    // Model-only grids (no simulation): the Sweep resolves the configs,
+    // the resource model prices each point.
+    let base = SystemConfig::config_a();
+    let scenario = Scenario::synth01(0.01).for_config(&base);
+    let dma_grid = Sweep::new(base.clone(), scenario.clone())
+        .axis("dma.n_buffers", &["1", "2", "4", "6", "8"])
+        .grid()
+        .map_err(anyhow::Error::msg)?;
+    let cache_grid = Sweep::new(base, scenario)
+        .axis("cache.lines", &["2048", "4096", "8192", "16384", "32768"])
+        .grid()
+        .map_err(anyhow::Error::msg)?;
     let mut t = Table::new(&["dma buffers", "fmax (MHz)", "", "cache lines", "fmax (MHz)"])
         .aligns(&[
             Align::Right,
@@ -281,19 +359,13 @@ fn cmd_freq() -> anyhow::Result<()> {
             Align::Right,
             Align::Right,
         ]);
-    let dmas = [1usize, 2, 4, 6, 8];
-    let lines = [2048usize, 4096, 8192, 16384, 32768];
-    for i in 0..5 {
-        let mut ca = SystemConfig::config_a();
-        ca.dma.n_buffers = dmas[i];
-        let mut cb = SystemConfig::config_a();
-        cb.cache.lines = lines[i];
+    for (d, c) in dma_grid.iter().zip(&cache_grid) {
         t.row(&[
-            dmas[i].to_string(),
-            format!("{:.0}", max_frequency_mhz(&ca)),
+            d.axes[0].1.clone(),
+            format!("{:.0}", max_frequency_mhz(&d.cfg)),
             String::new(),
-            lines[i].to_string(),
-            format!("{:.0}", max_frequency_mhz(&cb)),
+            c.axes[0].1.clone(),
+            format!("{:.0}", max_frequency_mhz(&c.cfg)),
         ]);
     }
     println!("{}", t.render());

@@ -23,6 +23,12 @@
 //! fiber load/store and DRAM transaction is an explicit object with issue
 //! and completion cycles; `total memory access time` (the paper's Fig. 4
 //! metric) is the makespan of the whole request stream.
+//!
+//! Drivers (CLI, benches, examples, integration tests) do not call
+//! [`simulate`] with hand-rolled workloads; they compose scenarios and
+//! grids through [`crate::experiment`] (Scenario → Sweep → RunSet),
+//! which handles workload caching, parallel execution, and result
+//! serialization.
 
 pub mod cache;
 pub mod dma;

@@ -133,8 +133,9 @@ impl MemorySystem {
             .iter()
             .map(|p| p.total_work() as u64 * 4)
             .sum::<u64>();
-        // Generous deadlock watchdog.
-        let watchdog = 2_000 * total_accesses + 10_000_000;
+        // Generous deadlock watchdog (saturating: scaled-up workloads
+        // must clamp at u64::MAX rather than wrap to a tiny bound).
+        let watchdog = total_accesses.saturating_mul(2_000).saturating_add(10_000_000);
         let mut completions = Vec::new();
         let mut line_evs = Vec::new();
         loop {

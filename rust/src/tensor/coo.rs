@@ -34,6 +34,15 @@ impl Mode {
             Mode::K => "k",
         }
     }
+
+    pub fn from_name(s: &str) -> Option<Mode> {
+        match s {
+            "i" | "I" | "0" => Some(Mode::I),
+            "j" | "J" | "1" => Some(Mode::J),
+            "k" | "K" | "2" => Some(Mode::K),
+            _ => None,
+        }
+    }
 }
 
 /// Size in bytes of one stored COO element (i, j, k, val @ 4 B each), §V-A1.
@@ -227,6 +236,16 @@ impl CooTensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in Mode::ALL {
+            assert_eq!(Mode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(Mode::from_name("J"), Some(Mode::J));
+        assert_eq!(Mode::from_name("2"), Some(Mode::K));
+        assert_eq!(Mode::from_name("x"), None);
+    }
 
     fn toy() -> CooTensor {
         let mut t = CooTensor::new("toy", [4, 5, 6]);

@@ -6,11 +6,14 @@
 use std::collections::HashMap;
 
 /// Parsed command-line arguments.
+///
+/// Options may repeat (`--axis a=1 --axis b=2`): [`Args::get`] returns
+/// the last occurrence, [`Args::get_all`] every occurrence in order.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     /// Name of the subcommand (first non-flag token), if any was requested.
     pub subcommand: Option<String>,
-    opts: HashMap<String, String>,
+    opts: HashMap<String, Vec<String>>,
     flags: Vec<String>,
     positionals: Vec<String>,
 }
@@ -24,7 +27,7 @@ impl Args {
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    args.opts.insert(k.to_string(), v.to_string());
+                    args.opts.entry(k.to_string()).or_default().push(v.to_string());
                 } else {
                     // `--key value` if the next token is not itself a flag,
                     // otherwise a boolean flag.
@@ -34,7 +37,7 @@ impl Args {
                         .unwrap_or(false);
                     if takes_value {
                         let v = it.next().unwrap();
-                        args.opts.insert(body.to_string(), v);
+                        args.opts.entry(body.to_string()).or_default().push(v);
                     } else {
                         args.flags.push(body.to_string());
                     }
@@ -56,12 +59,20 @@ impl Args {
     /// True if `--name` was given as a bare flag OR as `--name true`.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
-            || matches!(self.opts.get(name).map(String::as_str), Some("true") | Some("1"))
+            || matches!(self.get(name), Some("true") | Some("1"))
     }
 
-    /// Raw option value.
+    /// Raw option value (the last occurrence when repeated).
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.opts.get(name).map(String::as_str)
+        self.opts.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// Every occurrence of a repeatable option, in command-line order.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.opts
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
     }
 
     /// String option with default.
@@ -103,9 +114,12 @@ impl Args {
         &self.positionals
     }
 
-    /// All `--key value` pairs (used for config overrides).
+    /// All `--key value` pairs (used for config overrides); repeated
+    /// options yield one pair per occurrence.
     pub fn options(&self) -> impl Iterator<Item = (&str, &str)> {
-        self.opts.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+        self.opts
+            .iter()
+            .flat_map(|(k, vs)| vs.iter().map(move |v| (k.as_str(), v.as_str())))
     }
 }
 
@@ -142,6 +156,15 @@ mod tests {
         assert!(a.flag("quick"));
         assert!(a.flag("slow"));
         assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn repeated_options_accumulate_in_order() {
+        let a = Args::parse_from(toks("sweep --axis system=a,b --axis channels=1,2"), true);
+        assert_eq!(a.get("axis"), Some("channels=1,2"), "get returns the last");
+        assert_eq!(a.get_all("axis"), vec!["system=a,b", "channels=1,2"]);
+        assert!(a.get_all("missing").is_empty());
+        assert_eq!(a.options().filter(|(k, _)| *k == "axis").count(), 2);
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Integration tests for the `experiment` API: sweep determinism across
+//! thread counts, equivalence with the hand-rolled driver pipeline it
+//! replaced, config-override round-trips/error paths, and the JSON-lines
+//! schema machine consumers (CI, pytest) rely on.
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind, TopologyKind};
+use mttkrp_memsys::experiment::{run_one, Scenario, Sweep};
+use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::tensor::{CooTensor, Mode};
+use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::util::json::Json;
+use mttkrp_memsys::util::rng::Rng;
+
+fn hyper_sparse(seed: u64, nnz: usize) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    CooTensor::random(&mut rng, [96, 20_000, 30_000], nnz)
+}
+
+#[test]
+fn sweep_is_deterministic_across_thread_counts() {
+    let scenario = Scenario::from_tensor(hyper_sparse(31, 1200))
+        .for_config(&SystemConfig::config_b());
+    let sweep = Sweep::new(SystemConfig::config_b(), scenario)
+        .axis("system", &["ip-only", "dma-only", "proposed"])
+        .axis("channels", &["1", "2"]);
+    let serial = sweep.clone().threads(1).run().unwrap();
+    let parallel = sweep.threads(4).run().unwrap();
+    assert_eq!(serial.len(), 6);
+    assert_eq!(serial.len(), parallel.len());
+    for (a, b) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(a.axes, b.axes, "grid order must not depend on threads");
+        assert_eq!(a.label(), b.label());
+        assert_eq!(a.report.total_cycles, b.report.total_cycles, "{}", a.label());
+        assert_eq!(a.report.accesses, b.report.accesses, "{}", a.label());
+        assert_eq!(a.report.dram.reads, b.report.dram.reads, "{}", a.label());
+    }
+}
+
+#[test]
+fn sweep_matches_the_hand_rolled_pipeline_it_replaced() {
+    // The old driver pipeline: tensor → workload_from_tensor(6 args) →
+    // as_baseline/apply_override → simulate. A sweep resolving the same
+    // point must produce the identical report (the fig4 byte-identity
+    // guarantee).
+    let t = hyper_sparse(32, 1000);
+    let base = SystemConfig::config_b();
+    let w = workload_from_tensor(
+        &t,
+        Mode::I,
+        base.pe.fabric,
+        base.pe.n_pes,
+        base.pe.rank,
+        base.dram.row_bytes,
+    );
+    let mut hand_cfg = base.as_baseline(SystemKind::CacheOnly);
+    hand_cfg.apply_override("channels", "2").unwrap();
+    let hand = simulate(&hand_cfg, &w);
+
+    let runs = Sweep::new(base.clone(), Scenario::from_tensor(t.clone()).for_config(&base))
+        .axis("system", &["cache-only", "proposed"])
+        .axis("channels", &["1", "2"])
+        .run()
+        .unwrap();
+    let swept = &runs
+        .get(&[("system", "cache-only"), ("channels", "2")])
+        .unwrap()
+        .report;
+    assert_eq!(swept.total_cycles, hand.total_cycles);
+    assert_eq!(swept.accesses, hand.accesses);
+    assert_eq!(swept.dram.reads, hand.dram.reads);
+    assert_eq!(swept.dram.row_hits, hand.dram.row_hits);
+    assert_eq!(swept.label, hand.label);
+
+    // And run_one on the same scenario equals a plain simulate.
+    let single = run_one(&hand_cfg, &Scenario::from_tensor(t).for_config(&hand_cfg));
+    assert_eq!(single.total_cycles, hand.total_cycles);
+}
+
+#[test]
+fn sweep_scenario_axes_vary_the_workload() {
+    let t = hyper_sparse(33, 900);
+    let nnz = t.nnz() as u64;
+    let scenario = Scenario::from_tensor(t).for_config(&SystemConfig::config_b());
+    let runs = Sweep::new(SystemConfig::config_b(), scenario)
+        .axis("mode", &["i", "j", "k"])
+        .threads(2)
+        .run()
+        .unwrap();
+    assert_eq!(runs.len(), 3);
+    for run in &runs.runs {
+        assert_eq!(run.report.nnz, nnz, "every mode covers every nonzero");
+        assert!(run.report.total_cycles > 0);
+    }
+}
+
+#[test]
+fn apply_override_round_trips_every_documented_key() {
+    let mut c = SystemConfig::config_a();
+    let cases: &[(&str, &str)] = &[
+        ("system.n_lmbs", "2"),
+        ("cache.associativity", "1"),
+        ("cache.lines", "2048"),
+        ("cache.line_bits", "256"),
+        ("cache.mshr_entries", "16"),
+        ("cache.mshr_secondary_cap", "4"),
+        ("dma.n_buffers", "8"),
+        ("dma.buffer_bytes", "512"),
+        ("rr.rrsh_entries", "1024"),
+        ("rr.temp_buffer_entries", "4"),
+        ("pe.n_pes", "8"),
+        ("pe.rank", "16"),
+        ("pe.compute_cycles_per_nnz", "2"),
+        ("pe.max_inflight", "12"),
+        ("interconnect.channels", "4"),
+        ("interconnect.link_width", "2"),
+        ("interconnect.link_queue", "8"),
+        ("interconnect.interleave_bytes", "8192"),
+        ("dram.t_row_hit", "30"),
+        ("dram.t_row_miss", "60"),
+        ("dram.t_controller", "10"),
+        ("dram.max_outstanding", "64"),
+        ("dram.banks", "8"),
+    ];
+    for (key, value) in cases {
+        c.apply_override(key, value).unwrap_or_else(|e| panic!("{key}: {e}"));
+    }
+    assert_eq!(c.n_lmbs, 2);
+    assert_eq!(c.cache.associativity, 1);
+    assert_eq!(c.cache.lines, 2048);
+    assert_eq!(c.cache.line_bits, 256);
+    assert_eq!(c.cache.mshr_entries, 16);
+    assert_eq!(c.cache.mshr_secondary_cap, 4);
+    assert_eq!(c.dma.n_buffers, 8);
+    assert_eq!(c.dma.buffer_bytes, 512);
+    assert_eq!(c.rr.rrsh_entries, 1024);
+    assert_eq!(c.rr.temp_buffer_entries, 4);
+    assert_eq!(c.pe.n_pes, 8);
+    assert_eq!(c.pe.rank, 16);
+    assert_eq!(c.pe.compute_cycles_per_nnz, 2);
+    assert_eq!(c.pe.max_inflight, 12);
+    assert_eq!(c.interconnect.channels, 4);
+    assert_eq!(c.interconnect.link_width, 2);
+    assert_eq!(c.interconnect.link_queue, 8);
+    assert_eq!(c.interconnect.interleave_bytes, 8192);
+    assert_eq!(c.dram.t_row_hit, 30);
+    assert_eq!(c.dram.t_row_miss, 60);
+    assert_eq!(c.dram.t_controller, 10);
+    assert_eq!(c.dram.max_outstanding, 64);
+    assert_eq!(c.dram.banks, 8);
+    // Enum-valued keys.
+    c.apply_override("system.kind", "cache-only").unwrap();
+    assert_eq!(c.kind, SystemKind::CacheOnly);
+    c.apply_override("pe.fabric", "type2").unwrap();
+    assert_eq!(c.pe.fabric, FabricType::Type2);
+    c.apply_override("interconnect.topology", "line").unwrap();
+    assert_eq!(c.interconnect.topology, TopologyKind::Line);
+    c.validate().unwrap();
+}
+
+#[test]
+fn apply_override_interconnect_shorthands_alias_their_full_keys() {
+    for (short, full, value) in [
+        ("channels", "interconnect.channels", "4"),
+        ("topology", "interconnect.topology", "ring"),
+        ("link_width", "interconnect.link_width", "3"),
+    ] {
+        let mut via_short = SystemConfig::config_b();
+        via_short.apply_override(short, value).unwrap();
+        let mut via_full = SystemConfig::config_b();
+        via_full.apply_override(full, value).unwrap();
+        assert_eq!(via_short, via_full, "{short} must alias {full}");
+    }
+}
+
+#[test]
+fn apply_override_error_paths_leave_the_config_untouched() {
+    let pristine = SystemConfig::config_b();
+    let mut c = pristine.clone();
+    // Unknown keys.
+    assert!(c.apply_override("bogus.key", "1").is_err());
+    assert!(c.apply_override("cache.nonexistent", "1").is_err());
+    assert!(c.apply_override("channel", "2").is_err(), "near-miss shorthand");
+    // Unparsable numbers.
+    assert!(c.apply_override("cache.lines", "many").is_err());
+    assert!(c.apply_override("dma.buffer_bytes", "-1").is_err());
+    assert!(c.apply_override("scale", "0.5").is_err(), "scenario key, not config");
+    // Unknown enum values.
+    assert!(c.apply_override("system.kind", "hybrid").is_err());
+    assert!(c.apply_override("pe.fabric", "type3").is_err());
+    assert!(c.apply_override("topology", "torus").is_err());
+    assert_eq!(c, pristine, "failed overrides must not mutate the config");
+}
+
+#[test]
+fn jsonl_output_keeps_fig4_ordering_and_schema() {
+    let base = SystemConfig::config_b();
+    // Same workload the fig4-ordering integration test pins down.
+    let scenario = Scenario::synth01(0.001).for_config(&base);
+    let runs = Sweep::new(base, scenario)
+        .axis("system", &["ip-only", "cache-only", "dma-only", "proposed"])
+        .threads(2)
+        .run()
+        .unwrap();
+    let jsonl = runs.to_jsonl();
+    let mut cycles = std::collections::HashMap::new();
+    for line in jsonl.lines() {
+        let rec = Json::parse(line).expect("every line is standalone JSON");
+        let system = rec
+            .get("axes")
+            .and_then(|a| a.get("system"))
+            .and_then(Json::as_str)
+            .expect("axes.system present")
+            .to_string();
+        assert!(rec.get("label").is_some());
+        let total = rec.get("total_cycles").and_then(Json::as_f64).unwrap();
+        let nested = rec
+            .get("report")
+            .and_then(|r| r.get("total_cycles"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert_eq!(total, nested, "top-level mirror matches the report");
+        cycles.insert(system, total);
+    }
+    assert_eq!(cycles.len(), 4);
+    // Fig. 4 qualitative ordering (the python schema test re-checks this
+    // on the CI-produced file).
+    assert!(cycles["proposed"] < cycles["ip-only"]);
+    assert!(cycles["proposed"] < cycles["cache-only"]);
+    assert!(cycles["proposed"] < cycles["dma-only"]);
+}

@@ -3,21 +3,17 @@
 //! accounting consistency, the seed-equivalence operating point, and the
 //! multi-channel speedup the fabric exists to deliver.
 
-use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind, TopologyKind};
+use std::sync::Arc;
+
+use mttkrp_memsys::config::{SystemConfig, SystemKind, TopologyKind};
+use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{gen, CooTensor, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::tensor::{gen, CooTensor};
+use mttkrp_memsys::trace::Workload;
 use mttkrp_memsys::util::rng::Rng;
 
-fn wl(t: &CooTensor, cfg: &SystemConfig) -> mttkrp_memsys::trace::Workload {
-    workload_from_tensor(
-        t,
-        Mode::I,
-        cfg.pe.fabric,
-        cfg.pe.n_pes,
-        cfg.pe.rank,
-        cfg.dram.row_bytes,
-    )
+fn wl(t: &CooTensor, cfg: &SystemConfig) -> Arc<Workload> {
+    Scenario::from_tensor(t.clone()).for_config(cfg).workload()
 }
 
 fn with_fabric(base: &SystemConfig, channels: usize, topo: TopologyKind) -> SystemConfig {
@@ -151,14 +147,7 @@ fn single_channel_default_config_matches_explicit_single_channel() {
 fn type1_config_a_also_scales_with_channels() {
     let t = gen::synth_01(0.001);
     let base = SystemConfig::config_a();
-    let w = workload_from_tensor(
-        &t,
-        Mode::I,
-        FabricType::Type1,
-        base.pe.n_pes,
-        base.pe.rank,
-        base.dram.row_bytes,
-    );
+    let w = wl(&t, &base);
     let one = simulate(&with_fabric(&base, 1, TopologyKind::Crossbar), &w);
     let four = simulate(&with_fabric(&base, 4, TopologyKind::Crossbar), &w);
     assert!(

@@ -2,10 +2,13 @@
 //! configurations, fabrics and datasets — conservation, ordering, and
 //! paper-shape invariants.
 
+use std::sync::Arc;
+
 use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::sim::simulate;
 use mttkrp_memsys::tensor::{gen, CooTensor, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::trace::Workload;
 use mttkrp_memsys::util::rng::Rng;
 
 fn hyper_sparse(seed: u64, nnz: usize) -> CooTensor {
@@ -13,8 +16,8 @@ fn hyper_sparse(seed: u64, nnz: usize) -> CooTensor {
     CooTensor::random(&mut rng, [128, 30_000, 50_000], nnz)
 }
 
-fn wl(t: &CooTensor, fabric: FabricType, cfg: &SystemConfig) -> mttkrp_memsys::trace::Workload {
-    workload_from_tensor(t, Mode::I, fabric, cfg.pe.n_pes, cfg.pe.rank, cfg.dram.row_bytes)
+fn wl(t: &CooTensor, fabric: FabricType, cfg: &SystemConfig) -> Arc<Workload> {
+    Scenario::from_tensor(t.clone()).for_config(cfg).fabric(fabric).workload()
 }
 
 #[test]

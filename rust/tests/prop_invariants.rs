@@ -2,11 +2,11 @@
 //! invariants: partitioning, tensor transforms, traces, linalg.
 
 use mttkrp_memsys::config::FabricType;
+use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::mttkrp::linalg::{cholesky, matmul, solve_gram};
 use mttkrp_memsys::mttkrp::{mttkrp_parallel, mttkrp_seq};
 use mttkrp_memsys::tensor::partition::partitions_fiber_aligned;
 use mttkrp_memsys::tensor::{partition_by_nnz, CooTensor, DenseMatrix, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
 use mttkrp_memsys::util::prop::check;
 use mttkrp_memsys::util::rng::Rng;
 use mttkrp_memsys::{prop_assert, prop_assert_eq};
@@ -117,7 +117,11 @@ fn prop_trace_covers_every_nonzero_and_store_per_fiber() {
             (t, fabric, pes)
         },
         |(t, fabric, pes)| {
-            let w = workload_from_tensor(t, Mode::I, *fabric, *pes, 16, 8192);
+            let w = Scenario::from_tensor(t.clone())
+                .fabric(*fabric)
+                .n_pes(*pes)
+                .rank(16)
+                .workload();
             let total: usize = w.pe_traces.iter().map(|p| p.work.len()).sum();
             prop_assert_eq!(total, t.nnz(), "work items");
             let stores: usize = w

@@ -2,13 +2,21 @@
 //! accounting, and cross-variant sanity on randomized tensors and
 //! configurations.
 
+use std::sync::Arc;
+
 use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::sim::simulate;
-use mttkrp_memsys::tensor::{CooTensor, Mode};
-use mttkrp_memsys::trace::workload_from_tensor;
+use mttkrp_memsys::tensor::CooTensor;
+use mttkrp_memsys::trace::Workload;
 use mttkrp_memsys::util::prop::check;
 use mttkrp_memsys::util::rng::Rng;
 use mttkrp_memsys::{prop_assert, prop_assert_eq};
+
+/// Scenario-built workload for a randomized (tensor, config) case.
+fn wl(t: &CooTensor, cfg: &SystemConfig) -> Arc<Workload> {
+    Scenario::from_tensor(t.clone()).for_config(cfg).workload()
+}
 
 fn random_case(rng: &mut Rng) -> (CooTensor, SystemConfig) {
     let dims = [
@@ -46,14 +54,7 @@ fn prop_all_accesses_served_all_variants() {
         12,
         |rng| random_case(rng),
         |(t, cfg)| {
-            let w = workload_from_tensor(
-                t,
-                Mode::I,
-                cfg.pe.fabric,
-                cfg.pe.n_pes,
-                cfg.pe.rank,
-                cfg.dram.row_bytes,
-            );
+            let w = wl(t, cfg);
             let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
             for kind in SystemKind::ALL {
                 let rep = simulate(&cfg.as_baseline(kind), &w);
@@ -72,14 +73,7 @@ fn prop_dram_reads_bounded_by_requested_and_alignment() {
         12,
         |rng| random_case(rng),
         |(t, cfg)| {
-            let w = workload_from_tensor(
-                t,
-                Mode::I,
-                cfg.pe.fabric,
-                cfg.pe.n_pes,
-                cfg.pe.rank,
-                cfg.dram.row_bytes,
-            );
+            let w = wl(t, cfg);
             let rep = simulate(cfg, &w);
             // Reads can't exceed the aligned footprint of every load
             // (each load ≤ one 64 B-aligned burst via cache or DMA).
@@ -109,14 +103,7 @@ fn prop_row_hit_rate_is_a_rate_and_bus_not_overcommitted() {
         12,
         |rng| random_case(rng),
         |(t, cfg)| {
-            let w = workload_from_tensor(
-                t,
-                Mode::I,
-                cfg.pe.fabric,
-                cfg.pe.n_pes,
-                cfg.pe.rank,
-                cfg.dram.row_bytes,
-            );
+            let w = wl(t, cfg);
             let rep = simulate(cfg, &w);
             let hr = rep.dram.row_hit_rate();
             prop_assert!((0.0..=1.0).contains(&hr), "row hit rate {hr}");
@@ -143,14 +130,7 @@ fn prop_proposed_never_loses_to_ip_only() {
         10,
         |rng| random_case(rng),
         |(t, cfg)| {
-            let w = workload_from_tensor(
-                t,
-                Mode::I,
-                cfg.pe.fabric,
-                cfg.pe.n_pes,
-                cfg.pe.rank,
-                cfg.dram.row_bytes,
-            );
+            let w = wl(t, cfg);
             let prop = simulate(cfg, &w);
             let ip = simulate(&cfg.as_baseline(SystemKind::IpOnly), &w);
             prop_assert!(
