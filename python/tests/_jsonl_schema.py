@@ -1,0 +1,34 @@
+"""Shared discovery/loading for the JSON-lines schema tests.
+
+Encodes the CI-gate policy in one place: every test always runs against
+its committed sample (skipping only if that sample is absent), and
+additionally against an operator/CI-provided file named by an env var —
+where a *missing* file is a broken pipeline and must fail loudly so the
+schema gate cannot silently go toothless.
+"""
+
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+
+def schema_paths(env_var, sample):
+    """Paths a schema test should parametrize over."""
+    paths = [sample]
+    env = os.environ.get(env_var)
+    if env:
+        paths.append(Path(env))
+    return paths
+
+
+def load_records(path, env_var, sample):
+    """Parse one JSON record per line; enforce the gate policy above."""
+    if not path.exists():
+        if path == sample:
+            pytest.skip(f"committed sample {path} not found")
+        pytest.fail(f"{env_var}={path} does not exist")
+    records = [json.loads(line) for line in path.read_text().splitlines() if line.strip()]
+    assert records, f"{path} is empty"
+    return records

@@ -1,0 +1,84 @@
+"""Schema check for the `simspeed` host-throughput bench's JSON-lines
+output (`MEMSYS_BENCH_JSON=<path> cargo bench --bench simspeed`).
+
+This is the per-PR perf trajectory for the simulator itself: one record
+per (preset, dataset, system) cell per engine, where `engine` is either
+`event` (the event-driven run loop) or `reference` (the seed poll loop
+kept as the correctness oracle). The contract machine consumers rely on:
+
+* every record carries the documented fields with positive timings and
+  throughputs;
+* each cell appears once per engine, and the paired records agree on
+  `total_cycles` / `nnz` / `accesses` — the two engines are
+  report-identical by construction, so a simulated-behavior mismatch in
+  the artifact means the equivalence guarantee broke;
+* `speedup_vs_reference` on `event` records is `reference` host time
+  over `event` host time (throughput regressions show up here).
+
+Runs against the file named by `MEMSYS_SIMSPEED_JSONL` when set (CI's
+bench-smoke job produces one) and always against the committed sample.
+Needs no third-party deps beyond pytest.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from _jsonl_schema import load_records, schema_paths
+
+SAMPLE = Path(__file__).parent / "data" / "simspeed_sample.jsonl"
+ENV_VAR = "MEMSYS_SIMSPEED_JSONL"
+
+REQUIRED = (
+    "bench",
+    "preset",
+    "dataset",
+    "system",
+    "engine",
+    "total_cycles",
+    "nnz",
+    "accesses",
+    "host_seconds",
+    "mcycles_per_sec",
+    "knnz_per_sec",
+    "speedup_vs_reference",
+)
+
+ENGINES = {"event", "reference"}
+SYSTEMS = {"ip-only", "cache-only", "dma-only", "proposed"}
+
+
+def _load(path):
+    return load_records(path, ENV_VAR, SAMPLE)
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_records_carry_the_documented_schema(path):
+    for rec in _load(path):
+        for key in REQUIRED:
+            assert key in rec, f"missing {key!r} in {rec}"
+        assert rec["bench"] == "simspeed"
+        assert rec["engine"] in ENGINES, rec["engine"]
+        assert rec["system"] in SYSTEMS, rec["system"]
+        assert rec["total_cycles"] > 0
+        assert rec["nnz"] > 0
+        assert rec["accesses"] > 0
+        assert rec["host_seconds"] > 0
+        assert rec["mcycles_per_sec"] > 0
+        assert rec["knnz_per_sec"] > 0
+        assert rec["speedup_vs_reference"] > 0
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_engines_are_paired_and_simulation_identical(path):
+    cells = {}
+    for rec in _load(path):
+        key = (rec["preset"], rec["dataset"], rec["system"])
+        cells.setdefault(key, {})[rec["engine"]] = rec
+    for key, by_engine in cells.items():
+        assert set(by_engine) == ENGINES, f"{key}: engines {set(by_engine)}"
+        event, reference = by_engine["event"], by_engine["reference"]
+        # Simulated behavior must match exactly — only host time differs.
+        for field in ("total_cycles", "nnz", "accesses"):
+            assert event[field] == reference[field], (key, field)
+        assert reference["speedup_vs_reference"] == 1.0, key

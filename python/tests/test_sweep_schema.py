@@ -13,39 +13,23 @@ bench-smoke job produces one with a tiny grid) and always against the
 committed sample. Needs no third-party deps beyond pytest.
 """
 
-import json
-import os
 from pathlib import Path
 
 import pytest
 
+from _jsonl_schema import load_records, schema_paths
+
 SAMPLE = Path(__file__).parent / "data" / "sweep_sample.jsonl"
+ENV_VAR = "MEMSYS_SWEEP_JSONL"
 
 REQUIRED_TOP_LEVEL = ("label", "axes", "config", "fmax_mhz", "total_cycles", "report")
 
 
-def _paths():
-    paths = [SAMPLE]
-    env = os.environ.get("MEMSYS_SWEEP_JSONL")
-    if env:
-        paths.append(Path(env))
-    return paths
-
-
 def _load(path):
-    if not path.exists():
-        if path == SAMPLE:
-            pytest.skip(f"committed sample {path} not found")
-        # An operator-requested file (MEMSYS_SWEEP_JSONL) that is missing
-        # is a broken pipeline, not a reason to skip: fail loudly so the
-        # CI schema gate cannot silently go toothless.
-        pytest.fail(f"MEMSYS_SWEEP_JSONL={path} does not exist")
-    records = [json.loads(line) for line in path.read_text().splitlines() if line.strip()]
-    assert records, f"{path} is empty"
-    return records
+    return load_records(path, ENV_VAR, SAMPLE)
 
 
-@pytest.mark.parametrize("path", _paths(), ids=lambda p: p.name)
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
 def test_records_carry_the_documented_schema(path):
     for rec in _load(path):
         for key in REQUIRED_TOP_LEVEL:
@@ -63,7 +47,7 @@ def test_records_carry_the_documented_schema(path):
         assert isinstance(rec["config"], dict) and "kind" in rec["config"]
 
 
-@pytest.mark.parametrize("path", _paths(), ids=lambda p: p.name)
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
 def test_system_axis_speedups_follow_fig4_ordering(path):
     records = _load(path)
     # Group runs that differ only in the `system` axis (one Fig. 4

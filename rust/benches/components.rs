@@ -23,12 +23,14 @@ fn main() {
         let cfg = SystemConfig::config_a();
         let mut cache = Cache::new(&cfg.cache, 0);
         let mut ids = IdGen::default();
+        let mut waiters = Vec::new();
         // Warm 1024 lines.
         for i in 0..1024u64 {
             if let mttkrp_memsys::sim::cache::CacheAccess::Miss { fill_req } =
                 cache.load(i * 64, i, 0, &mut ids)
             {
-                cache.fill(fill_req.id);
+                waiters.clear();
+                cache.fill_into(fill_req.id, &mut waiters);
             }
         }
         let mut z = 0u64;
@@ -43,13 +45,16 @@ fn main() {
     {
         let mut rrsh = Rrsh::new(4096, 4, 4);
         let mut line = 0u64;
+        let mut released = Vec::new();
         b.run("rrsh request+complete", 100_000, || {
             for _ in 0..25_000 {
                 line += 1;
                 for t in 0..3 {
                     black_box(rrsh.request(line, t));
                 }
-                black_box(rrsh.complete(line));
+                released.clear();
+                rrsh.complete_into(line, &mut released);
+                black_box(released.len());
             }
         });
     }

@@ -1,0 +1,202 @@
+//! Bench: **host-side** simulator throughput — how many simulated cycles
+//! and nonzeros per wall-clock second the engine sustains on the Fig. 4
+//! scenario set (preset A/Type-1 + preset B/Type-2 × Synth-01/02 × all
+//! four system variants), plus one scaled operating point (16 PEs over
+//! 8 LMBs, 4 channels) where skip-idle gating dominates. Both run loops
+//! are measured:
+//!
+//! * `event` — [`MemorySystem::run`], the event-driven engine;
+//! * `reference` — [`MemorySystem::run_reference`], the seed poll loop.
+//!
+//! The reference loop shares the reworked zero-allocation components, so
+//! the event/reference ratio isolates the *scheduling* win; the full
+//! improvement over the seed commit is larger (it also includes the
+//! allocation-free sinks, O(1) window/idle bookkeeping and the
+//! HashMap-free direct map, which speed up both loops).
+//!
+//! Every cell also asserts the two engines are report-identical, so this
+//! bench doubles as an equivalence smoke in CI. `MEMSYS_BENCH_SCALE`
+//! (default 0.002) sets the dataset scale, `MEMSYS_BENCH_REPS` (default
+//! 3) the timing repetitions (min is reported), and
+//! `MEMSYS_BENCH_JSON=<path>` dumps one JSON-lines record per cell per
+//! engine — the host-throughput perf trajectory
+//! (`python/tests/test_simspeed_schema.py` pins the schema).
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
+use mttkrp_memsys::experiment::Scenario;
+use mttkrp_memsys::sim::{MemorySystem, SimReport};
+use mttkrp_memsys::trace::Workload;
+use mttkrp_memsys::util::bench::section;
+use mttkrp_memsys::util::json::Json;
+use mttkrp_memsys::util::table::{Align, Table};
+
+/// Run `f` `reps` times; return the report plus the fastest run time.
+/// Timing comes from `SimReport::host_seconds`, which spans `run()`
+/// only — `MemorySystem` construction stays outside the measured
+/// region so tiny CI-scale cells aren't biased by setup cost. Floored
+/// at 1 ns so the derived throughputs stay finite on coarse clocks.
+fn best_of(reps: usize, mut f: impl FnMut() -> SimReport) -> (SimReport, f64) {
+    let mut best_secs = f64::INFINITY;
+    let mut report = None;
+    for _ in 0..reps.max(1) {
+        let rep = f();
+        let secs = rep.host_seconds.max(1e-9);
+        if secs < best_secs {
+            best_secs = secs;
+            report = Some(rep);
+        }
+    }
+    (report.expect("reps >= 1"), best_secs)
+}
+
+fn record(
+    preset: &str,
+    dataset: &str,
+    kind: SystemKind,
+    engine: &str,
+    rep: &SimReport,
+    secs: f64,
+    speedup: f64,
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::str("simspeed")),
+        ("preset", Json::str(preset)),
+        ("dataset", Json::str(dataset)),
+        ("system", Json::str(kind.name())),
+        ("engine", Json::str(engine)),
+        ("total_cycles", Json::num(rep.total_cycles as f64)),
+        ("nnz", Json::num(rep.nnz as f64)),
+        ("accesses", Json::num(rep.accesses as f64)),
+        ("host_seconds", Json::num(secs)),
+        ("mcycles_per_sec", Json::num(rep.total_cycles as f64 / secs / 1e6)),
+        ("knnz_per_sec", Json::num(rep.nnz as f64 / secs / 1e3)),
+        ("speedup_vs_reference", Json::num(speedup)),
+    ])
+}
+
+/// Time one (config, workload) cell with both engines, assert they are
+/// report-identical, append the table row + JSON records, and return the
+/// event-vs-reference host speedup.
+#[allow(clippy::too_many_arguments)]
+fn bench_cell(
+    preset: &str,
+    dataset: &str,
+    cfg: &SystemConfig,
+    kind: SystemKind,
+    w: &Workload,
+    reps: usize,
+    table: &mut Table,
+    records: &mut Vec<Json>,
+) -> f64 {
+    let (event, event_secs) = best_of(reps, || MemorySystem::new(cfg, w).run(&w.name));
+    let (reference, ref_secs) = best_of(reps, || MemorySystem::new(cfg, w).run_reference(&w.name));
+    if let Some(d) = event.diff(&reference) {
+        panic!("{preset}/{dataset}/{}: engines diverged on {d}", kind.name());
+    }
+    let speedup = ref_secs / event_secs;
+    table.row(&[
+        format!("{preset}_{dataset}"),
+        kind.name().to_string(),
+        event.total_cycles.to_string(),
+        format!("{:.2}", event.total_cycles as f64 / event_secs / 1e6),
+        format!("{:.2}", reference.total_cycles as f64 / ref_secs / 1e6),
+        format!("{:.1}", event.nnz as f64 / event_secs / 1e3),
+        format!("{speedup:.2}x"),
+    ]);
+    records.push(record(preset, dataset, kind, "event", &event, event_secs, speedup));
+    records.push(record(preset, dataset, kind, "reference", &reference, ref_secs, 1.0));
+    speedup
+}
+
+fn main() {
+    let scale: f64 = std::env::var("MEMSYS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.002);
+    let reps: usize = std::env::var("MEMSYS_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    section(&format!(
+        "simspeed — host throughput, event vs reference engine (scale {scale}, best of {reps})"
+    ));
+
+    let mut table = Table::new(&[
+        "category",
+        "system",
+        "sim cycles",
+        "event Mcyc/s",
+        "ref Mcyc/s",
+        "event knnz/s",
+        "host speedup",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let mut records = Vec::new();
+    let mut log_speedup_sum = 0.0f64;
+    let mut cells = 0u32;
+
+    // The Fig. 4 scenario set.
+    for (preset, base, fabric) in [
+        ("a", SystemConfig::config_a(), FabricType::Type1),
+        ("b", SystemConfig::config_b(), FabricType::Type2),
+    ] {
+        for dataset in ["synth01", "synth02"] {
+            let scenario = match dataset {
+                "synth01" => Scenario::synth01(scale),
+                _ => Scenario::synth02(scale),
+            }
+            .for_config(&base)
+            .fabric(fabric);
+            let w = scenario.workload();
+            for kind in SystemKind::ALL {
+                let cfg = base.as_baseline(kind);
+                let s = bench_cell(preset, dataset, &cfg, kind, &w, reps, &mut table, &mut records);
+                log_speedup_sum += s.ln();
+                cells += 1;
+            }
+        }
+    }
+
+    // A scaled operating point: many more quiescent components per busy
+    // one — the regime the skip-idle gating targets.
+    {
+        let mut base = SystemConfig::config_b();
+        base.pe.n_pes = 16;
+        base.n_lmbs = 8;
+        base.interconnect.channels = 4;
+        base.label = "config-b16".into();
+        let scenario = Scenario::synth01(scale).for_config(&base).fabric(FabricType::Type2);
+        let w = scenario.workload();
+        for kind in [SystemKind::Proposed, SystemKind::IpOnly] {
+            let cfg = base.as_baseline(kind);
+            let s = bench_cell("b16", "synth01", &cfg, kind, &w, reps, &mut table, &mut records);
+            log_speedup_sum += s.ln();
+            cells += 1;
+        }
+    }
+
+    println!("{}", table.render());
+    println!(
+        "\ngeomean host speedup (event vs reference) over {} cells: {:.2}x",
+        cells,
+        (log_speedup_sum / cells as f64).exp()
+    );
+
+    if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
+        let mut out = String::new();
+        for r in &records {
+            out.push_str(&r.to_string_compact());
+            out.push('\n');
+        }
+        std::fs::write(&path, out).expect("write jsonl");
+        println!("wrote {} JSON-lines to {path}", records.len());
+    }
+}

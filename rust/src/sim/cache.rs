@@ -36,7 +36,7 @@ pub enum CacheAccess {
 }
 
 /// Cache statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub primary_misses: u64,
@@ -73,8 +73,10 @@ struct Way {
 pub struct Cache {
     cfg: CacheConfig,
     ways: Vec<Way>, // sets × assoc, row-major by set
-    sets: usize,
     set_mask: u64,
+    /// Tag extraction shift (`log2(sets)`), hoisted out of the per-access
+    /// probe path.
+    set_shift: u32,
     line_shift: u32,
     lru_clock: u64,
     mshr: Mshr,
@@ -91,8 +93,8 @@ impl Cache {
         let sets = cfg.sets();
         Cache {
             ways: vec![Way::default(); cfg.lines],
-            sets,
             set_mask: sets as u64 - 1,
+            set_shift: log2(sets as u64),
             line_shift: log2(cfg.line_bytes()),
             lru_clock: 0,
             mshr: Mshr::new(cfg.mshr_entries, cfg.mshr_secondary_cap),
@@ -122,7 +124,7 @@ impl Cache {
     ) -> CacheAccess {
         let line = self.line_of(addr);
         let set = (line & self.set_mask) as usize;
-        let tag = line >> log2(self.sets as u64);
+        let tag = line >> self.set_shift;
         self.lru_clock += 1;
         // Tag probe.
         let base = set * self.cfg.associativity;
@@ -164,18 +166,20 @@ impl Cache {
     }
 
     /// A line fill returned from DRAM: install it, free the MSHR entry,
-    /// and return the tokens waiting on it (data is forwarded to the RR /
-    /// PEs `pipeline_stages` later; the caller applies that).
-    pub fn fill(&mut self, req_id: ReqId) -> Option<(u64, Vec<WaiterToken>)> {
-        let (line, waiters) = self.mshr.complete(req_id)?;
+    /// and append the tokens waiting on it to `waiters` (data is
+    /// forwarded to the RR / PEs `pipeline_stages` later; the caller
+    /// applies that). Returns the filled line. The MSHR entry's waiter
+    /// storage is recycled, so the fill path never allocates.
+    pub fn fill_into(&mut self, req_id: ReqId, waiters: &mut Vec<WaiterToken>) -> Option<u64> {
+        let line = self.mshr.complete_into(req_id, waiters)?;
         self.install(line);
         self.stats.fills += 1;
-        Some((line, waiters))
+        Some(line)
     }
 
     fn install(&mut self, line: u64) {
         let set = (line & self.set_mask) as usize;
-        let tag = line >> log2(self.sets as u64);
+        let tag = line >> self.set_shift;
         let base = set * self.cfg.associativity;
         self.lru_clock += 1;
         // Prefer an invalid way; otherwise evict LRU.
@@ -238,7 +242,8 @@ mod tests {
         };
         assert_eq!(fill_req.addr, 0x1000);
         assert_eq!(fill_req.bytes, 64);
-        let (line, waiters) = c.fill(fill_req.id).unwrap();
+        let mut waiters = Vec::new();
+        let line = c.fill_into(fill_req.id, &mut waiters).unwrap();
         assert_eq!(line, c.line_of(0x1000));
         assert_eq!(waiters, vec![1]);
         // Same line (different offset) now hits through the 3-stage pipe.
@@ -260,7 +265,8 @@ mod tests {
         assert_eq!(c.load(0x2010, 2, 0, &mut ids), CacheAccess::Merged);
         assert_eq!(c.load(0x2020, 3, 0, &mut ids), CacheAccess::Merged);
         assert_eq!(c.load(0x2030, 4, 0, &mut ids), CacheAccess::Blocked);
-        let (_, waiters) = c.fill(fill_req.id).unwrap();
+        let mut waiters = Vec::new();
+        c.fill_into(fill_req.id, &mut waiters).unwrap();
         assert_eq!(waiters, vec![1, 2, 3]);
         assert_eq!(c.stats.merged_misses, 2);
         assert_eq!(c.stats.blocked, 1);
@@ -286,14 +292,16 @@ mod tests {
         let CacheAccess::Miss { fill_req: f1 } = c.load(0, 1, 0, &mut ids) else {
             panic!()
         };
-        c.fill(f1.id).unwrap();
+        let mut waiters = Vec::new();
+        c.fill_into(f1.id, &mut waiters).unwrap();
         assert!(matches!(c.load(0, 2, 1, &mut ids), CacheAccess::Hit { .. }));
         // Same set (line 4 * 64 bytes * 4 sets apart), evicts line 0.
         let conflict_addr = 4 * 64;
         let CacheAccess::Miss { fill_req: f2 } = c.load(conflict_addr, 3, 2, &mut ids) else {
             panic!()
         };
-        c.fill(f2.id).unwrap();
+        waiters.clear();
+        c.fill_into(f2.id, &mut waiters).unwrap();
         assert_eq!(c.stats.evictions, 1);
         // Original line is gone.
         assert!(matches!(c.load(0, 4, 3, &mut ids), CacheAccess::Miss { .. }));
@@ -304,9 +312,10 @@ mod tests {
         let (mut c, mut ids) = cache(2, 8); // 4 sets × 2 ways
         let a = 0u64;
         let b = 4 * 64; // same set, different tag
+        let mut waiters = Vec::new();
         for (addr, tok) in [(a, 1u64), (b, 2)] {
             if let CacheAccess::Miss { fill_req } = c.load(addr, tok, 0, &mut ids) {
-                c.fill(fill_req.id).unwrap();
+                c.fill_into(fill_req.id, &mut waiters).unwrap();
             }
         }
         assert!(matches!(c.load(a, 3, 5, &mut ids), CacheAccess::Hit { .. }));
@@ -320,7 +329,7 @@ mod tests {
         let CacheAccess::Miss { fill_req } = c.load(0, 1, 0, &mut ids) else {
             panic!()
         };
-        c.fill(fill_req.id).unwrap();
+        c.fill_into(fill_req.id, &mut Vec::new()).unwrap();
         for i in 0..3 {
             assert!(matches!(
                 c.load(i * 8, 10 + i, 1, &mut ids),

@@ -30,7 +30,7 @@ struct Transfer {
 }
 
 /// DMA statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DmaStats {
     pub loads: u64,
     pub stores: u64,
@@ -72,6 +72,10 @@ pub struct DmaEngine {
     outbox: VecDeque<MemReq>,
     /// In-flight transfers by (buffer × pipeline) slot.
     active: Vec<Option<Transfer>>,
+    /// Free entries of `active` (slot allocation without scanning).
+    free_slots: Vec<u32>,
+    /// Occupied entries of `active` (idle checks without scanning).
+    busy: usize,
     port: usize,
     pub stats: DmaStats,
 }
@@ -89,6 +93,7 @@ impl DmaEngine {
         pipeline_depth: usize,
     ) -> DmaEngine {
         let depth = pipeline_depth.max(1);
+        let slots = cfg.n_buffers * depth;
         DmaEngine {
             n_buffers: cfg.n_buffers,
             beat_bytes,
@@ -96,7 +101,11 @@ impl DmaEngine {
             pipeline_depth: depth,
             queue: VecDeque::new(),
             outbox: VecDeque::new(),
-            active: vec![None; cfg.n_buffers * depth],
+            active: vec![None; slots],
+            // Reversed so pop() hands out low slots first (the order the
+            // old linear scan produced; slot choice is timing-inert).
+            free_slots: (0..slots as u32).rev().collect(),
+            busy: 0,
             port,
             stats: DmaStats::default(),
         }
@@ -116,9 +125,11 @@ impl DmaEngine {
     /// Move queued transfers into free buffers, minting DRAM requests.
     pub fn tick(&mut self, ids: &mut IdGen) {
         while !self.queue.is_empty() {
-            let Some(slot) = self.active.iter().position(Option::is_none) else {
+            let Some(slot) = self.free_slots.pop() else {
                 break;
             };
+            let slot = slot as usize;
+            debug_assert!(self.active[slot].is_none());
             let (token, addr, bytes, is_write) = self.queue.pop_front().unwrap();
             // Beat-align the burst (garbage on both ends if unaligned).
             let start = addr - addr % self.beat_bytes;
@@ -132,6 +143,7 @@ impl DmaEngine {
             );
             let id = ids.next();
             self.active[slot] = Some(Transfer { token, req_id: id });
+            self.busy += 1;
             self.outbox.push_back(MemReq {
                 id,
                 addr: start,
@@ -154,18 +166,31 @@ impl DmaEngine {
         self.outbox.pop_front()
     }
 
+    /// Move every minted request into `out` (the LMB outbox), keeping
+    /// both queues' storage.
+    pub fn drain_requests_into(&mut self, out: &mut VecDeque<MemReq>) {
+        out.append(&mut self.outbox);
+    }
+
     pub fn has_requests(&self) -> bool {
         !self.outbox.is_empty()
+    }
+
+    /// Transfers waiting for a free buffer slot.
+    pub fn has_queued(&self) -> bool {
+        !self.queue.is_empty()
     }
 
     /// DRAM completed request `id`: free its buffer, return the token and
     /// completion cycle (buffer→PE drain is folded into the DRAM beats).
     pub fn on_complete(&mut self, id: ReqId, done_at: Cycle) -> Option<(DmaToken, Cycle)> {
-        for slot in &mut self.active {
+        for (i, slot) in self.active.iter_mut().enumerate() {
             if let Some(t) = slot {
                 if t.req_id == id {
                     let token = t.token;
                     *slot = None;
+                    self.busy -= 1;
+                    self.free_slots.push(i as u32);
                     return Some((token, done_at));
                 }
             }
@@ -174,11 +199,11 @@ impl DmaEngine {
     }
 
     pub fn busy_buffers(&self) -> usize {
-        self.active.iter().filter(|s| s.is_some()).count()
+        self.busy
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.outbox.is_empty() && self.busy_buffers() == 0
+        self.queue.is_empty() && self.outbox.is_empty() && self.busy == 0
     }
 }
 

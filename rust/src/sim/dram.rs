@@ -31,7 +31,7 @@ struct Bank {
 }
 
 /// DRAM timing + occupancy statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DramStats {
     pub reads: u64,
     pub writes: u64,
@@ -126,6 +126,9 @@ pub struct Dram {
     queue: VecDeque<(MemReq, Cycle)>,
     /// Requests with a computed completion time.
     inflight: Vec<Inflight>,
+    /// Min `done_at` over `inflight` (`Cycle::MAX` when empty) — lets the
+    /// run loop skip idle channels without scanning.
+    earliest_done: Cycle,
     /// Data bus reserved through this cycle.
     bus_free_at: Cycle,
     pub stats: DramStats,
@@ -140,6 +143,7 @@ impl Dram {
             banks: vec![Bank::default(); cfg.banks],
             queue: VecDeque::new(),
             inflight: Vec::new(),
+            earliest_done: Cycle::MAX,
             bus_free_at: 0,
             stats: DramStats::default(),
             // ROW-BANK-COLUMN order (the MIG default): column bits are
@@ -183,6 +187,9 @@ impl Dram {
     /// return all transactions that complete at or before `now`.
     pub fn tick(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
         self.schedule(now);
+        if self.earliest_done > now {
+            return; // nothing due — skip the drain scan
+        }
         // Drain completions. Swap-remove keeps this O(n) without realloc.
         let mut i = 0;
         while i < self.inflight.len() {
@@ -197,6 +204,12 @@ impl Dram {
                 i += 1;
             }
         }
+        self.earliest_done = self
+            .inflight
+            .iter()
+            .map(|f| f.done_at)
+            .min()
+            .unwrap_or(Cycle::MAX);
     }
 
     /// The earliest cycle at which an in-flight transaction completes
@@ -204,7 +217,18 @@ impl Dram {
     /// flight. Callers must also check [`Dram::has_queued`] — queued
     /// requests schedule on the next tick.
     pub fn next_event(&self) -> Option<Cycle> {
-        self.inflight.iter().map(|f| f.done_at).min()
+        if self.inflight.is_empty() {
+            None
+        } else {
+            Some(self.earliest_done)
+        }
+    }
+
+    /// Would [`Dram::tick`] do anything at `now` — schedule queued work
+    /// or deliver a due completion? Skipping a channel for which this is
+    /// false is a provable no-op (used by the event-driven run loop).
+    pub fn needs_tick(&self, now: Cycle) -> bool {
+        !self.queue.is_empty() || self.earliest_done <= now
     }
 
     /// True if requests are waiting to be scheduled onto banks.
@@ -300,6 +324,7 @@ impl Dram {
         // Data beats serialize on the shared bus.
         let data_start = ready.max(self.bus_free_at);
         let done_at = data_start + beats;
+        self.earliest_done = self.earliest_done.min(done_at);
         self.bus_free_at = done_at;
         self.stats.busy_bus_cycles += beats;
         self.stats.total_queue_wait += now.saturating_sub(enq_at);

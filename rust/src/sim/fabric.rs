@@ -159,7 +159,7 @@ pub fn topology_of(kind: TopologyKind) -> &'static dyn Topology {
 /// Per-directed-link counters. For the crossbar these are the virtual
 /// port→channel links (bandwidth 1 request/cycle); for line/ring they
 /// are the physical node→node links (bandwidth `link_width`).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LinkStats {
     /// Human label, e.g. `p0->ch2` (crossbar) or `n1->n2` (line/ring).
     pub label: String,
@@ -182,7 +182,7 @@ impl LinkStats {
 }
 
 /// Fabric-level statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FabricStats {
     /// Requests delivered into a DRAM channel controller.
     pub forwarded: u64,
@@ -228,6 +228,14 @@ pub struct Fabric {
     cmds_per_cycle: usize,
     link_width: usize,
     link_queue_cap: usize,
+    /// Requests resident in the ingress queues (maintained so idle/busy
+    /// checks never scan).
+    ingress_occupancy: usize,
+    /// Requests resident in the store-and-forward link queues.
+    link_occupancy: usize,
+    /// Reusable per-link hop budget for [`Fabric::route`] (line/ring) —
+    /// sized once per call without reallocating.
+    hop_budget: Vec<usize>,
     pub stats: FabricStats,
 }
 
@@ -280,6 +288,9 @@ impl Fabric {
             cmds_per_cycle: 1,
             link_width: ic.link_width,
             link_queue_cap: ic.link_queue,
+            ingress_occupancy: 0,
+            link_occupancy: 0,
+            hop_budget: Vec::new(),
             stats: FabricStats {
                 per_port_forwarded: vec![0; n_ports],
                 per_channel_forwarded: vec![0; nodes],
@@ -301,6 +312,7 @@ impl Fabric {
     pub fn push(&mut self, req: MemReq) {
         debug_assert!(req.port < self.ingress.len());
         self.ingress[req.port].push_back(req);
+        self.ingress_occupancy += 1;
     }
 
     /// Ingress occupancy of one port (for LMB backpressure decisions).
@@ -313,6 +325,24 @@ impl Fabric {
         for ch in &mut self.channels {
             ch.tick(now, completions);
         }
+    }
+
+    /// Event-driven variant of [`Fabric::tick_memory`]: only advance
+    /// channels with schedulable or due work. Skipped channels are
+    /// provable no-ops (empty queue, no completion due at `now`), and
+    /// channel order — hence completion order — is preserved.
+    pub fn tick_memory_gated(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
+        for ch in &mut self.channels {
+            if ch.needs_tick(now) {
+                ch.tick(now, completions);
+            }
+        }
+    }
+
+    /// Any requests resident in the fabric (ingress queues or links)?
+    /// When false, [`Fabric::route`] is a provable no-op.
+    pub fn has_traffic(&self) -> bool {
+        self.ingress_occupancy + self.link_occupancy > 0
     }
 
     /// Move requests through the fabric for one cycle: egress into the
@@ -351,6 +381,7 @@ impl Fabric {
                     break;
                 }
                 self.ingress[port].pop_front();
+                self.ingress_occupancy -= 1;
                 self.stats.links[port * nch + c].forwarded += 1;
                 self.deliver(MemReq { addr: local, ..req }, c, now);
                 forwarded += 1;
@@ -402,7 +433,8 @@ impl Fabric {
             }
         }
         // Phase 2: hop in-transit requests one link forward.
-        let mut budget = vec![self.link_width; self.links.len()];
+        self.hop_budget.clear();
+        self.hop_budget.resize(self.links.len(), self.link_width);
         for node in 0..nodes {
             let nsrc = self.sources[node].len();
             if nsrc == 0 {
@@ -422,13 +454,14 @@ impl Fabric {
                     .next_hop(node, dest, nodes)
                     .expect("non-local request must have a next hop");
                 let lid = self.link_id[node][next].expect("route uses a physical link");
-                if budget[lid] == 0 || self.links[lid].len() >= self.link_queue_cap {
+                if self.hop_budget[lid] == 0 || self.links[lid].len() >= self.link_queue_cap {
                     self.stats.links[lid].stall_cycles += 1;
                     continue;
                 }
                 self.pop_source(node, si);
                 self.links[lid].push_back((req, now + 1));
-                budget[lid] -= 1;
+                self.link_occupancy += 1;
+                self.hop_budget[lid] -= 1;
                 self.stats.links[lid].forwarded += 1;
                 self.stats.hops += 1;
                 moved = true;
@@ -460,9 +493,11 @@ impl Fabric {
         match self.sources[node][si] {
             Source::Port(p) => {
                 self.ingress[p].pop_front();
+                self.ingress_occupancy -= 1;
             }
             Source::Link(l) => {
                 self.links[l].pop_front();
+                self.link_occupancy -= 1;
             }
         }
     }
@@ -501,7 +536,7 @@ impl Fabric {
         // on a chain that bottoms out in a DRAM event (already covered
         // by the other candidates). Costs host time in backpressured
         // line/ring phases, never correctness.
-        if self.ingress.iter().any(|q| !q.is_empty()) {
+        if self.ingress_occupancy > 0 {
             t = Some(now + 1);
         }
         for l in &self.links {
@@ -514,8 +549,8 @@ impl Fabric {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.ingress.iter().all(VecDeque::is_empty)
-            && self.links.iter().all(VecDeque::is_empty)
+        self.ingress_occupancy == 0
+            && self.link_occupancy == 0
             && self.channels.iter().all(Dram::is_idle)
     }
 

@@ -18,19 +18,14 @@ use crate::config::{SystemConfig, SystemKind};
 #[allow(unused_imports)]
 use crate::config::FabricType;
 
-use super::cache::{Cache, CacheAccess};
+use super::cache::{Cache, CacheAccess, WaiterToken};
 use super::dma::DmaEngine;
 use super::dram::IdGen;
 use super::request_reductor::{RequestReductor, RrResult};
 use super::stats::LmbStats;
 use super::{Cycle, MemReq, ReqId};
 
-/// A completed PE-visible access part.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Delivery {
-    pub token: u64,
-    pub at: Cycle,
-}
+pub use super::Delivery;
 
 /// Outcome of presenting an access to the LMB.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,6 +57,8 @@ pub struct Lmb {
     outbox: VecDeque<MemReq>,
     /// RR line loads the cache was too blocked to take.
     retry_lines: VecDeque<u64>,
+    /// Reusable buffer for cache-fill waiter release (hot path).
+    fill_scratch: Vec<WaiterToken>,
     line_bytes: u64,
 }
 
@@ -80,6 +77,7 @@ impl Lmb {
             dma: DmaEngine::with_pipeline(&cfg.dma, cfg.dram.beat_bytes(), idx, dma_depth),
             outbox: VecDeque::new(),
             retry_lines: VecDeque::new(),
+            fill_scratch: Vec::new(),
             line_bytes: cfg.cache.line_bytes(),
         }
     }
@@ -179,43 +177,49 @@ impl Lmb {
     /// RR lines.
     pub fn tick(&mut self, now: Cycle, ids: &mut IdGen, line_events: &mut Vec<LineEvent>) {
         self.dma.tick(ids);
-        while let Some(req) = self.dma.pop_request() {
-            self.outbox.push_back(req);
-        }
+        self.dma.drain_requests_into(&mut self.outbox);
         // One blocked RR line retried per cycle (single cache port).
         if let Some(line) = self.retry_lines.pop_front() {
             self.line_to_cache(line, now, ids, line_events);
         }
     }
 
-    /// A cache line reached the RR: release waiters.
-    pub fn line_ready(&mut self, line: u64, now: Cycle) -> Vec<Delivery> {
-        self.rr
-            .line_arrived(line, now)
-            .into_iter()
-            .map(|(token, at)| Delivery { token, at })
-            .collect()
+    /// Would [`Lmb::tick`] do anything right now — queued DMA transfers
+    /// to place, minted DMA requests to drain, or a blocked RR line to
+    /// retry? When false, a tick is a provable no-op (no state change,
+    /// no statistics) and the event-driven run loop skips this LMB.
+    pub fn needs_tick(&self) -> bool {
+        self.dma.has_queued() || self.dma.has_requests() || !self.retry_lines.is_empty()
     }
 
-    /// A DRAM completion for this port. Returns PE deliveries (and may
-    /// push RR line events for freshly filled lines on the proposed path).
+    /// A cache line reached the RR: release waiters into `deliveries`.
+    pub fn line_ready_into(&mut self, line: u64, now: Cycle, deliveries: &mut Vec<Delivery>) {
+        self.rr.line_arrived_into(line, now, deliveries);
+    }
+
+    /// A DRAM completion for this port. Appends PE deliveries to
+    /// `deliveries` (and, on the proposed path, RR line events for
+    /// freshly filled lines to `line_events`) — allocation-free.
     pub fn on_dram_completion(
         &mut self,
         id: ReqId,
         done_at: Cycle,
         line_events: &mut Vec<LineEvent>,
-    ) -> Vec<Delivery> {
+        deliveries: &mut Vec<Delivery>,
+    ) {
         // DMA transfer?
         if let Some((token, at)) = self.dma.on_complete(id, done_at) {
-            return vec![Delivery { token, at }];
+            deliveries.push(Delivery { token, at });
+            return;
         }
         // Cache fill?
-        if let Some((line, waiters)) = self.cache.fill(id) {
+        self.fill_scratch.clear();
+        if let Some(line) = self.cache.fill_into(id, &mut self.fill_scratch) {
             match self.kind {
                 SystemKind::Proposed => {
                     // Waiters are RR line tokens — deliver the line to the
                     // RR after the cache pipeline.
-                    for w in waiters {
+                    for &w in &self.fill_scratch {
                         debug_assert_eq!(w, line);
                         line_events.push(LineEvent {
                             lmb: self.idx,
@@ -225,18 +229,16 @@ impl Lmb {
                     }
                 }
                 SystemKind::CacheOnly => {
-                    return waiters
-                        .into_iter()
-                        .map(|token| Delivery {
+                    for &token in &self.fill_scratch {
+                        deliveries.push(Delivery {
                             token,
                             at: done_at + 3,
-                        })
-                        .collect();
+                        });
+                    }
                 }
                 _ => unreachable!("cache unused in {:?}", self.kind),
             }
         }
-        Vec::new()
     }
 
     /// Next outgoing request toward the router, if any.
@@ -292,10 +294,12 @@ mod tests {
             LmbOutcome::Pending
         );
         // DRAM completes → line event → RR release.
-        let d = l.on_dram_completion(req.id, 100, &mut evs);
+        let mut d = Vec::new();
+        l.on_dram_completion(req.id, 100, &mut evs, &mut d);
         assert!(d.is_empty());
         assert_eq!(evs.len(), 1);
-        let deliveries = l.line_ready(evs[0].line, evs[0].at);
+        let mut deliveries = Vec::new();
+        l.line_ready_into(evs[0].line, evs[0].at, &mut deliveries);
         assert_eq!(deliveries.len(), 2);
         assert!(deliveries.iter().any(|d| d.token == 1));
         assert!(deliveries.iter().any(|d| d.token == 2));
@@ -317,7 +321,8 @@ mod tests {
         l.tick(0, &mut ids, &mut evs);
         let req = l.pop_request().expect("dma burst");
         assert_eq!(req.addr, 0x10080);
-        let d = l.on_dram_completion(req.id, 55, &mut evs);
+        let mut d = Vec::new();
+        l.on_dram_completion(req.id, 55, &mut evs, &mut d);
         assert_eq!(d, vec![Delivery { token: 7, at: 55 }]);
     }
 
@@ -340,7 +345,8 @@ mod tests {
         assert_eq!(l.cache_load_direct(0, 9, 0, &mut ids), LmbOutcome::Pending);
         let req = l.pop_request().unwrap();
         let mut evs = Vec::new();
-        let d = l.on_dram_completion(req.id, 80, &mut evs);
+        let mut d = Vec::new();
+        l.on_dram_completion(req.id, 80, &mut evs, &mut d);
         assert_eq!(d, vec![Delivery { token: 9, at: 83 }]);
         // Now hits.
         match l.cache_load_direct(16, 10, 90, &mut ids) {
@@ -356,6 +362,22 @@ mod tests {
         let req = l.pop_request().unwrap();
         assert!(req.is_write);
         assert_eq!(req.bytes, 128);
+    }
+
+    #[test]
+    fn needs_tick_tracks_housekeeping_work() {
+        let (mut l, mut ids) = lmb(SystemKind::Proposed);
+        let mut evs = Vec::new();
+        assert!(!l.needs_tick(), "fresh LMB has no housekeeping");
+        // A queued DMA transfer makes the LMB tick-active...
+        assert_eq!(l.dma_transfer(0, 64, 1, false), LmbOutcome::Pending);
+        assert!(l.needs_tick());
+        // ...and once the tick placed it (queue + DMA outbox drained into
+        // the LMB outbox), housekeeping is idle again even though a
+        // request waits for the router.
+        l.tick(0, &mut ids, &mut evs);
+        assert!(!l.needs_tick());
+        assert!(l.has_requests());
     }
 
     #[test]

@@ -24,6 +24,18 @@
 //! and completion cycles; `total memory access time` (the paper's Fig. 4
 //! metric) is the makespan of the whole request stream.
 //!
+//! Two run loops share every component model (see [`system`]):
+//!
+//! * [`MemorySystem::run`] — the event-driven engine: timed events live
+//!   in calendar queues, and per-cycle work only visits components with
+//!   pending work (active-set gating). This is the engine every driver
+//!   uses.
+//! * [`MemorySystem::run_reference`] — the original poll-everything
+//!   loop, kept as the correctness oracle. The two are report-identical
+//!   by construction (each gate skips only provable no-ops);
+//!   `tests/integration_engine.rs` enforces it across all variants,
+//!   fabrics and topologies.
+//!
 //! Drivers (CLI, benches, examples, integration tests) do not call
 //! [`simulate`] with hand-rolled workloads; they compose scenarios and
 //! grids through [`crate::experiment`] (Scenario → Sweep → RunSet),
@@ -74,4 +86,14 @@ pub struct MemResp {
     pub id: ReqId,
     pub port: usize,
     pub done_at: Cycle,
+}
+
+/// A completed PE-visible access part: `token` identifies the waiting
+/// (pe, slot, access) and `at` the cycle its data is available. Producers
+/// (LMBs, the Request Reductor) append these to caller-owned sinks; the
+/// run loop moves them into its delivery calendar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Delivery {
+    pub token: u64,
+    pub at: Cycle,
 }

@@ -90,13 +90,17 @@ impl Mshr {
         self.entries[slot].req_id = id;
     }
 
-    /// A fill completed: free the entry and return (line, waiters).
-    pub fn complete(&mut self, id: ReqId) -> Option<(u64, Vec<WaiterToken>)> {
+    /// A fill completed: free the entry, append its waiters to `out`
+    /// (in arrival order) and return the line. The entry keeps its
+    /// waiter-list allocation for reuse, so steady-state completion is
+    /// allocation-free.
+    pub fn complete_into(&mut self, id: ReqId, out: &mut Vec<WaiterToken>) -> Option<u64> {
         for e in &mut self.entries {
             if e.valid && e.req_id == id {
                 e.valid = false;
                 self.occupancy -= 1;
-                return Some((e.line, std::mem::take(&mut e.waiters)));
+                out.extend(e.waiters.drain(..));
+                return Some(e.line);
             }
         }
         None
@@ -124,7 +128,8 @@ mod tests {
         m.set_req_id(slot, 42);
         assert_eq!(m.lookup_or_allocate(7, 101), MshrOutcome::Merged);
         assert_eq!(m.occupancy(), 1);
-        let (line, waiters) = m.complete(42).unwrap();
+        let mut waiters = Vec::new();
+        let line = m.complete_into(42, &mut waiters).unwrap();
         assert_eq!(line, 7);
         assert_eq!(waiters, vec![100, 101]);
         assert!(m.is_empty());
@@ -152,7 +157,9 @@ mod tests {
     #[test]
     fn complete_unknown_id_is_none() {
         let mut m = Mshr::new(1, 1);
-        assert!(m.complete(5).is_none());
+        let mut waiters = Vec::new();
+        assert!(m.complete_into(5, &mut waiters).is_none());
+        assert!(waiters.is_empty());
     }
 
     #[test]
@@ -162,7 +169,9 @@ mod tests {
             panic!()
         };
         m.set_req_id(s, 11);
-        m.complete(11).unwrap();
+        let mut waiters = Vec::new();
+        m.complete_into(11, &mut waiters).unwrap();
+        assert_eq!(waiters, vec![1]);
         assert!(matches!(m.lookup_or_allocate(2, 2), MshrOutcome::Allocated(_)));
     }
 }

@@ -70,7 +70,7 @@ impl NnzSlot {
 }
 
 /// Per-access-class latency accumulators (issue → last part complete).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LatencyStats {
     pub count: u64,
     pub total: u64,
@@ -124,6 +124,13 @@ pub struct PeFrontEnd {
     /// Slots whose accesses all completed, with their compute-done cycle
     /// — retire() scans these instead of the window (§Perf L3 opt #3).
     retirable: Vec<(Cycle, u32)>,
+    /// Min compute-done cycle over `retirable` (`Cycle::MAX` when empty):
+    /// lets `retire` return without scanning until something is due.
+    earliest_retire: Cycle,
+    /// Free window slots (admission without scanning the window). Which
+    /// slot a nonzero lands in is timing-inert — issue order is the
+    /// `pending` queue's program order — so any free slot will do.
+    free_slots: Vec<u32>,
     occupied: usize,
     /// Accesses this front end may issue per cycle.
     pub issue_width: usize,
@@ -139,14 +146,18 @@ impl PeFrontEnd {
         issue_width: usize,
         compute_cycles: Cycle,
     ) -> PeFrontEnd {
+        let window = window.max(1);
         PeFrontEnd {
             pe: trace.pe,
             port,
             trace,
             cursor: 0,
-            window: vec![None; window.max(1)],
+            window: vec![None; window],
             pending: VecDeque::new(),
             retirable: Vec::new(),
+            earliest_retire: Cycle::MAX,
+            // Reversed so pop() hands out low slots first.
+            free_slots: (0..window as u32).rev().collect(),
             occupied: 0,
             issue_width: issue_width.max(1),
             compute_cycles,
@@ -156,26 +167,33 @@ impl PeFrontEnd {
 
     /// Admit nonzeros from the trace into free window slots (in order).
     pub fn fill_window(&mut self) {
-        if self.occupied == self.window.len() || self.cursor >= self.trace.work.len() {
-            return;
-        }
-        for slot in 0..self.window.len() {
-            if self.window[slot].is_none() {
-                if self.cursor >= self.trace.work.len() {
-                    break;
-                }
-                self.occupied += 1;
-                let work = self.trace.work[self.cursor];
-                self.window[slot] = Some(NnzSlot::new(work));
-                self.cursor += 1;
-                for acc in [ACC_ELEM, ACC_FIB1, ACC_FIB2] {
-                    self.pending.push_back((slot as u32, acc as u8));
-                }
-                if work.store.is_some() {
-                    self.pending.push_back((slot as u32, ACC_STORE as u8));
-                }
+        while self.cursor < self.trace.work.len() {
+            let Some(slot) = self.free_slots.pop() else {
+                break;
+            };
+            let slot = slot as usize;
+            debug_assert!(self.window[slot].is_none());
+            self.occupied += 1;
+            let work = self.trace.work[self.cursor];
+            self.window[slot] = Some(NnzSlot::new(work));
+            self.cursor += 1;
+            for acc in [ACC_ELEM, ACC_FIB1, ACC_FIB2] {
+                self.pending.push_back((slot as u32, acc as u8));
+            }
+            if work.store.is_some() {
+                self.pending.push_back((slot as u32, ACC_STORE as u8));
             }
         }
+    }
+
+    /// Could an issue attempt do anything right now: an unissued access
+    /// is pending, or trace work can be admitted into a free window
+    /// slot? (Partial line-split issues are tracked by the system.) When
+    /// false, an issue visit is a provable no-op — the event-driven run
+    /// loop skips this front end.
+    pub fn can_issue(&self) -> bool {
+        !self.pending.is_empty()
+            || (self.cursor < self.trace.work.len() && self.occupied < self.window.len())
     }
 
     /// Next unissued access in program order (front of the pending
@@ -236,14 +254,17 @@ impl PeFrontEnd {
             if s.outstanding == 0 {
                 let done = s.compute_done.expect("loads done implies compute scheduled");
                 self.retirable.push((done, slot as u32));
+                self.earliest_retire = self.earliest_retire.min(done);
             }
         }
         complete
     }
 
     /// Retire finished slots; returns how many retired this call.
+    /// Returns without scanning until the earliest compute-done cycle —
+    /// identical outcome to a scan that would have removed nothing.
     pub fn retire(&mut self, now: Cycle) -> u64 {
-        if self.retirable.is_empty() {
+        if now < self.earliest_retire {
             return 0;
         }
         let mut n = 0;
@@ -254,19 +275,27 @@ impl PeFrontEnd {
                 self.retirable.swap_remove(i);
                 debug_assert!(self.window[slot as usize].is_some());
                 self.window[slot as usize] = None;
+                self.free_slots.push(slot);
                 self.occupied -= 1;
                 n += 1;
             } else {
                 i += 1;
             }
         }
+        self.earliest_retire = self
+            .retirable
+            .iter()
+            .map(|&(done, _)| done)
+            .min()
+            .unwrap_or(Cycle::MAX);
         self.stats.retired += n;
         n
     }
 
-    /// All trace work admitted and completed.
+    /// All trace work admitted and completed. `occupied` mirrors the
+    /// window's live slots, so this is O(1).
     pub fn done(&self) -> bool {
-        self.cursor >= self.trace.work.len() && self.window.iter().all(Option::is_none)
+        self.cursor >= self.trace.work.len() && self.occupied == 0
     }
 
     pub fn total_work(&self) -> usize {
@@ -274,7 +303,7 @@ impl PeFrontEnd {
     }
 
     pub fn in_flight(&self) -> usize {
-        self.window.iter().filter(|s| s.is_some()).count()
+        self.occupied
     }
 }
 

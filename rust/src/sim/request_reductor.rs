@@ -12,7 +12,7 @@
 
 use super::rrsh::{Rrsh, RrshOutcome, RrshToken};
 use super::temp_buffer::TempBuffer;
-use super::Cycle;
+use super::{Cycle, Delivery};
 use crate::config::RrConfig;
 use crate::util::log2;
 
@@ -30,7 +30,7 @@ pub enum RrResult {
 }
 
 /// RR statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RrStats {
     pub served_temp: u64,
     pub forwarded: u64,
@@ -44,6 +44,8 @@ pub struct RequestReductor {
     rrsh: Rrsh,
     pipeline: Cycle,
     line_shift: u32,
+    /// Reusable buffer for RRSH waiter release (hot path, no allocation).
+    waiter_scratch: Vec<RrshToken>,
     pub stats: RrStats,
 }
 
@@ -55,6 +57,7 @@ impl RequestReductor {
             rrsh: Rrsh::new(cfg.rrsh_entries, n_pes, elems_per_line),
             pipeline: cfg.pipeline_stages,
             line_shift: log2(line_bytes),
+            waiter_scratch: Vec::new(),
             stats: RrStats::default(),
         }
     }
@@ -92,16 +95,19 @@ impl RequestReductor {
     }
 
     /// A full cache line arrived from the cache: buffer it and release
-    /// all waiters. Returns (token, ready_at) per waiter — the fan-out
-    /// takes one cycle per PE port after the pipeline delay.
-    pub fn line_arrived(&mut self, line: u64, now: Cycle) -> Vec<(RrshToken, Cycle)> {
+    /// all waiters into `out` — one [`Delivery`] per waiter, fanned out
+    /// one PE port per cycle after the pipeline delay. Appends to `out`
+    /// without allocating.
+    pub fn line_arrived_into(&mut self, line: u64, now: Cycle, out: &mut Vec<Delivery>) {
         self.temp.insert(line);
-        let waiters = self.rrsh.complete(line);
-        waiters
-            .into_iter()
-            .enumerate()
-            .map(|(i, t)| (t, now + self.pipeline + i as Cycle))
-            .collect()
+        self.waiter_scratch.clear();
+        self.rrsh.complete_into(line, &mut self.waiter_scratch);
+        for (i, &token) in self.waiter_scratch.iter().enumerate() {
+            out.push(Delivery {
+                token,
+                at: now + self.pipeline + i as Cycle,
+            });
+        }
     }
 
     /// Lines still pending a cache reply.
@@ -134,12 +140,13 @@ mod tests {
         assert_eq!(r.element_load(0, 1, 0), RrResult::ForwardLine { line: 0 });
         assert_eq!(r.element_load(16, 2, 1), RrResult::Absorbed);
         assert_eq!(r.element_load(32, 3, 1), RrResult::Absorbed);
-        let released = r.line_arrived(0, 10);
+        let mut released = Vec::new();
+        r.line_arrived_into(0, 10, &mut released);
         assert_eq!(released.len(), 3);
         // Fan-out: one PE port per cycle after the 2-stage pipeline.
-        assert_eq!(released[0], (1, 12));
-        assert_eq!(released[1], (2, 13));
-        assert_eq!(released[2], (3, 14));
+        assert_eq!(released[0], Delivery { token: 1, at: 12 });
+        assert_eq!(released[1], Delivery { token: 2, at: 13 });
+        assert_eq!(released[2], Delivery { token: 3, at: 14 });
         // Element 4 of the line now hits the temp buffer.
         match r.element_load(48, 4, 20) {
             RrResult::Served { ready_at } => assert_eq!(ready_at, 22),
@@ -157,13 +164,15 @@ mod tests {
         // traffic" claim, quantified).
         let mut r = rr();
         let mut to_cache = 0;
+        let mut released = Vec::new();
         for z in 0..4000u64 {
             let addr = z * 16;
             match r.element_load(addr, z, z) {
                 RrResult::ForwardLine { line } => {
                     to_cache += 1;
                     // Immediate reply (hit in cache).
-                    r.line_arrived(line, z);
+                    released.clear();
+                    r.line_arrived_into(line, z, &mut released);
                 }
                 RrResult::Served { .. } => {}
                 RrResult::Absorbed => {}
@@ -180,7 +189,7 @@ mod tests {
         r.element_load(0, 1, 0);
         r.element_load(64, 2, 0);
         assert_eq!(r.outstanding(), 2);
-        r.line_arrived(0, 5);
+        r.line_arrived_into(0, 5, &mut Vec::new());
         assert_eq!(r.outstanding(), 1);
     }
 }

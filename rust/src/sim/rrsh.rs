@@ -39,6 +39,10 @@ pub struct Rrsh {
     /// Max waiters per line: tag width + one slot per PE per element slot
     /// (§IV-C1: table width ∝ tag + n_PEs, connected RR × elements/line).
     waiter_cap: usize,
+    /// Recycled waiter-list allocations: completed entries return their
+    /// storage here and new entries reuse it, keeping the steady-state
+    /// request/complete cycle allocation-free.
+    pool: Vec<Vec<RrshToken>>,
     pub stat_forwarded: u64,
     pub stat_absorbed: u64,
     pub stat_stalls: u64,
@@ -51,6 +55,7 @@ impl Rrsh {
         Rrsh {
             table: XorHashTable::new(entries.next_power_of_two()),
             waiter_cap: (n_pes * elems_per_line).max(4),
+            pool: Vec::new(),
             stat_forwarded: 0,
             stat_absorbed: 0,
             stat_stalls: 0,
@@ -68,12 +73,12 @@ impl Rrsh {
             self.stat_absorbed += 1;
             return RrshOutcome::Absorbed;
         }
-        match self.table.insert(
-            line,
-            Pending {
-                waiters: vec![token],
-            },
-        ) {
+        let pool = &mut self.pool;
+        match self.table.try_insert_with(line, || {
+            let mut waiters = pool.pop().unwrap_or_default();
+            waiters.push(token);
+            Pending { waiters }
+        }) {
             InsertOutcome::Inserted => {
                 self.stat_forwarded += 1;
                 RrshOutcome::Forward
@@ -86,12 +91,13 @@ impl Rrsh {
         }
     }
 
-    /// A cache line arrived: release and return all its waiters.
-    pub fn complete(&mut self, line: u64) -> Vec<RrshToken> {
-        self.table
-            .remove(line)
-            .map(|p| p.waiters)
-            .unwrap_or_default()
+    /// A cache line arrived: release its waiters into `out` (in arrival
+    /// order) and recycle the entry's storage. No-op for untracked lines.
+    pub fn complete_into(&mut self, line: u64, out: &mut Vec<RrshToken>) {
+        if let Some(mut p) = self.table.remove(line) {
+            out.extend(p.waiters.drain(..));
+            self.pool.push(p.waiters);
+        }
     }
 
     /// Is this line already being tracked?
@@ -117,7 +123,8 @@ mod tests {
         assert_eq!(r.stat_forwarded, 1);
         assert_eq!(r.stat_absorbed, 2);
         assert!(r.pending(10));
-        let w = r.complete(10);
+        let mut w = Vec::new();
+        r.complete_into(10, &mut w);
         assert_eq!(w, vec![1, 2, 3]);
         assert!(!r.pending(10));
         // After completion a new request to the same line forwards again.
@@ -141,6 +148,7 @@ mod tests {
         // 64 lines. Cache traffic = forwarded lines only.
         let mut r = Rrsh::new(4096, 4, 4);
         let mut cache_traffic = 0;
+        let mut released = Vec::new();
         for z in 0..1024u64 {
             let line = z / 4;
             match r.request(line, z) {
@@ -149,7 +157,9 @@ mod tests {
                 RrshOutcome::Stall => panic!("unexpected stall"),
             }
             if z % 4 == 3 {
-                r.complete(line);
+                released.clear();
+                r.complete_into(line, &mut released);
+                assert_eq!(released.len(), 4);
             }
         }
         assert_eq!(cache_traffic, 256, "1 line request per 4 elements");
@@ -158,6 +168,8 @@ mod tests {
     #[test]
     fn complete_unknown_line_empty() {
         let mut r = Rrsh::new(16, 2, 4);
-        assert!(r.complete(99).is_empty());
+        let mut out = Vec::new();
+        r.complete_into(99, &mut out);
+        assert!(out.is_empty());
     }
 }

@@ -12,11 +12,23 @@ use super::request_reductor::RrStats;
 use super::Cycle;
 
 /// Per-LMB statistics snapshot.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LmbStats {
     pub cache: CacheStats,
     pub rr: RrStats,
     pub dma: DmaStats,
+}
+
+/// Aggregate PE front-end counters (summed over all front ends). In the
+/// report so the engine-equivalence oracle also covers the PE issue
+/// path — `stall_cycles` in particular accrues once per visited cycle a
+/// stalled head is retried, which is exactly what the event engine's
+/// step-7 gate must preserve.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PeAggStats {
+    pub retired: u64,
+    pub issued_accesses: u64,
+    pub stall_cycles: u64,
 }
 
 /// Complete result of one simulation run.
@@ -44,6 +56,8 @@ pub struct SimReport {
     /// Request bandwidth of one fabric link (for link utilization).
     pub link_width: usize,
     pub lmbs: Vec<LmbStats>,
+    /// Aggregate PE front-end counters (issue/stall/retire).
+    pub pe: PeAggStats,
     /// PE-observed latency per access slot: [element, fiber-load,
     /// fiber-load, store] — the paper's per-class "minimum latency" view.
     pub latency: [LatencyStats; 4],
@@ -52,6 +66,60 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// First field (if any) on which two reports describe *different
+    /// simulations*, as a human-readable description. `None` means the
+    /// runs were behaviorally identical — every cycle count, access
+    /// count and per-component counter matches. Host wall-clock time
+    /// (`host_seconds`) is deliberately excluded: it is the only field
+    /// the event-driven engine and the reference loop may differ on.
+    pub fn diff(&self, other: &SimReport) -> Option<String> {
+        // Exhaustive destructuring: adding a SimReport field without
+        // deciding whether the engines must agree on it becomes a
+        // compile error, not a silent hole in the equivalence oracle.
+        let SimReport {
+            label,
+            workload,
+            total_cycles,
+            nnz,
+            accesses,
+            requested_bytes,
+            dram,
+            channels,
+            fabric,
+            link_width,
+            lmbs,
+            pe,
+            latency,
+            host_seconds: _, // host wall-clock is allowed to differ
+        } = self;
+        macro_rules! cmp {
+            ($field:ident) => {
+                if *$field != other.$field {
+                    return Some(format!(
+                        "{}: {:?} != {:?}",
+                        stringify!($field),
+                        $field,
+                        other.$field
+                    ));
+                }
+            };
+        }
+        cmp!(label);
+        cmp!(workload);
+        cmp!(total_cycles);
+        cmp!(nnz);
+        cmp!(accesses);
+        cmp!(requested_bytes);
+        cmp!(dram);
+        cmp!(channels);
+        cmp!(fabric);
+        cmp!(link_width);
+        cmp!(lmbs);
+        cmp!(pe);
+        cmp!(latency);
+        None
+    }
+
     /// Simulated memory bandwidth actually delivered (bytes/cycle).
     pub fn bytes_per_cycle(&self) -> f64 {
         if self.total_cycles == 0 {
@@ -159,6 +227,14 @@ impl SimReport {
             ),
             ("channels", self.channels_json()),
             ("fabric", self.fabric_json()),
+            (
+                "pe",
+                Json::obj(vec![
+                    ("retired", Json::num(self.pe.retired as f64)),
+                    ("issued_accesses", Json::num(self.pe.issued_accesses as f64)),
+                    ("stall_cycles", Json::num(self.pe.stall_cycles as f64)),
+                ]),
+            ),
             ("host_seconds", Json::num(self.host_seconds)),
         ])
     }
@@ -246,6 +322,7 @@ mod tests {
             fabric: FabricStats::default(),
             link_width: 1,
             lmbs: vec![],
+            pe: PeAggStats::default(),
             latency: Default::default(),
             host_seconds: 0.0,
         }

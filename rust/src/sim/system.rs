@@ -11,9 +11,44 @@
 //! | ip-only    | direct to controller | direct to controller     |
 //! | cache-only | cache (+MSHR)        | cache, line-split (+MSHR); stores write-through |
 //! | dma-only   | DMA (1-deep, garbage)| DMA (1-deep)             |
+//!
+//! # The two engines
+//!
+//! [`MemorySystem::run`] is the **event-driven engine** every driver
+//! uses; [`MemorySystem::run_reference`] is the original poll-everything
+//! loop, kept as the correctness oracle. Both execute the *same* loop
+//! body (`run_impl`) over the *same* sequence of visited
+//! cycles — the event engine only adds per-component **activity gates**,
+//! each of which skips a step exactly when that step would be a provable
+//! no-op (no state change *and* no statistics, stall counters included):
+//!
+//! * DRAM channels are only ticked when they have queued work or a
+//!   completion due ([`super::dram::Dram::needs_tick`]);
+//! * LMB housekeeping only visits LMBs with queued DMA transfers or
+//!   blocked line retries ([`Lmb::needs_tick`]);
+//! * fabric transport only runs while requests are resident in the
+//!   fabric ([`super::Fabric::has_traffic`]);
+//! * PE issue only visits front ends that could admit or issue an
+//!   access ([`super::pe::PeFrontEnd::can_issue`]), and retirement
+//!   returns in O(1) until the earliest compute-done cycle;
+//! * the (pure) termination predicate is only re-evaluated on cycles
+//!   where state changed.
+//!
+//! Timed events live in calendar queues — the `deliveries` and
+//! `line_events` binary heaps plus each channel's tracked
+//! earliest-completion / next-schedulable cycle — which both engines
+//! already use to fast-forward over globally idle stretches
+//! (`next_event_time`). Because stall statistics accrue
+//! once per *visited* cycle, the visited-cycle sequence itself must not
+//! change: the event engine therefore keeps the reference time-advance
+//! rule verbatim and takes its ~order-of-magnitude host-time win purely
+//! from not touching quiescent components while *other* components are
+//! busy. `tests/integration_engine.rs` (and the in-module test below)
+//! assert full [`SimReport`] equality between the engines across all
+//! four variants, both fabric types and all three topologies.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use crate::config::{FabricType, SystemConfig, SystemKind};
@@ -21,10 +56,10 @@ use crate::trace::{AccessClass, Workload};
 
 use super::dram::IdGen;
 use super::fabric::Fabric;
-use super::lmb::{Delivery, Lmb, LmbOutcome};
+use super::lmb::{LineEvent, Lmb, LmbOutcome};
 use super::pe::{pack_token, unpack_token, PeFrontEnd};
-use super::stats::SimReport;
-use super::{Cycle, MemReq};
+use super::stats::{PeAggStats, SimReport};
+use super::{Cycle, Delivery, MemReq, ReqId};
 
 /// In-progress multi-part issue (cache-only fiber line splitting).
 #[derive(Debug, Clone, Copy)]
@@ -34,6 +69,40 @@ struct PartialIssue {
     next_addr: u64,
     end_addr: u64,
     is_store: bool,
+}
+
+/// Outstanding direct-to-controller requests: request id → PE token.
+///
+/// The live set is tiny — bounded by the direct-issue limit (ip-only)
+/// or the controller/port queue depths (cache-only stores) — and ids
+/// are minted monotonically, so an insertion-ordered vec with binary
+/// search beats a `HashMap`: no hashing, no per-entry allocation, and
+/// removal is a short shift.
+#[derive(Debug, Default)]
+struct DirectMap {
+    entries: Vec<(ReqId, u64)>,
+}
+
+impl DirectMap {
+    fn insert(&mut self, id: ReqId, token: u64) {
+        debug_assert!(
+            match self.entries.last() {
+                Some(&(last, _)) => last < id,
+                None => true,
+            },
+            "request ids must be inserted in mint order"
+        );
+        self.entries.push((id, token));
+    }
+
+    fn remove(&mut self, id: ReqId) -> Option<u64> {
+        let i = self.entries.binary_search_by_key(&id, |&(k, _)| k).ok()?;
+        Some(self.entries.remove(i).1)
+    }
+
+    fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
 }
 
 /// The composed memory system under simulation.
@@ -46,8 +115,8 @@ pub struct MemorySystem {
     partials: Vec<Option<PartialIssue>>,
     ids: IdGen,
     /// Requests issued directly to the controller (ip-only; cache-only
-    /// stores): request id → PE token.
-    direct: HashMap<u64, u64>,
+    /// stores).
+    direct: DirectMap,
     /// (ready_at, token) — PE access parts with known completion times.
     deliveries: BinaryHeap<Reverse<(Cycle, u64)>>,
     /// (at, lmb, line) — cache lines en route to a Request Reductor.
@@ -56,9 +125,15 @@ pub struct MemorySystem {
     port_cap: usize,
     /// Outstanding direct requests per port (ip-only decoupling limit).
     direct_outstanding: Vec<usize>,
+    /// Running total of `direct_outstanding` (the ip-only limit check
+    /// runs per issued access — no per-access port scan).
+    direct_total: usize,
     direct_limit: usize,
     accesses_served: u64,
     requested_bytes: u64,
+    /// Reusable sinks for the allocation-free component APIs.
+    scratch_events: Vec<LineEvent>,
+    scratch_deliveries: Vec<Delivery>,
 }
 
 impl MemorySystem {
@@ -103,11 +178,12 @@ impl MemorySystem {
             pes,
             partials: vec![None; n_pes],
             ids: IdGen::default(),
-            direct: HashMap::new(),
+            direct: DirectMap::default(),
             deliveries: BinaryHeap::new(),
             line_events: BinaryHeap::new(),
             port_cap: 16,
             direct_outstanding: vec![0; n_ports],
+            direct_total: 0,
             // Naive direct connection: the commercial IP exposes a single
             // command interface; a simple fabric-side master keeps only a
             // handful of reads outstanding (no reordering, no coalescing).
@@ -120,12 +196,30 @@ impl MemorySystem {
             },
             accesses_served: 0,
             requested_bytes: 0,
+            scratch_events: Vec::new(),
+            scratch_deliveries: Vec::new(),
             cfg: cfg.clone(),
         }
     }
 
-    /// Run to completion; returns the report.
+    /// Run to completion with the event-driven engine; returns the
+    /// report. Report-identical to [`MemorySystem::run_reference`]
+    /// (modulo `host_seconds`), only faster.
     pub fn run(&mut self, workload_name: &str) -> SimReport {
+        self.run_impl(workload_name, true)
+    }
+
+    /// Run to completion with the original poll-everything loop — the
+    /// correctness oracle the event-driven engine is checked against.
+    pub fn run_reference(&mut self, workload_name: &str) -> SimReport {
+        self.run_impl(workload_name, false)
+    }
+
+    /// The shared loop body. `event_driven` enables the activity gates;
+    /// with it false every component is polled on every visited cycle
+    /// (the seed behavior). Each gate must only ever skip a provable
+    /// no-op — see the module docs for the per-gate argument.
+    fn run_impl(&mut self, workload_name: &str, event_driven: bool) -> SimReport {
         let host_t0 = Instant::now();
         let mut now: Cycle = 0;
         let total_accesses: u64 = self
@@ -141,19 +235,32 @@ impl MemorySystem {
         loop {
             let mut progress = false;
 
-            // 1. DRAM completions (all channels).
+            // 1. DRAM completions (all channels with schedulable or due
+            //    work; channel order — hence completion order — is the
+            //    same in both engines).
             completions.clear();
-            self.fabric.tick_memory(now, &mut completions);
+            if event_driven {
+                self.fabric.tick_memory_gated(now, &mut completions);
+            } else {
+                self.fabric.tick_memory(now, &mut completions);
+            }
             for resp in completions.drain(..) {
                 progress = true;
-                if let Some(token) = self.direct.remove(&resp.id) {
+                if let Some(token) = self.direct.remove(resp.id) {
                     self.direct_outstanding[resp.port] -= 1;
+                    self.direct_total -= 1;
                     self.deliveries.push(Reverse((resp.done_at + 1, token)));
                     continue;
                 }
-                let lmb = &mut self.lmbs[resp.port];
                 line_evs.clear();
-                for d in lmb.on_dram_completion(resp.id, resp.done_at, &mut line_evs) {
+                self.scratch_deliveries.clear();
+                self.lmbs[resp.port].on_dram_completion(
+                    resp.id,
+                    resp.done_at,
+                    &mut line_evs,
+                    &mut self.scratch_deliveries,
+                );
+                for d in self.scratch_deliveries.drain(..) {
                     self.deliveries.push(Reverse((d.at, d.token)));
                 }
                 for ev in line_evs.drain(..) {
@@ -168,8 +275,10 @@ impl MemorySystem {
                 }
                 self.line_events.pop();
                 progress = true;
-                for Delivery { token, at } in self.lmbs[lmb].line_ready(line, at) {
-                    self.deliveries.push(Reverse((at, token)));
+                self.scratch_deliveries.clear();
+                self.lmbs[lmb].line_ready_into(line, at, &mut self.scratch_deliveries);
+                for d in self.scratch_deliveries.drain(..) {
+                    self.deliveries.push(Reverse((d.at, d.token)));
                 }
             }
 
@@ -186,16 +295,22 @@ impl MemorySystem {
                 }
             }
 
-            // 4. LMB housekeeping (DMA buffer fills, blocked-line retries).
+            // 4. LMB housekeeping (DMA buffer fills, blocked-line
+            //    retries) — only LMBs with pending housekeeping work.
             line_evs.clear();
             for lmb in &mut self.lmbs {
+                if event_driven && !lmb.needs_tick() {
+                    continue;
+                }
                 lmb.tick(now, &mut self.ids, &mut line_evs);
             }
             for ev in line_evs.drain(..) {
                 self.line_events.push(Reverse((ev.at, ev.lmb, ev.line)));
             }
 
-            // 5. LMB outboxes → fabric (bounded ingress per port).
+            // 5. LMB outboxes → fabric (bounded ingress per port). The
+            //    `has_requests` loop condition is itself the activity
+            //    test — idle LMBs cost one boolean check.
             for li in 0..self.lmbs.len() {
                 while self.lmbs[li].has_requests()
                     && self.fabric.port_depth(li) < self.port_cap
@@ -207,12 +322,22 @@ impl MemorySystem {
             }
 
             // 6. Fabric transport: egress into the channel controllers +
-            //    one store-and-forward hop per link.
-            progress |= self.fabric.route(now);
+            //    one store-and-forward hop per link — skipped outright
+            //    while no request is resident in the fabric.
+            if !event_driven || self.fabric.has_traffic() {
+                progress |= self.fabric.route(now);
+            }
 
-            // 7. PE issue + retire.
+            // 7. PE issue + retire — only front ends that could issue
+            //    (pending access, admittable work, or an open line-split
+            //    partial); stalled heads stay "issuable" so their
+            //    per-visited-cycle retry cadence — and thus every stall
+            //    counter — matches the reference loop exactly.
             for pe_idx in 0..self.pes.len() {
-                if self.issue_pe(pe_idx, now) {
+                let issuable = !event_driven
+                    || self.partials[pe_idx].is_some()
+                    || self.pes[pe_idx].can_issue();
+                if issuable && self.issue_pe(pe_idx, now) {
                     progress = true;
                 }
                 if self.pes[pe_idx].retire(now) > 0 {
@@ -220,29 +345,23 @@ impl MemorySystem {
                 }
             }
 
-            // 8. Termination.
-            if self.finished() {
+            // 8. Termination. `finished` is a pure state predicate and
+            //    every completing transition sets `progress`, so the
+            //    event engine only re-evaluates it when state changed.
+            if (!event_driven || progress || now == 0) && self.finished() {
                 break;
             }
 
-            // 9. Advance time: next cycle on progress, else jump to the
-            //    next scheduled event (DRAM completion, delivery, line
-            //    event, the next time a queued DRAM request can issue, or
-            //    — line/ring — the next fabric hop).
+            // 9. Advance time — identical in both engines (the visited-
+            //    cycle sequence is part of the observable behavior):
+            //    next cycle on progress, else jump to the next scheduled
+            //    event (DRAM completion, delivery, line event, the next
+            //    time a queued DRAM request can issue, or — line/ring —
+            //    the next fabric hop).
             if progress {
                 now += 1;
             } else {
-                let next = [
-                    self.deliveries.peek().map(|Reverse((c, _))| *c),
-                    self.line_events.peek().map(|Reverse((c, _, _))| *c),
-                    self.fabric.next_completion(),
-                    self.fabric.next_schedule_time(now),
-                    self.fabric.next_transit_time(now),
-                ]
-                .into_iter()
-                .flatten()
-                .min();
-                match next {
+                match self.next_event_time(now) {
                     Some(c) if c > now => now = c,
                     // Nothing scheduled but not finished → structural
                     // stall that resolves on retry next cycle.
@@ -258,15 +377,20 @@ impl MemorySystem {
         }
 
         let mut latency: [crate::sim::pe::LatencyStats; 4] = Default::default();
-        for pe in &self.pes {
-            for (agg, l) in latency.iter_mut().zip(&pe.stats.latency) {
+        let mut pe_agg = PeAggStats::default();
+        for front in &self.pes {
+            for (agg, l) in latency.iter_mut().zip(&front.stats.latency) {
                 agg.merge(l);
             }
+            pe_agg.retired += front.stats.retired;
+            pe_agg.issued_accesses += front.stats.issued_accesses;
+            pe_agg.stall_cycles += front.stats.stall_cycles;
         }
         SimReport {
             label: self.cfg.label.clone(),
             workload: workload_name.to_string(),
             latency,
+            pe: pe_agg,
             total_cycles: now,
             nnz: self.pes.iter().map(|p| p.total_work() as u64).sum(),
             accesses: self.accesses_served,
@@ -278,6 +402,22 @@ impl MemorySystem {
             lmbs: self.lmbs.iter().map(Lmb::stats).collect(),
             host_seconds: host_t0.elapsed().as_secs_f64(),
         }
+    }
+
+    /// Earliest future cycle anything is scheduled to happen — the fold
+    /// over the event calendar both engines use to fast-forward across
+    /// globally idle stretches.
+    fn next_event_time(&self, now: Cycle) -> Option<Cycle> {
+        [
+            self.deliveries.peek().map(|Reverse((c, _))| *c),
+            self.line_events.peek().map(|Reverse((c, _, _))| *c),
+            self.fabric.next_completion(),
+            self.fabric.next_schedule_time(now),
+            self.fabric.next_transit_time(now),
+        ]
+        .into_iter()
+        .flatten()
+        .min()
     }
 
     fn finished(&self) -> bool {
@@ -353,15 +493,15 @@ impl MemorySystem {
         match self.cfg.kind {
             SystemKind::Proposed => match access.class {
                 AccessClass::TensorElem => {
-                    let mut evs = Vec::new();
+                    self.scratch_events.clear();
                     let r = self.lmbs[port].element_load(
                         access.addr,
                         token,
                         now,
                         &mut self.ids,
-                        &mut evs,
+                        &mut self.scratch_events,
                     );
-                    for ev in evs {
+                    for ev in self.scratch_events.drain(..) {
                         self.line_events.push(Reverse((ev.at, ev.lmb, ev.line)));
                     }
                     self.outcome_to_result(r, token, 1)
@@ -393,6 +533,7 @@ impl MemorySystem {
                         self.lmbs[port].store_through(access.addr, access.bytes, &mut self.ids);
                     self.direct.insert(id, token);
                     self.direct_outstanding[port] += 1;
+                    self.direct_total += 1;
                     DispatchResult::Issued { parts: 1 }
                 }
                 _ => {
@@ -415,9 +556,9 @@ impl MemorySystem {
             },
             SystemKind::IpOnly => {
                 // Naive direct connection: full-width transfers, few
-                // outstanding per port.
-                let total_outstanding: usize = self.direct_outstanding.iter().sum();
-                if total_outstanding >= self.direct_limit
+                // outstanding per port (the limit is maintained as a
+                // running total — no per-access port scan).
+                if self.direct_total >= self.direct_limit
                     || self.fabric.port_depth(port) >= self.port_cap
                 {
                     return DispatchResult::Stall;
@@ -435,6 +576,7 @@ impl MemorySystem {
                 });
                 self.direct.insert(id, token);
                 self.direct_outstanding[port] += 1;
+                self.direct_total += 1;
                 DispatchResult::Issued { parts: 1 }
             }
         }
@@ -487,7 +629,7 @@ enum IssueStep {
     Done,
 }
 
-/// Convenience: build + run in one call.
+/// Convenience: build + run in one call (event-driven engine).
 pub fn simulate(cfg: &SystemConfig, workload: &Workload) -> SimReport {
     MemorySystem::new(cfg, workload).run(&workload.name)
 }
@@ -548,6 +690,23 @@ mod tests {
             let report = simulate(&cfg, &w);
             assert!(report.total_cycles > 0, "{kind:?} did not run");
             assert_eq!(report.nnz, w.nnz as u64);
+        }
+    }
+
+    #[test]
+    fn event_engine_is_report_identical_to_reference_loop() {
+        for fabric in [FabricType::Type1, FabricType::Type2] {
+            let w = small_workload(fabric, 4);
+            for kind in SystemKind::ALL {
+                let cfg = cfg_for(kind, fabric);
+                let event = MemorySystem::new(&cfg, &w).run(&w.name);
+                let reference = MemorySystem::new(&cfg, &w).run_reference(&w.name);
+                assert_eq!(
+                    event.diff(&reference),
+                    None,
+                    "{fabric:?}/{kind:?}: engines diverged"
+                );
+            }
         }
     }
 

@@ -111,6 +111,13 @@ impl<V: Default + Clone> XorHashTable<V> {
 
     /// Insert `key → value` if absent.
     pub fn insert(&mut self, key: u64, value: V) -> InsertOutcome {
+        self.try_insert_with(key, move || value)
+    }
+
+    /// Insert `key` with a lazily-built value: `make` runs only when a
+    /// free slot exists, so callers can keep pooled storage (e.g. the
+    /// RRSH's recycled waiter lists) out of the `Conflict` path.
+    pub fn try_insert_with(&mut self, key: u64, make: impl FnOnce() -> V) -> InsertOutcome {
         if self.get(key).is_some() {
             return InsertOutcome::Exists;
         }
@@ -118,7 +125,7 @@ impl<V: Default + Clone> XorHashTable<V> {
         if !self.t0[i0].valid {
             self.t0[i0] = Slot {
                 key,
-                value,
+                value: make(),
                 valid: true,
             };
             self.len += 1;
@@ -128,7 +135,7 @@ impl<V: Default + Clone> XorHashTable<V> {
         if !self.t1[i1].valid {
             self.t1[i1] = Slot {
                 key,
-                value,
+                value: make(),
                 valid: true,
             };
             self.len += 1;

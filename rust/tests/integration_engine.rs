@@ -1,0 +1,113 @@
+//! Engine-equivalence tests: the event-driven engine
+//! (`MemorySystem::run`) must produce a report *identical* to the
+//! reference poll loop (`MemorySystem::run_reference`) — every cycle
+//! count, access count, DRAM/LMB/fabric counter and latency accumulator
+//! — across all four system variants, both compute-fabric types and all
+//! three interconnect topologies, on randomized workloads. Host
+//! wall-clock time is the only field allowed to differ
+//! (`SimReport::diff` excludes it).
+
+use std::sync::Arc;
+
+use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind, TopologyKind};
+use mttkrp_memsys::experiment::Scenario;
+use mttkrp_memsys::sim::MemorySystem;
+use mttkrp_memsys::tensor::CooTensor;
+use mttkrp_memsys::trace::Workload;
+use mttkrp_memsys::util::prop::check;
+use mttkrp_memsys::util::rng::Rng;
+use mttkrp_memsys::{prop_assert, prop_assert_eq};
+
+/// A randomized small workload + base config (fabric decides the preset,
+/// as in the paper: Config-A drives Type-1, Config-B drives Type-2).
+fn random_case(rng: &mut Rng) -> (CooTensor, SystemConfig) {
+    let dims = [
+        rng.gen_range(60) + 4,
+        rng.gen_range(6_000) + 100,
+        rng.gen_range(9_000) + 100,
+    ];
+    let nnz = rng.gen_usize(40, 400);
+    let t = CooTensor::random(rng, dims, nnz);
+    let mut cfg = if rng.gen_bool(0.5) {
+        SystemConfig::config_a()
+    } else {
+        SystemConfig::config_b()
+    };
+    cfg.pe.fabric = if cfg.n_lmbs == 1 {
+        FabricType::Type1
+    } else {
+        FabricType::Type2
+    };
+    cfg.pe.max_inflight = rng.gen_usize(2, 12);
+    cfg.interconnect.channels = 1 << rng.gen_range(3); // 1, 2 or 4
+    cfg.validate().expect("randomized config must be valid");
+    (t, cfg)
+}
+
+fn wl(t: &CooTensor, cfg: &SystemConfig) -> Arc<Workload> {
+    Scenario::from_tensor(t.clone())
+        .for_config(cfg)
+        .fabric(cfg.pe.fabric)
+        .workload()
+}
+
+#[test]
+fn prop_event_engine_identical_to_reference_across_matrix() {
+    check(
+        "event engine == reference loop",
+        8,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
+            for kind in SystemKind::ALL {
+                for topology in TopologyKind::ALL {
+                    let mut cfg = base.as_baseline(kind);
+                    cfg.interconnect.topology = topology;
+                    let event = MemorySystem::new(&cfg, &w).run(&w.name);
+                    let reference = MemorySystem::new(&cfg, &w).run_reference(&w.name);
+                    prop_assert_eq!(
+                        event.diff(&reference),
+                        None,
+                        "{kind:?}/{topology:?}: engines diverged"
+                    );
+                    // And both engines served the whole trace.
+                    prop_assert_eq!(
+                        event.accesses,
+                        expected,
+                        "{kind:?}/{topology:?}: event engine lost accesses"
+                    );
+                    prop_assert!(
+                        event.total_cycles > 0,
+                        "{kind:?}/{topology:?}: empty run"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn engines_agree_on_the_fig4_scenario_shape() {
+    // One deterministic, larger case per fabric type — the shape the
+    // paper's Fig. 4 numbers (pinned by CI benches) are produced from.
+    for (preset, fabric) in [
+        (SystemConfig::config_a(), FabricType::Type1),
+        (SystemConfig::config_b(), FabricType::Type2),
+    ] {
+        let mut rng = Rng::new(4242);
+        let t = CooTensor::random(&mut rng, [96, 40_000, 60_000], 2_500);
+        let w = Scenario::from_tensor(t).for_config(&preset).fabric(fabric).workload();
+        for kind in SystemKind::ALL {
+            let cfg = preset.as_baseline(kind);
+            let event = MemorySystem::new(&cfg, &w).run(&w.name);
+            let reference = MemorySystem::new(&cfg, &w).run_reference(&w.name);
+            assert_eq!(
+                event.diff(&reference),
+                None,
+                "{fabric:?}/{kind:?}: engines diverged"
+            );
+        }
+    }
+}
