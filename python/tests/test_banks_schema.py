@@ -1,0 +1,113 @@
+"""Schema check for the `banks` bench's JSON-lines output
+(`MEMSYS_BENCH_JSON=<path> cargo bench --bench banks`).
+
+The banks bench sweeps the per-channel LMB bank count x fabric topology
+x reply-network model (config-b behind a 4-channel fabric) and dumps one
+`RunSet` record per grid point. The contract machine consumers rely on:
+
+* every record carries the sweep axes (`lmb_banks`, `topology`,
+  `reply_network`) and the resolved config echoes them back;
+* `report.lmbs[*].banks` has exactly `lmb_banks` entries, each with a
+  populated per-bank `utilization` share (the shares of one LMB sum to
+  1 whenever the LMB saw traffic);
+* `report.fabric.reply` is populated when the reply network is on
+  (deliveries counted, per-reply-link `utilization` present) and
+  provably silent when it is off;
+* turning the reply network on never reduces `total_cycles` for the
+  same (banks, topology) point — the response path only costs.
+
+Runs against the file named by `MEMSYS_BANKS_JSONL` when set (CI's
+bench-smoke job produces one) and always against the committed sample.
+Needs no third-party deps beyond pytest.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from _jsonl_schema import load_records, schema_paths
+
+SAMPLE = Path(__file__).parent / "data" / "banks_sample.jsonl"
+ENV_VAR = "MEMSYS_BANKS_JSONL"
+
+AXES = ("lmb_banks", "topology", "reply_network")
+BANK_FIELDS = (
+    "cache_hits",
+    "cache_misses",
+    "rr_forwarded",
+    "rr_absorbed",
+    "rr_served_temp",
+    "requests",
+    "utilization",
+)
+LINK_FIELDS = ("label", "forwarded", "stall_cycles", "utilization")
+
+
+def _load(path):
+    return load_records(path, ENV_VAR, SAMPLE)
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_records_carry_axes_and_echoed_config(path):
+    for rec in _load(path):
+        for axis in AXES:
+            assert axis in rec["axes"], f"missing axis {axis!r} in {rec['label']!r}"
+        banks = int(rec["axes"]["lmb_banks"])
+        assert banks >= 1
+        assert rec["axes"]["reply_network"] in {"on", "off"}
+        assert rec["config"]["lmb_banks"] == banks, "config must echo the axis"
+        assert rec["config"]["interconnect"]["reply_network"] == (
+            rec["axes"]["reply_network"] == "on"
+        )
+        assert rec["total_cycles"] > 0
+        assert rec["report"]["total_cycles"] == rec["total_cycles"]
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_per_bank_utilization_is_populated(path):
+    for rec in _load(path):
+        banks = int(rec["axes"]["lmb_banks"])
+        lmbs = rec["report"]["lmbs"]
+        assert lmbs, f"{rec['label']!r}: no per-LMB stats in the report"
+        for lmb in lmbs:
+            assert len(lmb["banks"]) == banks, rec["label"]
+            shares = []
+            for bank in lmb["banks"]:
+                for field in BANK_FIELDS:
+                    assert field in bank, f"bank missing {field!r}"
+                assert 0.0 <= bank["utilization"] <= 1.0
+                shares.append(bank["utilization"])
+            if any(b["requests"] > 0 for b in lmb["banks"]):
+                assert abs(sum(shares) - 1.0) < 1e-9, f"{rec['label']!r}: {shares}"
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_reply_counters_track_the_reply_network_axis(path):
+    for rec in _load(path):
+        reply = rec["report"]["fabric"]["reply"]
+        if rec["axes"]["reply_network"] == "on":
+            assert reply["delivered"] > 0, f"{rec['label']!r}: reply network silent"
+            assert reply["links"], f"{rec['label']!r}: no reply links reported"
+            for link in reply["links"]:
+                for field in LINK_FIELDS:
+                    assert field in link, f"reply link missing {field!r}"
+                assert 0.0 <= link["utilization"] <= 1.0
+        else:
+            assert reply["delivered"] == 0, f"{rec['label']!r}: off but delivered"
+            assert not reply["links"], f"{rec['label']!r}: off but has reply links"
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_reply_network_only_adds_cycles(path):
+    by_point = {}
+    for rec in _load(path):
+        key = (rec["axes"]["lmb_banks"], rec["axes"]["topology"])
+        by_point.setdefault(key, {})[rec["axes"]["reply_network"]] = rec["total_cycles"]
+    paired = [g for g in by_point.values() if {"on", "off"} <= set(g)]
+    assert paired, "grid must pair reply on/off per (banks, topology) point"
+    for key, g in by_point.items():
+        if {"on", "off"} <= set(g):
+            assert g["on"] >= g["off"], (
+                f"{key}: modeling the response path sped the system up "
+                f"({g['on']} < {g['off']})"
+            )

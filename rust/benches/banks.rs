@@ -1,0 +1,156 @@
+//! Bench: per-channel LMB banks × reply network — total memory access
+//! time of the proposed system as the LMB cache/RR sharding and the
+//! response-path model vary, on the paper's Config-B / Synth-01 workload
+//! behind a 4-channel fabric. One `experiment::Sweep` over the
+//! `lmb_banks` × `topology` × `reply_network` axes — the Fig. 4-style
+//! comparison for the banked-layout follow-up design (cache-only vs
+//! DMA-only becomes banks=1 vs banks=N, free return vs modeled return).
+//!
+//! The `lmb_banks=1, reply_network=off` row is the pre-bank system (the
+//! regression anchor pinned by `tests/integration_fabric.rs`); the grid
+//! shows what sharding the LMB per channel buys once the reply path is
+//! charged for. Per-bank request share and the hottest reply link show
+//! where each layout saturates.
+//!
+//! `MEMSYS_BENCH_SCALE` (default 0.005) sets the dataset scale. Set
+//! `MEMSYS_BENCH_JSON=<path>` to also dump the RunSet as JSON-lines
+//! (schema-checked by `python/tests/test_banks_schema.py` in CI).
+
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::{Scenario, Sweep};
+use mttkrp_memsys::util::bench::section;
+use mttkrp_memsys::util::table::{Align, Table};
+
+fn main() {
+    let scale: f64 = std::env::var("MEMSYS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    section(&format!(
+        "LMB banks x reply network (config-b, 4 channels, synth01, scale {scale})"
+    ));
+
+    let mut base = SystemConfig::config_b();
+    base.interconnect.channels = 4;
+    let scenario = Scenario::synth01(scale).for_config(&base);
+    let runs = Sweep::new(base, scenario)
+        .axis("lmb_banks", &["1", "2", "4"])
+        .axis("topology", &["crossbar", "ring"])
+        .axis("reply_network", &["off", "on"])
+        .run()
+        .expect("banks sweep");
+
+    let mut table = Table::new(&[
+        "banks",
+        "topology",
+        "reply",
+        "cycles",
+        "speedup",
+        "max bank share",
+        "hot reply link",
+    ])
+    .aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+
+    let anchor = runs
+        .get(&[
+            ("lmb_banks", "1"),
+            ("topology", "crossbar"),
+            ("reply_network", "off"),
+        ])
+        .expect("pre-bank anchor in grid");
+    let anchor_cycles = anchor.report.total_cycles;
+    let expected_accesses = anchor.report.accesses;
+    for run in &runs.runs {
+        let rep = &run.report;
+        // Conservation across the whole grid: no layout loses accesses.
+        assert_eq!(
+            rep.accesses, expected_accesses,
+            "{} lost accesses",
+            run.label()
+        );
+        let max_share = rep
+            .lmbs
+            .iter()
+            .flat_map(|l| {
+                let total: u64 = l.banks.iter().map(|b| b.requests()).sum();
+                l.banks
+                    .iter()
+                    .map(move |b| {
+                        if total == 0 {
+                            0.0
+                        } else {
+                            b.requests() as f64 / total as f64
+                        }
+                    })
+            })
+            .fold(0.0, f64::max);
+        table.row(&[
+            run.axis("lmb_banks").unwrap().to_string(),
+            run.axis("topology").unwrap().to_string(),
+            run.axis("reply_network").unwrap().to_string(),
+            rep.total_cycles.to_string(),
+            format!("{:.2}x", anchor_cycles as f64 / rep.total_cycles as f64),
+            format!("{:.0}%", max_share * 100.0),
+            format!("{:.0}%", rep.max_reply_link_utilization() * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // Invariants this bench locks in:
+    // 1. Modeling the response path can only cost cycles, never save
+    //    them (same request stream, added return latency + contention).
+    for (banks, topo) in [("1", "crossbar"), ("4", "crossbar"), ("4", "ring")] {
+        let free = runs
+            .get(&[("lmb_banks", banks), ("topology", topo), ("reply_network", "off")])
+            .unwrap()
+            .report
+            .total_cycles;
+        let modeled = runs
+            .get(&[("lmb_banks", banks), ("topology", topo), ("reply_network", "on")])
+            .unwrap()
+            .report
+            .total_cycles;
+        assert!(
+            modeled >= free,
+            "banks={banks}/{topo}: reply network sped things up ({modeled} < {free})"
+        );
+    }
+    // 2. With banks == channels every bank carries traffic (the
+    //    per-channel layout actually distributes the element stream).
+    let banked = runs
+        .get(&[("lmb_banks", "4"), ("topology", "crossbar"), ("reply_network", "on")])
+        .unwrap();
+    for (li, l) in banked.report.lmbs.iter().enumerate() {
+        assert_eq!(l.banks.len(), 4);
+        for (bi, b) in l.banks.iter().enumerate() {
+            assert!(b.requests() > 0, "lmb {li} bank {bi} got no traffic");
+        }
+    }
+    // 3. Reply accounting is exact: one delivery per DRAM transaction.
+    let rep = &banked.report;
+    assert_eq!(rep.fabric.reply.delivered, rep.dram.reads + rep.dram.writes);
+    println!(
+        "\nreply network cost at banks=4/crossbar: {:.1}% cycles over the free return path",
+        100.0
+            * (rep.total_cycles as f64
+                / runs
+                    .get(&[("lmb_banks", "4"), ("topology", "crossbar"), ("reply_network", "off")])
+                    .unwrap()
+                    .report
+                    .total_cycles as f64
+                - 1.0)
+    );
+
+    if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
+        runs.write_jsonl(std::path::Path::new(&path)).expect("write jsonl");
+        println!("wrote {} JSON-lines to {path}", runs.len());
+    }
+}

@@ -139,6 +139,13 @@ pub struct InterconnectConfig {
     /// Channel-interleave granularity of the physical address space in
     /// bytes (power of two).
     pub interleave_bytes: u64,
+    /// Model the response path as a first-class reply network: DRAM
+    /// completions traverse the topology back to the requesting port
+    /// over dedicated reply links (per-link bandwidth, bounded queues,
+    /// backpressure) instead of arriving for free. `false` keeps the
+    /// seed behavior — the return path is combinational, exactly the
+    /// pre-reply-network system.
+    pub reply_network: bool,
 }
 
 impl InterconnectConfig {
@@ -151,6 +158,7 @@ impl InterconnectConfig {
             link_width: 1,
             link_queue: 16,
             interleave_bytes: 4096,
+            reply_network: false,
         }
     }
 
@@ -351,6 +359,15 @@ pub struct SystemConfig {
     pub kind: SystemKind,
     /// Number of LMBs (A: 1, B: 4). PEs are distributed round-robin.
     pub n_lmbs: usize,
+    /// Cache + Request-Reductor banks inside each LMB (power of two;
+    /// 1 = the paper's single shared bank). Banks are selected by the
+    /// same `ChannelMap` interleaving the DRAM side uses, so with
+    /// `lmb_banks == interconnect.channels` bank *b* fronts exactly
+    /// channel *b*. Cache lines, MSHR entries and RRSH entries are
+    /// *sharded* across banks (total capacity constant); the CAM temp
+    /// buffer and the MSHR secondary cap stay per-bank (they are width,
+    /// not capacity).
+    pub lmb_banks: usize,
     pub cache: CacheConfig,
     pub dma: DmaConfig,
     pub rr: RrConfig,
@@ -368,6 +385,7 @@ impl SystemConfig {
         SystemConfig {
             kind: SystemKind::Proposed,
             n_lmbs: 1,
+            lmb_banks: 1,
             cache: CacheConfig {
                 associativity: 2,
                 lines: 8192,
@@ -423,6 +441,32 @@ impl SystemConfig {
         crate::util::ceil_div(self.pe.n_pes as u64, self.n_lmbs as u64) as usize
     }
 
+    /// Cache geometry of ONE LMB bank: the configured lines — and the
+    /// MSHR's primary-miss entries — are sharded over `lmb_banks`
+    /// (total capacity constant, so banked comparisons never get free
+    /// extra miss-handling hardware). `mshr_secondary_cap` stays
+    /// per-entry width, like the RR's CAM. With one bank this is
+    /// exactly `self.cache`.
+    pub fn bank_cache(&self) -> CacheConfig {
+        // Exact division (validated): no silent round-up, and banks=1
+        // reproduces `self.cache` bit-for-bit.
+        CacheConfig {
+            lines: self.cache.lines / self.lmb_banks.max(1),
+            mshr_entries: self.cache.mshr_entries / self.lmb_banks.max(1),
+            ..self.cache.clone()
+        }
+    }
+
+    /// Request-Reductor geometry of ONE LMB bank: RRSH entries are
+    /// sharded over `lmb_banks`; the CAM temp buffer stays per-bank.
+    /// With one bank this is exactly `self.rr`.
+    pub fn bank_rr(&self) -> RrConfig {
+        RrConfig {
+            rrsh_entries: (self.rr.rrsh_entries / self.lmb_banks.max(1)).max(1),
+            ..self.rr.clone()
+        }
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.n_lmbs == 0 {
             return Err("system: n_lmbs must be > 0".into());
@@ -433,7 +477,50 @@ impl SystemConfig {
                 self.n_lmbs, self.pe.n_pes
             ));
         }
+        if self.lmb_banks == 0 || !is_pow2(self.lmb_banks as u64) {
+            return Err(format!(
+                "system: lmb_banks {} must be a power of two",
+                self.lmb_banks
+            ));
+        }
+        if self.cache.lines % self.lmb_banks != 0 {
+            return Err(format!(
+                "system: cache.lines {} not divisible by lmb_banks {}",
+                self.cache.lines, self.lmb_banks
+            ));
+        }
+        if self.cache.mshr_entries % self.lmb_banks != 0 {
+            // Sharding must not round up: a non-divisible MSHR file
+            // would silently grant banked configs extra miss-handling
+            // hardware and bias banked-vs-monolithic comparisons.
+            return Err(format!(
+                "system: cache.mshr_entries {} not divisible by lmb_banks {}",
+                self.cache.mshr_entries, self.lmb_banks
+            ));
+        }
+        if self.rr.rrsh_entries < 2 * self.lmb_banks {
+            // Each bank's sharded RRSH is a hash table needing >= 2
+            // entries — catch it here as a config error, not a panic
+            // deep inside system construction.
+            return Err(format!(
+                "system: rr.rrsh_entries {} must be >= 2 x lmb_banks {}",
+                self.rr.rrsh_entries, self.lmb_banks
+            ));
+        }
+        if self.lmb_banks > 1 && self.interconnect.interleave_bytes < self.cache.line_bytes() {
+            return Err(format!(
+                "system: interleave_bytes {} < cache line {} B — a line \
+                 would span LMB banks",
+                self.interconnect.interleave_bytes,
+                self.cache.line_bytes()
+            ));
+        }
         self.cache.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        // The sharded per-bank geometry must itself be a valid cache
+        // (associativity divides the per-bank lines, sets stay pow2).
+        self.bank_cache()
+            .validate()
+            .map_err(|e| format!("{}: per-bank {e}", self.label))?;
         self.dma.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.rr.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.dram.validate().map_err(|e| format!("{}: {e}", self.label))?;
@@ -447,11 +534,14 @@ impl SystemConfig {
         let parse_usize =
             |v: &str| v.parse::<usize>().map_err(|e| format!("{key}={v}: {e}"));
         let parse_u64 = |v: &str| v.parse::<u64>().map_err(|e| format!("{key}={v}: {e}"));
-        // Interconnect shorthands (`--channels 4` on the CLI).
+        // Interconnect + LMB shorthands (`--channels 4`, `--lmb-banks 4`,
+        // `--reply-network on` on the CLI).
         let key = match key {
             "channels" => "interconnect.channels",
             "topology" => "interconnect.topology",
             "link_width" => "interconnect.link_width",
+            "reply_network" | "reply-network" => "interconnect.reply_network",
+            "lmb_banks" | "lmb-banks" => "system.lmb_banks",
             other => other,
         };
         match key {
@@ -460,6 +550,7 @@ impl SystemConfig {
                     SystemKind::from_name(value).ok_or(format!("unknown kind {value:?}"))?
             }
             "system.n_lmbs" => self.n_lmbs = parse_usize(value)?,
+            "system.lmb_banks" => self.lmb_banks = parse_usize(value)?,
             "cache.associativity" => self.cache.associativity = parse_usize(value)?,
             "cache.lines" => self.cache.lines = parse_usize(value)?,
             "cache.line_bits" => self.cache.line_bits = parse_usize(value)?,
@@ -486,6 +577,13 @@ impl SystemConfig {
             "interconnect.link_queue" => self.interconnect.link_queue = parse_usize(value)?,
             "interconnect.interleave_bytes" => {
                 self.interconnect.interleave_bytes = parse_u64(value)?
+            }
+            "interconnect.reply_network" => {
+                self.interconnect.reply_network = match value {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => return Err(format!("reply_network {other:?}: expected on|off")),
+                }
             }
             "dram.t_row_hit" => self.dram.t_row_hit = parse_u64(value)?,
             "dram.t_row_miss" => self.dram.t_row_miss = parse_u64(value)?,
@@ -517,6 +615,7 @@ impl SystemConfig {
             ("label", Json::str(self.label.clone())),
             ("kind", Json::str(self.kind.name())),
             ("n_lmbs", Json::num(self.n_lmbs as f64)),
+            ("lmb_banks", Json::num(self.lmb_banks as f64)),
             (
                 "cache",
                 Json::obj(vec![
@@ -551,6 +650,7 @@ impl SystemConfig {
                     ("link_width", Json::num(self.interconnect.link_width as f64)),
                     ("link_queue", Json::num(self.interconnect.link_queue as f64)),
                     ("interleave_bytes", Json::num(self.interconnect.interleave_bytes as f64)),
+                    ("reply_network", Json::Bool(self.interconnect.reply_network)),
                 ]),
             ),
             (
@@ -681,6 +781,77 @@ mod tests {
         c.interconnect.channels = 2;
         c.interconnect.interleave_bytes = 1000;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lmb_bank_defaults_and_sharding() {
+        // Default: one shared bank — the paper's LMB, bit-identical to
+        // the pre-bank system.
+        let a = SystemConfig::config_a();
+        assert_eq!(a.lmb_banks, 1);
+        assert_eq!(a.bank_cache(), a.cache);
+        assert_eq!(a.bank_rr(), a.rr);
+        assert!(!a.interconnect.reply_network);
+
+        // Banks shard cache lines + RRSH entries; the CAM stays as-is.
+        let mut b = SystemConfig::config_b();
+        b.apply_override("lmb_banks", "4").unwrap();
+        assert_eq!(b.lmb_banks, 4);
+        b.validate().unwrap();
+        assert_eq!(b.bank_cache().lines, 1024);
+        assert_eq!(b.bank_cache().associativity, b.cache.associativity);
+        assert_eq!(b.bank_cache().mshr_entries, 2, "MSHR entries shard too");
+        assert_eq!(b.bank_cache().mshr_secondary_cap, b.cache.mshr_secondary_cap);
+        assert_eq!(b.bank_rr().rrsh_entries, 1024);
+        assert_eq!(b.bank_rr().temp_buffer_entries, b.rr.temp_buffer_entries);
+    }
+
+    #[test]
+    fn lmb_bank_validation() {
+        let mut c = SystemConfig::config_b();
+        c.lmb_banks = 3;
+        assert!(c.validate().is_err(), "banks must be a power of two");
+        c.lmb_banks = 0;
+        assert!(c.validate().is_err());
+        c.lmb_banks = 2;
+        c.cache.lines = 4098; // not divisible by banks
+        assert!(c.validate().is_err());
+        c.cache.lines = 4096;
+        c.validate().unwrap();
+        // A cache line must never span banks.
+        c.interconnect.interleave_bytes = 32;
+        assert!(c.validate().is_err());
+        c.interconnect.interleave_bytes = 64;
+        c.validate().unwrap();
+        // Each bank's sharded RRSH must hold at least 2 entries.
+        c.rr.rrsh_entries = 2;
+        assert!(c.validate().is_err(), "2 entries over 2 banks is too small");
+        c.rr.rrsh_entries = 4;
+        c.validate().unwrap();
+        // The MSHR file must shard evenly too — no silent round-up.
+        c.cache.mshr_entries = 3;
+        assert!(c.validate().is_err(), "3 MSHR entries cannot shard over 2 banks");
+        c.cache.mshr_entries = 4;
+        c.validate().unwrap();
+        assert_eq!(c.bank_cache().mshr_entries, 2);
+    }
+
+    #[test]
+    fn reply_network_override_round_trips() {
+        let mut c = SystemConfig::config_b();
+        for (v, want) in [("on", true), ("off", false), ("true", true), ("0", false)] {
+            c.apply_override("reply-network", v).unwrap();
+            assert_eq!(c.interconnect.reply_network, want, "{v}");
+        }
+        c.apply_override("interconnect.reply_network", "1").unwrap();
+        assert!(c.interconnect.reply_network);
+        assert!(c.apply_override("reply_network", "maybe").is_err());
+        let j = c.to_json();
+        assert_eq!(
+            j.get("interconnect").unwrap().get("reply_network").unwrap().as_bool(),
+            Some(true)
+        );
+        assert_eq!(j.get("lmb_banks").unwrap().as_usize(), Some(1));
     }
 
     #[test]

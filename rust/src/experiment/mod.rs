@@ -14,19 +14,34 @@
 //! * [`RunSet`] — *the results*: baseline/speedup lookups, ASCII table
 //!   rendering, and JSON-lines serialization for machine consumers.
 //!
-//! ```no_run
+//! The flow below is a *runnable* doc-test (`cargo test` compiles and
+//! executes it on a tiny random tensor — the paper-scale equivalent
+//! swaps in `Scenario::synth01(scale)`):
+//!
+//! ```
 //! use mttkrp_memsys::config::SystemConfig;
 //! use mttkrp_memsys::experiment::{Scenario, Sweep};
 //!
+//! // 1. Scenario — *what* is simulated (tensor, mode, fabric, geometry).
 //! let base = SystemConfig::config_b();
-//! let scenario = Scenario::synth01(0.002).for_config(&base);
+//! let scenario = Scenario::random([32, 2_000, 3_000], 120, 7).for_config(&base);
+//!
+//! // 2. Sweep — *which variants*: a cartesian grid over named axes,
+//! //    run in parallel with deterministic (grid-order) results.
 //! let runs = Sweep::new(base, scenario)
 //!     .axis("system", &["ip-only", "proposed"])
-//!     .axis("channels", &["1", "4"])
-//!     .threads(4)
+//!     .axis("lmb_banks", &["1", "2"])
+//!     .threads(2)
 //!     .run()
 //!     .unwrap();
-//! println!("{}", runs.to_table(Some(("system", "ip-only"))).render());
+//!
+//! // 3. RunSet — the results: lookups, speedups, tables, JSON-lines.
+//! assert_eq!(runs.len(), 4);
+//! let ip = runs.get(&[("system", "ip-only"), ("lmb_banks", "1")]).unwrap();
+//! let prop = runs.get(&[("system", "proposed"), ("lmb_banks", "1")]).unwrap();
+//! assert!(prop.report.speedup_over(&ip.report) > 0.0);
+//! let table = runs.to_table(Some(("system", "ip-only"))).render();
+//! assert!(table.contains("lmb_banks"));
 //! ```
 
 mod runset;

@@ -50,7 +50,8 @@ pub struct Point {
 /// * `fabric` — compute-fabric type (sets both the scenario trace shape
 ///   and `pe.fabric`).
 /// * anything else — a [`SystemConfig::apply_override`] key, including
-///   the `channels` / `topology` / `link_width` shorthands.
+///   the `channels` / `topology` / `link_width` / `lmb_banks` /
+///   `reply_network` shorthands.
 #[derive(Debug, Clone)]
 pub struct Sweep {
     base: SystemConfig,

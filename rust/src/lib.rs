@@ -22,6 +22,16 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (partials +
 //!   scatter-as-matmul), lowered with `interpret=True` into the same HLO.
 //!
+//! ## Where to read next
+//!
+//! `docs/ARCHITECTURE.md` walks the full request lifecycle (tensor
+//! element → PE → LMB bank → fabric → DRAM channel → reply network →
+//! retire) and maps every module to the paper section/figure it
+//! reproduces and every bench/test to the claim it pins. Each `sim`
+//! and `experiment` module carries the corresponding paper quotes and
+//! invariants in its rustdoc header (this documentation builds
+//! warning-clean under `cargo doc --no-deps`, gated in CI).
+//!
 //! ## Quickstart
 //!
 //! ```bash

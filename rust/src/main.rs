@@ -65,13 +65,14 @@ USAGE: mttkrp-memsys <subcommand> [--options]
   table3    [--scale 1.0]             Table III dataset summary
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
             [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
-            [--link_width W] [--scale 0.01] [--dataset synth01|synth02]
-            [--<section.key> v]
+            [--link_width W] [--lmb-banks N] [--reply-network on|off]
+            [--scale 0.01] [--dataset synth01|synth02] [--<section.key> v]
   sweep     --axis key=v1,v2,... [--axis ...] [--threads N]
             [--baseline axis=value] [--out runs.jsonl]
             [--preset b] [--dataset synth01] [--scale 0.01] [--mode i|j|k]
             (axes: system, preset, dataset, scale, mode, fabric, channels,
-             topology, link_width, and any --<section.key> override key)
+             topology, link_width, lmb_banks, reply_network, and any
+             --<section.key> override key)
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
   gen       --out t.tns [--dataset synth01] [--scale 0.01]
@@ -106,10 +107,19 @@ fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
             cfg.apply_override(k, v).map_err(|e| anyhow::anyhow!(e))?;
         }
     }
-    // Interconnect shorthands: `--channels 4 --topology ring --link_width 2`.
-    for key in ["channels", "topology", "link_width"] {
+    // Interconnect + LMB shorthands: `--channels 4 --topology ring
+    // --link_width 2 --lmb-banks 4 --reply-network on`.
+    for key in ["channels", "topology", "link_width", "lmb-banks", "lmb_banks"] {
         if let Some(v) = args.get(key) {
             cfg.apply_override(key, v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+    }
+    for key in ["reply-network", "reply_network"] {
+        if let Some(v) = args.get(key) {
+            cfg.apply_override(key, v).map_err(|e| anyhow::anyhow!(e))?;
+        } else if args.flag(key) {
+            // Bare `--reply-network` means "turn it on".
+            cfg.apply_override(key, "on").map_err(|e| anyhow::anyhow!(e))?;
         }
     }
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
@@ -242,13 +252,25 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     // A preset axis rebuilds the config from scratch at every grid
     // point, so base-level config flags would be silently lost.
     let has_base_overrides = args.options().any(|(k, _)| k.contains('.'))
-        || ["system", "channels", "topology", "link_width"]
-            .iter()
-            .any(|k| args.get(k).is_some());
+        || [
+            "system",
+            "channels",
+            "topology",
+            "link_width",
+            "lmb-banks",
+            "lmb_banks",
+            "reply-network",
+            "reply_network",
+        ]
+        .iter()
+        .any(|k| args.get(k).is_some())
+        // Bare `--reply-network` (flag form) also sets the base config.
+        || ["reply-network", "reply_network"].iter().any(|k| args.flag(k));
     if has_preset_axis && has_base_overrides {
         eprintln!(
             "warning: --axis preset=... resets the config per grid point; base --system, \
-             --<section.key>, --channels/--topology/--link_width flags are ignored there"
+             --<section.key>, --channels/--topology/--link_width/--lmb-banks/--reply-network \
+             flags are ignored there"
         );
     }
     let baseline = match args.get("baseline") {

@@ -6,7 +6,7 @@
 //!   the cache-line width similar to the data width of DRAM Interface IP".
 //! * Whole cache-*lines* are returned toward the Request Reductor; the RR
 //!   fans individual elements out to PEs (§IV-B).
-//! * Misses allocate [`mshr`] entries; the *conventional* MSHR used by the
+//! * Misses allocate [`super::mshr`] entries; the *conventional* MSHR used by the
 //!   cache-only baseline has a bounded secondary-miss capacity, which is
 //!   exactly the bottleneck §V-D blames for the cache-only system's loss
 //!   ("conventional MSHR can not handle a large number of secondary cache
@@ -49,6 +49,17 @@ pub struct CacheStats {
 impl CacheStats {
     pub fn accesses(&self) -> u64 {
         self.hits + self.primary_misses + self.merged_misses
+    }
+
+    /// Fold another bank's counters into this one (per-LMB aggregate
+    /// over its cache banks).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.hits += other.hits;
+        self.primary_misses += other.primary_misses;
+        self.merged_misses += other.merged_misses;
+        self.blocked += other.blocked;
+        self.evictions += other.evictions;
+        self.fills += other.fills;
     }
 
     pub fn hit_rate(&self) -> f64 {

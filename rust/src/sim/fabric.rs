@@ -23,9 +23,24 @@
 //! pins this equivalence against [`super::router::Router`] on a fixed
 //! trace.
 //!
-//! Replies return directly to the issuing port on completion (as in the
-//! seed router, whose data return path is combinational); only the
-//! request path is hop-accurate.
+//! # The reply network
+//!
+//! With [`InterconnectConfig::reply_network`] **off** (the default),
+//! replies return directly to the issuing port on completion — as in the
+//! seed router, whose data return path is combinational — and only the
+//! request path is hop-accurate. That code path is untouched and remains
+//! the bit-identical regression anchor.
+//!
+//! With it **on**, the response path becomes a first-class network:
+//! every DRAM completion enters a per-node reply buffer and traverses
+//! the topology *back* to the requesting port over dedicated reply
+//! links — mirrors of the request links with their own
+//! [`InterconnectConfig::link_width`] budgets, bounded queues,
+//! backpressure, and [`LinkStats`] counters (labels `r:nA->nB`; the
+//! crossbar's virtual return buses are `chC->pP`). Each port accepts at
+//! most one reply per cycle (its return-data bus), so same-port
+//! completion bursts serialize — the cost the free return path hides.
+//! Reply-side counters live in [`ReplyStats`].
 
 use std::collections::VecDeque;
 
@@ -181,6 +196,22 @@ impl LinkStats {
     }
 }
 
+/// Reply-network statistics (all zero / empty when the reply network is
+/// off — the return path is combinational then and has no counters).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplyStats {
+    /// Replies delivered back to their requesting port.
+    pub delivered: u64,
+    /// Total reply-link traversals (0 for crossbar).
+    pub hops: u64,
+    /// Cycles a deliverable reply was held by an exhausted per-port
+    /// return bus (crossbar arbitration contention).
+    pub backpressure_cycles: u64,
+    /// Per-reply-link counters (`r:nA->nB`, or `chC->pP` virtual return
+    /// buses for the crossbar).
+    pub links: Vec<LinkStats>,
+}
+
 /// Fabric-level statistics.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FabricStats {
@@ -193,6 +224,8 @@ pub struct FabricStats {
     pub per_port_forwarded: Vec<u64>,
     pub per_channel_forwarded: Vec<u64>,
     pub links: Vec<LinkStats>,
+    /// Response-path counters (see [`ReplyStats`]).
+    pub reply: ReplyStats,
 }
 
 /// Where an egress arbiter may pull requests from at one fabric node.
@@ -202,6 +235,16 @@ enum Source {
     /// port is visible at every node).
     Port(usize),
     /// Arrival queue of an incoming link (by link id).
+    Link(usize),
+}
+
+/// Where a reply arbiter may pull completions from at one fabric node
+/// (line/ring reply transport).
+#[derive(Debug, Clone, Copy)]
+enum ReplySource {
+    /// The node's own reply buffer (its channel's completions).
+    Node,
+    /// Arrival queue of an incoming reply link (by link id).
     Link(usize),
 }
 
@@ -236,6 +279,37 @@ pub struct Fabric {
     /// Reusable per-link hop budget for [`Fabric::route`] (line/ring) —
     /// sized once per call without reallocating.
     hop_budget: Vec<usize>,
+    /// Reply network on? (`false` keeps the combinational return path.)
+    reply_enabled: bool,
+    /// Per-node reply buffers: completions of node `n`'s channel wait
+    /// here for the reply transport (unbounded — the channel's response
+    /// FIFO; bandwidth is bounded at the links and port buses).
+    reply_at_node: Vec<VecDeque<MemResp>>,
+    /// In-transit replies per reply link, tagged with hop-arrival cycle
+    /// (line/ring; empty for crossbar).
+    reply_links: Vec<VecDeque<(MemResp, Cycle)>>,
+    /// Reply arbitration sources per node (line/ring).
+    reply_sources: Vec<Vec<ReplySource>>,
+    /// Per-node reply delivery round-robin pointer (line/ring).
+    rr_reply_egress: Vec<usize>,
+    /// Per-node reply hop round-robin pointer (line/ring).
+    rr_reply_hop: Vec<usize>,
+    /// Per-port return-bus budget, reset each route call (crossbar).
+    reply_port_budget: Vec<u8>,
+    /// Rotating channel-scan start for crossbar reply arbitration —
+    /// advanced only past a channel that actually delivered, so the
+    /// event engine's skipped (no-op) route calls cannot diverge from
+    /// the reference loop's.
+    rr_reply_xbar: usize,
+    /// Reusable per-reply-link hop budget (line/ring).
+    reply_hop_budget: Vec<usize>,
+    /// Replies that finished transport, `done_at` = delivery cycle.
+    reply_out: VecDeque<MemResp>,
+    /// Reusable completion sink for channel ticks (reply mode).
+    reply_scratch: Vec<MemResp>,
+    /// Replies resident in node buffers + reply links (idle/busy checks
+    /// without scanning).
+    reply_occupancy: usize,
     pub stats: FabricStats,
 }
 
@@ -275,6 +349,45 @@ impl Fabric {
         for (lid, &(_, to)) in phys.iter().enumerate() {
             sources[to].push(Source::Link(lid));
         }
+        // Reply network: dedicated reply links mirroring the physical
+        // links (line/ring) or virtual per-port return buses (crossbar),
+        // each with its own stats row.
+        let mut reply_link_stats = Vec::new();
+        let mut reply_sources = vec![Vec::new(); nodes];
+        if ic.reply_network {
+            match ic.topology {
+                TopologyKind::Crossbar => {
+                    for c in 0..nodes {
+                        for p in 0..n_ports {
+                            reply_link_stats.push(LinkStats {
+                                label: format!("ch{c}->p{p}"),
+                                ..LinkStats::default()
+                            });
+                        }
+                    }
+                }
+                TopologyKind::Line | TopologyKind::Ring => {
+                    for &(from, to) in &phys {
+                        reply_link_stats.push(LinkStats {
+                            label: format!("r:n{from}->n{to}"),
+                            ..LinkStats::default()
+                        });
+                    }
+                    // Reply sources per node: the node's own channel
+                    // buffer first, then incoming reply links.
+                    for (node, srcs) in reply_sources.iter_mut().enumerate() {
+                        srcs.push(ReplySource::Node);
+                        for (lid, &(_, to)) in phys.iter().enumerate() {
+                            if to == node {
+                                srcs.push(ReplySource::Link(lid));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let reply_sf = ic.reply_network && !matches!(ic.topology, TopologyKind::Crossbar);
+        let n_reply_links = if reply_sf { phys.len() } else { 0 };
         Fabric {
             kind: ic.topology,
             chmap: ChannelMap::new(ic.channels, ic.interleave_bytes),
@@ -291,10 +404,26 @@ impl Fabric {
             ingress_occupancy: 0,
             link_occupancy: 0,
             hop_budget: Vec::new(),
+            reply_enabled: ic.reply_network,
+            reply_at_node: (0..nodes).map(|_| VecDeque::new()).collect(),
+            reply_links: (0..n_reply_links).map(|_| VecDeque::new()).collect(),
+            reply_sources,
+            rr_reply_egress: vec![0; nodes],
+            rr_reply_hop: vec![0; nodes],
+            reply_port_budget: vec![0; n_ports],
+            rr_reply_xbar: 0,
+            reply_hop_budget: Vec::new(),
+            reply_out: VecDeque::new(),
+            reply_scratch: Vec::new(),
+            reply_occupancy: 0,
             stats: FabricStats {
                 per_port_forwarded: vec![0; n_ports],
                 per_channel_forwarded: vec![0; nodes],
                 links: link_stats,
+                reply: ReplyStats {
+                    links: reply_link_stats,
+                    ..ReplyStats::default()
+                },
                 ..FabricStats::default()
             },
         }
@@ -320,39 +449,76 @@ impl Fabric {
         self.ingress[port].len()
     }
 
-    /// Advance every DRAM channel to `now`, collecting completions.
+    /// Advance every DRAM channel to `now`, collecting completions. With
+    /// the reply network on, fresh completions enter the reply transport
+    /// instead and `completions` receives the replies whose traversal
+    /// finished by `now` (their `done_at` rewritten to the delivery
+    /// cycle).
     pub fn tick_memory(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
-        for ch in &mut self.channels {
-            ch.tick(now, completions);
-        }
+        self.tick_channels(now, completions, false);
     }
 
     /// Event-driven variant of [`Fabric::tick_memory`]: only advance
     /// channels with schedulable or due work. Skipped channels are
     /// provable no-ops (empty queue, no completion due at `now`), and
-    /// channel order — hence completion order — is preserved.
+    /// channel order — hence completion order — is preserved. Due reply
+    /// deliveries drain unconditionally, exactly as in the ungated
+    /// variant.
     pub fn tick_memory_gated(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
-        for ch in &mut self.channels {
-            if ch.needs_tick(now) {
-                ch.tick(now, completions);
+        self.tick_channels(now, completions, true);
+    }
+
+    fn tick_channels(&mut self, now: Cycle, completions: &mut Vec<MemResp>, gated: bool) {
+        // Replies that finished transport in an earlier cycle surface
+        // first (they completed strictly before anything due at `now`).
+        while let Some(resp) = self.reply_out.front() {
+            if resp.done_at > now {
+                break;
+            }
+            completions.push(self.reply_out.pop_front().unwrap());
+        }
+        for c in 0..self.channels.len() {
+            if gated && !self.channels[c].needs_tick(now) {
+                continue;
+            }
+            if self.reply_enabled {
+                self.reply_scratch.clear();
+                self.channels[c].tick(now, &mut self.reply_scratch);
+                for resp in self.reply_scratch.drain(..) {
+                    self.reply_at_node[c].push_back(resp);
+                    self.reply_occupancy += 1;
+                }
+            } else {
+                self.channels[c].tick(now, completions);
             }
         }
     }
 
-    /// Any requests resident in the fabric (ingress queues or links)?
-    /// When false, [`Fabric::route`] is a provable no-op.
+    /// Any requests or replies resident in the fabric (ingress queues,
+    /// links, reply buffers)? When false, [`Fabric::route`] is a
+    /// provable no-op.
     pub fn has_traffic(&self) -> bool {
-        self.ingress_occupancy + self.link_occupancy > 0
+        self.ingress_occupancy + self.link_occupancy + self.reply_occupancy > 0
     }
 
-    /// Move requests through the fabric for one cycle: egress into the
-    /// channel controllers, then one store-and-forward hop per link.
-    /// Returns true if anything moved.
+    /// Move requests — and, when modeled, replies — through the fabric
+    /// for one cycle: egress into the channel controllers, one
+    /// store-and-forward hop per link, then the mirror image on the
+    /// reply side. Returns true if anything moved.
     pub fn route(&mut self, now: Cycle) -> bool {
-        match self.kind {
+        let mut moved = match self.kind {
             TopologyKind::Crossbar => self.route_crossbar(now),
             TopologyKind::Line | TopologyKind::Ring => self.route_store_forward(now),
+        };
+        if self.reply_enabled {
+            moved |= match self.kind {
+                TopologyKind::Crossbar => self.route_reply_crossbar(now),
+                TopologyKind::Line | TopologyKind::Ring => {
+                    self.route_reply_store_forward(now)
+                }
+            };
         }
+        moved
     }
 
     /// Crossbar: per-channel round-robin over all port queues — the seed
@@ -502,6 +668,156 @@ impl Fabric {
         }
     }
 
+    /// Crossbar reply arbitration: each channel offers its FIFO head;
+    /// each port accepts at most one reply per cycle over its virtual
+    /// return bus (`chC->pP`). Channels are scanned round-robin (the
+    /// mirror of the forward crossbar's `rr_egress`) so a contended
+    /// port's bus is shared fairly instead of favoring low channel
+    /// indices; a head held by an exhausted bus counts a stall on it.
+    fn route_reply_crossbar(&mut self, now: Cycle) -> bool {
+        let n_ports = self.ingress.len();
+        let nch = self.reply_at_node.len();
+        let mut moved = false;
+        let mut advanced = false;
+        self.reply_port_budget.fill(1);
+        for k in 0..nch {
+            let c = (self.rr_reply_xbar + k) % nch;
+            let Some(&resp) = self.reply_at_node[c].front() else {
+                continue;
+            };
+            let lid = c * n_ports + resp.port;
+            if self.reply_port_budget[resp.port] == 0 {
+                self.stats.reply.links[lid].stall_cycles += 1;
+                self.stats.reply.backpressure_cycles += 1;
+                continue;
+            }
+            self.reply_port_budget[resp.port] -= 1;
+            self.reply_at_node[c].pop_front();
+            self.reply_occupancy -= 1;
+            self.stats.reply.links[lid].forwarded += 1;
+            self.stats.reply.delivered += 1;
+            self.reply_out.push_back(MemResp { done_at: now + 1, ..resp });
+            moved = true;
+            if !advanced {
+                self.rr_reply_xbar = (c + 1) % nch;
+                advanced = true;
+            }
+        }
+        moved
+    }
+
+    /// Line/ring reply transport — the mirror image of
+    /// [`Fabric::route_store_forward`]: replies drain to their port when
+    /// they reach its ingress node (one per node per cycle), otherwise
+    /// advance one reply link toward it (one cycle per hop, `link_width`
+    /// per link per cycle, bounded queues with backpressure).
+    fn route_reply_store_forward(&mut self, now: Cycle) -> bool {
+        let nodes = self.channels.len();
+        let topo = topology_of(self.kind);
+        let mut moved = false;
+        // Phase 1: delivery at each node.
+        for node in 0..nodes {
+            let nsrc = self.reply_sources[node].len();
+            if nsrc == 0 {
+                continue;
+            }
+            let mut delivered = 0;
+            let mut scanned = 0;
+            while delivered < self.cmds_per_cycle && scanned < nsrc {
+                let si = (self.rr_reply_egress[node] + scanned) % nsrc;
+                let Some((resp, dest)) = self.reply_source_head(node, si, now) else {
+                    scanned += 1;
+                    continue;
+                };
+                if dest != node {
+                    scanned += 1;
+                    continue;
+                }
+                self.pop_reply_source(node, si);
+                self.stats.reply.delivered += 1;
+                self.reply_out.push_back(MemResp { done_at: now + 1, ..resp });
+                delivered += 1;
+                moved = true;
+                self.rr_reply_egress[node] = (si + 1) % nsrc;
+                scanned = 0;
+            }
+        }
+        // Phase 2: hop in-transit replies one reply link forward.
+        self.reply_hop_budget.clear();
+        self.reply_hop_budget.resize(self.reply_links.len(), self.link_width);
+        for node in 0..nodes {
+            let nsrc = self.reply_sources[node].len();
+            if nsrc == 0 {
+                continue;
+            }
+            let start = self.rr_reply_hop[node];
+            let mut advanced = false;
+            for k in 0..nsrc {
+                let si = (start + k) % nsrc;
+                let Some((resp, dest)) = self.reply_source_head(node, si, now) else {
+                    continue;
+                };
+                if dest == node {
+                    continue; // waiting on the delivery budget
+                }
+                let next = topo
+                    .next_hop(node, dest, nodes)
+                    .expect("non-local reply must have a next hop");
+                let lid = self.link_id[node][next].expect("reply route uses a physical link");
+                if self.reply_hop_budget[lid] == 0
+                    || self.reply_links[lid].len() >= self.link_queue_cap
+                {
+                    self.stats.reply.links[lid].stall_cycles += 1;
+                    continue;
+                }
+                self.pop_reply_source(node, si);
+                self.reply_links[lid].push_back((resp, now + 1));
+                self.reply_occupancy += 1;
+                self.reply_hop_budget[lid] -= 1;
+                self.stats.reply.links[lid].forwarded += 1;
+                self.stats.reply.hops += 1;
+                moved = true;
+                if !advanced {
+                    self.rr_reply_hop[node] = (si + 1) % nsrc;
+                    advanced = true;
+                }
+            }
+        }
+        moved
+    }
+
+    /// Head reply of one reply source, with its destination node (the
+    /// requesting port's ingress node). Reply-link entries become
+    /// visible one cycle after the hop.
+    fn reply_source_head(&self, node: usize, si: usize, now: Cycle) -> Option<(MemResp, usize)> {
+        let nodes = self.channels.len();
+        let topo = topology_of(self.kind);
+        match self.reply_sources[node][si] {
+            ReplySource::Node => {
+                let resp = *self.reply_at_node[node].front()?;
+                Some((resp, topo.ingress_node(resp.port, nodes)))
+            }
+            ReplySource::Link(l) => match self.reply_links[l].front() {
+                Some(&(resp, ready)) if ready <= now => {
+                    Some((resp, topo.ingress_node(resp.port, nodes)))
+                }
+                _ => None,
+            },
+        }
+    }
+
+    fn pop_reply_source(&mut self, node: usize, si: usize) {
+        match self.reply_sources[node][si] {
+            ReplySource::Node => {
+                self.reply_at_node[node].pop_front();
+            }
+            ReplySource::Link(l) => {
+                self.reply_links[l].pop_front();
+            }
+        }
+        self.reply_occupancy -= 1;
+    }
+
     /// Hand a request (already rewritten to its channel-local address)
     /// to channel `ch`'s controller.
     fn deliver(&mut self, req: MemReq, ch: usize, now: Cycle) {
@@ -523,27 +839,35 @@ impl Fabric {
     }
 
     /// Earliest future cycle at which fabric transport itself can make
-    /// progress. `None` for the crossbar (ingress→controller transfer is
-    /// combinational within [`Fabric::route`], so the DRAM-side events
-    /// fully cover its wakeups — exactly the seed router's candidates).
+    /// progress. `None` for the crossbar with the reply network off
+    /// (ingress→controller transfer is combinational within
+    /// [`Fabric::route`], so the DRAM-side events fully cover its
+    /// wakeups — exactly the seed router's candidates).
     pub fn next_transit_time(&self, now: Cycle) -> Option<Cycle> {
-        if matches!(self.kind, TopologyKind::Crossbar) {
-            return None;
-        }
         let mut t: Option<Cycle> = None;
-        // Deliberately conservative: a non-empty ingress queue pins the
-        // fast-forward to the next cycle even when the head is blocked
-        // on a chain that bottoms out in a DRAM event (already covered
-        // by the other candidates). Costs host time in backpressured
-        // line/ring phases, never correctness.
-        if self.ingress_occupancy > 0 {
-            t = Some(now + 1);
-        }
-        for l in &self.links {
-            if let Some(&(_, ready)) = l.front() {
-                let c = ready.max(now + 1);
-                t = Some(t.map_or(c, |x| x.min(c)));
+        let mut fold = |t: &mut Option<Cycle>, c: Cycle| {
+            *t = Some(t.map_or(c, |x| x.min(c)));
+        };
+        if !matches!(self.kind, TopologyKind::Crossbar) {
+            // Deliberately conservative: a non-empty ingress queue pins
+            // the fast-forward to the next cycle even when the head is
+            // blocked on a chain that bottoms out in a DRAM event
+            // (already covered by the other candidates). Costs host time
+            // in backpressured line/ring phases, never correctness.
+            if self.ingress_occupancy > 0 {
+                fold(&mut t, now + 1);
             }
+            for l in &self.links {
+                if let Some(&(_, ready)) = l.front() {
+                    fold(&mut t, ready.max(now + 1));
+                }
+            }
+        }
+        // Reply side (same conservatism): anything resident in the reply
+        // transport, or a finished reply awaiting its delivery cycle,
+        // wants a visit next cycle.
+        if self.reply_enabled && (self.reply_occupancy > 0 || !self.reply_out.is_empty()) {
+            fold(&mut t, now + 1);
         }
         t
     }
@@ -551,6 +875,8 @@ impl Fabric {
     pub fn is_idle(&self) -> bool {
         self.ingress_occupancy == 0
             && self.link_occupancy == 0
+            && self.reply_occupancy == 0
+            && self.reply_out.is_empty()
             && self.channels.iter().all(Dram::is_idle)
     }
 
@@ -817,6 +1143,7 @@ mod tests {
             link_width: 1,
             link_queue: 1,
             interleave_bytes: 4096,
+            reply_network: false,
         };
         let tr: Vec<(Cycle, MemReq)> = (0..16u64)
             .map(|i| (0, req(i + 1, 3 * 4096 + i * 4 * 4096, 0))) // granule ≡ 3 (mod 4)
@@ -839,6 +1166,109 @@ mod tests {
         for l in &stats.links {
             let u = l.utilization(10_000, 1);
             assert!((0.0..=1.0).contains(&u));
+        }
+    }
+
+    // --- reply network ---------------------------------------------------
+
+    fn ic_reply(channels: usize, topology: TopologyKind) -> InterconnectConfig {
+        InterconnectConfig {
+            reply_network: true,
+            ..ic(channels, topology)
+        }
+    }
+
+    #[test]
+    fn reply_network_off_keeps_reply_stats_empty() {
+        let tr = mixed_trace();
+        let (_, stats) = drive_fabric(&tr, 4, &ic(2, TopologyKind::Crossbar));
+        assert_eq!(stats.reply.delivered, 0);
+        assert_eq!(stats.reply.hops, 0);
+        assert!(stats.reply.links.is_empty(), "no reply links exist when off");
+    }
+
+    #[test]
+    fn reply_network_delivers_every_completion_exactly_once() {
+        let tr = mixed_trace();
+        for topo in [TopologyKind::Crossbar, TopologyKind::Line, TopologyKind::Ring] {
+            for channels in [1usize, 2, 4] {
+                let (done, stats) = drive_fabric(&tr, 4, &ic_reply(channels, topo));
+                assert_eq!(done.len(), tr.len(), "{topo:?}/{channels}ch lost replies");
+                assert_eq!(stats.reply.delivered, tr.len() as u64);
+                let link_fwd: u64 = stats
+                    .reply
+                    .links
+                    .iter()
+                    .filter(|l| l.label.starts_with("r:"))
+                    .map(|l| l.forwarded)
+                    .sum();
+                assert_eq!(link_fwd, stats.reply.hops, "{topo:?} reply hop accounting");
+            }
+        }
+    }
+
+    #[test]
+    fn reply_network_adds_at_least_one_cycle_per_completion() {
+        // Same trace, same channel model: with the response path modeled
+        // every completion reaches the port strictly later than the
+        // combinational return, and never earlier.
+        let tr = mixed_trace();
+        for topo in TopologyKind::ALL {
+            let (free, _) = drive_fabric(&tr, 4, &ic(2, topo));
+            let (modeled, _) = drive_fabric(&tr, 4, &ic_reply(2, topo));
+            for (&(id_f, t_f), &(id_m, t_m)) in free.iter().zip(&modeled) {
+                assert_eq!(id_f, id_m);
+                assert!(
+                    t_m > t_f,
+                    "{topo:?}: reply id {id_f} at {t_m} not after free-path {t_f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reply_hops_mirror_the_return_route() {
+        // 2-node line, port 0 at node 0, all traffic to channel 1: each
+        // reply crosses reply link r:n1->n0 exactly once.
+        let tr: Vec<(Cycle, MemReq)> = (0..8u64)
+            .map(|i| (0, req(i + 1, 4096 + i * 8192 * 2, 0)))
+            .collect();
+        let (done, stats) = drive_fabric(&tr, 1, &ic_reply(2, TopologyKind::Line));
+        assert_eq!(done.len(), 8);
+        assert_eq!(stats.reply.hops, 8);
+        let fwd: u64 = stats
+            .reply
+            .links
+            .iter()
+            .filter(|l| l.label == "r:n1->n0")
+            .map(|l| l.forwarded)
+            .sum();
+        assert_eq!(fwd, 8);
+    }
+
+    #[test]
+    fn crossbar_return_bus_serializes_same_port_replies() {
+        // Two channels completing in lockstep for one port: the free
+        // return path hands the port several completions per cycle, the
+        // modeled per-port return bus takes exactly one reply per cycle
+        // — and the rotating arbiter shares the bus across channels
+        // instead of starving the higher channel index.
+        let tr: Vec<(Cycle, MemReq)> = (0..32u64)
+            .map(|i| (0, req(i + 1, i * 4096, 0))) // alternate channels
+            .collect();
+        let (free, _) = drive_fabric(&tr, 1, &ic(2, TopologyKind::Crossbar));
+        let (done, stats) = drive_fabric(&tr, 1, &ic_reply(2, TopologyKind::Crossbar));
+        assert_eq!(done.len(), 32);
+        assert_eq!(stats.reply.delivered, 32);
+        let dups = |v: &[(u64, Cycle)]| {
+            let mut times: Vec<Cycle> = v.iter().map(|&(_, t)| t).collect();
+            times.sort_unstable();
+            times.windows(2).filter(|w| w[0] == w[1]).count()
+        };
+        assert!(dups(&free) > 0, "trace must produce same-cycle completions");
+        assert_eq!(dups(&done), 0, "one reply per port per cycle");
+        for l in &stats.reply.links {
+            assert!(l.forwarded > 0, "starved return bus {}: {:?}", l.label, l);
         }
     }
 

@@ -11,6 +11,29 @@
 //!   conventional MSHR semantics, stores write-through);
 //! * DMA-only baseline: everything → DMA (elements become beat-sized
 //!   bursts with garbage).
+//!
+//! # Per-channel banks
+//!
+//! The cache + Request Reductor pair is instantiated once per **bank**
+//! ([`crate::config::SystemConfig::lmb_banks`], default 1). Banks are
+//! selected by the same [`ChannelMap`] interleaving the DRAM side uses
+//! (same granularity), so with `lmb_banks == interconnect.channels` bank
+//! *b* caches exactly the addresses that live on DRAM channel *b* — the
+//! "per-channel LMB banks" layout. Cache lines, MSHR entries and RRSH
+//! entries are sharded across banks (total capacity constant); each bank
+//! has its own cache port, so blocked RR lines retry one per bank per
+//! cycle. Bank caches index their sets by the **bank-local** address
+//! (the interleave bits squeezed out — the same dense view each DRAM
+//! channel gets), so every sharded set stays reachable; fill requests
+//! keep global addresses, and RR line tokens are global line numbers
+//! end to end. The DMA engine stays un-banked — fiber bursts are long
+//! streams that span interleave granules and already pipeline across
+//! channels.
+//!
+//! Key invariant: with `lmb_banks = 1` the bank map is the identity and
+//! the single bank carries the full configured geometry, so the banked
+//! LMB is **bit-identical** to the pre-bank one by construction
+//! (regression-pinned by `tests/integration_fabric.rs`).
 
 use std::collections::VecDeque;
 
@@ -20,9 +43,9 @@ use crate::config::FabricType;
 
 use super::cache::{Cache, CacheAccess, WaiterToken};
 use super::dma::DmaEngine;
-use super::dram::IdGen;
+use super::dram::{ChannelMap, IdGen};
 use super::request_reductor::{RequestReductor, RrResult};
-use super::stats::LmbStats;
+use super::stats::{LmbBankStats, LmbStats};
 use super::{Cycle, MemReq, ReqId};
 
 pub use super::Delivery;
@@ -46,20 +69,29 @@ pub struct LineEvent {
     pub at: Cycle,
 }
 
+/// One cache + Request-Reductor bank of an LMB (the sharded unit).
+pub struct LmbBank {
+    pub cache: Cache,
+    pub rr: RequestReductor,
+    /// RR line loads the bank's cache was too blocked to take.
+    retry_lines: VecDeque<u64>,
+}
+
 /// One Local Memory Block.
 pub struct Lmb {
     pub idx: usize,
     kind: SystemKind,
-    pub cache: Cache,
-    pub rr: RequestReductor,
+    /// Cache + RR banks (`lmb_banks` of them; 1 = the paper's LMB).
+    banks: Vec<LmbBank>,
+    /// Address → bank, the DRAM side's interleaving reused verbatim.
+    bank_map: ChannelMap,
     pub dma: DmaEngine,
     /// Fill/write requests waiting to enter the router.
     outbox: VecDeque<MemReq>,
-    /// RR line loads the cache was too blocked to take.
-    retry_lines: VecDeque<u64>,
     /// Reusable buffer for cache-fill waiter release (hot path).
     fill_scratch: Vec<WaiterToken>,
     line_bytes: u64,
+    line_shift: u32,
 }
 
 impl Lmb {
@@ -69,20 +101,66 @@ impl Lmb {
         // what DMA cannot do — exploit temporal locality, and avoid
         // garbage on sub-beat requests — not reduced concurrency.
         let dma_depth = 4;
+        let bank_cache = cfg.bank_cache();
+        let bank_rr = cfg.bank_rr();
+        let banks = (0..cfg.lmb_banks)
+            .map(|_| LmbBank {
+                cache: Cache::new(&bank_cache, idx),
+                rr: RequestReductor::new(&bank_rr, cfg.cache.line_bytes(), pes_per_lmb),
+                retry_lines: VecDeque::new(),
+            })
+            .collect();
         Lmb {
             idx,
             kind: cfg.kind,
-            cache: Cache::new(&cfg.cache, idx),
-            rr: RequestReductor::new(&cfg.rr, cfg.cache.line_bytes(), pes_per_lmb),
+            banks,
+            bank_map: ChannelMap::new(cfg.lmb_banks, cfg.interconnect.interleave_bytes),
             dma: DmaEngine::with_pipeline(&cfg.dma, cfg.dram.beat_bytes(), idx, dma_depth),
             outbox: VecDeque::new(),
-            retry_lines: VecDeque::new(),
             fill_scratch: Vec::new(),
             line_bytes: cfg.cache.line_bytes(),
+            line_shift: crate::util::log2(cfg.cache.line_bytes()),
         }
     }
 
-    /// Element load on the proposed path (RR → cache).
+    /// Bank fronting `addr` (identity with one bank). Banks never split a
+    /// cache line: config validation pins `interleave_bytes >= line`.
+    #[inline]
+    fn bank_of(&self, addr: u64) -> usize {
+        self.bank_map.decode(addr).0
+    }
+
+    /// Bank fronting cache line `line` (lines are globally numbered —
+    /// banks see full addresses, so the line number maps back uniquely).
+    #[inline]
+    fn bank_of_line(&self, line: u64) -> usize {
+        self.bank_of(line << self.line_shift)
+    }
+
+    /// Bank-local address: the global address with the bank-select bits
+    /// squeezed out (identity with one bank). Bank caches index their
+    /// sets with this — exactly as each DRAM channel sees a dense
+    /// channel-local address space — so a bank's sharded sets stay fully
+    /// reachable even though its global addresses share fixed
+    /// interleave bits.
+    #[inline]
+    fn local_addr(&self, addr: u64) -> u64 {
+        self.bank_map.decode(addr).1
+    }
+
+    /// Bank-local line number of a global line.
+    #[inline]
+    fn local_line_of(&self, line: u64) -> u64 {
+        self.local_addr(line << self.line_shift) >> self.line_shift
+    }
+
+    /// Number of cache + RR banks.
+    pub fn n_banks(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Element load on the proposed path (RR → cache), routed to the
+    /// address's bank.
     pub fn element_load(
         &mut self,
         addr: u64,
@@ -92,39 +170,50 @@ impl Lmb {
         line_events: &mut Vec<LineEvent>,
     ) -> LmbOutcome {
         debug_assert_eq!(self.kind, SystemKind::Proposed);
-        match self.rr.element_load(addr, token, now) {
+        let bank = self.bank_of(addr);
+        match self.banks[bank].rr.element_load(addr, token, now) {
             RrResult::Served { ready_at } => LmbOutcome::Ready { at: ready_at },
             RrResult::Absorbed => LmbOutcome::Pending,
             RrResult::Stall => LmbOutcome::Stall,
             RrResult::ForwardLine { line } => {
-                self.line_to_cache(line, now, ids, line_events);
+                self.line_to_cache(bank, line, now, ids, line_events);
                 LmbOutcome::Pending
             }
         }
     }
 
-    /// Present an RR line request to the cache (used for both the fast
-    /// path and stalled retries).
+    /// Present an RR line request to one bank's cache (used for both the
+    /// fast path and stalled retries). The cache indexes by the
+    /// bank-local address; the fill request keeps the global address
+    /// (the fabric decodes the DRAM channel from it). Waiter tokens stay
+    /// global line numbers throughout.
     fn line_to_cache(
         &mut self,
+        bank: usize,
         line: u64,
         now: Cycle,
         ids: &mut IdGen,
         line_events: &mut Vec<LineEvent>,
     ) {
-        match self.cache.load(line * self.line_bytes, line, now, ids) {
+        let local = self.local_line_of(line) * self.line_bytes;
+        let b = &mut self.banks[bank];
+        match b.cache.load(local, line, now, ids) {
             CacheAccess::Hit { ready_at } => line_events.push(LineEvent {
                 lmb: self.idx,
                 line,
                 at: ready_at,
             }),
-            CacheAccess::Miss { fill_req } => self.outbox.push_back(fill_req),
+            CacheAccess::Miss { mut fill_req } => {
+                fill_req.addr = line * self.line_bytes;
+                self.outbox.push_back(fill_req);
+            }
             CacheAccess::Merged => {} // already pending in the cache
-            CacheAccess::Blocked => self.retry_lines.push_back(line),
+            CacheAccess::Blocked => b.retry_lines.push_back(line),
         }
     }
 
     /// Direct cache load (cache-only baseline): `token` is a PE token.
+    /// Indexes by the bank-local address; the fill keeps the global one.
     pub fn cache_load_direct(
         &mut self,
         addr: u64,
@@ -133,9 +222,12 @@ impl Lmb {
         ids: &mut IdGen,
     ) -> LmbOutcome {
         debug_assert_eq!(self.kind, SystemKind::CacheOnly);
-        match self.cache.load(addr, token, now, ids) {
+        let bank = self.bank_of(addr);
+        let local = self.local_addr(addr);
+        match self.banks[bank].cache.load(local, token, now, ids) {
             CacheAccess::Hit { ready_at } => LmbOutcome::Ready { at: ready_at },
-            CacheAccess::Miss { fill_req } => {
+            CacheAccess::Miss { mut fill_req } => {
+                fill_req.addr = addr - addr % self.line_bytes;
                 self.outbox.push_back(fill_req);
                 LmbOutcome::Pending
             }
@@ -174,32 +266,38 @@ impl Lmb {
     }
 
     /// Per-cycle housekeeping: move DMA queue into buffers, retry blocked
-    /// RR lines.
+    /// RR lines (one per bank per cycle — one cache port per bank).
     pub fn tick(&mut self, now: Cycle, ids: &mut IdGen, line_events: &mut Vec<LineEvent>) {
         self.dma.tick(ids);
         self.dma.drain_requests_into(&mut self.outbox);
-        // One blocked RR line retried per cycle (single cache port).
-        if let Some(line) = self.retry_lines.pop_front() {
-            self.line_to_cache(line, now, ids, line_events);
+        for bank in 0..self.banks.len() {
+            if let Some(line) = self.banks[bank].retry_lines.pop_front() {
+                self.line_to_cache(bank, line, now, ids, line_events);
+            }
         }
     }
 
     /// Would [`Lmb::tick`] do anything right now — queued DMA transfers
     /// to place, minted DMA requests to drain, or a blocked RR line to
-    /// retry? When false, a tick is a provable no-op (no state change,
-    /// no statistics) and the event-driven run loop skips this LMB.
+    /// retry in any bank? When false, a tick is a provable no-op (no
+    /// state change, no statistics) and the event-driven run loop skips
+    /// this LMB.
     pub fn needs_tick(&self) -> bool {
-        self.dma.has_queued() || self.dma.has_requests() || !self.retry_lines.is_empty()
+        self.dma.has_queued()
+            || self.dma.has_requests()
+            || self.banks.iter().any(|b| !b.retry_lines.is_empty())
     }
 
-    /// A cache line reached the RR: release waiters into `deliveries`.
+    /// A cache line reached its RR: release waiters into `deliveries`.
     pub fn line_ready_into(&mut self, line: u64, now: Cycle, deliveries: &mut Vec<Delivery>) {
-        self.rr.line_arrived_into(line, now, deliveries);
+        let bank = self.bank_of_line(line);
+        self.banks[bank].rr.line_arrived_into(line, now, deliveries);
     }
 
     /// A DRAM completion for this port. Appends PE deliveries to
     /// `deliveries` (and, on the proposed path, RR line events for
-    /// freshly filled lines to `line_events`) — allocation-free.
+    /// freshly filled lines to `line_events`) — allocation-free. Request
+    /// ids are unique, so at most one bank's MSHR claims the fill.
     pub fn on_dram_completion(
         &mut self,
         id: ReqId,
@@ -212,32 +310,38 @@ impl Lmb {
             deliveries.push(Delivery { token, at });
             return;
         }
-        // Cache fill?
+        // Cache fill? (scan the banks; ids are unique across them)
         self.fill_scratch.clear();
-        if let Some(line) = self.cache.fill_into(id, &mut self.fill_scratch) {
-            match self.kind {
-                SystemKind::Proposed => {
-                    // Waiters are RR line tokens — deliver the line to the
-                    // RR after the cache pipeline.
-                    for &w in &self.fill_scratch {
-                        debug_assert_eq!(w, line);
-                        line_events.push(LineEvent {
-                            lmb: self.idx,
-                            line: w,
-                            at: done_at + 3,
-                        });
-                    }
+        let Some(line) = self
+            .banks
+            .iter_mut()
+            .find_map(|b| b.cache.fill_into(id, &mut self.fill_scratch))
+        else {
+            return;
+        };
+        match self.kind {
+            SystemKind::Proposed => {
+                // Waiters are RR line tokens (global line numbers);
+                // `line` is the cache's bank-local key. Deliver the line
+                // to the RR after the cache pipeline.
+                for &w in &self.fill_scratch {
+                    debug_assert_eq!(self.local_line_of(w), line);
+                    line_events.push(LineEvent {
+                        lmb: self.idx,
+                        line: w,
+                        at: done_at + 3,
+                    });
                 }
-                SystemKind::CacheOnly => {
-                    for &token in &self.fill_scratch {
-                        deliveries.push(Delivery {
-                            token,
-                            at: done_at + 3,
-                        });
-                    }
-                }
-                _ => unreachable!("cache unused in {:?}", self.kind),
             }
+            SystemKind::CacheOnly => {
+                for &token in &self.fill_scratch {
+                    deliveries.push(Delivery {
+                        token,
+                        at: done_at + 3,
+                    });
+                }
+            }
+            _ => unreachable!("cache unused in {:?}", self.kind),
         }
     }
 
@@ -252,17 +356,29 @@ impl Lmb {
 
     pub fn quiescent(&self) -> bool {
         self.outbox.is_empty()
-            && self.retry_lines.is_empty()
-            && self.cache.quiescent()
             && self.dma.is_idle()
-            && self.rr.outstanding() == 0
+            && self.banks.iter().all(|b| {
+                b.retry_lines.is_empty() && b.cache.quiescent() && b.rr.outstanding() == 0
+            })
     }
 
     pub fn stats(&self) -> LmbStats {
+        let mut cache = super::cache::CacheStats::default();
+        let mut rr = super::request_reductor::RrStats::default();
+        let mut banks = Vec::with_capacity(self.banks.len());
+        for b in &self.banks {
+            cache.merge(&b.cache.stats);
+            rr.merge(&b.rr.stats);
+            banks.push(LmbBankStats {
+                cache: b.cache.stats.clone(),
+                rr: b.rr.stats.clone(),
+            });
+        }
         LmbStats {
-            cache: self.cache.stats.clone(),
-            rr: self.rr.stats.clone(),
+            cache,
+            rr,
             dma: self.dma.stats.clone(),
+            banks,
         }
     }
 }
@@ -274,6 +390,14 @@ mod tests {
     fn lmb(kind: SystemKind) -> (Lmb, IdGen) {
         let mut cfg = SystemConfig::config_a();
         cfg.kind = kind;
+        (Lmb::new(&cfg, 0), IdGen::default())
+    }
+
+    fn lmb_banked(kind: SystemKind, banks: usize) -> (Lmb, IdGen) {
+        let mut cfg = SystemConfig::config_a();
+        cfg.kind = kind;
+        cfg.lmb_banks = banks;
+        cfg.validate().unwrap();
         (Lmb::new(&cfg, 0), IdGen::default())
     }
 
@@ -308,6 +432,105 @@ mod tests {
             LmbOutcome::Ready { at } => assert!(at > 200),
             other => panic!("expected Ready, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn banked_elements_route_to_their_interleave_bank() {
+        // 4 banks over the default 4096 B granule: granule g → bank g%4.
+        let (mut l, mut ids) = lmb_banked(SystemKind::Proposed, 4);
+        assert_eq!(l.n_banks(), 4);
+        let mut evs = Vec::new();
+        for g in 0..4u64 {
+            assert_eq!(
+                l.element_load(g * 4096, 100 + g, 0, &mut ids, &mut evs),
+                LmbOutcome::Pending
+            );
+        }
+        let stats = l.stats();
+        assert_eq!(stats.banks.len(), 4);
+        for (b, s) in stats.banks.iter().enumerate() {
+            assert_eq!(s.rr.forwarded, 1, "bank {b} must see exactly its granule");
+        }
+        // Aggregate view folds the banks.
+        assert_eq!(stats.rr.forwarded, 4);
+        assert_eq!(stats.cache.primary_misses, 4);
+        // Four independent fill requests, one per bank.
+        let mut n = 0;
+        while l.pop_request().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn banked_fill_and_line_release_find_the_right_bank() {
+        let (mut l, mut ids) = lmb_banked(SystemKind::Proposed, 2);
+        let mut evs = Vec::new();
+        // Granule 1 (bank 1): miss + one absorbed waiter.
+        let addr = 4096;
+        assert_eq!(l.element_load(addr, 7, 0, &mut ids, &mut evs), LmbOutcome::Pending);
+        assert_eq!(l.element_load(addr + 16, 8, 0, &mut ids, &mut evs), LmbOutcome::Pending);
+        let req = l.pop_request().expect("bank-1 fill");
+        assert_eq!(req.addr, addr);
+        let mut d = Vec::new();
+        l.on_dram_completion(req.id, 50, &mut evs, &mut d);
+        assert_eq!(evs.len(), 1, "one line event for the filled line");
+        let mut deliveries = Vec::new();
+        l.line_ready_into(evs[0].line, evs[0].at, &mut deliveries);
+        assert_eq!(deliveries.len(), 2);
+        let stats = l.stats();
+        assert_eq!(stats.banks[0].rr.forwarded, 0);
+        assert_eq!(stats.banks[1].rr.forwarded, 1);
+        assert_eq!(stats.banks[1].rr.absorbed, 1);
+        assert_eq!(stats.banks[1].cache.fills, 1);
+    }
+
+    #[test]
+    fn bank_caches_index_by_local_address_so_all_sets_are_reachable() {
+        // 4 banks on config-a: per-bank cache is 2048 lines / 2-way =
+        // 1024 sets. Bank 0 sees only every 4th interleave granule, so
+        // under *global* line indexing two of the 10 set bits would be
+        // constant and 3/4 of the bank's sets unreachable (the 1024
+        // lines below would pile 4-deep onto 256 sets and thrash the
+        // 2 ways). With bank-local indexing they are set-dense: 1024
+        // lines → 1024 distinct sets, no evictions, every re-probe hits.
+        let (mut l, mut ids) = lmb_banked(SystemKind::CacheOnly, 4);
+        let mut evs = Vec::new();
+        let mut d = Vec::new();
+        let addrs: Vec<u64> = (0..16u64)
+            .flat_map(|g| (0..64u64).map(move |j| g * 4 * 4096 + j * 64))
+            .collect(); // granule 4g → bank 0; local lines are dense
+        for (i, &addr) in addrs.iter().enumerate() {
+            match l.cache_load_direct(addr, i as u64, 0, &mut ids) {
+                LmbOutcome::Pending => {
+                    let req = l.pop_request().unwrap();
+                    assert_eq!(req.addr, addr, "fill must carry the global address");
+                    l.on_dram_completion(req.id, 10, &mut evs, &mut d);
+                }
+                other => panic!("first touch of {addr:#x} must miss, got {other:?}"),
+            }
+        }
+        let stats = l.stats();
+        assert_eq!(stats.banks[0].cache.fills, 1024);
+        assert_eq!(stats.cache.evictions, 0, "1024 set-dense lines must not evict");
+        // Every line is now resident.
+        for &addr in &addrs {
+            match l.cache_load_direct(addr, 9999, 20, &mut ids) {
+                LmbOutcome::Ready { .. } => {}
+                other => panic!("re-probe of {addr:#x} must hit, got {other:?}"),
+            }
+        }
+        assert_eq!(l.stats().cache.hits, 1024);
+    }
+
+    #[test]
+    fn single_bank_carries_full_geometry() {
+        // banks=1 is the regression anchor: identity map, full cache.
+        let cfg = SystemConfig::config_a();
+        let l = Lmb::new(&cfg, 0);
+        assert_eq!(l.n_banks(), 1);
+        assert_eq!(l.bank_of(0), 0);
+        assert_eq!(l.bank_of(u64::MAX >> 16), 0);
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //! * interconnect fabric        → [`fabric`] (multi-channel
 //!   generalization of the router: [`fabric::Topology`] crossbar / line /
 //!   ring over N interleaved DRAM channels with per-link bandwidth
-//!   tracking; `channels = 1` + crossbar replays [`router`] exactly)
-//! * Fig. 1 "LMB"               → [`lmb`]
+//!   tracking; `channels = 1` + crossbar replays [`router`] exactly;
+//!   opt-in reply network models the response path hop-accurately too)
+//! * Fig. 1 "LMB"               → [`lmb`] (shardable into per-channel
+//!   cache + RR banks via the `lmb_banks` config key; 1 = the paper's
+//!   monolithic LMB)
 //! * Fig. 2 "DMA Engine"        → [`dma`]
 //! * Fig. 3 "Request Reductor"  → [`request_reductor`] ([`temp_buffer`]
 //!   CAM stage + [`rrsh`] stage over an [`xor_hash`] table)
@@ -57,7 +60,7 @@ pub mod system;
 pub mod temp_buffer;
 pub mod xor_hash;
 
-pub use fabric::{Fabric, FabricStats, LinkStats};
+pub use fabric::{Fabric, FabricStats, LinkStats, ReplyStats};
 pub use stats::SimReport;
 pub use system::{simulate, MemorySystem};
 

@@ -9,6 +9,12 @@
 //! When a cache reply (a whole line, §IV-B) comes back, the RR stores it
 //! in the temporary buffer and fans the requested elements out to each
 //! waiting PE.
+//!
+//! With `lmb_banks > 1` each [`super::lmb::Lmb`] instantiates one RR per
+//! bank over a sharded RRSH (entries divided across banks; the CAM stays
+//! per-bank — see [`crate::config::SystemConfig::bank_rr`]). A single RR
+//! instance never sees addresses outside its bank's interleave granules,
+//! so its behavior is unchanged; only the address stream it observes is.
 
 use super::rrsh::{Rrsh, RrshOutcome, RrshToken};
 use super::temp_buffer::TempBuffer;
@@ -36,6 +42,17 @@ pub struct RrStats {
     pub forwarded: u64,
     pub absorbed: u64,
     pub stalls: u64,
+}
+
+impl RrStats {
+    /// Fold another bank's counters into this one (per-LMB aggregate
+    /// over its RR banks).
+    pub fn merge(&mut self, other: &RrStats) {
+        self.served_temp += other.served_temp;
+        self.forwarded += other.forwarded;
+        self.absorbed += other.absorbed;
+        self.stalls += other.stalls;
+    }
 }
 
 /// The Request Reductor unit.

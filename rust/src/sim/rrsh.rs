@@ -11,6 +11,12 @@
 //! absorbs secondary misses with a wide waiter list (width ∝ number of
 //! PEs × elements per line, §IV-C1), implemented over the XOR-based hash
 //! table.
+//!
+//! Sizing rule (§IV-C1): entries ∝ cache lines / associativity. The rule
+//! is preserved under LMB banking — both the per-bank cache lines and the
+//! per-bank RRSH entries are the configured totals divided by
+//! `lmb_banks`, so each bank's RRSH stays proportional to the cache
+//! shard it fronts.
 
 use super::xor_hash::{InsertOutcome, XorHashTable};
 

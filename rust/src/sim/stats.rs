@@ -11,12 +11,30 @@ use super::pe::LatencyStats;
 use super::request_reductor::RrStats;
 use super::Cycle;
 
-/// Per-LMB statistics snapshot.
+/// Per-bank statistics snapshot (one cache + RR bank of an LMB).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LmbBankStats {
+    pub cache: CacheStats,
+    pub rr: RrStats,
+}
+
+impl LmbBankStats {
+    /// Element requests this bank handled (its share of the LMB's
+    /// element stream — the per-bank utilization view).
+    pub fn requests(&self) -> u64 {
+        self.rr.served_temp + self.rr.forwarded + self.rr.absorbed + self.cache.accesses()
+    }
+}
+
+/// Per-LMB statistics snapshot. `cache`/`rr` are the aggregates over the
+/// LMB's banks (the pre-bank report view); `banks` holds the per-bank
+/// breakdown (`lmb_banks` entries — one with the default config).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LmbStats {
     pub cache: CacheStats,
     pub rr: RrStats,
     pub dma: DmaStats,
+    pub banks: Vec<LmbBankStats>,
 }
 
 /// Aggregate PE front-end counters (summed over all front ends). In the
@@ -191,6 +209,17 @@ impl SimReport {
             .fold(0.0, f64::max)
     }
 
+    /// Highest per-link utilization on the reply network (0.0 when the
+    /// reply network is off — no reply links exist then).
+    pub fn max_reply_link_utilization(&self) -> f64 {
+        self.fabric
+            .reply
+            .links
+            .iter()
+            .map(|l| l.utilization(self.total_cycles, self.link_width))
+            .fold(0.0, f64::max)
+    }
+
     /// Mean PE-observed latency of fiber loads (cycles).
     pub fn fiber_latency_mean(&self) -> f64 {
         let (a, b) = (&self.latency[1], &self.latency[2]);
@@ -227,6 +256,7 @@ impl SimReport {
             ),
             ("channels", self.channels_json()),
             ("fabric", self.fabric_json()),
+            ("lmbs", self.lmbs_json()),
             (
                 "pe",
                 Json::obj(vec![
@@ -260,24 +290,25 @@ impl SimReport {
         Json::arr(rows)
     }
 
-    /// Interconnect counters, including per-link utilization.
+    /// Interconnect counters, including per-link utilization on both the
+    /// request and (when modeled) the reply side.
     fn fabric_json(&self) -> Json {
-        let links = self
-            .fabric
-            .links
-            .iter()
-            .map(|l| {
-                Json::obj(vec![
-                    ("label", Json::str(l.label.clone())),
-                    ("forwarded", Json::num(l.forwarded as f64)),
-                    ("stall_cycles", Json::num(l.stall_cycles as f64)),
-                    (
-                        "utilization",
-                        Json::num(l.utilization(self.total_cycles, self.link_width)),
-                    ),
-                ])
-            })
-            .collect();
+        let link_rows = |links: &[super::fabric::LinkStats]| -> Vec<Json> {
+            links
+                .iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("label", Json::str(l.label.clone())),
+                        ("forwarded", Json::num(l.forwarded as f64)),
+                        ("stall_cycles", Json::num(l.stall_cycles as f64)),
+                        (
+                            "utilization",
+                            Json::num(l.utilization(self.total_cycles, self.link_width)),
+                        ),
+                    ])
+                })
+                .collect()
+        };
         Json::obj(vec![
             ("forwarded", Json::num(self.fabric.forwarded as f64)),
             (
@@ -285,8 +316,66 @@ impl SimReport {
                 Json::num(self.fabric.backpressure_cycles as f64),
             ),
             ("hops", Json::num(self.fabric.hops as f64)),
-            ("links", Json::arr(links)),
+            ("links", Json::arr(link_rows(&self.fabric.links))),
+            (
+                "reply",
+                Json::obj(vec![
+                    ("delivered", Json::num(self.fabric.reply.delivered as f64)),
+                    ("hops", Json::num(self.fabric.reply.hops as f64)),
+                    (
+                        "backpressure_cycles",
+                        Json::num(self.fabric.reply.backpressure_cycles as f64),
+                    ),
+                    ("links", Json::arr(link_rows(&self.fabric.reply.links))),
+                ]),
+            ),
         ])
+    }
+
+    /// Per-LMB counters with the per-bank breakdown — the banked-layout
+    /// view (`lmb_banks` entries per LMB; one with the default config).
+    fn lmbs_json(&self) -> Json {
+        let rows = self
+            .lmbs
+            .iter()
+            .map(|l| {
+                let total: u64 = l.banks.iter().map(LmbBankStats::requests).sum();
+                let banks = l
+                    .banks
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("cache_hits", Json::num(b.cache.hits as f64)),
+                            (
+                                "cache_misses",
+                                Json::num(b.cache.primary_misses as f64),
+                            ),
+                            ("rr_forwarded", Json::num(b.rr.forwarded as f64)),
+                            ("rr_absorbed", Json::num(b.rr.absorbed as f64)),
+                            ("rr_served_temp", Json::num(b.rr.served_temp as f64)),
+                            ("requests", Json::num(b.requests() as f64)),
+                            (
+                                "utilization",
+                                Json::num(if total == 0 {
+                                    0.0
+                                } else {
+                                    b.requests() as f64 / total as f64
+                                }),
+                            ),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("cache_hit_rate", Json::num(l.cache.hit_rate())),
+                    ("rr_forwarded", Json::num(l.rr.forwarded as f64)),
+                    ("rr_absorbed", Json::num(l.rr.absorbed as f64)),
+                    ("dma_loads", Json::num(l.dma.loads as f64)),
+                    ("dma_stores", Json::num(l.dma.stores as f64)),
+                    ("banks", Json::arr(banks)),
+                ])
+            })
+            .collect();
+        Json::arr(rows)
     }
 }
 
@@ -347,6 +436,38 @@ mod tests {
         assert_eq!(chans.len(), 2);
         assert!(chans[0].get("bus_utilization").is_some());
         assert!(j.get("fabric").unwrap().get("links").is_some());
+        // Reply + per-bank sections are always present (empty when off).
+        let reply = j.get("fabric").unwrap().get("reply").unwrap();
+        assert_eq!(reply.get("delivered").unwrap().as_usize(), Some(0));
+        assert!(reply.get("links").is_some());
+        assert!(j.get("lmbs").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn per_bank_json_carries_utilization() {
+        let mut r = report(100);
+        r.lmbs = vec![LmbStats {
+            banks: vec![
+                LmbBankStats {
+                    rr: RrStats { forwarded: 3, absorbed: 9, ..Default::default() },
+                    ..Default::default()
+                },
+                LmbBankStats {
+                    rr: RrStats { forwarded: 1, absorbed: 3, ..Default::default() },
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        }];
+        let j = r.to_json();
+        let lmbs = j.get("lmbs").unwrap().as_arr().unwrap();
+        assert_eq!(lmbs.len(), 1);
+        let banks = lmbs[0].get("banks").unwrap().as_arr().unwrap();
+        assert_eq!(banks.len(), 2);
+        assert_eq!(banks[0].get("requests").unwrap().as_usize(), Some(12));
+        let u0 = banks[0].get("utilization").unwrap().as_f64().unwrap();
+        let u1 = banks[1].get("utilization").unwrap().as_f64().unwrap();
+        assert!((u0 - 0.75).abs() < 1e-12 && (u1 - 0.25).abs() < 1e-12);
     }
 
     #[test]

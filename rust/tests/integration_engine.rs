@@ -2,8 +2,9 @@
 //! (`MemorySystem::run`) must produce a report *identical* to the
 //! reference poll loop (`MemorySystem::run_reference`) — every cycle
 //! count, access count, DRAM/LMB/fabric counter and latency accumulator
-//! — across all four system variants, both compute-fabric types and all
-//! three interconnect topologies, on randomized workloads. Host
+//! — across all four system variants, both compute-fabric types, all
+//! three interconnect topologies, randomized LMB bank counts, and with
+//! the reply network both off and on, on randomized workloads. Host
 //! wall-clock time is the only field allowed to differ
 //! (`SimReport::diff` excludes it).
 
@@ -40,6 +41,8 @@ fn random_case(rng: &mut Rng) -> (CooTensor, SystemConfig) {
     };
     cfg.pe.max_inflight = rng.gen_usize(2, 12);
     cfg.interconnect.channels = 1 << rng.gen_range(3); // 1, 2 or 4
+    cfg.lmb_banks = 1 << rng.gen_range(3); // 1, 2 or 4 cache/RR banks
+    cfg.interconnect.reply_network = rng.gen_bool(0.5);
     cfg.validate().expect("randomized config must be valid");
     (t, cfg)
 }
@@ -80,6 +83,46 @@ fn prop_event_engine_identical_to_reference_across_matrix() {
                     prop_assert!(
                         event.total_cycles > 0,
                         "{kind:?}/{topology:?}: empty run"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_engines_agree_with_reply_network_on_across_banks_and_topologies() {
+    // The response-path model threads new wakeup sources (reply buffers,
+    // reply links, delivery calendar) through the event engine's gates;
+    // this pins run == run_reference with the reply network forced ON
+    // over every bank count × topology, on randomized workloads.
+    check(
+        "reply-network event engine == reference loop",
+        6,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            for banks in [1usize, 2, 4] {
+                for topology in TopologyKind::ALL {
+                    let mut cfg = base.clone();
+                    cfg.lmb_banks = banks;
+                    cfg.interconnect.reply_network = true;
+                    cfg.interconnect.topology = topology;
+                    cfg.validate().expect("bank config must be valid");
+                    let event = MemorySystem::new(&cfg, &w).run(&w.name);
+                    let reference = MemorySystem::new(&cfg, &w).run_reference(&w.name);
+                    prop_assert_eq!(
+                        event.diff(&reference),
+                        None,
+                        "banks={banks}/{topology:?}: engines diverged"
+                    );
+                    // Reply accounting holds everywhere: one delivery
+                    // per DRAM transaction, on both engines.
+                    prop_assert_eq!(
+                        event.fabric.reply.delivered,
+                        event.dram.reads + event.dram.writes,
+                        "banks={banks}/{topology:?}: reply accounting broke"
                     );
                 }
             }

@@ -1,13 +1,21 @@
 //! Integration tests for the multi-channel interconnect fabric: full
 //! system runs across channel counts and topologies — conservation,
-//! accounting consistency, the seed-equivalence operating point, and the
-//! multi-channel speedup the fabric exists to deliver.
+//! accounting consistency, the seed-equivalence operating point, the
+//! multi-channel speedup the fabric exists to deliver, and the banked
+//! LMB + reply-network layer on top of it:
+//!
+//! * `lmb_banks=1` with the reply network off is **report-identical** to
+//!   the pre-bank system (the regression anchor — the default config
+//!   takes the exact same code path);
+//! * per-bank counters partition the per-LMB aggregates;
+//! * the reply network conserves completions, only ever adds cycles,
+//!   and populates the reply-link counters.
 
 use std::sync::Arc;
 
 use mttkrp_memsys::config::{SystemConfig, SystemKind, TopologyKind};
 use mttkrp_memsys::experiment::Scenario;
-use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::sim::{simulate, MemorySystem};
 use mttkrp_memsys::tensor::{gen, CooTensor};
 use mttkrp_memsys::trace::Workload;
 use mttkrp_memsys::util::rng::Rng;
@@ -141,6 +149,138 @@ fn single_channel_default_config_matches_explicit_single_channel() {
     assert_eq!(implicit.total_cycles, explicit.total_cycles);
     assert_eq!(implicit.dram.reads, explicit.dram.reads);
     assert_eq!(implicit.dram.row_hits, explicit.dram.row_hits);
+}
+
+#[test]
+fn single_bank_reply_off_is_report_identical_to_the_pre_bank_system() {
+    // The regression anchor: the default config (lmb_banks=1, reply
+    // network off) IS the pre-bank/pre-reply system — the bank map is
+    // the identity, the single bank carries the full cache/RR geometry,
+    // and completions take the combinational return path. Spelling the
+    // defaults out explicitly must not change one counter, on either
+    // engine, for any variant.
+    let mut rng = Rng::new(31);
+    let t = CooTensor::random(&mut rng, [80, 15_000, 25_000], 1200);
+    for base in [SystemConfig::config_a(), SystemConfig::config_b()] {
+        assert_eq!(base.lmb_banks, 1, "default must stay single-bank");
+        assert!(!base.interconnect.reply_network, "default must stay reply-off");
+        let w = wl(&t, &base);
+        for kind in SystemKind::ALL {
+            let implicit_cfg = base.as_baseline(kind);
+            let mut explicit_cfg = implicit_cfg.clone();
+            explicit_cfg.lmb_banks = 1;
+            explicit_cfg.interconnect.reply_network = false;
+            let implicit = MemorySystem::new(&implicit_cfg, &w).run(&w.name);
+            let explicit = MemorySystem::new(&explicit_cfg, &w).run(&w.name);
+            assert_eq!(
+                implicit.diff(&explicit),
+                None,
+                "{kind:?}: explicit banks=1/reply-off diverged from the default"
+            );
+            // And the single bank's counters ARE the aggregate.
+            for l in &implicit.lmbs {
+                assert_eq!(l.banks.len(), 1);
+                assert_eq!(l.banks[0].cache, l.cache);
+                assert_eq!(l.banks[0].rr, l.rr);
+            }
+            // No reply network → no reply counters, no reply links.
+            assert_eq!(implicit.fabric.reply.delivered, 0);
+            assert!(implicit.fabric.reply.links.is_empty());
+        }
+    }
+}
+
+#[test]
+fn per_bank_counters_partition_the_lmb_aggregates() {
+    let t = gen::synth_01(0.001);
+    let mut base = SystemConfig::config_b();
+    base.interconnect.channels = 4;
+    base.lmb_banks = 4;
+    let w = wl(&t, &base);
+    for topo in TopologyKind::ALL {
+        let mut cfg = base.clone();
+        cfg.interconnect.topology = topo;
+        let rep = simulate(&cfg, &w);
+        for l in &rep.lmbs {
+            assert_eq!(l.banks.len(), 4);
+            let fwd: u64 = l.banks.iter().map(|b| b.rr.forwarded).sum();
+            let abs: u64 = l.banks.iter().map(|b| b.rr.absorbed).sum();
+            let temp: u64 = l.banks.iter().map(|b| b.rr.served_temp).sum();
+            let hits: u64 = l.banks.iter().map(|b| b.cache.hits).sum();
+            let misses: u64 = l.banks.iter().map(|b| b.cache.primary_misses).sum();
+            assert_eq!(fwd, l.rr.forwarded, "{topo:?} rr.forwarded partition");
+            assert_eq!(abs, l.rr.absorbed, "{topo:?} rr.absorbed partition");
+            assert_eq!(temp, l.rr.served_temp, "{topo:?} rr.served_temp partition");
+            assert_eq!(hits, l.cache.hits, "{topo:?} cache.hits partition");
+            assert_eq!(misses, l.cache.primary_misses, "{topo:?} miss partition");
+        }
+    }
+}
+
+#[test]
+fn banked_lmbs_serve_every_access_across_bank_counts() {
+    let mut rng = Rng::new(33);
+    let t = CooTensor::random(&mut rng, [96, 20_000, 30_000], 1500);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
+    for banks in [1usize, 2, 4] {
+        for kind in [SystemKind::Proposed, SystemKind::CacheOnly] {
+            let mut cfg = base.as_baseline(kind);
+            cfg.lmb_banks = banks;
+            cfg.interconnect.channels = 4;
+            cfg.validate().unwrap();
+            let rep = simulate(&cfg, &w);
+            assert_eq!(rep.accesses, expected, "banks={banks}/{kind:?} lost accesses");
+        }
+    }
+}
+
+#[test]
+fn reply_network_conserves_accesses_and_only_adds_cycles() {
+    let t = gen::synth_01(0.001);
+    let base = SystemConfig::config_b();
+    let w = wl(&t, &base);
+    let expected: u64 = w.pe_traces.iter().map(|p| p.n_accesses() as u64).sum();
+    for channels in [1usize, 4] {
+        for topo in TopologyKind::ALL {
+            let free_cfg = with_fabric(&base, channels, topo);
+            let mut reply_cfg = free_cfg.clone();
+            reply_cfg.interconnect.reply_network = true;
+            let free = simulate(&free_cfg, &w);
+            let modeled = simulate(&reply_cfg, &w);
+            assert_eq!(modeled.accesses, expected, "{channels}ch/{topo:?} lost accesses");
+            assert!(
+                modeled.total_cycles >= free.total_cycles,
+                "{channels}ch/{topo:?}: reply network must not speed up \
+                 ({} < {})",
+                modeled.total_cycles,
+                free.total_cycles
+            );
+            // Every DRAM transaction returned exactly once.
+            assert_eq!(
+                modeled.fabric.reply.delivered,
+                modeled.dram.reads + modeled.dram.writes,
+                "{channels}ch/{topo:?} reply accounting"
+            );
+            // Reply links carry utilization data for the report. (A
+            // 1-node line/ring has no physical links — delivery is
+            // direct — so only the crossbar's virtual return buses and
+            // multi-node fabrics have link rows.)
+            if topo == TopologyKind::Crossbar || channels > 1 {
+                assert!(!modeled.fabric.reply.links.is_empty());
+                let reply_fwd: u64 = modeled.fabric.reply.links.iter().map(|l| l.forwarded).sum();
+                assert!(reply_fwd > 0, "{channels}ch/{topo:?}: silent reply links");
+            }
+            if channels > 1 && topo != TopologyKind::Crossbar {
+                assert!(
+                    modeled.fabric.reply.hops > 0,
+                    "{channels}ch/{topo:?}: store-and-forward replies must hop"
+                );
+                assert!(modeled.max_reply_link_utilization() > 0.0);
+            }
+        }
+    }
 }
 
 #[test]
