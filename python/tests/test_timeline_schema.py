@@ -1,0 +1,82 @@
+"""Schema check for the simulator's windowed time-series export
+(`mttkrp-memsys simulate/trace --timeline tl.jsonl`).
+
+Validates the JSONL contract phase/heatmap consumers rely on: one JSON
+object per window with a strictly increasing `cycle`, per-channel
+delta blocks (`reads`/`writes`/`busy_bus` plus instantaneous
+`occupancy`), fabric / LMB / PE delta blocks, and instantaneous queue
+depths. All deltas are non-negative — the underlying counters are
+cumulative, so a negative delta means the emitter's bookkeeping broke.
+
+Runs against the file named by `MEMSYS_TIMELINE_JSONL` when set (CI's
+bench-smoke job produces one) and always against the committed sample.
+Needs no third-party deps beyond pytest.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from _jsonl_schema import load_records, schema_paths
+
+SAMPLE = Path(__file__).parent / "data" / "timeline_sample.jsonl"
+ENV_VAR = "MEMSYS_TIMELINE_JSONL"
+
+TOP_LEVEL = ("cycle", "channels", "fabric", "reply", "lmbs", "pe", "depths")
+CHANNEL_KEYS = ("occupancy", "reads", "writes", "busy_bus")
+LMB_KEYS = ("hits", "misses", "rr_served", "rr_absorbed", "rr_forwarded")
+PE_KEYS = ("retired", "issued", "stalls")
+
+
+def _load(path):
+    return load_records(path, ENV_VAR, SAMPLE)
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_rows_carry_the_documented_schema(path):
+    for row in _load(path):
+        for key in TOP_LEVEL:
+            assert key in row, f"missing {key!r} in row at cycle {row.get('cycle')}"
+        for ch in row["channels"]:
+            for key in CHANNEL_KEYS:
+                assert ch[key] >= 0, (key, ch)
+        fabric = row["fabric"]
+        for key in ("forwarded", "backpressure", "hops"):
+            assert fabric[key] >= 0, (key, fabric)
+        assert all(v >= 0 for v in fabric["links"])
+        assert row["reply"]["delivered"] >= 0
+        for lmb in row["lmbs"]:
+            for key in LMB_KEYS:
+                assert lmb[key] >= 0, (key, lmb)
+        for key in PE_KEYS:
+            assert row["pe"][key] >= 0, (key, row["pe"])
+        depths = row["depths"]
+        assert all(v >= 0 for v in depths["ingress"])
+        assert depths["deliveries"] >= 0 and depths["line_events"] >= 0
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_cycles_strictly_increase(path):
+    cycles = [row["cycle"] for row in _load(path)]
+    assert all(a < b for a, b in zip(cycles, cycles[1:])), cycles
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_row_shapes_are_consistent_across_windows(path):
+    # One run has a fixed geometry: channel / LMB / link / port counts
+    # must not change between windows.
+    rows = _load(path)
+    first = rows[0]
+    shape = (
+        len(first["channels"]),
+        len(first["lmbs"]),
+        len(first["fabric"]["links"]),
+        len(first["depths"]["ingress"]),
+    )
+    for row in rows[1:]:
+        assert (
+            len(row["channels"]),
+            len(row["lmbs"]),
+            len(row["fabric"]["links"]),
+            len(row["depths"]["ingress"]),
+        ) == shape, f"geometry changed at cycle {row['cycle']}"

@@ -1,0 +1,125 @@
+"""Schema check for the simulator's Chrome trace-event export
+(`mttkrp-memsys trace --trace-out trace.json ...`, or `simulate` with
+`--trace-out`).
+
+Validates the contract Perfetto / `chrome://tracing` and our own
+consumers rely on: a top-level `meta` block (label / workload /
+reply_network / sample / window) plus a `traceEvents` array where every
+event carries `name`/`ph`/`pid`/`tid`, complete spans (`ph == "X"`)
+carry a non-negative `ts`/`dur`, instants (`ph == "i"`) carry a scope,
+and the span names cover every pipeline stage the telemetry layer
+documents (PE access classes, fabric transport, DRAM queue + service,
+reply traversal when the reply network is on).
+
+Runs against the file named by `MEMSYS_TRACE_JSON` when set (CI's
+bench-smoke job produces one from a Table II dataset) and always
+against the committed sample. Gate policy matches the JSONL checks: a
+missing committed sample skips, a missing env-named file fails loudly.
+Needs no third-party deps beyond pytest.
+"""
+
+import json
+import os
+from pathlib import Path
+
+import pytest
+
+SAMPLE = Path(__file__).parent / "data" / "trace_sample.json"
+ENV_VAR = "MEMSYS_TRACE_JSON"
+
+# Stages that must appear in any complete trace: the memory-side span
+# chain plus at least one PE access-class span.
+REQUIRED_SPANS = {"fabric", "dram.queue", "dram.service"}
+ACCESS_CLASSES = {"elem", "fib1", "fib2", "store"}
+META_KEYS = ("label", "workload", "reply_network", "sample", "window")
+PHASES = {"X", "i", "M"}
+
+
+def trace_paths():
+    paths = [SAMPLE]
+    env = os.environ.get(ENV_VAR)
+    if env:
+        paths.append(Path(env))
+    return paths
+
+
+def load_trace(path):
+    if not path.exists():
+        if path == SAMPLE:
+            pytest.skip(f"committed sample {path} not found")
+        pytest.fail(f"{ENV_VAR}={path} does not exist")
+    doc = json.loads(path.read_text())
+    assert isinstance(doc, dict), f"{path}: trace document must be an object"
+    return doc
+
+
+@pytest.mark.parametrize("path", trace_paths(), ids=lambda p: p.name)
+def test_meta_block_documents_the_run(path):
+    meta = load_trace(path)["meta"]
+    for key in META_KEYS:
+        assert key in meta, f"missing meta.{key}"
+    assert isinstance(meta["label"], str) and meta["label"]
+    assert isinstance(meta["workload"], str) and meta["workload"]
+    assert isinstance(meta["reply_network"], bool)
+    assert meta["sample"] >= 1
+    assert meta["window"] >= 1
+
+
+@pytest.mark.parametrize("path", trace_paths(), ids=lambda p: p.name)
+def test_events_are_well_formed_chrome_trace_events(path):
+    events = load_trace(path)["traceEvents"]
+    assert events, "traceEvents must not be empty"
+    for ev in events:
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert ev["ph"] in PHASES, f"unknown phase {ev['ph']!r}"
+        assert isinstance(ev["pid"], int) and ev["pid"] in (0, 1)
+        assert isinstance(ev["tid"], int) and ev["tid"] >= 0
+        assert isinstance(ev.get("args", {}), dict)
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0 and ev["dur"] >= 0, ev
+        elif ev["ph"] == "i":
+            assert ev["ts"] >= 0 and ev["s"] == "t", ev
+
+
+@pytest.mark.parametrize("path", trace_paths(), ids=lambda p: p.name)
+def test_spans_cover_every_pipeline_stage(path):
+    doc = load_trace(path)
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    names = {e["name"] for e in spans}
+    missing = REQUIRED_SPANS - names
+    assert not missing, f"no complete span for stages {sorted(missing)}"
+    assert names & ACCESS_CLASSES or doc["meta"]["sample"] > 1, (
+        "at least one PE access-class span expected in an unsampled trace"
+    )
+    # Process metadata names both trace rows.
+    meta_events = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    named = {e["args"]["name"] for e in meta_events}
+    assert {"accesses", "memory"} <= named
+
+
+@pytest.mark.parametrize("path", trace_paths(), ids=lambda p: p.name)
+def test_reply_spans_follow_the_reply_network_knob(path):
+    doc = load_trace(path)
+    reply_spans = [e for e in doc["traceEvents"] if e["name"] in ("reply", "reply.hop")]
+    if not doc["meta"]["reply_network"]:
+        assert not reply_spans, "reply spans require the reply network"
+
+
+@pytest.mark.parametrize("path", trace_paths(), ids=lambda p: p.name)
+def test_dram_spans_chain_consistently(path):
+    # Per request id: queue ends where service starts, and the service
+    # span carries a row-buffer outcome.
+    doc = load_trace(path)
+    queues = {}
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X" and ev["name"] == "dram.queue":
+            queues[ev["args"]["id"]] = ev["ts"] + ev["dur"]
+    checked = 0
+    for ev in doc["traceEvents"]:
+        if ev["ph"] == "X" and ev["name"] == "dram.service":
+            assert ev["args"]["row"] in ("hit", "miss", "conflict"), ev
+            rid = ev["args"]["id"]
+            if rid in queues:
+                assert ev["ts"] == queues[rid], f"id {rid}: queue/service seam mismatch"
+                checked += 1
+    assert checked > 0, "no dram.queue -> dram.service chains to check"

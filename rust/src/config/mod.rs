@@ -182,6 +182,47 @@ impl InterconnectConfig {
     }
 }
 
+/// Telemetry knobs (`sim::telemetry`): request-lifecycle tracing and the
+/// windowed time-series. Everything defaults to **off** — the disabled
+/// path is the literal pre-telemetry code path, and enabling any product
+/// never perturbs simulated behavior (pinned by the engine-equivalence
+/// matrix in `tests/integration_engine.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Record per-request lifecycle spans, exported as Chrome
+    /// trace-event JSON (Perfetto / `chrome://tracing`).
+    pub trace: bool,
+    /// Snapshot windowed counter deltas into a JSONL timeline.
+    pub timeline: bool,
+    /// Trace 1-in-N sampling: only every `sample`-th PE access (and
+    /// DRAM transaction) opens spans. 1 = trace everything.
+    pub sample: u64,
+    /// Timeline window width in cycles.
+    pub window: u64,
+}
+
+impl TelemetryConfig {
+    /// The default: every product off, neutral sampling/window.
+    pub fn off() -> TelemetryConfig {
+        TelemetryConfig { trace: false, timeline: false, sample: 1, window: 10_000 }
+    }
+
+    /// Any product enabled?
+    pub fn enabled(&self) -> bool {
+        self.trace || self.timeline
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sample == 0 {
+            return Err("telemetry: sample must be > 0".into());
+        }
+        if self.window == 0 {
+            return Err("telemetry: window must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
 /// Cache parameters (paper Table II rows "Cache").
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CacheConfig {
@@ -374,8 +415,19 @@ pub struct SystemConfig {
     pub dram: DramConfig,
     pub interconnect: InterconnectConfig,
     pub pe: PeConfig,
+    /// Observability products (off by default — see [`TelemetryConfig`]).
+    pub telemetry: TelemetryConfig,
     /// Human label ("config-a", "config-b", ...).
     pub label: String,
+}
+
+/// Parse an `on|off`-style boolean override value.
+fn parse_on_off(key: &str, value: &str) -> Result<bool, String> {
+    match value {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => Err(format!("{key} {other:?}: expected on|off")),
+    }
 }
 
 impl SystemConfig {
@@ -405,6 +457,7 @@ impl SystemConfig {
             },
             dram: DramConfig::mig_u250(),
             interconnect: InterconnectConfig::single_channel(),
+            telemetry: TelemetryConfig::off(),
             pe: PeConfig {
                 n_pes: 4,
                 fabric: FabricType::Type1,
@@ -526,6 +579,7 @@ impl SystemConfig {
         self.dram.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.interconnect.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.pe.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.telemetry.validate().map_err(|e| format!("{}: {e}", self.label))?;
         Ok(())
     }
 
@@ -590,6 +644,10 @@ impl SystemConfig {
             "dram.t_controller" => self.dram.t_controller = parse_u64(value)?,
             "dram.max_outstanding" => self.dram.max_outstanding = parse_usize(value)?,
             "dram.banks" => self.dram.banks = parse_usize(value)?,
+            "telemetry.trace" => self.telemetry.trace = parse_on_off(key, value)?,
+            "telemetry.timeline" => self.telemetry.timeline = parse_on_off(key, value)?,
+            "telemetry.sample" => self.telemetry.sample = parse_u64(value)?,
+            "telemetry.window" => self.telemetry.window = parse_u64(value)?,
             _ => return Err(format!("unknown config key {key:?}")),
         }
         Ok(())
@@ -659,6 +717,15 @@ impl SystemConfig {
                     ("n_pes", Json::num(self.pe.n_pes as f64)),
                     ("fabric", Json::str(self.pe.fabric.name())),
                     ("rank", Json::num(self.pe.rank as f64)),
+                ]),
+            ),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    ("trace", Json::Bool(self.telemetry.trace)),
+                    ("timeline", Json::Bool(self.telemetry.timeline)),
+                    ("sample", Json::num(self.telemetry.sample as f64)),
+                    ("window", Json::num(self.telemetry.window as f64)),
                 ]),
             ),
         ])
@@ -889,5 +956,34 @@ mod tests {
         let j = SystemConfig::config_a().to_json();
         assert_eq!(j.get("kind").unwrap().as_str(), Some("proposed"));
         assert!(j.get("cache").unwrap().get("lines").is_some());
+    }
+
+    #[test]
+    fn telemetry_defaults_off_and_overrides_round_trip() {
+        let c = SystemConfig::config_a();
+        assert_eq!(c.telemetry, TelemetryConfig::off());
+        assert!(!c.telemetry.enabled());
+
+        let mut c = SystemConfig::config_b();
+        c.apply_override("telemetry.trace", "on").unwrap();
+        c.apply_override("telemetry.timeline", "1").unwrap();
+        c.apply_override("telemetry.sample", "16").unwrap();
+        c.apply_override("telemetry.window", "5000").unwrap();
+        assert!(c.telemetry.trace && c.telemetry.timeline && c.telemetry.enabled());
+        assert_eq!(c.telemetry.sample, 16);
+        assert_eq!(c.telemetry.window, 5000);
+        c.validate().unwrap();
+        assert!(c.apply_override("telemetry.trace", "maybe").is_err());
+
+        let tj = c.to_json();
+        let t = tj.get("telemetry").unwrap();
+        assert_eq!(t.get("trace").unwrap().as_bool(), Some(true));
+        assert_eq!(t.get("sample").unwrap().as_usize(), Some(16));
+
+        c.telemetry.sample = 0;
+        assert!(c.validate().is_err(), "sample 0 must be rejected");
+        c.telemetry.sample = 1;
+        c.telemetry.window = 0;
+        assert!(c.validate().is_err(), "window 0 must be rejected");
     }
 }

@@ -120,11 +120,13 @@ impl RunSet {
         Some(baseline.report.total_cycles as f64 / run.report.total_cycles as f64)
     }
 
-    /// ASCII table: one row per run (axes, cycles, optional speedup over
-    /// the `(axis, value)` baseline, modelled fmax).
+    /// ASCII table: one row per run (axes, cycles, per-class latency
+    /// mean + p95, optional speedup over the `(axis, value)` baseline,
+    /// modelled fmax).
     pub fn to_table(&self, baseline: Option<(&str, &str)>) -> Table {
         let mut headers: Vec<&str> = self.axis_names.iter().map(String::as_str).collect();
         headers.push("cycles");
+        headers.extend(["elem lat", "p95", "fiber lat", "p95"]);
         if baseline.is_some() {
             headers.push("speedup");
         }
@@ -139,6 +141,7 @@ impl RunSet {
                 .map(|n| run.axis(n).unwrap_or("-").to_string())
                 .collect();
             row.push(run.report.total_cycles.to_string());
+            row.extend(run.report.latency_cells());
             if let Some((axis, value)) = baseline {
                 row.push(match self.speedup_over_baseline(run, axis, value) {
                     Some(s) => format!("{s:.2}x"),
@@ -205,6 +208,14 @@ mod tests {
         assert!(rendered.contains("cycles"));
         assert!(rendered.contains("speedup"));
         assert!(rendered.contains("1.00x"));
+        // Latency mean + p95 columns ride next to cycles.
+        assert!(rendered.contains("elem lat"));
+        assert!(rendered.contains("fiber lat"));
+        assert!(rendered.contains("p95"));
+        let run = &rs.runs[0];
+        for cell in run.report.latency_cells() {
+            assert!(rendered.contains(&cell), "missing latency cell {cell:?}");
+        }
     }
 
     #[test]

@@ -8,12 +8,13 @@
 //! built once up front and shared read-only across workers.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
 use crate::config::{FabricType, SystemConfig, SystemKind};
 use crate::resource::max_frequency_mhz;
-use crate::sim::simulate;
+use crate::sim::{simulate, MemorySystem, TelemetryOutput};
 use crate::tensor::Mode;
 use crate::trace::Workload;
 
@@ -58,6 +59,7 @@ pub struct Sweep {
     scenario: Scenario,
     axes: Vec<Axis>,
     threads: usize,
+    telemetry_dir: Option<PathBuf>,
 }
 
 /// Worker count the runner defaults to (the machine's parallelism).
@@ -67,7 +69,24 @@ pub fn default_threads() -> usize {
 
 impl Sweep {
     pub fn new(base: SystemConfig, scenario: Scenario) -> Sweep {
-        Sweep { base, scenario, axes: Vec::new(), threads: default_threads() }
+        Sweep {
+            base,
+            scenario,
+            axes: Vec::new(),
+            threads: default_threads(),
+            telemetry_dir: None,
+        }
+    }
+
+    /// Write per-run telemetry artifacts into `dir` (created on demand):
+    /// `trace-<n>-<label>.json` / `timeline-<n>-<label>.jsonl` for every
+    /// grid point whose *resolved* config enables the matching product —
+    /// so a `telemetry.trace` axis traces exactly the points that ask
+    /// for it. Points with telemetry off write nothing and simulate on
+    /// the untouched fast path.
+    pub fn telemetry_dir(mut self, dir: impl Into<PathBuf>) -> Sweep {
+        self.telemetry_dir = Some(dir.into());
+        self
     }
 
     /// Add a cartesian axis: `key` takes each of `values` in turn.
@@ -163,6 +182,11 @@ impl Sweep {
             workloads.entry(p.scenario.key()).or_default();
         }
         let slots: Vec<OnceLock<Run>> = (0..points.len()).map(|_| OnceLock::new()).collect();
+        // Side channel for telemetry artifacts: workers stash outputs
+        // here, the calling thread does all file IO after the joins.
+        let tel_slots: Vec<OnceLock<Option<TelemetryOutput>>> =
+            (0..points.len()).map(|_| OnceLock::new()).collect();
+        let want_telemetry = self.telemetry_dir.is_some();
         let cursor = AtomicUsize::new(0);
         // `grid` yields ≥ 1 point (an empty axis list is a single run).
         let workers = self.threads.clamp(1, points.len());
@@ -175,7 +199,14 @@ impl Sweep {
                     }
                     let p = &points[i];
                     let w = workloads[&p.scenario.key()].get_or_init(|| p.scenario.workload());
-                    let report = simulate(&p.cfg, w);
+                    let (report, tel) = if want_telemetry && p.cfg.telemetry.enabled() {
+                        let mut sys = MemorySystem::new(&p.cfg, w);
+                        let report = sys.run(&w.name);
+                        (report, Some(sys.take_telemetry(&w.name)))
+                    } else {
+                        (simulate(&p.cfg, w), None)
+                    };
+                    tel_slots[i].set(tel).expect("each telemetry slot is filled once");
                     let run = Run {
                         axes: p.axes.clone(),
                         fmax_mhz: max_frequency_mhz(&p.cfg),
@@ -186,12 +217,62 @@ impl Sweep {
                 });
             }
         });
-        let runs = slots
+        let runs: Vec<Run> = slots
             .into_iter()
             .map(|s| s.into_inner().expect("worker filled every slot"))
             .collect();
+        if let Some(dir) = &self.telemetry_dir {
+            let outputs = tel_slots
+                .into_iter()
+                .map(|s| s.into_inner().expect("worker filled every telemetry slot"));
+            write_telemetry_artifacts(dir, &runs, outputs)?;
+        }
         Ok(RunSet { axis_names: self.axis_names(), runs })
     }
+}
+
+/// Filesystem-safe run label: alphanumerics kept, runs of anything else
+/// collapsed to single dashes (`system=proposed scale=0.01` →
+/// `system-proposed-scale-0-01`).
+fn slug(label: &str) -> String {
+    let mut out = String::with_capacity(label.len());
+    for c in label.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.ends_with('-') {
+            out.push('-');
+        }
+    }
+    out.trim_matches('-').to_string()
+}
+
+/// Write each run's telemetry products (if any) under `dir`.
+fn write_telemetry_artifacts(
+    dir: &Path,
+    runs: &[Run],
+    outputs: impl Iterator<Item = Option<TelemetryOutput>>,
+) -> Result<(), String> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("telemetry dir {}: {e}", dir.display()))?;
+    for (i, (run, out)) in runs.iter().zip(outputs).enumerate() {
+        let Some(out) = out else { continue };
+        let name = slug(&run.label());
+        if let Some(trace) = &out.trace {
+            let path = dir.join(format!("trace-{i:03}-{name}.json"));
+            std::fs::write(&path, trace.to_string_compact())
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+        }
+        if !out.timeline.is_empty() {
+            let mut body = String::new();
+            for row in &out.timeline {
+                body.push_str(&row.to_string_compact());
+                body.push('\n');
+            }
+            let path = dir.join(format!("timeline-{i:03}-{name}.jsonl"));
+            std::fs::write(&path, body).map_err(|e| format!("{}: {e}", path.display()))?;
+        }
+    }
+    Ok(())
 }
 
 /// Apply one axis assignment to the (config, scenario) pair.
@@ -330,6 +411,55 @@ mod tests {
         let grid = sweep.grid().unwrap();
         assert_eq!(grid.len(), 1);
         assert!(grid[0].axes.is_empty());
+    }
+
+    #[test]
+    fn telemetry_dir_writes_artifacts_for_enabled_points_only() {
+        let dir = std::env::temp_dir().join(format!("memsys-sweep-tel-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let rs = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .zip_axis(
+                &["telemetry.trace", "telemetry.timeline"],
+                &[&["off", "off"], &["on", "on"]],
+            )
+            .axis("telemetry.window", &["100"])
+            .threads(2)
+            .telemetry_dir(&dir)
+            .run()
+            .unwrap();
+        assert_eq!(rs.len(), 2);
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        // Only grid point 1 (telemetry on) produced artifacts.
+        assert_eq!(names.len(), 2, "{names:?}");
+        assert!(names[0].starts_with("timeline-001-") && names[0].ends_with(".jsonl"));
+        assert!(names[1].starts_with("trace-001-") && names[1].ends_with(".json"));
+        let trace = crate::util::json::Json::parse(
+            &std::fs::read_to_string(dir.join(&names[1])).unwrap(),
+        )
+        .unwrap();
+        assert!(!trace.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+        // Telemetry never perturbs the simulation itself.
+        let plain = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .zip_axis(
+                &["telemetry.trace", "telemetry.timeline"],
+                &[&["off", "off"], &["on", "on"]],
+            )
+            .axis("telemetry.window", &["100"])
+            .threads(1)
+            .run()
+            .unwrap();
+        assert_eq!(plain.runs[0].report.diff(&plain.runs[1].report), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slug_flattens_labels() {
+        assert_eq!(slug("system=proposed scale=0.01"), "system-proposed-scale-0-01");
+        assert_eq!(slug("config-b"), "config-b");
     }
 
     #[test]

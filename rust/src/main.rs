@@ -7,6 +7,8 @@
 //!   table2     Print the Table II resource-utilization model.
 //!   table3     Print the Table III dataset summary.
 //!   simulate   Run one memory-system simulation (config + workload).
+//!   trace      Simulate with request-lifecycle tracing; write Chrome trace JSON.
+//!   report-diff  Compare two SimReport JSON files field by field.
 //!   sweep      Run a config/scenario grid in parallel; table + JSON-lines.
 //!   mttkrp     Run one MTTKRP through the full stack (sim + PJRT).
 //!   als        Timed CP-ALS (experiment E6).
@@ -21,9 +23,11 @@ use mttkrp_memsys::experiment::{self, default_threads, Scenario, Sweep};
 use mttkrp_memsys::mttkrp::CpAlsOptions;
 use mttkrp_memsys::resource::{max_frequency_mhz, table2};
 use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
-use mttkrp_memsys::sim::simulate;
+use mttkrp_memsys::sim::{MemorySystem, SimReport};
 use mttkrp_memsys::tensor::{gen, io, CooTensor, DenseMatrix, Mode};
+use mttkrp_memsys::trace::Workload;
 use mttkrp_memsys::util::cli::Args;
+use mttkrp_memsys::util::json::Json;
 use mttkrp_memsys::util::rng::Rng;
 use mttkrp_memsys::util::table::{Align, Table};
 use mttkrp_memsys::util::{fmt_bytes, fmt_count};
@@ -35,6 +39,8 @@ fn main() {
         Some("table2") => cmd_table2(),
         Some("table3") => cmd_table3(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("report-diff") => cmd_report_diff(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("als") => cmd_als(&args),
@@ -67,12 +73,18 @@ USAGE: mttkrp-memsys <subcommand> [--options]
             [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
             [--link_width W] [--lmb-banks N] [--reply-network on|off]
             [--scale 0.01] [--dataset synth01|synth02] [--<section.key> v]
+            [--trace-out trace.json] [--timeline tl.jsonl] [--sample N] [--window W]
+  trace     --trace-out trace.json [--timeline tl.jsonl] [--sample N] [--window W]
+            (simulate with tracing forced on; all simulate options apply;
+             load the JSON in Perfetto / chrome://tracing)
+  report-diff  a.json b.json       first diverging field of two SimReports
   sweep     --axis key=v1,v2,... [--axis ...] [--threads N]
             [--baseline axis=value] [--out runs.jsonl]
             [--preset b] [--dataset synth01] [--scale 0.01] [--mode i|j|k]
+            [--telemetry-dir DIR]
             (axes: system, preset, dataset, scale, mode, fabric, channels,
              topology, link_width, lmb_banks, reply_network, and any
-             --<section.key> override key)
+             --<section.key> override key, e.g. telemetry.trace)
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
   gen       --out t.tns [--dataset synth01] [--scale 0.01]
@@ -155,14 +167,24 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
         .threads(args.get_usize("threads", default_threads()))
         .run()
         .map_err(anyhow::Error::msg)?;
-    let mut table = Table::new(&["category", "ip-only", "cache-only", "dma-only", "proposed"])
-        .aligns(&[
-            Align::Left,
-            Align::Right,
-            Align::Right,
-            Align::Right,
-            Align::Right,
-        ]);
+    let mut table = Table::new(&[
+        "category",
+        "ip-only",
+        "cache-only",
+        "dma-only",
+        "proposed",
+        "elem lat",
+        "p95",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
     for (preset, label) in [("a", "A_1"), ("b", "B_2")] {
         for (ds, tname) in [("synth01", "S1"), ("synth02", "S2")] {
             let cell = |system: &str| {
@@ -170,12 +192,16 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
                     .expect("sweep covers the fig4 grid")
             };
             let ip = cell("ip-only");
+            // Mean/p95 element latency of the proposed system (cycles).
+            let [lat_mean, lat_p95, _, _] = cell("proposed").report.latency_cells();
             table.row(&[
                 format!("{label}_{tname}"),
                 "1.00".to_string(),
                 format!("{:.2}", cell("cache-only").report.speedup_over(&ip.report)),
                 format!("{:.2}", cell("dma-only").report.speedup_over(&ip.report)),
                 format!("{:.2}", cell("proposed").report.speedup_over(&ip.report)),
+                lat_mean,
+                lat_p95,
             ]);
         }
     }
@@ -213,8 +239,61 @@ fn cmd_table3(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Telemetry output destinations: `--trace-out FILE` / `--timeline FILE`.
+/// Naming a file turns the matching product on (equivalent to the
+/// `--telemetry.trace on` / `--telemetry.timeline on` overrides);
+/// `--sample N` / `--window W` shorthand the other two knobs.
+struct TelemetryPaths {
+    trace: Option<String>,
+    timeline: Option<String>,
+}
+
+fn telemetry_paths(args: &Args, cfg: &mut SystemConfig) -> anyhow::Result<TelemetryPaths> {
+    let paths = TelemetryPaths {
+        trace: args.get("trace-out").map(str::to_string),
+        timeline: args.get("timeline").map(str::to_string),
+    };
+    if paths.trace.is_some() {
+        cfg.telemetry.trace = true;
+    }
+    if paths.timeline.is_some() {
+        cfg.telemetry.timeline = true;
+    }
+    cfg.telemetry.sample = args.get_u64("sample", cfg.telemetry.sample);
+    cfg.telemetry.window = args.get_u64("window", cfg.telemetry.window);
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(paths)
+}
+
+/// Simulate, then write any requested telemetry artifacts.
+fn run_with_telemetry(
+    cfg: &SystemConfig,
+    w: &Workload,
+    paths: &TelemetryPaths,
+) -> anyhow::Result<SimReport> {
+    let mut sys = MemorySystem::new(cfg, w);
+    let report = sys.run(&w.name);
+    let out = sys.take_telemetry(&w.name);
+    if let Some(path) = &paths.trace {
+        let trace = out.trace.expect("tracing forced on by --trace-out");
+        std::fs::write(path, trace.to_string_compact())?;
+        println!("wrote trace to {path} (load in Perfetto / chrome://tracing)");
+    }
+    if let Some(path) = &paths.timeline {
+        let mut body = String::new();
+        for row in &out.timeline {
+            body.push_str(&row.to_string_compact());
+            body.push('\n');
+        }
+        std::fs::write(path, body)?;
+        println!("wrote {} timeline rows to {path}", out.timeline.len());
+    }
+    Ok(report)
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = preset_cfg(args)?;
+    let mut cfg = preset_cfg(args)?;
+    let paths = telemetry_paths(args, &mut cfg)?;
     let scenario = scenario_arg(args, &cfg)?;
     let w = scenario.workload();
     println!(
@@ -224,9 +303,79 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         fmt_count(w.n_accesses() as u64),
         fmt_bytes(w.total_bytes())
     );
-    let report = simulate(&cfg, &w);
+    let report = run_with_telemetry(&cfg, &w, &paths)?;
     println!("{}", report.to_json().to_string_pretty());
     Ok(())
+}
+
+/// `trace` — `simulate` with request-lifecycle tracing forced on.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = preset_cfg(args)?;
+    cfg.telemetry.trace = true;
+    let paths = telemetry_paths(args, &mut cfg)?;
+    anyhow::ensure!(
+        paths.trace.is_some(),
+        "trace wants --trace-out <file.json> (add --timeline <file.jsonl> for the time-series)"
+    );
+    let scenario = scenario_arg(args, &cfg)?;
+    let w = scenario.workload();
+    println!(
+        "tracing {} (sample 1-in-{}, window {} cycles)",
+        w.name, cfg.telemetry.sample, cfg.telemetry.window
+    );
+    let report = run_with_telemetry(&cfg, &w, &paths)?;
+    println!(
+        "cycles={} accesses={} elem p95={} fiber p95={}",
+        fmt_count(report.total_cycles),
+        fmt_count(report.accesses),
+        report.elem_latency_p95(),
+        report.fiber_latency_p95()
+    );
+    Ok(())
+}
+
+/// `report-diff a.json b.json` — print the first diverging field of two
+/// SimReport dumps (host timing is masked). Exits 1 on divergence so the
+/// command doubles as a regression check in scripts.
+fn cmd_report_diff(args: &Args) -> anyhow::Result<()> {
+    let [a_path, b_path] = args.positionals() else {
+        anyhow::bail!("report-diff wants exactly two positional report.json paths");
+    };
+    let load = |p: &String| -> anyhow::Result<Json> {
+        let src = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        Json::parse(&src).map_err(|e| anyhow::anyhow!("{p}: {e}"))
+    };
+    let (a, b) = (load(a_path)?, load(b_path)?);
+    // Host wall time is machine noise, never a simulation divergence.
+    match a.first_diff(&b, &["host_seconds"]) {
+        None => {
+            println!("reports match ({a_path} == {b_path}, ignoring host_seconds)");
+            Ok(())
+        }
+        Some(path) => {
+            let show = |v: &Json| {
+                let mut cur = v;
+                for part in path.split('.') {
+                    let (key, idx) = match part.split_once('[') {
+                        Some((k, rest)) => (k, rest.strip_suffix(']').and_then(|s| s.parse().ok())),
+                        None => (part, None),
+                    };
+                    if !key.is_empty() {
+                        cur = cur.get(key).unwrap_or(&Json::Null);
+                    }
+                    if let (Some(i), Some(items)) = (idx, cur.as_arr()) {
+                        cur = items.get(i).unwrap_or(&Json::Null);
+                    }
+                }
+                cur.to_string_compact()
+            };
+            println!("reports diverge at `{path}`");
+            println!("  {a_path}: {}", show(&a));
+            println!("  {b_path}: {}", show(&b));
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
@@ -234,6 +383,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let scenario = scenario_arg(args, &cfg)?;
     let threads = args.get_usize("threads", default_threads());
     let mut sweep = Sweep::new(cfg, scenario).threads(threads);
+    // Per-run trace/timeline files for grid points that enable
+    // telemetry (e.g. via an `--axis telemetry.trace=off,on`).
+    let telemetry_dir = args.get("telemetry-dir");
+    if let Some(dir) = telemetry_dir {
+        sweep = sweep.telemetry_dir(dir);
+    }
     let specs = args.get_all("axis");
     anyhow::ensure!(
         !specs.is_empty(),
@@ -292,6 +447,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("out") {
         runs.write_jsonl(std::path::Path::new(path))?;
         println!("wrote {} JSON-lines to {path}", runs.len());
+    }
+    if let Some(dir) = telemetry_dir {
+        let traced = runs.runs.iter().filter(|r| r.cfg.telemetry.enabled()).count();
+        println!("wrote telemetry artifacts for {traced} runs to {dir}/");
     }
     Ok(())
 }

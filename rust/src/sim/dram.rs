@@ -20,6 +20,7 @@ use std::collections::VecDeque;
 use crate::config::DramConfig;
 use crate::util::log2;
 
+use super::telemetry::Telemetry;
 use super::{Cycle, MemReq, MemResp, ReqId};
 
 /// Per-bank open-row state.
@@ -186,7 +187,20 @@ impl Dram {
     /// Advance to `now`: schedule queued requests onto banks + bus, and
     /// return all transactions that complete at or before `now`.
     pub fn tick(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
-        self.schedule(now);
+        self.tick_traced(now, completions, &mut Telemetry::disabled(), 0);
+    }
+
+    /// [`Dram::tick`] with a telemetry sink: scheduled requests report
+    /// their queue/service spans to `tel` as channel `ch`. Behavior is
+    /// identical — telemetry is observation-only.
+    pub fn tick_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+        ch: usize,
+    ) {
+        self.schedule(now, tel, ch);
         if self.earliest_done > now {
             return; // nothing due — skip the drain scan
         }
@@ -261,7 +275,7 @@ impl Dram {
 
     /// FR-FCFS-lite: pick row hits first, then oldest; schedule as many
     /// requests as the bus window allows this cycle.
-    fn schedule(&mut self, now: Cycle) {
+    fn schedule(&mut self, now: Cycle, tel: &mut Telemetry, ch: usize) {
         while !self.queue.is_empty() {
             // Find the best candidate: row hit on a free bank, else oldest
             // whose bank is free.
@@ -288,29 +302,29 @@ impl Dram {
                 break;
             }
             let (req, enq_at) = self.queue.remove(qi).unwrap();
-            self.issue(req, enq_at, now);
+            self.issue(req, enq_at, now, tel, ch);
         }
     }
 
-    fn issue(&mut self, req: MemReq, enq_at: Cycle, now: Cycle) {
+    fn issue(&mut self, req: MemReq, enq_at: Cycle, now: Cycle, tel: &mut Telemetry, ch: usize) {
         let beat = self.cfg.beat_bytes();
         let beats = crate::util::ceil_div(req.bytes as u64, beat).max(1);
         let bank_idx = self.bank_of(req.addr);
         let row = self.row_of(req.addr);
         let bank = &mut self.banks[bank_idx];
         // Bank access latency.
-        let access = match bank.open_row {
+        let (access, row_kind) = match bank.open_row {
             Some(r) if r == row => {
                 self.stats.row_hits += 1;
-                self.cfg.t_row_hit
+                (self.cfg.t_row_hit, "hit")
             }
             Some(_) => {
                 self.stats.row_conflicts += 1;
-                self.cfg.t_row_miss + self.cfg.t_precharge
+                (self.cfg.t_row_miss + self.cfg.t_precharge, "conflict")
             }
             None => {
                 self.stats.row_misses += 1;
-                self.cfg.t_row_miss
+                (self.cfg.t_row_miss, "miss")
             }
         };
         let was_hit = matches!(bank.open_row, Some(r) if r == row);
@@ -335,6 +349,7 @@ impl Dram {
             self.stats.reads += 1;
             self.stats.read_bytes += req.bytes as u64;
         }
+        tel.mem_service(req.id, ch, enq_at, now, done_at, row_kind);
         self.inflight.push(Inflight { req, done_at });
     }
 }

@@ -47,6 +47,7 @@ use std::collections::VecDeque;
 use crate::config::{DramConfig, InterconnectConfig, TopologyKind};
 
 use super::dram::{ChannelMap, Dram, DramStats};
+use super::telemetry::Telemetry;
 use super::{Cycle, MemReq, MemResp};
 
 /// Static routing view of an interconnect topology over `nodes` fabric
@@ -455,7 +456,18 @@ impl Fabric {
     /// finished by `now` (their `done_at` rewritten to the delivery
     /// cycle).
     pub fn tick_memory(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
-        self.tick_channels(now, completions, false);
+        self.tick_channels(now, completions, false, &mut Telemetry::disabled());
+    }
+
+    /// [`Fabric::tick_memory`] with a telemetry sink for the per-channel
+    /// DRAM queue/service spans. Behavior is identical.
+    pub fn tick_memory_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+    ) {
+        self.tick_channels(now, completions, false, tel);
     }
 
     /// Event-driven variant of [`Fabric::tick_memory`]: only advance
@@ -465,10 +477,26 @@ impl Fabric {
     /// deliveries drain unconditionally, exactly as in the ungated
     /// variant.
     pub fn tick_memory_gated(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
-        self.tick_channels(now, completions, true);
+        self.tick_channels(now, completions, true, &mut Telemetry::disabled());
     }
 
-    fn tick_channels(&mut self, now: Cycle, completions: &mut Vec<MemResp>, gated: bool) {
+    /// [`Fabric::tick_memory_gated`] with a telemetry sink.
+    pub fn tick_memory_gated_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+    ) {
+        self.tick_channels(now, completions, true, tel);
+    }
+
+    fn tick_channels(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        gated: bool,
+        tel: &mut Telemetry,
+    ) {
         // Replies that finished transport in an earlier cycle surface
         // first (they completed strictly before anything due at `now`).
         while let Some(resp) = self.reply_out.front() {
@@ -483,13 +511,13 @@ impl Fabric {
             }
             if self.reply_enabled {
                 self.reply_scratch.clear();
-                self.channels[c].tick(now, &mut self.reply_scratch);
+                self.channels[c].tick_traced(now, &mut self.reply_scratch, tel, c);
                 for resp in self.reply_scratch.drain(..) {
                     self.reply_at_node[c].push_back(resp);
                     self.reply_occupancy += 1;
                 }
             } else {
-                self.channels[c].tick(now, completions);
+                self.channels[c].tick_traced(now, completions, tel, c);
             }
         }
     }
@@ -506,15 +534,22 @@ impl Fabric {
     /// store-and-forward hop per link, then the mirror image on the
     /// reply side. Returns true if anything moved.
     pub fn route(&mut self, now: Cycle) -> bool {
+        self.route_traced(now, &mut Telemetry::disabled())
+    }
+
+    /// [`Fabric::route`] with a telemetry sink for transport spans
+    /// (controller delivery, store-and-forward hops, reply hops).
+    /// Behavior is identical — telemetry is observation-only.
+    pub fn route_traced(&mut self, now: Cycle, tel: &mut Telemetry) -> bool {
         let mut moved = match self.kind {
-            TopologyKind::Crossbar => self.route_crossbar(now),
-            TopologyKind::Line | TopologyKind::Ring => self.route_store_forward(now),
+            TopologyKind::Crossbar => self.route_crossbar(now, tel),
+            TopologyKind::Line | TopologyKind::Ring => self.route_store_forward(now, tel),
         };
         if self.reply_enabled {
             moved |= match self.kind {
                 TopologyKind::Crossbar => self.route_reply_crossbar(now),
                 TopologyKind::Line | TopologyKind::Ring => {
-                    self.route_reply_store_forward(now)
+                    self.route_reply_store_forward(now, tel)
                 }
             };
         }
@@ -523,7 +558,7 @@ impl Fabric {
 
     /// Crossbar: per-channel round-robin over all port queues — the seed
     /// router's arbitration loop, one instance per channel.
-    fn route_crossbar(&mut self, now: Cycle) -> bool {
+    fn route_crossbar(&mut self, now: Cycle, tel: &mut Telemetry) -> bool {
         let n = self.ingress.len();
         let nch = self.channels.len();
         let mut moved = false;
@@ -549,7 +584,7 @@ impl Fabric {
                 self.ingress[port].pop_front();
                 self.ingress_occupancy -= 1;
                 self.stats.links[port * nch + c].forwarded += 1;
-                self.deliver(MemReq { addr: local, ..req }, c, now);
+                self.deliver(MemReq { addr: local, ..req }, c, now, tel);
                 forwarded += 1;
                 moved = true;
                 // Advance RR past the port we just served.
@@ -563,7 +598,7 @@ impl Fabric {
     /// Line/ring: requests drain into their node's channel when they
     /// arrive, otherwise advance one link toward it (one cycle per hop,
     /// `link_width` per link per cycle, bounded queues).
-    fn route_store_forward(&mut self, now: Cycle) -> bool {
+    fn route_store_forward(&mut self, now: Cycle, tel: &mut Telemetry) -> bool {
         let nodes = self.channels.len();
         let topo = topology_of(self.kind);
         let mut moved = false;
@@ -591,7 +626,7 @@ impl Fabric {
                 }
                 self.pop_source(node, si);
                 let (_, local) = self.chmap.decode(req.addr);
-                self.deliver(MemReq { addr: local, ..req }, node, now);
+                self.deliver(MemReq { addr: local, ..req }, node, now, tel);
                 forwarded += 1;
                 moved = true;
                 self.rr_egress[node] = (si + 1) % nsrc;
@@ -630,6 +665,7 @@ impl Fabric {
                 self.hop_budget[lid] -= 1;
                 self.stats.links[lid].forwarded += 1;
                 self.stats.hops += 1;
+                tel.mem_hop(req.id, node, next, now);
                 moved = true;
                 if !advanced {
                     self.rr_hop[node] = (si + 1) % nsrc;
@@ -711,7 +747,7 @@ impl Fabric {
     /// they reach its ingress node (one per node per cycle), otherwise
     /// advance one reply link toward it (one cycle per hop, `link_width`
     /// per link per cycle, bounded queues with backpressure).
-    fn route_reply_store_forward(&mut self, now: Cycle) -> bool {
+    fn route_reply_store_forward(&mut self, now: Cycle, tel: &mut Telemetry) -> bool {
         let nodes = self.channels.len();
         let topo = topology_of(self.kind);
         let mut moved = false;
@@ -776,6 +812,7 @@ impl Fabric {
                 self.reply_hop_budget[lid] -= 1;
                 self.stats.reply.links[lid].forwarded += 1;
                 self.stats.reply.hops += 1;
+                tel.mem_reply_hop(resp.id, node, next, now);
                 moved = true;
                 if !advanced {
                     self.rr_reply_hop[node] = (si + 1) % nsrc;
@@ -820,10 +857,11 @@ impl Fabric {
 
     /// Hand a request (already rewritten to its channel-local address)
     /// to channel `ch`'s controller.
-    fn deliver(&mut self, req: MemReq, ch: usize, now: Cycle) {
+    fn deliver(&mut self, req: MemReq, ch: usize, now: Cycle, tel: &mut Telemetry) {
         self.stats.per_port_forwarded[req.port] += 1;
         self.stats.per_channel_forwarded[ch] += 1;
         self.stats.forwarded += 1;
+        tel.mem_delivered(req.id, ch, now);
         self.channels[ch].push(req, now);
     }
 
@@ -883,6 +921,12 @@ impl Fabric {
     /// Per-channel DRAM statistics snapshots.
     pub fn channel_stats(&self) -> Vec<DramStats> {
         self.channels.iter().map(|d| d.stats.clone()).collect()
+    }
+
+    /// Requests resident (queued + in flight) per channel — the
+    /// instantaneous occupancy the telemetry timeline samples.
+    pub fn channel_occupancy(&self) -> Vec<u64> {
+        self.channels.iter().map(|d| d.occupancy() as u64).collect()
     }
 
     /// All channels folded into one aggregate (the seed report's view).

@@ -169,15 +169,29 @@ impl Lmb {
         ids: &mut IdGen,
         line_events: &mut Vec<LineEvent>,
     ) -> LmbOutcome {
+        self.element_load_probed(addr, token, now, ids, line_events).0
+    }
+
+    /// [`Lmb::element_load`] that also reports which bank fronted the
+    /// address and the RR outcome kind (`hit` / `absorb` / `forward` /
+    /// `stall`) — the telemetry probe. Behavior is identical.
+    pub fn element_load_probed(
+        &mut self,
+        addr: u64,
+        token: u64,
+        now: Cycle,
+        ids: &mut IdGen,
+        line_events: &mut Vec<LineEvent>,
+    ) -> (LmbOutcome, usize, &'static str) {
         debug_assert_eq!(self.kind, SystemKind::Proposed);
         let bank = self.bank_of(addr);
         match self.banks[bank].rr.element_load(addr, token, now) {
-            RrResult::Served { ready_at } => LmbOutcome::Ready { at: ready_at },
-            RrResult::Absorbed => LmbOutcome::Pending,
-            RrResult::Stall => LmbOutcome::Stall,
+            RrResult::Served { ready_at } => (LmbOutcome::Ready { at: ready_at }, bank, "hit"),
+            RrResult::Absorbed => (LmbOutcome::Pending, bank, "absorb"),
+            RrResult::Stall => (LmbOutcome::Stall, bank, "stall"),
             RrResult::ForwardLine { line } => {
                 self.line_to_cache(bank, line, now, ids, line_events);
-                LmbOutcome::Pending
+                (LmbOutcome::Pending, bank, "forward")
             }
         }
     }

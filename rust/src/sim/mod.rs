@@ -57,12 +57,14 @@ pub mod router;
 pub mod rrsh;
 pub mod stats;
 pub mod system;
+pub mod telemetry;
 pub mod temp_buffer;
 pub mod xor_hash;
 
 pub use fabric::{Fabric, FabricStats, LinkStats, ReplyStats};
 pub use stats::SimReport;
 pub use system::{simulate, MemorySystem};
+pub use telemetry::{Telemetry, TelemetryOutput, TimelineSnap};
 
 /// Simulated clock cycle.
 pub type Cycle = u64;

@@ -69,19 +69,55 @@ impl NnzSlot {
     }
 }
 
-/// Per-access-class latency accumulators (issue → last part complete).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// Number of log2 latency buckets: bucket 0 holds zero-cycle samples,
+/// bucket `k >= 1` the range `[2^(k-1), 2^k - 1]` — covers any `u64`.
+pub const LATENCY_BUCKETS: usize = 65;
+
+/// Per-access-class latency accumulators (issue → last part complete):
+/// count/total/max plus a log2 histogram for percentile estimates.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LatencyStats {
     pub count: u64,
     pub total: u64,
     pub max: u64,
+    /// Log2 histogram — `buckets[LatencyStats::bucket_of(lat)] += 1`.
+    pub buckets: [u64; LATENCY_BUCKETS],
+}
+
+// `[u64; 65]` has no derived Default (arrays > 32 predate const-generic
+// impls there), so spell it out.
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats { count: 0, total: 0, max: 0, buckets: [0; LATENCY_BUCKETS] }
+    }
 }
 
 impl LatencyStats {
+    /// Histogram bucket index for one latency sample.
+    #[inline]
+    pub fn bucket_of(lat: u64) -> usize {
+        if lat == 0 {
+            0
+        } else {
+            64 - lat.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive `(lo, hi)` value range covered by bucket `k`.
+    pub fn bucket_range(k: usize) -> (u64, u64) {
+        if k == 0 {
+            (0, 0)
+        } else {
+            let lo = 1u64 << (k - 1);
+            (lo, lo - 1 + lo) // 2^k - 1; exact u64::MAX at k = 64
+        }
+    }
+
     pub fn record(&mut self, lat: u64) {
         self.count += 1;
         self.total += lat;
         self.max = self.max.max(lat);
+        self.buckets[Self::bucket_of(lat)] += 1;
     }
 
     pub fn mean(&self) -> f64 {
@@ -92,10 +128,40 @@ impl LatencyStats {
         }
     }
 
+    /// Nearest-rank percentile estimate (`q` in 0..=1): the upper bound
+    /// of the bucket holding the rank-`ceil(q·count)` sample, clamped to
+    /// the observed max. 0 for an empty accumulator; exact whenever the
+    /// bucket degenerates (single sample, all-equal, or the max bucket).
+    pub fn percentile(&self, q: f64) -> u64 {
+        self.percentile_bounds(q).1
+    }
+
+    /// Inclusive `(lo, hi)` bounds bracketing the exact nearest-rank
+    /// percentile: the covered range of the bucket the ranked sample
+    /// fell into, `hi` clamped to the observed max. `(0, 0)` when empty.
+    pub fn percentile_bounds(&self, q: f64) -> (u64, u64) {
+        if self.count == 0 {
+            return (0, 0);
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (k, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                let (lo, hi) = Self::bucket_range(k);
+                return (lo.min(self.max), hi.min(self.max));
+            }
+        }
+        (self.max, self.max)
+    }
+
     pub fn merge(&mut self, o: &LatencyStats) {
         self.count += o.count;
         self.total += o.total;
         self.max = self.max.max(o.max);
+        for (b, ob) in self.buckets.iter_mut().zip(o.buckets.iter()) {
+            *b += *ob;
+        }
     }
 }
 
@@ -418,5 +484,119 @@ mod tests {
         assert_eq!(fe.retire(20), 1);
         fe.fill_window();
         assert_eq!(fe.in_flight(), 3);
+    }
+
+    // --- latency histogram -----------------------------------------------
+
+    #[test]
+    fn latency_buckets_cover_log2_ranges() {
+        for (lat, want) in [(0u64, 0usize), (1, 1), (2, 2), (3, 2), (4, 3), (7, 3), (8, 4)] {
+            assert_eq!(LatencyStats::bucket_of(lat), want, "bucket of {lat}");
+        }
+        assert_eq!(LatencyStats::bucket_of(u64::MAX), 64);
+        for k in 0..LATENCY_BUCKETS {
+            let (lo, hi) = LatencyStats::bucket_range(k);
+            assert!(lo <= hi, "bucket {k} range inverted");
+            assert_eq!(LatencyStats::bucket_of(lo), k, "lo of bucket {k}");
+            assert_eq!(LatencyStats::bucket_of(hi), k, "hi of bucket {k}");
+        }
+    }
+
+    #[test]
+    fn latency_percentile_edge_cases() {
+        let empty = LatencyStats::default();
+        assert_eq!(empty.percentile(0.5), 0);
+        assert_eq!(empty.percentile_bounds(0.99), (0, 0));
+
+        let mut one = LatencyStats::default();
+        one.record(37);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.percentile(q), 37, "single sample, q={q}");
+        }
+
+        let mut same = LatencyStats::default();
+        for _ in 0..100 {
+            same.record(12);
+        }
+        assert_eq!(same.percentile(0.5), 12);
+        assert_eq!(same.percentile(0.99), 12);
+        assert_eq!(same.mean(), 12.0);
+    }
+
+    #[test]
+    fn latency_merge_adds_buckets_elementwise() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        for lat in [0u64, 3, 100] {
+            a.record(lat);
+        }
+        for lat in [5u64, 1000] {
+            b.record(lat);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let mut direct = LatencyStats::default();
+        for lat in [0u64, 3, 100, 5, 1000] {
+            direct.record(lat);
+        }
+        assert_eq!(merged, direct);
+    }
+
+    /// Satellite: bucketed percentiles must bracket the exact
+    /// nearest-rank percentile of the recorded sample vector, for
+    /// randomized vectors including empty / single / all-equal shapes.
+    #[test]
+    fn prop_percentile_bounds_bracket_exact() {
+        use crate::util::prop::check;
+        use crate::{prop_assert, prop_assert_eq};
+
+        fn exact_percentile(sorted: &[u64], q: f64) -> u64 {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            sorted[rank - 1]
+        }
+
+        check(
+            "log2 percentile bounds bracket exact",
+            200,
+            |rng| {
+                let shape = rng.gen_range(4);
+                let n = match shape {
+                    0 => 0,                          // empty
+                    1 => 1,                          // single sample
+                    2 => rng.gen_usize(2, 64),       // all-equal
+                    _ => rng.gen_usize(2, 256),      // general
+                };
+                let fixed = rng.gen_range(100_000);
+                (0..n)
+                    .map(|_| if shape == 2 { fixed } else { rng.gen_range(1 << 20) })
+                    .collect::<Vec<u64>>()
+            },
+            |samples| {
+                let mut h = LatencyStats::default();
+                for &s in samples {
+                    h.record(s);
+                }
+                let mut sorted = samples.clone();
+                sorted.sort_unstable();
+                for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+                    let (lo, hi) = h.percentile_bounds(q);
+                    if sorted.is_empty() {
+                        prop_assert_eq!((lo, hi), (0, 0), "empty must yield (0,0)");
+                        continue;
+                    }
+                    let exact = exact_percentile(&sorted, q);
+                    prop_assert!(
+                        lo <= exact && exact <= hi,
+                        "q={q}: exact {exact} outside [{lo}, {hi}] (n={})",
+                        sorted.len()
+                    );
+                    prop_assert!(
+                        h.percentile(q) <= h.max,
+                        "q={q}: estimate above observed max"
+                    );
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -186,6 +186,30 @@ impl SimReport {
         self.latency[0].mean()
     }
 
+    /// p95 PE-observed latency of element loads (cycles, log2-bucketed
+    /// nearest-rank estimate).
+    pub fn elem_latency_p95(&self) -> u64 {
+        self.latency[0].percentile(0.95)
+    }
+
+    /// p95 PE-observed latency of fiber loads (both fiber slots merged).
+    pub fn fiber_latency_p95(&self) -> u64 {
+        let mut merged = self.latency[1].clone();
+        merged.merge(&self.latency[2]);
+        merged.percentile(0.95)
+    }
+
+    /// The latency table cells shared by the sweep and fig4 ASCII views:
+    /// `[elem mean, elem p95, fiber mean, fiber p95]` (cycles).
+    pub fn latency_cells(&self) -> [String; 4] {
+        [
+            format!("{:.1}", self.elem_latency_mean()),
+            self.elem_latency_p95().to_string(),
+            format!("{:.1}", self.fiber_latency_mean()),
+            self.fiber_latency_p95().to_string(),
+        ]
+    }
+
     /// Per-channel data-bus utilization (busy beats / makespan).
     pub fn channel_bus_utilization(&self) -> Vec<f64> {
         self.channels
@@ -254,6 +278,7 @@ impl SimReport {
                     ("row_hit_rate", Json::num(self.dram.row_hit_rate())),
                 ]),
             ),
+            ("latency", self.latency_json()),
             ("channels", self.channels_json()),
             ("fabric", self.fabric_json()),
             ("lmbs", self.lmbs_json()),
@@ -267,6 +292,45 @@ impl SimReport {
             ),
             ("host_seconds", Json::num(self.host_seconds)),
         ])
+    }
+
+    /// Per-access-class latency distributions: count/mean/p50/p95/p99/max
+    /// plus the occupied log2 histogram buckets (inclusive value ranges).
+    fn latency_json(&self) -> Json {
+        const CLASSES: [&str; 4] = ["elem", "fib1", "fib2", "store"];
+        let rows = CLASSES
+            .iter()
+            .zip(&self.latency)
+            .map(|(name, l)| {
+                let buckets: Vec<Json> = l
+                    .buckets
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &n)| n > 0)
+                    .map(|(k, &n)| {
+                        let (lo, hi) = LatencyStats::bucket_range(k);
+                        Json::obj(vec![
+                            ("lo", Json::num(lo as f64)),
+                            ("hi", Json::num(hi as f64)),
+                            ("count", Json::num(n as f64)),
+                        ])
+                    })
+                    .collect();
+                (
+                    *name,
+                    Json::obj(vec![
+                        ("count", Json::num(l.count as f64)),
+                        ("mean", Json::num(l.mean())),
+                        ("p50", Json::num(l.percentile(0.50) as f64)),
+                        ("p95", Json::num(l.percentile(0.95) as f64)),
+                        ("p99", Json::num(l.percentile(0.99) as f64)),
+                        ("max", Json::num(l.max as f64)),
+                        ("buckets", Json::arr(buckets)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(rows)
     }
 
     /// Per-channel DRAM counters + bus utilization as a JSON array.
@@ -441,6 +505,56 @@ mod tests {
         assert_eq!(reply.get("delivered").unwrap().as_usize(), Some(0));
         assert!(reply.get("links").is_some());
         assert!(j.get("lmbs").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn latency_json_carries_percentiles_and_buckets() {
+        let mut r = report(100);
+        for lat in [10u64, 20, 30, 1000] {
+            r.latency[0].record(lat);
+        }
+        r.latency[1].record(40);
+        r.latency[2].record(4000);
+        let j = r.to_json();
+        let elem = j.get("latency").unwrap().get("elem").unwrap();
+        assert_eq!(elem.get("count").unwrap().as_usize(), Some(4));
+        assert_eq!(elem.get("max").unwrap().as_usize(), Some(1000));
+        // rank-2 sample (20) sits in bucket [16, 31]; rank-4 (1000) in
+        // [512, 1023], upper bound clamped to the observed max.
+        assert_eq!(elem.get("p50").unwrap().as_usize(), Some(31));
+        assert_eq!(elem.get("p95").unwrap().as_usize(), Some(1000));
+        let buckets = elem.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 3, "occupied buckets only");
+        let total: f64 = buckets.iter().map(|b| b.get("count").unwrap().as_f64().unwrap()).sum();
+        assert_eq!(total, 4.0);
+        // Empty class stays all-zero.
+        let store = j.get("latency").unwrap().get("store").unwrap();
+        assert_eq!(store.get("count").unwrap().as_usize(), Some(0));
+        assert_eq!(store.get("p99").unwrap().as_usize(), Some(0));
+        // Report-level helpers agree with the per-class view.
+        assert_eq!(r.elem_latency_p95(), 1000);
+        assert_eq!(r.fiber_latency_p95(), 4000, "fiber slots merge for p95");
+    }
+
+    #[test]
+    fn latency_cells_pin_known_stream() {
+        let mut r = report(100);
+        for lat in [10u64, 20, 30, 1000] {
+            r.latency[0].record(lat);
+        }
+        r.latency[1].record(40);
+        r.latency[2].record(4000);
+        // elem mean 1060/4 = 265.0, p95 = bucket [512,1023] clamped to
+        // max 1000; fiber merges both slots: mean 4040/2, p95 = 4000.
+        assert_eq!(
+            r.latency_cells(),
+            ["265.0", "1000", "2020.0", "4000"].map(String::from)
+        );
+        // Empty distributions render as zeros, never NaN.
+        assert_eq!(
+            report(1).latency_cells(),
+            ["0.0", "0", "0.0", "0"].map(String::from)
+        );
     }
 
     #[test]

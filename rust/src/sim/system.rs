@@ -66,6 +66,7 @@ use super::fabric::Fabric;
 use super::lmb::{LineEvent, Lmb, LmbOutcome};
 use super::pe::{pack_token, unpack_token, PeFrontEnd};
 use super::stats::{PeAggStats, SimReport};
+use super::telemetry::{Telemetry, TelemetryOutput, TimelineSnap};
 use super::{Cycle, Delivery, MemReq, ReqId};
 
 /// In-progress multi-part issue (cache-only fiber line splitting).
@@ -141,6 +142,12 @@ pub struct MemorySystem {
     /// Reusable sinks for the allocation-free component APIs.
     scratch_events: Vec<LineEvent>,
     scratch_deliveries: Vec<Delivery>,
+    /// Observation-only telemetry collector (`cfg.telemetry`; every hook
+    /// is a single branch when off).
+    telemetry: Telemetry,
+    /// Bank + RR outcome of the last dispatched element load, staged for
+    /// the access span (set only while tracing).
+    elem_probe: Option<(usize, &'static str)>,
 }
 
 impl MemorySystem {
@@ -205,8 +212,17 @@ impl MemorySystem {
             requested_bytes: 0,
             scratch_events: Vec::new(),
             scratch_deliveries: Vec::new(),
+            telemetry: Telemetry::new(cfg),
+            elem_probe: None,
             cfg: cfg.clone(),
         }
+    }
+
+    /// Drain the telemetry recorded by the last run (`workload` labels
+    /// the trace metadata). Empty output unless `cfg.telemetry` enabled
+    /// a product.
+    pub fn take_telemetry(&mut self, workload: &str) -> TelemetryOutput {
+        self.telemetry.take_output(workload)
     }
 
     /// Run to completion with the event-driven engine; returns the
@@ -249,12 +265,13 @@ impl MemorySystem {
             //    done_at rewritten to the delivery cycle.
             completions.clear();
             if event_driven {
-                self.fabric.tick_memory_gated(now, &mut completions);
+                self.fabric.tick_memory_gated_traced(now, &mut completions, &mut self.telemetry);
             } else {
-                self.fabric.tick_memory(now, &mut completions);
+                self.fabric.tick_memory_traced(now, &mut completions, &mut self.telemetry);
             }
             for resp in completions.drain(..) {
                 progress = true;
+                self.telemetry.mem_complete(resp.id, resp.done_at);
                 if let Some(token) = self.direct.remove(resp.id) {
                     self.direct_outstanding[resp.port] -= 1;
                     self.direct_total -= 1;
@@ -301,6 +318,7 @@ impl MemorySystem {
                 let (pe, slot, acc) = unpack_token(token);
                 if self.pes[pe].part_done(slot, acc, at.max(now)) {
                     self.accesses_served += 1;
+                    self.telemetry.access_done(token, at.max(now));
                 }
             }
 
@@ -325,6 +343,7 @@ impl MemorySystem {
                     && self.fabric.port_depth(li) < self.port_cap
                 {
                     let req = self.lmbs[li].pop_request().unwrap();
+                    self.telemetry.mem_enqueued(req.id, req.port, now);
                     self.fabric.push(req);
                     progress = true;
                 }
@@ -334,7 +353,7 @@ impl MemorySystem {
             //    one store-and-forward hop per link — skipped outright
             //    while no request is resident in the fabric.
             if !event_driven || self.fabric.has_traffic() {
-                progress |= self.fabric.route(now);
+                progress |= self.fabric.route_traced(now, &mut self.telemetry);
             }
 
             // 7. PE issue + retire — only front ends that could issue
@@ -349,9 +368,18 @@ impl MemorySystem {
                 if issuable && self.issue_pe(pe_idx, now) {
                     progress = true;
                 }
-                if self.pes[pe_idx].retire(now) > 0 {
+                let n_retired = self.pes[pe_idx].retire(now);
+                if n_retired > 0 {
                     progress = true;
+                    self.telemetry.retired(self.pes[pe_idx].pe, n_retired, now);
                 }
+            }
+
+            // 7b. Telemetry timeline: record one row per elapsed window
+            //     (observation only — reads counters, mutates nothing).
+            if self.telemetry.timeline_due(now) {
+                let snap = self.timeline_snap();
+                self.telemetry.timeline_record(now, snap);
             }
 
             // 8. Termination. `finished` is a pure state predicate and
@@ -385,6 +413,13 @@ impl MemorySystem {
             );
         }
 
+        // Final timeline row at the makespan cycle (idempotent — cannot
+        // duplicate a row already taken at `now`).
+        if self.telemetry.timelining() {
+            let snap = self.timeline_snap();
+            self.telemetry.timeline_record(now, snap);
+        }
+
         let mut latency: [crate::sim::pe::LatencyStats; 4] = Default::default();
         let mut pe_agg = PeAggStats::default();
         for front in &self.pes {
@@ -411,6 +446,43 @@ impl MemorySystem {
             lmbs: self.lmbs.iter().map(Lmb::stats).collect(),
             host_seconds: host_t0.elapsed().as_secs_f64(),
         }
+    }
+
+    /// Cumulative-counter snapshot for one telemetry timeline row
+    /// (read-only; runs once per elapsed window, never on the hot path).
+    fn timeline_snap(&self) -> TimelineSnap {
+        let channels = self.fabric.channel_stats();
+        let mut snap = TimelineSnap {
+            channel_occupancy: self.fabric.channel_occupancy(),
+            channel_reads: channels.iter().map(|c| c.reads).collect(),
+            channel_writes: channels.iter().map(|c| c.writes).collect(),
+            channel_busy_bus: channels.iter().map(|c| c.busy_bus_cycles).collect(),
+            fabric_forwarded: self.fabric.stats.forwarded,
+            fabric_backpressure: self.fabric.stats.backpressure_cycles,
+            fabric_hops: self.fabric.stats.hops,
+            link_forwarded: self.fabric.stats.links.iter().map(|l| l.forwarded).collect(),
+            reply_delivered: self.fabric.stats.reply.delivered,
+            ingress_depths: (0..self.fabric.n_ports())
+                .map(|p| self.fabric.port_depth(p) as u64)
+                .collect(),
+            pending_deliveries: self.deliveries.len() as u64,
+            pending_line_events: self.line_events.len() as u64,
+            ..TimelineSnap::default()
+        };
+        for lmb in &self.lmbs {
+            let s = lmb.stats();
+            snap.lmb_hits.push(s.cache.hits);
+            snap.lmb_misses.push(s.cache.primary_misses);
+            snap.rr_served.push(s.rr.served_temp);
+            snap.rr_absorbed.push(s.rr.absorbed);
+            snap.rr_forwarded.push(s.rr.forwarded);
+        }
+        for pe in &self.pes {
+            snap.pe_retired += pe.stats.retired;
+            snap.pe_issued += pe.stats.issued_accesses;
+            snap.pe_stalls += pe.stats.stall_cycles;
+        }
+        snap
     }
 
     /// Earliest future cycle anything is scheduled to happen — the fold
@@ -466,15 +538,22 @@ impl MemorySystem {
             };
             let token = pack_token(self.pes[pe_idx].pe, slot, acc);
             self.requested_bytes += access.bytes as u64;
-            match self.dispatch(pe_idx, slot, acc, access, token, now) {
+            let outcome = self.dispatch(pe_idx, slot, acc, access, token, now);
+            let probe = self.elem_probe.take();
+            match outcome {
                 DispatchResult::Issued { parts } => {
                     self.pes[pe_idx].mark_issued_at(slot, acc, parts, now);
+                    self.telemetry.access_issued(token, acc, now);
+                    if let Some((bank, rr)) = probe {
+                        self.telemetry.access_probe(token, bank, rr);
+                    }
                     issued_any = true;
                     budget -= 1;
                 }
                 DispatchResult::Split => {
                     // mark_issued already done inside dispatch (cache-only
                     // fibers); the partial continues next loop turn.
+                    self.telemetry.access_issued(token, acc, now);
                     issued_any = true;
                     budget -= 1;
                 }
@@ -503,13 +582,16 @@ impl MemorySystem {
             SystemKind::Proposed => match access.class {
                 AccessClass::TensorElem => {
                     self.scratch_events.clear();
-                    let r = self.lmbs[port].element_load(
+                    let (r, bank, rr) = self.lmbs[port].element_load_probed(
                         access.addr,
                         token,
                         now,
                         &mut self.ids,
                         &mut self.scratch_events,
                     );
+                    if self.telemetry.tracing() {
+                        self.elem_probe = Some((bank, rr));
+                    }
                     for ev in self.scratch_events.drain(..) {
                         self.line_events.push(Reverse((ev.at, ev.lmb, ev.line)));
                     }
@@ -576,6 +658,7 @@ impl MemorySystem {
                 let start = access.addr - access.addr % beat;
                 let end = crate::util::round_up(access.addr + access.bytes as u64, beat);
                 let id = self.ids.next();
+                self.telemetry.mem_enqueued(id, port, now);
                 self.fabric.push(MemReq {
                     id,
                     addr: start,

@@ -1,0 +1,720 @@
+//! Cycle-level telemetry: request-lifecycle tracing and the windowed
+//! time-series (`TelemetryConfig`, off by default).
+//!
+//! Two products, both opt-in and both **observation-only** — every hook
+//! below mutates only this struct, never simulator state, so enabling
+//! telemetry cannot perturb a run (pinned by the engine-equivalence
+//! matrix in `tests/integration_engine.rs`):
+//!
+//! * **Request-lifecycle traces** (`telemetry.trace`): per-request spans
+//!   across the pipeline stages — PE issue → LMB bank select + RR
+//!   outcome → fabric transport → DRAM queue/service → reply traversal →
+//!   retire — exported as Chrome trace-event JSON loadable in Perfetto /
+//!   `chrome://tracing`. Timestamps are simulated cycles. 1-in-N
+//!   sampling (`telemetry.sample`) keeps full-scale runs bounded: every
+//!   `sample`-th PE access and every `sample`-th DRAM transaction opens
+//!   spans; the rest cost one counter bump.
+//! * **Windowed time-series** (`telemetry.timeline`): once per elapsed
+//!   `telemetry.window` cycles the run loop hands over a [`TimelineSnap`]
+//!   of the cumulative per-component counters; the recorded row carries
+//!   the *deltas* since the previous row plus instantaneous queue
+//!   depths — one JSONL line per window for phase/heatmap analysis.
+//!
+//! With everything off, each hook is a single predictable branch; the
+//! run loop's structure is otherwise untouched, and disabled-telemetry
+//! reports stay bit-identical to the pre-telemetry simulator.
+//!
+//! Span ↔ component map (process/track ids in the exported trace):
+//!
+//! | pid | tid | span | opened … closed |
+//! |-----|-----|------|------------------|
+//! | 0 "accesses" | PE index | `elem`/`fib1`/`fib2`/`store` | PE issue … last part delivered (args: LMB bank + RR outcome for element loads) |
+//! | 0 "accesses" | PE index | `retire` (instant) | slots retired this cycle |
+//! | 1 "memory" | channel | `fabric` | fabric ingress … DRAM controller enqueue |
+//! | 1 "memory" | node | `hop` / `reply.hop` (instants) | one store-and-forward link traversal |
+//! | 1 "memory" | channel | `dram.queue` | controller enqueue … bank issue |
+//! | 1 "memory" | channel | `dram.service` | bank issue … data beats done (args: row hit/miss/conflict) |
+//! | 1 "memory" | channel | `reply` | service done … reply-network delivery (reply network on only) |
+
+use std::collections::BTreeMap;
+
+use crate::config::SystemConfig;
+use crate::util::json::Json;
+
+use super::{Cycle, ReqId};
+
+/// Access-class span names, indexed by `ACC_*` (`sim::pe`).
+const CLASS_NAMES: [&str; 4] = ["elem", "fib1", "fib2", "store"];
+
+/// An open per-access span, keyed by the packed `(pe, slot, acc)` token
+/// (unique while the access is in flight).
+#[derive(Debug, Clone)]
+struct AccessSpan {
+    class: usize,
+    issued_at: Cycle,
+    /// LMB bank that fronted the address (element loads only).
+    bank: Option<usize>,
+    /// RR outcome: `hit` / `forward` / `absorb` (element loads only).
+    outcome: Option<&'static str>,
+}
+
+/// An open DRAM-transaction span chain, keyed by request id.
+#[derive(Debug, Clone)]
+struct MemSpan {
+    port: usize,
+    /// Cycle the request entered the fabric's ingress queue.
+    enqueued_at: Cycle,
+    /// Channel it was delivered to (known at controller enqueue).
+    ch: Option<usize>,
+    /// Cycle its data beats finished (pre-reply-network `done_at`).
+    service_done: Option<Cycle>,
+}
+
+/// Cumulative counter snapshot the run loop hands to
+/// [`Telemetry::timeline_record`] once per elapsed window. All fields
+/// are running totals unless marked instantaneous; the recorded row
+/// stores deltas against the previous snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct TimelineSnap {
+    /// Requests resident per DRAM channel (queue + in flight) — instantaneous.
+    pub channel_occupancy: Vec<u64>,
+    pub channel_reads: Vec<u64>,
+    pub channel_writes: Vec<u64>,
+    pub channel_busy_bus: Vec<u64>,
+    pub fabric_forwarded: u64,
+    pub fabric_backpressure: u64,
+    pub fabric_hops: u64,
+    /// Per-request-link forwarded counts (same order as the link stats).
+    pub link_forwarded: Vec<u64>,
+    pub reply_delivered: u64,
+    /// Per-LMB cache hits/misses summed over its banks.
+    pub lmb_hits: Vec<u64>,
+    pub lmb_misses: Vec<u64>,
+    pub rr_served: Vec<u64>,
+    pub rr_absorbed: Vec<u64>,
+    pub rr_forwarded: Vec<u64>,
+    pub pe_retired: u64,
+    pub pe_issued: u64,
+    pub pe_stalls: u64,
+    /// Fabric ingress depth per port — instantaneous.
+    pub ingress_depths: Vec<u64>,
+    /// Pending PE deliveries in the run loop's calendar — instantaneous.
+    pub pending_deliveries: u64,
+    /// Pending cache-line events in the run loop's calendar — instantaneous.
+    pub pending_line_events: u64,
+}
+
+/// Everything a telemetry-enabled run produced, handed out by
+/// [`crate::sim::MemorySystem::take_telemetry`].
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryOutput {
+    /// Chrome trace-event document (`{"traceEvents": [...], "meta": ...}`),
+    /// present when `telemetry.trace` was on.
+    pub trace: Option<Json>,
+    /// One JSON object per elapsed timeline window, present (possibly
+    /// empty for very short runs) when `telemetry.timeline` was on.
+    pub timeline: Vec<Json>,
+}
+
+/// Telemetry collector owned by the memory system. All hooks are
+/// `#[inline]` early-returns when their product is off.
+#[derive(Debug)]
+pub struct Telemetry {
+    trace_on: bool,
+    timeline_on: bool,
+    sample: u64,
+    window: Cycle,
+    reply_network: bool,
+    label: String,
+    // --- trace state ---
+    /// PE accesses issued so far (sampling denominator).
+    issue_seq: u64,
+    access_open: BTreeMap<u64, AccessSpan>,
+    mem_open: BTreeMap<ReqId, MemSpan>,
+    events: Vec<Json>,
+    // --- timeline state ---
+    next_window_end: Cycle,
+    last_row_cycle: Option<Cycle>,
+    prev: Option<TimelineSnap>,
+    rows: Vec<Json>,
+}
+
+impl Telemetry {
+    pub fn new(cfg: &SystemConfig) -> Telemetry {
+        Telemetry {
+            trace_on: cfg.telemetry.trace,
+            timeline_on: cfg.telemetry.timeline,
+            sample: cfg.telemetry.sample.max(1),
+            window: cfg.telemetry.window.max(1),
+            reply_network: cfg.interconnect.reply_network,
+            label: cfg.label.clone(),
+            issue_seq: 0,
+            access_open: BTreeMap::new(),
+            mem_open: BTreeMap::new(),
+            events: Vec::new(),
+            next_window_end: cfg.telemetry.window.max(1),
+            last_row_cycle: None,
+            prev: None,
+            rows: Vec::new(),
+        }
+    }
+
+    /// A collector with every product off — allocation-free; used by the
+    /// untraced component entry points (unit tests, standalone drivers).
+    pub fn disabled() -> Telemetry {
+        Telemetry {
+            trace_on: false,
+            timeline_on: false,
+            sample: 1,
+            window: 1,
+            reply_network: false,
+            label: String::new(),
+            issue_seq: 0,
+            access_open: BTreeMap::new(),
+            mem_open: BTreeMap::new(),
+            events: Vec::new(),
+            next_window_end: Cycle::MAX,
+            last_row_cycle: None,
+            prev: None,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Request-lifecycle tracing active?
+    #[inline]
+    pub fn tracing(&self) -> bool {
+        self.trace_on
+    }
+
+    /// Timeline recording active?
+    #[inline]
+    pub fn timelining(&self) -> bool {
+        self.timeline_on
+    }
+
+    // --- access spans (PE side) -----------------------------------------
+
+    /// A PE access was issued into the memory system. Opens a span for
+    /// every `sample`-th issue (in global issue order, which both run
+    /// engines produce identically).
+    #[inline]
+    pub fn access_issued(&mut self, token: u64, class: usize, now: Cycle) {
+        if !self.trace_on {
+            return;
+        }
+        let seq = self.issue_seq;
+        self.issue_seq += 1;
+        if seq % self.sample != 0 {
+            return;
+        }
+        self.access_open.insert(
+            token,
+            AccessSpan { class, issued_at: now, bank: None, outcome: None },
+        );
+    }
+
+    /// Annotate an open element-load span with its LMB bank and RR
+    /// outcome (`hit` / `forward` / `absorb`).
+    #[inline]
+    pub fn access_probe(&mut self, token: u64, bank: usize, outcome: &'static str) {
+        if !self.trace_on {
+            return;
+        }
+        if let Some(s) = self.access_open.get_mut(&token) {
+            s.bank = Some(bank);
+            s.outcome = Some(outcome);
+        }
+    }
+
+    /// The access's last outstanding part was delivered: close the span.
+    #[inline]
+    pub fn access_done(&mut self, token: u64, at: Cycle) {
+        if !self.trace_on {
+            return;
+        }
+        let Some(s) = self.access_open.remove(&token) else {
+            return;
+        };
+        let (pe, _slot, _acc) = super::pe::unpack_token(token);
+        let mut args = Vec::new();
+        if let Some(b) = s.bank {
+            args.push(("bank", Json::num(b as f64)));
+        }
+        if let Some(o) = s.outcome {
+            args.push(("rr", Json::str(o)));
+        }
+        let name = CLASS_NAMES[s.class.min(3)];
+        self.events.push(span_event(name, 0, pe as u64, s.issued_at, at, args));
+    }
+
+    /// A PE retired `count` slots this cycle (instant marker).
+    #[inline]
+    pub fn retired(&mut self, pe: usize, count: u64, now: Cycle) {
+        if !self.trace_on {
+            return;
+        }
+        self.events.push(instant_event(
+            "retire",
+            0,
+            pe as u64,
+            now,
+            vec![("count", Json::num(count as f64))],
+        ));
+    }
+
+    // --- memory spans (fabric + DRAM side) ------------------------------
+
+    /// A `MemReq` entered the fabric's ingress queue. Opens a span chain
+    /// for every `sample`-th request id (ids are minted identically by
+    /// both run engines).
+    #[inline]
+    pub fn mem_enqueued(&mut self, id: ReqId, port: usize, now: Cycle) {
+        if !self.trace_on {
+            return;
+        }
+        if id % self.sample != 0 {
+            return;
+        }
+        self.mem_open.insert(
+            id,
+            MemSpan { port, enqueued_at: now, ch: None, service_done: None },
+        );
+    }
+
+    /// A tracked request crossed one store-and-forward link.
+    #[inline]
+    pub fn mem_hop(&mut self, id: ReqId, from: usize, to: usize, now: Cycle) {
+        if !self.trace_on || !self.mem_open.contains_key(&id) {
+            return;
+        }
+        self.events.push(instant_event(
+            "hop",
+            1,
+            from as u64,
+            now,
+            vec![("id", Json::num(id as f64)), ("to", Json::num(to as f64))],
+        ));
+    }
+
+    /// A tracked request was handed to channel `ch`'s DRAM controller:
+    /// closes the `fabric` transport span.
+    #[inline]
+    pub fn mem_delivered(&mut self, id: ReqId, ch: usize, now: Cycle) {
+        if !self.trace_on {
+            return;
+        }
+        let Some(s) = self.mem_open.get_mut(&id) else {
+            return;
+        };
+        s.ch = Some(ch);
+        let (enq, port) = (s.enqueued_at, s.port);
+        self.events.push(span_event(
+            "fabric",
+            1,
+            ch as u64,
+            enq,
+            now,
+            vec![("id", Json::num(id as f64)), ("port", Json::num(port as f64))],
+        ));
+    }
+
+    /// A tracked request was issued to a DRAM bank: closes `dram.queue`
+    /// (controller enqueue → bank issue) and records `dram.service`
+    /// (bank issue → data beats done, with the row-buffer outcome).
+    #[inline]
+    pub fn mem_service(
+        &mut self,
+        id: ReqId,
+        ch: usize,
+        enq_at: Cycle,
+        start: Cycle,
+        done_at: Cycle,
+        row: &'static str,
+    ) {
+        if !self.trace_on {
+            return;
+        }
+        let Some(s) = self.mem_open.get_mut(&id) else {
+            return;
+        };
+        s.ch = Some(ch);
+        s.service_done = Some(done_at);
+        self.events.push(span_event(
+            "dram.queue",
+            1,
+            ch as u64,
+            enq_at,
+            start,
+            vec![("id", Json::num(id as f64))],
+        ));
+        self.events.push(span_event(
+            "dram.service",
+            1,
+            ch as u64,
+            start,
+            done_at,
+            vec![("id", Json::num(id as f64)), ("row", Json::str(row))],
+        ));
+    }
+
+    /// A tracked reply crossed one reply link (reply network on).
+    #[inline]
+    pub fn mem_reply_hop(&mut self, id: ReqId, from: usize, to: usize, now: Cycle) {
+        if !self.trace_on || !self.mem_open.contains_key(&id) {
+            return;
+        }
+        self.events.push(instant_event(
+            "reply.hop",
+            1,
+            from as u64,
+            now,
+            vec![("id", Json::num(id as f64)), ("to", Json::num(to as f64))],
+        ));
+    }
+
+    /// The completion surfaced to the run loop (`done_at` is the final,
+    /// possibly reply-network-rewritten cycle): closes the span chain,
+    /// emitting the `reply` traversal span when the reply network is on.
+    #[inline]
+    pub fn mem_complete(&mut self, id: ReqId, done_at: Cycle) {
+        if !self.trace_on {
+            return;
+        }
+        let Some(s) = self.mem_open.remove(&id) else {
+            return;
+        };
+        if !self.reply_network {
+            return;
+        }
+        if let (Some(ch), Some(sd)) = (s.ch, s.service_done) {
+            self.events.push(span_event(
+                "reply",
+                1,
+                ch as u64,
+                sd,
+                done_at,
+                vec![
+                    ("id", Json::num(id as f64)),
+                    ("port", Json::num(s.port as f64)),
+                ],
+            ));
+        }
+    }
+
+    // --- timeline -------------------------------------------------------
+
+    /// Has the current window elapsed? One branch when the timeline is
+    /// off; the run loop checks this once per visited cycle.
+    #[inline]
+    pub fn timeline_due(&self, now: Cycle) -> bool {
+        self.timeline_on && now >= self.next_window_end
+    }
+
+    /// Record one timeline row at `now` from the cumulative snapshot:
+    /// stores deltas against the previous row (instantaneous fields pass
+    /// through). Idempotent per cycle so the end-of-run flush cannot
+    /// duplicate a boundary row.
+    pub fn timeline_record(&mut self, now: Cycle, snap: TimelineSnap) {
+        if !self.timeline_on || self.last_row_cycle == Some(now) {
+            return;
+        }
+        let prev = self.prev.take().unwrap_or_default();
+        let d = |cur: u64, prev: u64| Json::num(cur.saturating_sub(prev) as f64);
+        let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+
+        let channels: Vec<Json> = (0..snap.channel_reads.len())
+            .map(|i| {
+                Json::obj(vec![
+                    ("occupancy", Json::num(at(&snap.channel_occupancy, i) as f64)),
+                    ("reads", d(at(&snap.channel_reads, i), at(&prev.channel_reads, i))),
+                    ("writes", d(at(&snap.channel_writes, i), at(&prev.channel_writes, i))),
+                    (
+                        "busy_bus",
+                        d(at(&snap.channel_busy_bus, i), at(&prev.channel_busy_bus, i)),
+                    ),
+                ])
+            })
+            .collect();
+        let links: Vec<Json> = (0..snap.link_forwarded.len())
+            .map(|i| d(at(&snap.link_forwarded, i), at(&prev.link_forwarded, i)))
+            .collect();
+        let lmbs: Vec<Json> = (0..snap.lmb_hits.len())
+            .map(|i| {
+                Json::obj(vec![
+                    ("hits", d(at(&snap.lmb_hits, i), at(&prev.lmb_hits, i))),
+                    ("misses", d(at(&snap.lmb_misses, i), at(&prev.lmb_misses, i))),
+                    ("rr_served", d(at(&snap.rr_served, i), at(&prev.rr_served, i))),
+                    ("rr_absorbed", d(at(&snap.rr_absorbed, i), at(&prev.rr_absorbed, i))),
+                    ("rr_forwarded", d(at(&snap.rr_forwarded, i), at(&prev.rr_forwarded, i))),
+                ])
+            })
+            .collect();
+        let row = Json::obj(vec![
+            ("cycle", Json::num(now as f64)),
+            ("channels", Json::arr(channels)),
+            (
+                "fabric",
+                Json::obj(vec![
+                    ("forwarded", d(snap.fabric_forwarded, prev.fabric_forwarded)),
+                    ("backpressure", d(snap.fabric_backpressure, prev.fabric_backpressure)),
+                    ("hops", d(snap.fabric_hops, prev.fabric_hops)),
+                    ("links", Json::arr(links)),
+                ]),
+            ),
+            (
+                "reply",
+                Json::obj(vec![("delivered", d(snap.reply_delivered, prev.reply_delivered))]),
+            ),
+            ("lmbs", Json::arr(lmbs)),
+            (
+                "pe",
+                Json::obj(vec![
+                    ("retired", d(snap.pe_retired, prev.pe_retired)),
+                    ("issued", d(snap.pe_issued, prev.pe_issued)),
+                    ("stalls", d(snap.pe_stalls, prev.pe_stalls)),
+                ]),
+            ),
+            (
+                "depths",
+                Json::obj(vec![
+                    (
+                        "ingress",
+                        Json::arr(
+                            snap.ingress_depths.iter().map(|&v| Json::num(v as f64)).collect(),
+                        ),
+                    ),
+                    ("deliveries", Json::num(snap.pending_deliveries as f64)),
+                    ("line_events", Json::num(snap.pending_line_events as f64)),
+                ]),
+            ),
+        ]);
+        self.rows.push(row);
+        self.last_row_cycle = Some(now);
+        self.next_window_end = (now / self.window + 1) * self.window;
+        self.prev = Some(snap);
+    }
+
+    // --- export ---------------------------------------------------------
+
+    /// Drain everything recorded into a [`TelemetryOutput`]. `workload`
+    /// labels the trace's metadata block.
+    pub fn take_output(&mut self, workload: &str) -> TelemetryOutput {
+        let timeline = std::mem::take(&mut self.rows);
+        let trace = if self.trace_on {
+            let mut events = vec![
+                process_name_event(0, "accesses"),
+                process_name_event(1, "memory"),
+            ];
+            events.append(&mut self.events);
+            Some(Json::obj(vec![
+                ("meta", Json::obj(vec![
+                    ("label", Json::str(self.label.clone())),
+                    ("workload", Json::str(workload)),
+                    ("reply_network", Json::Bool(self.reply_network)),
+                    ("sample", Json::num(self.sample as f64)),
+                    ("window", Json::num(self.window as f64)),
+                ])),
+                ("traceEvents", Json::arr(events)),
+            ]))
+        } else {
+            None
+        };
+        TelemetryOutput { trace, timeline }
+    }
+}
+
+/// A complete ("X") Chrome trace event; `ts`/`dur` are simulated cycles.
+fn span_event(
+    name: &str,
+    pid: u64,
+    tid: u64,
+    start: Cycle,
+    end: Cycle,
+    args: Vec<(&str, Json)>,
+) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(start as f64)),
+        ("dur", Json::num(end.saturating_sub(start) as f64)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// An instant ("i") Chrome trace event at thread scope.
+fn instant_event(name: &str, pid: u64, tid: u64, at: Cycle, args: Vec<(&str, Json)>) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("i")),
+        ("ts", Json::num(at as f64)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+        ("s", Json::str("t")),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// A "process_name" metadata ("M") event naming one trace process row.
+fn process_name_event(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::pe::pack_token;
+
+    fn traced_cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::config_a();
+        cfg.telemetry.trace = true;
+        cfg
+    }
+
+    #[test]
+    fn disabled_hooks_record_nothing() {
+        let mut t = Telemetry::disabled();
+        t.access_issued(pack_token(0, 1, 0), 0, 5);
+        t.access_done(pack_token(0, 1, 0), 50);
+        t.mem_enqueued(0, 0, 1);
+        t.mem_delivered(0, 0, 2);
+        t.mem_complete(0, 40);
+        t.retired(0, 3, 60);
+        t.timeline_record(10_000, TimelineSnap::default());
+        let out = t.take_output("w");
+        assert!(out.trace.is_none());
+        assert!(out.timeline.is_empty());
+        assert!(!t.timeline_due(u64::MAX), "disabled timeline never fires");
+    }
+
+    #[test]
+    fn access_span_lifecycle_produces_complete_event() {
+        let mut t = Telemetry::new(&traced_cfg());
+        let tok = pack_token(2, 7, 0);
+        t.access_issued(tok, 0, 100);
+        t.access_probe(tok, 3, "forward");
+        t.access_done(tok, 180);
+        let out = t.take_output("w").trace.unwrap();
+        let evs = out.get("traceEvents").unwrap().as_arr().unwrap();
+        let span = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("elem"))
+            .expect("elem span present");
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(100.0));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(80.0));
+        assert_eq!(span.get("tid").unwrap().as_usize(), Some(2));
+        let args = span.get("args").unwrap();
+        assert_eq!(args.get("bank").unwrap().as_usize(), Some(3));
+        assert_eq!(args.get("rr").unwrap().as_str(), Some("forward"));
+        // Metadata names both process rows.
+        assert_eq!(
+            evs.iter()
+                .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+                .count(),
+            2
+        );
+        assert_eq!(out.get("meta").unwrap().get("workload").unwrap().as_str(), Some("w"));
+    }
+
+    #[test]
+    fn memory_span_chain_covers_every_stage() {
+        let mut cfg = traced_cfg();
+        cfg.interconnect.reply_network = true;
+        let mut t = Telemetry::new(&cfg);
+        t.mem_enqueued(8, 1, 10);
+        t.mem_hop(8, 0, 1, 11);
+        t.mem_delivered(8, 1, 12);
+        t.mem_service(8, 1, 12, 15, 60, "miss");
+        t.mem_reply_hop(8, 1, 0, 61);
+        t.mem_complete(8, 63);
+        let out = t.take_output("w").trace.unwrap();
+        let evs = out.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").and_then(Json::as_str)).collect();
+        for want in ["fabric", "hop", "dram.queue", "dram.service", "reply.hop", "reply"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        let service = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("dram.service"))
+            .unwrap();
+        assert_eq!(service.get("dur").unwrap().as_f64(), Some(45.0));
+        assert_eq!(service.get("args").unwrap().get("row").unwrap().as_str(), Some("miss"));
+    }
+
+    #[test]
+    fn reply_span_absent_with_reply_network_off() {
+        let mut t = Telemetry::new(&traced_cfg());
+        t.mem_enqueued(4, 0, 0);
+        t.mem_delivered(4, 0, 1);
+        t.mem_service(4, 0, 1, 2, 30, "hit");
+        t.mem_complete(4, 30);
+        let out = t.take_output("w").trace.unwrap();
+        let evs = out.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(
+            !evs.iter().any(|e| e.get("name").and_then(Json::as_str) == Some("reply")),
+            "no reply span when the reply network is off"
+        );
+    }
+
+    #[test]
+    fn sampling_drops_all_but_every_nth() {
+        let mut cfg = traced_cfg();
+        cfg.telemetry.sample = 4;
+        let mut t = Telemetry::new(&cfg);
+        for i in 0..16u64 {
+            let tok = pack_token(0, i as usize, 0);
+            t.access_issued(tok, 0, i);
+            t.access_done(tok, i + 10);
+        }
+        let out = t.take_output("w").trace.unwrap();
+        let spans = out
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .count();
+        assert_eq!(spans, 4, "16 issues at 1-in-4 sampling");
+    }
+
+    #[test]
+    fn timeline_rows_are_deltas_with_instant_depths() {
+        let mut cfg = SystemConfig::config_a();
+        cfg.telemetry.timeline = true;
+        cfg.telemetry.window = 100;
+        let mut t = Telemetry::new(&cfg);
+        assert!(!t.timeline_due(99));
+        assert!(t.timeline_due(100));
+        let snap = |reads: u64, occ: u64| TimelineSnap {
+            channel_occupancy: vec![occ],
+            channel_reads: vec![reads],
+            channel_writes: vec![0],
+            channel_busy_bus: vec![0],
+            pe_retired: reads * 2,
+            ..TimelineSnap::default()
+        };
+        t.timeline_record(100, snap(40, 7));
+        assert!(!t.timeline_due(150));
+        assert!(t.timeline_due(200));
+        t.timeline_record(200, snap(100, 3));
+        t.timeline_record(200, snap(100, 3)); // same-cycle flush: no dup
+        let rows = t.take_output("w").timeline;
+        assert_eq!(rows.len(), 2);
+        let ch0 = |r: &Json| r.get("channels").unwrap().as_arr().unwrap()[0].clone();
+        assert_eq!(ch0(&rows[0]).get("reads").unwrap().as_usize(), Some(40));
+        assert_eq!(ch0(&rows[1]).get("reads").unwrap().as_usize(), Some(60), "delta vs prev");
+        assert_eq!(ch0(&rows[1]).get("occupancy").unwrap().as_usize(), Some(3), "instantaneous");
+        assert_eq!(rows[1].get("pe").unwrap().get("retired").unwrap().as_usize(), Some(120));
+        assert_eq!(rows[0].get("cycle").unwrap().as_usize(), Some(100));
+    }
+}

@@ -155,6 +155,59 @@ impl Json {
         }
     }
 
+    /// First structural difference between two values, as a dotted path like
+    /// `fabric.links[3].forwarded`, or `None` if they match. Object keys whose
+    /// name appears in `ignore` are skipped at any depth (used to mask
+    /// host-dependent fields such as `host_seconds` when diffing reports).
+    pub fn first_diff(&self, other: &Json, ignore: &[&str]) -> Option<String> {
+        self.diff_at(other, ignore, String::new())
+    }
+
+    fn diff_at(&self, other: &Json, ignore: &[&str], path: String) -> Option<String> {
+        let here = |path: String| if path.is_empty() { "<root>".to_string() } else { path };
+        match (self, other) {
+            (Json::Obj(a), Json::Obj(b)) => {
+                for key in a.keys().chain(b.keys().filter(|k| !a.contains_key(*k))) {
+                    if ignore.contains(&key.as_str()) {
+                        continue;
+                    }
+                    let sub = if path.is_empty() {
+                        key.clone()
+                    } else {
+                        format!("{path}.{key}")
+                    };
+                    match (a.get(key), b.get(key)) {
+                        (Some(va), Some(vb)) => {
+                            if let Some(d) = va.diff_at(vb, ignore, sub) {
+                                return Some(d);
+                            }
+                        }
+                        _ => return Some(sub),
+                    }
+                }
+                None
+            }
+            (Json::Arr(a), Json::Arr(b)) => {
+                if a.len() != b.len() {
+                    return Some(format!("{}.len", here(path)));
+                }
+                for (i, (va, vb)) in a.iter().zip(b).enumerate() {
+                    if let Some(d) = va.diff_at(vb, ignore, format!("{path}[{i}]")) {
+                        return Some(d);
+                    }
+                }
+                None
+            }
+            (a, b) => {
+                if a == b {
+                    None
+                } else {
+                    Some(here(path))
+                }
+            }
+        }
+    }
+
     /// Parse a JSON document.
     pub fn parse(src: &str) -> Result<Json, String> {
         let mut p = Parser {
@@ -403,6 +456,41 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn first_diff_paths() {
+        let a = Json::parse(r#"{"x":1,"fabric":{"links":[{"forwarded":3},{"forwarded":4}]}}"#)
+            .unwrap();
+        let b = Json::parse(r#"{"x":1,"fabric":{"links":[{"forwarded":3},{"forwarded":9}]}}"#)
+            .unwrap();
+        assert_eq!(a.first_diff(&a, &[]), None);
+        assert_eq!(
+            a.first_diff(&b, &[]),
+            Some("fabric.links[1].forwarded".to_string())
+        );
+        // Missing key on either side reports the key itself.
+        let c = Json::parse(r#"{"x":1}"#).unwrap();
+        assert_eq!(c.first_diff(&a, &[]), Some("fabric".to_string()));
+        assert_eq!(a.first_diff(&c, &[]), Some("fabric".to_string()));
+        // Length mismatch reports the array, not an element.
+        let d = Json::parse(r#"{"x":1,"fabric":{"links":[{"forwarded":3}]}}"#).unwrap();
+        assert_eq!(a.first_diff(&d, &[]), Some("fabric.links.len".to_string()));
+        // Type mismatch at the root.
+        assert_eq!(
+            Json::num(1).first_diff(&Json::str("1"), &[]),
+            Some("<root>".to_string())
+        );
+    }
+
+    #[test]
+    fn first_diff_honors_ignore_list() {
+        let a = Json::parse(r#"{"host_seconds":1.5,"cycles":10,"sub":{"host_seconds":2}}"#)
+            .unwrap();
+        let b = Json::parse(r#"{"host_seconds":9.5,"cycles":10,"sub":{"host_seconds":3}}"#)
+            .unwrap();
+        assert_eq!(a.first_diff(&b, &["host_seconds"]), None);
+        assert_eq!(a.first_diff(&b, &[]), Some("host_seconds".to_string()));
     }
 
     #[test]

@@ -43,6 +43,10 @@ fn random_case(rng: &mut Rng) -> (CooTensor, SystemConfig) {
     cfg.interconnect.channels = 1 << rng.gen_range(3); // 1, 2 or 4
     cfg.lmb_banks = 1 << rng.gen_range(3); // 1, 2 or 4 cache/RR banks
     cfg.interconnect.reply_network = rng.gen_bool(0.5);
+    // Randomized telemetry knobs; the products themselves stay off here
+    // (the telemetry property flips them per sub-case).
+    cfg.telemetry.sample = rng.gen_usize(1, 7) as u64;
+    cfg.telemetry.window = rng.gen_usize(50, 600) as u64;
     cfg.validate().expect("randomized config must be valid");
     (t, cfg)
 }
@@ -123,6 +127,76 @@ fn prop_engines_agree_with_reply_network_on_across_banks_and_topologies() {
                         event.fabric.reply.delivered,
                         event.dram.reads + event.dram.writes,
                         "banks={banks}/{topology:?}: reply accounting broke"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_telemetry_neither_perturbs_nor_diverges_between_engines() {
+    // The telemetry correctness constraint, randomized: (1) enabling any
+    // product combination leaves the SimReport bit-identical to the
+    // telemetry-off run; (2) run == run_reference still holds with
+    // telemetry on; (3) both engines emit byte-identical trace and
+    // timeline artifacts (same request ids, span timestamps, window
+    // rows — the gates only ever skip provable no-ops).
+    check(
+        "telemetry on/off × engines",
+        6,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            let baseline = MemorySystem::new(base, &w).run(&w.name);
+            for (trace, timeline) in [(true, false), (false, true), (true, true)] {
+                let mut cfg = base.clone();
+                cfg.telemetry.trace = trace;
+                cfg.telemetry.timeline = timeline;
+                let mut ev = MemorySystem::new(&cfg, &w);
+                let event = ev.run(&w.name);
+                let mut rf = MemorySystem::new(&cfg, &w);
+                let reference = rf.run_reference(&w.name);
+                prop_assert_eq!(
+                    event.diff(&reference),
+                    None,
+                    "trace={trace}/timeline={timeline}: engines diverged"
+                );
+                prop_assert_eq!(
+                    event.diff(&baseline),
+                    None,
+                    "trace={trace}/timeline={timeline}: telemetry perturbed the simulation"
+                );
+                let a = ev.take_telemetry(&w.name);
+                let b = rf.take_telemetry(&w.name);
+                prop_assert_eq!(
+                    a.trace.is_some(),
+                    trace,
+                    "trace artifact presence must follow the knob"
+                );
+                let at = a.trace.map(|j| j.to_string_compact()).unwrap_or_default();
+                let bt = b.trace.map(|j| j.to_string_compact()).unwrap_or_default();
+                prop_assert_eq!(
+                    at,
+                    bt,
+                    "trace={trace}/timeline={timeline}: trace artifacts diverged"
+                );
+                prop_assert_eq!(
+                    a.timeline.is_empty(),
+                    !timeline,
+                    "timeline artifact presence must follow the knob"
+                );
+                prop_assert_eq!(
+                    a.timeline.len(),
+                    b.timeline.len(),
+                    "trace={trace}/timeline={timeline}: timeline row counts diverged"
+                );
+                for (i, (ra, rb)) in a.timeline.iter().zip(&b.timeline).enumerate() {
+                    prop_assert_eq!(
+                        ra.to_string_compact(),
+                        rb.to_string_compact(),
+                        "trace={trace}/timeline={timeline}: timeline row {i} diverged"
                     );
                 }
             }
