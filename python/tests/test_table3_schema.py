@@ -1,0 +1,83 @@
+"""Schema check for the `table3` bench's JSON-lines output
+(`MEMSYS_BENCH_JSON=<path> cargo bench --bench table3`).
+
+The table3 bench writes each Table III dataset to a FROSTT `.tns`
+fixture and simulates it *streamed from disk* (`Scenario::tns_file`)
+over the four system variants. The contract machine consumers rely on:
+
+* every record carries a `dataset` axis that is a `.tns` file path and a
+  `system` axis naming one of the four variants, and the resolved config
+  echoes the system kind back;
+* `report.workload` is the dataset file's stem (the streamed source is
+  named after the file it reads);
+* the grid is complete — all four systems per dataset — and the
+  workload-side numbers (`nnz`, `accesses`) agree across systems for the
+  same dataset, since they describe the input, not the memory system;
+* the proposed system beats the IP-only baseline on every dataset (the
+  Fig. 4 ordering the streamed path must preserve).
+
+Runs against the file named by `MEMSYS_TABLE3_JSONL` when set (CI's
+bench-smoke job produces one) and always against the committed sample.
+Needs no third-party deps beyond pytest.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from _jsonl_schema import load_records, schema_paths
+
+SAMPLE = Path(__file__).parent / "data" / "table3_sample.jsonl"
+ENV_VAR = "MEMSYS_TABLE3_JSONL"
+
+SYSTEMS = {"ip-only", "cache-only", "dma-only", "proposed"}
+
+
+def _load(path):
+    return load_records(path, ENV_VAR, SAMPLE)
+
+
+def _by_dataset(records):
+    grids = {}
+    for rec in records:
+        grids.setdefault(rec["axes"]["dataset"], {})[rec["axes"]["system"]] = rec
+    return grids
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_records_carry_tns_dataset_and_system_axes(path):
+    for rec in _load(path):
+        dataset = rec["axes"]["dataset"]
+        assert dataset.endswith(".tns"), f"{rec['label']!r}: dataset is not a .tns path"
+        system = rec["axes"]["system"]
+        assert system in SYSTEMS, f"{rec['label']!r}: unknown system {system!r}"
+        assert rec["config"]["kind"] == system, "config must echo the system axis"
+        assert rec["total_cycles"] > 0
+        assert rec["report"]["total_cycles"] == rec["total_cycles"]
+        assert rec["report"]["workload"] == Path(dataset).stem, (
+            f"{rec['label']!r}: streamed source must be named after the file"
+        )
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_grid_is_complete_and_workload_numbers_agree(path):
+    grids = _by_dataset(_load(path))
+    assert grids, "no datasets in the grid"
+    for dataset, runs in grids.items():
+        assert set(runs) == SYSTEMS, f"{dataset}: incomplete system grid {sorted(runs)}"
+        nnzs = {r["report"]["nnz"] for r in runs.values()}
+        accesses = {r["report"]["accesses"] for r in runs.values()}
+        assert len(nnzs) == 1, f"{dataset}: nnz varies across systems: {nnzs}"
+        assert len(accesses) == 1, f"{dataset}: accesses vary across systems: {accesses}"
+        assert nnzs.pop() > 0
+        assert accesses.pop() > 0
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_proposed_beats_ip_only_on_every_dataset(path):
+    for dataset, runs in _by_dataset(_load(path)).items():
+        ip = runs["ip-only"]["total_cycles"]
+        proposed = runs["proposed"]["total_cycles"]
+        assert proposed < ip, (
+            f"{dataset}: proposed ({proposed}) must beat ip-only ({ip})"
+        )

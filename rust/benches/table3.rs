@@ -1,12 +1,45 @@
-//! Bench: regenerate paper **Table III** — the synthetic 3-D tensor
-//! datasets — and verify the generator actually realizes the specified
-//! nnz/density at a measurable scale.
+//! Bench: paper **Table III** — the synthetic 3-D tensor datasets —
+//! plus the streamed full-scale path those datasets exist for: each
+//! dataset is written once to a FROSTT `.tns` fixture (cached across
+//! runs) and then simulated via `Scenario::tns_file`, which streams the
+//! file from disk in bounded memory instead of materializing the access
+//! stream.
+//!
+//! `MEMSYS_BENCH_SCALE` (default 0.002) sets the dataset scale — set it
+//! to 1.0 to run the actual Table III geometries. Set
+//! `MEMSYS_BENCH_JSON=<path>` to dump the streamed grid as JSON-lines
+//! (CI pins this as `BENCH_table3.jsonl`).
 
-use mttkrp_memsys::experiment::Scenario;
+use std::path::PathBuf;
+
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::{run_one, Scenario, Sweep};
 use mttkrp_memsys::tensor::gen::{SYNTH_01, SYNTH_02};
-use mttkrp_memsys::util::bench::{section, Bench};
+use mttkrp_memsys::tensor::io::write_tns;
+use mttkrp_memsys::util::bench::section;
 use mttkrp_memsys::util::fmt_count;
 use mttkrp_memsys::util::table::{Align, Table};
+
+/// Write `name` at `scale` to a cached `.tns` fixture and return its path.
+/// The file name carries the scale, so changing `MEMSYS_BENCH_SCALE`
+/// regenerates instead of reusing a stale geometry.
+fn fixture(name: &str, scale: f64) -> PathBuf {
+    let dir = std::env::temp_dir().join("memsys-table3");
+    std::fs::create_dir_all(&dir).expect("fixture dir");
+    let path = dir.join(format!("{name}-s{scale}.tns"));
+    if !path.exists() {
+        let t = Scenario::dataset(name, scale).expect("table III dataset").tensor();
+        write_tns(&t, &path).expect("write fixture");
+        println!(
+            "    wrote fixture {} ({} nnz)",
+            path.display(),
+            fmt_count(t.nnz() as u64)
+        );
+    } else {
+        println!("    reusing fixture {}", path.display());
+    }
+    path
+}
 
 fn main() {
     section("Table III — sparse 3D tensor datasets");
@@ -34,22 +67,67 @@ fn main() {
     }
     println!("{}\n", t.render());
 
-    section("generator realization + throughput (scale 0.002)");
-    let mut b = Bench::quick();
-    for spec in [SYNTH_01.scaled(0.002), SYNTH_02.scaled(0.002)] {
-        let mut made = None;
-        let m = b.run(&format!("generate {}", spec.name), spec.nnz, || {
-            // A fresh scenario per iteration so the generator actually
-            // runs (the scenario caches its tensor after the first build).
-            made = Some(Scenario::dataset(spec.name, 0.002).expect("table III dataset").tensor());
-        });
-        let tensor = made.unwrap();
-        assert_eq!(tensor.nnz() as u64, spec.nnz, "{} nnz off", spec.name);
-        println!(
-            "    realized: nnz {}, dims {:?}, {:.1} Knnz/s",
-            fmt_count(tensor.nnz() as u64),
-            tensor.dims,
-            m.throughput.unwrap_or(0.0) / 1e3,
+    let scale: f64 = std::env::var("MEMSYS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.002);
+    section(&format!(
+        "streamed .tns grid — dataset x system (config-b, scale {scale})"
+    ));
+    let paths: Vec<String> = ["synth01", "synth02"]
+        .iter()
+        .map(|name| fixture(name, scale).display().to_string())
+        .collect();
+    let datasets: Vec<&str> = paths.iter().map(String::as_str).collect();
+
+    let base = SystemConfig::config_b();
+    let scenario = Scenario::tns_file(&paths[0]).for_config(&base);
+    let runs = Sweep::new(base.clone(), scenario.clone())
+        .axis("dataset", &datasets)
+        .axis("system", &["ip-only", "cache-only", "dma-only", "proposed"])
+        .run()
+        .expect("table3 streamed sweep");
+
+    let mut grid = Table::new(&["dataset", "system", "cycles", "accesses", "speedup"]).aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    for run in &runs.runs {
+        let ds = run.axis("dataset").unwrap();
+        let ip = runs
+            .get(&[("dataset", ds), ("system", "ip-only")])
+            .expect("ip-only baseline in grid");
+        grid.row(&[
+            run.report.workload.clone(),
+            run.axis("system").unwrap().to_string(),
+            fmt_count(run.report.total_cycles),
+            fmt_count(run.report.accesses),
+            format!("{:.2}x", run.report.speedup_over(&ip.report)),
+        ]);
+    }
+    println!("{}", grid.render());
+
+    // The invariant this bench locks in: the streamed file-backed run is
+    // behaviorally identical to the fully materialized workload. Checked
+    // at smoke scales only — at full scale the materialized side would
+    // need the very allocation streaming exists to avoid.
+    if scale <= 0.01 {
+        let streamed = run_one(&base, &scenario);
+        let w = scenario.workload();
+        let materialized = mttkrp_memsys::sim::simulate(&base, &w);
+        assert_eq!(
+            streamed.diff(&materialized),
+            None,
+            "streamed .tns run must match the materialized workload"
         );
+        println!("\nstreamed == materialized on {} (report diff: none)", w.name);
+    }
+
+    if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
+        runs.write_jsonl(std::path::Path::new(&path)).expect("write jsonl");
+        println!("wrote {} JSON-lines to {path}", runs.len());
     }
 }

@@ -10,7 +10,7 @@ mod parse;
 
 pub use parse::{parse_kv_file, parse_kv_str};
 
-use crate::util::{is_pow2, json::Json};
+use crate::util::{is_pow2, json::Json, NameParseError};
 
 /// Which memory-system variant to simulate (§V-B baselines + proposed).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -35,14 +35,9 @@ impl SystemKind {
         }
     }
 
+    #[deprecated(note = "use `s.parse::<SystemKind>()` instead")]
     pub fn from_name(s: &str) -> Option<SystemKind> {
-        match s {
-            "ip-only" | "ip" => Some(SystemKind::IpOnly),
-            "cache-only" | "cache" => Some(SystemKind::CacheOnly),
-            "dma-only" | "dma" => Some(SystemKind::DmaOnly),
-            "proposed" | "lmb" => Some(SystemKind::Proposed),
-            _ => None,
-        }
+        s.parse().ok()
     }
 
     pub const ALL: [SystemKind; 4] = [
@@ -51,6 +46,24 @@ impl SystemKind {
         SystemKind::DmaOnly,
         SystemKind::Proposed,
     ];
+}
+
+impl std::str::FromStr for SystemKind {
+    type Err = NameParseError;
+
+    fn from_str(s: &str) -> Result<SystemKind, NameParseError> {
+        match s {
+            "ip-only" | "ip" => Ok(SystemKind::IpOnly),
+            "cache-only" | "cache" => Ok(SystemKind::CacheOnly),
+            "dma-only" | "dma" => Ok(SystemKind::DmaOnly),
+            "proposed" | "lmb" => Ok(SystemKind::Proposed),
+            _ => Err(NameParseError::new(
+                "system",
+                s,
+                &["ip-only", "cache-only", "dma-only", "proposed"],
+            )),
+        }
+    }
 }
 
 /// Compute-fabric communication type (§V-C).
@@ -72,11 +85,20 @@ impl FabricType {
         }
     }
 
+    #[deprecated(note = "use `s.parse::<FabricType>()` instead")]
     pub fn from_name(s: &str) -> Option<FabricType> {
+        s.parse().ok()
+    }
+}
+
+impl std::str::FromStr for FabricType {
+    type Err = NameParseError;
+
+    fn from_str(s: &str) -> Result<FabricType, NameParseError> {
         match s {
-            "type1" | "1" => Some(FabricType::Type1),
-            "type2" | "2" => Some(FabricType::Type2),
-            _ => None,
+            "type1" | "1" => Ok(FabricType::Type1),
+            "type2" | "2" => Ok(FabricType::Type2),
+            _ => Err(NameParseError::new("fabric", s, &["type1", "type2"])),
         }
     }
 }
@@ -107,13 +129,9 @@ impl TopologyKind {
         }
     }
 
+    #[deprecated(note = "use `s.parse::<TopologyKind>()` instead")]
     pub fn from_name(s: &str) -> Option<TopologyKind> {
-        match s {
-            "crossbar" | "xbar" => Some(TopologyKind::Crossbar),
-            "line" => Some(TopologyKind::Line),
-            "ring" => Some(TopologyKind::Ring),
-            _ => None,
-        }
+        s.parse().ok()
     }
 
     pub const ALL: [TopologyKind; 3] = [
@@ -121,6 +139,19 @@ impl TopologyKind {
         TopologyKind::Line,
         TopologyKind::Ring,
     ];
+}
+
+impl std::str::FromStr for TopologyKind {
+    type Err = NameParseError;
+
+    fn from_str(s: &str) -> Result<TopologyKind, NameParseError> {
+        match s {
+            "crossbar" | "xbar" => Ok(TopologyKind::Crossbar),
+            "line" => Ok(TopologyKind::Line),
+            "ring" => Ok(TopologyKind::Ring),
+            _ => Err(NameParseError::new("topology", s, &["crossbar", "line", "ring"])),
+        }
+    }
 }
 
 /// Multi-channel interconnect parameters (`sim::fabric`).
@@ -348,6 +379,14 @@ pub struct DramConfig {
     pub max_outstanding: usize,
     /// Address width in bits (MIG on U250: 31).
     pub addr_bits: usize,
+    /// Bus-admission guard: the scheduler refuses to start a new request
+    /// while the data bus is already booked more than
+    /// `bus_admission_factor * t_row_miss` cycles into the future.
+    /// Models the bounded command queue between the controller's bank
+    /// machines and the shared data bus — without it a burst of row hits
+    /// on one bank could book the bus arbitrarily far ahead and starve
+    /// ready requests at other banks.
+    pub bus_admission_factor: u64,
 }
 
 impl DramConfig {
@@ -364,6 +403,9 @@ impl DramConfig {
         }
         if self.max_outstanding == 0 {
             return Err("dram: max_outstanding must be > 0".into());
+        }
+        if self.bus_admission_factor == 0 {
+            return Err("dram: bus_admission_factor must be > 0".into());
         }
         Ok(())
     }
@@ -593,15 +635,14 @@ impl SystemConfig {
         let key = match key {
             "channels" => "interconnect.channels",
             "topology" => "interconnect.topology",
-            "link_width" => "interconnect.link_width",
+            "link_width" | "link-width" => "interconnect.link_width",
             "reply_network" | "reply-network" => "interconnect.reply_network",
             "lmb_banks" | "lmb-banks" => "system.lmb_banks",
             other => other,
         };
         match key {
             "system.kind" => {
-                self.kind =
-                    SystemKind::from_name(value).ok_or(format!("unknown kind {value:?}"))?
+                self.kind = value.parse::<SystemKind>().map_err(|e| e.to_string())?
             }
             "system.n_lmbs" => self.n_lmbs = parse_usize(value)?,
             "system.lmb_banks" => self.lmb_banks = parse_usize(value)?,
@@ -617,15 +658,14 @@ impl SystemConfig {
             "pe.n_pes" => self.pe.n_pes = parse_usize(value)?,
             "pe.rank" => self.pe.rank = parse_usize(value)?,
             "pe.fabric" => {
-                self.pe.fabric =
-                    FabricType::from_name(value).ok_or(format!("unknown fabric {value:?}"))?
+                self.pe.fabric = value.parse::<FabricType>().map_err(|e| e.to_string())?
             }
             "pe.compute_cycles_per_nnz" => self.pe.compute_cycles_per_nnz = parse_u64(value)?,
             "pe.max_inflight" => self.pe.max_inflight = parse_usize(value)?,
             "interconnect.channels" => self.interconnect.channels = parse_usize(value)?,
             "interconnect.topology" => {
-                self.interconnect.topology = TopologyKind::from_name(value)
-                    .ok_or(format!("unknown topology {value:?}"))?
+                self.interconnect.topology =
+                    value.parse::<TopologyKind>().map_err(|e| e.to_string())?
             }
             "interconnect.link_width" => self.interconnect.link_width = parse_usize(value)?,
             "interconnect.link_queue" => self.interconnect.link_queue = parse_usize(value)?,
@@ -644,6 +684,9 @@ impl SystemConfig {
             "dram.t_controller" => self.dram.t_controller = parse_u64(value)?,
             "dram.max_outstanding" => self.dram.max_outstanding = parse_usize(value)?,
             "dram.banks" => self.dram.banks = parse_usize(value)?,
+            "dram.bus_admission_factor" => {
+                self.dram.bus_admission_factor = parse_u64(value)?
+            }
             "telemetry.trace" => self.telemetry.trace = parse_on_off(key, value)?,
             "telemetry.timeline" => self.telemetry.timeline = parse_on_off(key, value)?,
             "telemetry.sample" => self.telemetry.sample = parse_u64(value)?,
@@ -745,6 +788,7 @@ impl DramConfig {
             t_controller: 8,
             max_outstanding: 32,
             addr_bits: 31,
+            bus_admission_factor: 4,
         }
     }
 }
@@ -792,6 +836,12 @@ mod tests {
         assert_eq!(c.cache.lines, 2048);
         assert_eq!(c.dma.n_buffers, 8);
         assert_eq!(c.pe.fabric, FabricType::Type2);
+        assert_eq!(c.dram.bus_admission_factor, 4, "mig_u250 default");
+        c.apply_override("dram.bus_admission_factor", "6").unwrap();
+        assert_eq!(c.dram.bus_admission_factor, 6);
+        c.dram.bus_admission_factor = 0;
+        assert!(c.validate().is_err(), "factor 0 would stall the bus forever");
+        c.dram.bus_admission_factor = 4;
         assert!(c.apply_override("bogus.key", "1").is_err());
         assert!(c.apply_override("cache.lines", "not-a-number").is_err());
 
@@ -840,6 +890,12 @@ mod tests {
         assert_eq!(c.interconnect.topology, TopologyKind::Ring);
         assert_eq!(c.interconnect.link_width, 2);
         assert_eq!(c.interconnect.interleave_bytes, 8192);
+        // Kebab-case spelling is the documented form; snake_case stays
+        // as a compatibility alias.
+        c.apply_override("link-width", "4").unwrap();
+        assert_eq!(c.interconnect.link_width, 4);
+        c.apply_override("link_width", "2").unwrap();
+        assert_eq!(c.interconnect.link_width, 2);
         c.validate().unwrap();
         assert!(c.apply_override("topology", "torus").is_err());
 
@@ -924,11 +980,36 @@ mod tests {
     #[test]
     fn topology_names_round_trip() {
         for t in TopologyKind::ALL {
-            assert_eq!(TopologyKind::from_name(t.name()), Some(t));
+            assert_eq!(t.name().parse(), Ok(t));
         }
-        let xbar = TopologyKind::from_name("xbar");
-        assert_eq!(xbar, Some(TopologyKind::Crossbar));
-        assert_eq!(TopologyKind::from_name("mesh"), None);
+        assert_eq!("xbar".parse(), Ok(TopologyKind::Crossbar));
+        assert!("mesh".parse::<TopologyKind>().is_err());
+    }
+
+    #[test]
+    fn name_parsing_round_trips_and_reports_valid_values() {
+        for k in SystemKind::ALL {
+            assert_eq!(k.name().parse(), Ok(k));
+        }
+        assert_eq!("lmb".parse(), Ok(SystemKind::Proposed));
+        assert_eq!("1".parse(), Ok(FabricType::Type1));
+        assert_eq!("type2".parse(), Ok(FabricType::Type2));
+
+        let err = "bogus".parse::<SystemKind>().unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "unknown system \"bogus\" (expected ip-only|cache-only|dma-only|proposed)"
+        );
+        let err = "3".parse::<FabricType>().unwrap_err();
+        assert!(err.to_string().contains("type1|type2"), "{err}");
+
+        // The deprecated wrappers stay behaviour-compatible.
+        #[allow(deprecated)]
+        {
+            assert_eq!(SystemKind::from_name("dma"), Some(SystemKind::DmaOnly));
+            assert_eq!(FabricType::from_name("nope"), None);
+            assert_eq!(TopologyKind::from_name("ring"), Some(TopologyKind::Ring));
+        }
     }
 
     #[test]

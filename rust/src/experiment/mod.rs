@@ -65,8 +65,13 @@ pub fn preset(name: &str) -> Result<SystemConfig, String> {
 }
 
 /// Simulate a single (config, scenario) pair — the degenerate sweep.
+/// Runs from the scenario's streaming trace source (bounded memory);
+/// panics on a broken dataset source, like the workload path used to.
 pub fn run_one(cfg: &SystemConfig, scenario: &Scenario) -> SimReport {
-    crate::sim::simulate(cfg, &scenario.workload())
+    let src = scenario
+        .trace_source()
+        .unwrap_or_else(|e| panic!("building trace source: {e}"));
+    crate::sim::simulate(cfg, &src)
 }
 
 #[cfg(test)]

@@ -8,12 +8,16 @@
 //! [`SystemConfig`] via [`Scenario::for_config`] so the workload always
 //! matches the system it is replayed on.
 
+use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 use crate::config::{FabricType, SystemConfig};
 use crate::tensor::gen::{self, GenParams};
+use crate::tensor::io::{read_tns, scan_tns};
 use crate::tensor::{CooTensor, Mode};
-use crate::trace::{workload_from_tensor, Workload};
+use crate::trace::{
+    workload_from_tensor, CooStreamSource, TnsStreamSource, TraceSource, Workload,
+};
 use crate::util::rng::Rng;
 
 /// Where the scenario's tensor comes from.
@@ -24,8 +28,11 @@ pub enum TensorSource {
     Synth { name: String },
     /// Uniform-random COO (tests and microbenches).
     Random { dims: [u64; 3], nnz: usize, seed: u64 },
-    /// A pre-built tensor (e.g. loaded from a `.tns` file).
+    /// A pre-built tensor.
     Owned(Arc<CooTensor>),
+    /// A FROSTT `.tns` file, streamed from disk without materializing
+    /// when already sorted along the scenario's mode.
+    TnsFile { path: PathBuf },
 }
 
 /// Datasets [`Scenario::dataset`] resolves by name.
@@ -57,6 +64,7 @@ pub struct Scenario {
     pub(crate) row_align: u64,
     tensor_cache: OnceLock<Arc<CooTensor>>,
     workload_cache: OnceLock<Arc<Workload>>,
+    source_cache: OnceLock<Result<Arc<dyn TraceSource>, String>>,
 }
 
 impl Scenario {
@@ -72,13 +80,20 @@ impl Scenario {
             row_align: 8192,
             tensor_cache: OnceLock::new(),
             workload_cache: OnceLock::new(),
+            source_cache: OnceLock::new(),
         }
     }
 
-    /// A named dataset (see [`DATASETS`]) at `scale`.
+    /// A named dataset (see [`DATASETS`]) at `scale`, or a `.tns` file
+    /// path (whose geometry is fixed by the file — `scale` is ignored).
     pub fn dataset(name: &str, scale: f64) -> Result<Scenario, String> {
+        if name.ends_with(".tns") {
+            return Ok(Scenario::tns_file(name));
+        }
         if !DATASETS.contains(&name) {
-            return Err(format!("unknown dataset {name:?} (expected {DATASETS:?})"));
+            return Err(format!(
+                "unknown dataset {name:?} (expected {DATASETS:?} or a .tns path)"
+            ));
         }
         check_scale(scale)?;
         let mut s = Scenario::from_source(TensorSource::Synth { name: name.to_string() });
@@ -101,9 +116,19 @@ impl Scenario {
         Scenario::from_source(TensorSource::Random { dims, nnz, seed })
     }
 
-    /// Wrap an existing tensor (e.g. read from a `.tns` file).
+    /// Wrap an existing tensor.
     pub fn from_tensor(t: CooTensor) -> Scenario {
         Scenario::from_source(TensorSource::Owned(Arc::new(t)))
+    }
+
+    /// A FROSTT `.tns` file as the dataset. When the file is already
+    /// sorted along the scenario's mode (FROSTT files are mode-`i`
+    /// sorted), [`Scenario::trace_source`] streams it straight from disk
+    /// in bounded memory; otherwise it is loaded and re-sorted in memory
+    /// once. Errors (missing file, parse failures) surface when the
+    /// trace source or tensor is first built.
+    pub fn tns_file(path: impl Into<PathBuf>) -> Scenario {
+        Scenario::from_source(TensorSource::TnsFile { path: path.into() })
     }
 
     // --- builder knobs (each invalidates the affected caches) ---------
@@ -174,8 +199,20 @@ impl Scenario {
     // --- in-place mutators (sweep axis application) --------------------
 
     pub(crate) fn set_dataset(&mut self, name: &str) -> Result<(), String> {
+        // Anything ending in `.tns` is a file path; everything else must
+        // be a known synthetic dataset name.
+        if name.ends_with(".tns") {
+            let path = PathBuf::from(name);
+            if !matches!(&self.source, TensorSource::TnsFile { path: p } if *p == path) {
+                self.source = TensorSource::TnsFile { path };
+                self.invalidate_tensor();
+            }
+            return Ok(());
+        }
         if !DATASETS.contains(&name) {
-            return Err(format!("unknown dataset {name:?} (expected {DATASETS:?})"));
+            return Err(format!(
+                "unknown dataset {name:?} (expected {DATASETS:?} or a .tns path)"
+            ));
         }
         if !matches!(&self.source, TensorSource::Synth { name: n } if n == name) {
             self.source = TensorSource::Synth { name: name.to_string() };
@@ -221,6 +258,7 @@ impl Scenario {
 
     fn invalidate_workload(&mut self) {
         self.workload_cache = OnceLock::new();
+        self.source_cache = OnceLock::new();
     }
 
     fn invalidate_tensor(&mut self) {
@@ -230,12 +268,17 @@ impl Scenario {
 
     // --- products ------------------------------------------------------
 
-    /// Dataset name ("synth01", "random", or the owned tensor's name).
+    /// Dataset name ("synth01", "random", the owned tensor's name, or a
+    /// `.tns` file's stem).
     pub fn dataset_name(&self) -> String {
         match &self.source {
             TensorSource::Synth { name } => name.clone(),
             TensorSource::Random { .. } => "random".to_string(),
             TensorSource::Owned(t) => t.name.clone(),
+            TensorSource::TnsFile { path } => path
+                .file_stem()
+                .map(|s| s.to_string_lossy().to_string())
+                .unwrap_or_else(|| "tns".into()),
         }
     }
 
@@ -254,6 +297,9 @@ impl Scenario {
             }
             TensorSource::Owned(t) => {
                 format!("owned-{}-{:?}-n{}", t.name, t.dims, t.nnz())
+            }
+            TensorSource::TnsFile { path } => {
+                format!("tns-{}", path.display())
             }
         };
         format!(
@@ -295,11 +341,15 @@ impl Scenario {
                 CooTensor::random(&mut rng, *dims, *nnz)
             }
             TensorSource::Owned(_) => unreachable!("owned tensors are returned directly"),
+            TensorSource::TnsFile { path } => read_tns(path, None)
+                .unwrap_or_else(|e| panic!("reading {}: {e}", path.display())),
         }
     }
 
-    /// The per-PE request streams for this scenario (built once, then
-    /// cached; clones share the cache until a knob changes).
+    /// The fully materialized per-PE request streams (built once, then
+    /// cached; clones share the cache until a knob changes). This is the
+    /// regression oracle — use [`Scenario::trace_source`] to run in
+    /// bounded memory.
     pub fn workload(&self) -> Arc<Workload> {
         self.workload_cache
             .get_or_init(|| {
@@ -314,6 +364,61 @@ impl Scenario {
                 ))
             })
             .clone()
+    }
+
+    /// A streaming [`TraceSource`] for this scenario (built once, then
+    /// cached). `.tns` files already sorted along the scenario's mode
+    /// stream straight from disk without materializing anything; all
+    /// other sources stream lazily from the (cached) in-memory tensor.
+    /// Either way the per-run workload-side footprint is bounded by
+    /// [`crate::trace::WORK_CHUNK`] items per PE stream, not by nnz.
+    pub fn trace_source(&self) -> Result<Arc<dyn TraceSource>, String> {
+        self.source_cache.get_or_init(|| self.build_source()).clone()
+    }
+
+    fn build_source(&self) -> Result<Arc<dyn TraceSource>, String> {
+        if let TensorSource::TnsFile { path } = &self.source {
+            let scan = scan_tns(path).map_err(|e| e.to_string())?;
+            if scan.nnz > 0 && scan.sorted[self.mode.index()] {
+                let src = TnsStreamSource::from_scan(
+                    path,
+                    &scan,
+                    self.mode,
+                    self.fabric,
+                    self.n_pes,
+                    self.rank,
+                    self.row_align,
+                )
+                .map_err(|e| e.to_string())?;
+                return Ok(Arc::new(src));
+            }
+            // Not sorted along this mode: materialize once, re-sort in
+            // memory, and stream from there (propagating read errors
+            // instead of panicking through `tensor()`).
+            let t = match self.tensor_cache.get() {
+                Some(t) => t.clone(),
+                None => {
+                    let t = Arc::new(read_tns(path, None).map_err(|e| e.to_string())?);
+                    self.tensor_cache.get_or_init(|| t).clone()
+                }
+            };
+            return Ok(Arc::new(CooStreamSource::new(
+                t,
+                self.mode,
+                self.fabric,
+                self.n_pes,
+                self.rank,
+                self.row_align,
+            )));
+        }
+        Ok(Arc::new(CooStreamSource::new(
+            self.tensor(),
+            self.mode,
+            self.fabric,
+            self.n_pes,
+            self.rank,
+            self.row_align,
+        )))
     }
 }
 
@@ -365,6 +470,39 @@ mod tests {
         let w = s.workload();
         assert_eq!(w.fabric, FabricType::Type1);
         assert_eq!(w.pe_traces.len(), 1, "Type-1 has one shared front end");
+    }
+
+    #[test]
+    fn tns_scenarios_stream_or_fall_back() {
+        use crate::tensor::io::write_tns;
+        let mut rng = Rng::new(31);
+        let mut t = CooTensor::random(&mut rng, [8, 30, 40], 120);
+        t.sort_mode(Mode::I);
+        let dir = std::env::temp_dir().join(format!("memsys-scn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scn.tns");
+        write_tns(&t, &path).unwrap();
+        let s = Scenario::tns_file(&path);
+        assert_eq!(s.dataset_name(), "scn");
+        let src = s.trace_source().unwrap();
+        assert_eq!(src.nnz(), t.nnz());
+        let again = s.trace_source().unwrap();
+        assert!(
+            std::ptr::eq(
+                Arc::as_ptr(&src) as *const (),
+                Arc::as_ptr(&again) as *const ()
+            ),
+            "trace source is cached"
+        );
+        // Mode J: the file is i-sorted, so the source falls back to
+        // loading + re-sorting in memory — still a valid stream.
+        let sj = s.clone().mode(Mode::J);
+        let srcj = sj.trace_source().unwrap();
+        assert_eq!(srcj.nnz(), t.nnz());
+        assert_ne!(s.key(), sj.key());
+        // Missing files error instead of panicking.
+        assert!(Scenario::tns_file("/nonexistent/x.tns").trace_source().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -4,8 +4,10 @@
 //!
 //! Every `simulate` call is independent, so the fig4/channels-style
 //! grids are embarrassingly parallel: workers pull grid points from an
-//! atomic cursor and write into per-point slots. Distinct workloads are
-//! built once up front and shared read-only across workers.
+//! atomic cursor and write into per-point slots. Distinct trace sources
+//! (deduplicated by scenario key — source + geometry) are resolved once
+//! up front and shared read-only across workers; each worker opens its
+//! own cursors, so streams never contend.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -16,7 +18,8 @@ use crate::config::{FabricType, SystemConfig, SystemKind};
 use crate::resource::max_frequency_mhz;
 use crate::sim::{simulate, MemorySystem, TelemetryOutput};
 use crate::tensor::Mode;
-use crate::trace::Workload;
+use crate::trace::TraceSource;
+use crate::util::NameParseError;
 
 use super::runset::{Run, RunSet};
 use super::{preset, Scenario};
@@ -46,13 +49,14 @@ pub struct Point {
 /// * `preset` — replace the whole config (`a` / `b`); declare it first.
 /// * `system` — derive a §V-B baseline variant (`ip-only`, `cache-only`,
 ///   `dma-only`, `proposed`).
-/// * `dataset`, `scale`, `mode` — scenario knobs (which tensor, at what
-///   scale, which MTTKRP mode).
+/// * `dataset`, `scale`, `mode` — scenario knobs (which tensor — a
+///   synthetic name or a `.tns` path — at what scale, which MTTKRP
+///   mode).
 /// * `fabric` — compute-fabric type (sets both the scenario trace shape
 ///   and `pe.fabric`).
 /// * anything else — a [`SystemConfig::apply_override`] key, including
-///   the `channels` / `topology` / `link_width` / `lmb_banks` /
-///   `reply_network` shorthands.
+///   the `channels` / `topology` / `link-width` / `lmb-banks` /
+///   `reply-network` shorthands.
 #[derive(Debug, Clone)]
 pub struct Sweep {
     base: SystemConfig,
@@ -174,12 +178,21 @@ impl Sweep {
     /// Execute the grid and collect a [`RunSet`] in grid order.
     pub fn run(&self) -> Result<RunSet, String> {
         let points = self.grid()?;
-        // One lock per distinct workload: the first worker to reach a
-        // key builds it, racers on the same key block only on that key,
-        // and distinct workloads build in parallel with the simulations.
-        let mut workloads: HashMap<String, OnceLock<Arc<Workload>>> = HashMap::new();
+        // Resolve each distinct trace source once, before spawning
+        // workers: source construction can fail (missing/garbled `.tns`
+        // files) and the error must propagate instead of poisoning a
+        // worker. Grid points sharing a scenario key share the source;
+        // every run opens its own cursors.
+        let mut sources: HashMap<String, Arc<dyn TraceSource>> = HashMap::new();
         for p in &points {
-            workloads.entry(p.scenario.key()).or_default();
+            let key = p.scenario.key();
+            if !sources.contains_key(&key) {
+                let src = p
+                    .scenario
+                    .trace_source()
+                    .map_err(|e| format!("grid point {:?}: {e}", p.axes))?;
+                sources.insert(key, src);
+            }
         }
         let slots: Vec<OnceLock<Run>> = (0..points.len()).map(|_| OnceLock::new()).collect();
         // Side channel for telemetry artifacts: workers stash outputs
@@ -198,13 +211,14 @@ impl Sweep {
                         break;
                     }
                     let p = &points[i];
-                    let w = workloads[&p.scenario.key()].get_or_init(|| p.scenario.workload());
+                    let src = &sources[&p.scenario.key()];
+                    let name = src.name().to_string();
                     let (report, tel) = if want_telemetry && p.cfg.telemetry.enabled() {
-                        let mut sys = MemorySystem::new(&p.cfg, w);
-                        let report = sys.run(&w.name);
-                        (report, Some(sys.take_telemetry(&w.name)))
+                        let mut sys = MemorySystem::new(&p.cfg, src);
+                        let report = sys.run(&name);
+                        (report, Some(sys.take_telemetry(&name)))
                     } else {
-                        (simulate(&p.cfg, w), None)
+                        (simulate(&p.cfg, src), None)
                     };
                     tel_slots[i].set(tel).expect("each telemetry slot is filled once");
                     let run = Run {
@@ -288,8 +302,7 @@ fn apply_axis(
             scenario.set_fabric(cfg.pe.fabric);
         }
         "system" => {
-            let kind = SystemKind::from_name(value)
-                .ok_or_else(|| format!("unknown system {value:?}"))?;
+            let kind: SystemKind = value.parse().map_err(|e: NameParseError| e.to_string())?;
             *cfg = cfg.as_baseline(kind);
         }
         "dataset" => scenario.set_dataset(value)?,
@@ -299,13 +312,12 @@ fn apply_axis(
             scenario.set_scale(scale);
         }
         "mode" => {
-            let mode = Mode::from_name(value)
-                .ok_or_else(|| format!("unknown mode {value:?} (i|j|k)"))?;
+            let mode: Mode = value.parse().map_err(|e: NameParseError| e.to_string())?;
             scenario.set_mode(mode);
         }
         "fabric" | "pe.fabric" => {
-            let fabric = FabricType::from_name(value)
-                .ok_or_else(|| format!("unknown fabric {value:?}"))?;
+            let fabric: FabricType =
+                value.parse().map_err(|e: NameParseError| e.to_string())?;
             scenario.set_fabric(fabric);
             cfg.pe.fabric = fabric;
         }

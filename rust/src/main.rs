@@ -25,7 +25,7 @@ use mttkrp_memsys::resource::{max_frequency_mhz, table2};
 use mttkrp_memsys::runtime::{find_artifacts_dir, Manifest};
 use mttkrp_memsys::sim::{MemorySystem, SimReport};
 use mttkrp_memsys::tensor::{gen, io, CooTensor, DenseMatrix, Mode};
-use mttkrp_memsys::trace::Workload;
+use mttkrp_memsys::trace::{TraceSource, WORK_CHUNK};
 use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::json::Json;
 use mttkrp_memsys::util::rng::Rng;
@@ -71,8 +71,8 @@ USAGE: mttkrp-memsys <subcommand> [--options]
   table3    [--scale 1.0]             Table III dataset summary
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
             [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
-            [--link_width W] [--lmb-banks N] [--reply-network on|off]
-            [--scale 0.01] [--dataset synth01|synth02] [--<section.key> v]
+            [--link-width W] [--lmb-banks N] [--reply-network on|off]
+            [--scale 0.01] [--dataset synth01|synth02|file.tns] [--<section.key> v]
             [--trace-out trace.json] [--timeline tl.jsonl] [--sample N] [--window W]
   trace     --trace-out trace.json [--timeline tl.jsonl] [--sample N] [--window W]
             (simulate with tracing forced on; all simulate options apply;
@@ -80,11 +80,12 @@ USAGE: mttkrp-memsys <subcommand> [--options]
   report-diff  a.json b.json       first diverging field of two SimReports
   sweep     --axis key=v1,v2,... [--axis ...] [--threads N]
             [--baseline axis=value] [--out runs.jsonl]
-            [--preset b] [--dataset synth01] [--scale 0.01] [--mode i|j|k]
+            [--preset b] [--dataset synth01|file.tns] [--scale 0.01] [--mode i|j|k]
             [--telemetry-dir DIR]
             (axes: system, preset, dataset, scale, mode, fabric, channels,
-             topology, link_width, lmb_banks, reply_network, and any
-             --<section.key> override key, e.g. telemetry.trace)
+             topology, link-width, lmb-banks, reply-network, and any
+             --<section.key> override key, e.g. telemetry.trace;
+             dataset values may be synthetic names or .tns paths)
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
   gen       --out t.tns [--dataset synth01] [--scale 0.01]
@@ -94,8 +95,7 @@ USAGE: mttkrp-memsys <subcommand> [--options]
 
 /// `--mode i|j|k` (default: mode-1/`i`, the paper's evaluation mode).
 fn mode_arg(args: &Args) -> anyhow::Result<Mode> {
-    let name = args.get_str("mode", "i");
-    Mode::from_name(&name).ok_or_else(|| anyhow::anyhow!("unknown mode {name:?} (i|j|k)"))
+    Ok(args.get_str("mode", "i").parse::<Mode>()?)
 }
 
 /// `--dataset`/`--scale`/`--mode` → a Scenario shaped for `cfg`.
@@ -109,8 +109,7 @@ fn scenario_arg(args: &Args, cfg: &SystemConfig) -> anyhow::Result<Scenario> {
 fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
     let mut cfg = experiment::preset(&args.get_str("preset", "b")).map_err(anyhow::Error::msg)?;
     if let Some(sys) = args.get("system") {
-        let kind = SystemKind::from_name(sys)
-            .ok_or_else(|| anyhow::anyhow!("unknown system {sys:?}"))?;
+        let kind: SystemKind = sys.parse()?;
         cfg = cfg.as_baseline(kind);
     }
     // Pass through any config-style overrides (`--cache.lines 4096`).
@@ -120,8 +119,16 @@ fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
         }
     }
     // Interconnect + LMB shorthands: `--channels 4 --topology ring
-    // --link_width 2 --lmb-banks 4 --reply-network on`.
-    for key in ["channels", "topology", "link_width", "lmb-banks", "lmb_banks"] {
+    // --link-width 2 --lmb-banks 4 --reply-network on` (snake_case
+    // spellings stay as hidden aliases).
+    for key in [
+        "channels",
+        "topology",
+        "link-width",
+        "link_width",
+        "lmb-banks",
+        "lmb_banks",
+    ] {
         if let Some(v) = args.get(key) {
             cfg.apply_override(key, v).map_err(|e| anyhow::anyhow!(e))?;
         }
@@ -265,15 +272,17 @@ fn telemetry_paths(args: &Args, cfg: &mut SystemConfig) -> anyhow::Result<Teleme
     Ok(paths)
 }
 
-/// Simulate, then write any requested telemetry artifacts.
+/// Simulate from a streaming trace source, then write any requested
+/// telemetry artifacts.
 fn run_with_telemetry(
     cfg: &SystemConfig,
-    w: &Workload,
+    src: &Arc<dyn TraceSource>,
     paths: &TelemetryPaths,
 ) -> anyhow::Result<SimReport> {
-    let mut sys = MemorySystem::new(cfg, w);
-    let report = sys.run(&w.name);
-    let out = sys.take_telemetry(&w.name);
+    let name = src.name().to_string();
+    let mut sys = MemorySystem::new(cfg, src);
+    let report = sys.run(&name);
+    let out = sys.take_telemetry(&name);
     if let Some(path) = &paths.trace {
         let trace = out.trace.expect("tracing forced on by --trace-out");
         std::fs::write(path, trace.to_string_compact())?;
@@ -295,15 +304,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mut cfg = preset_cfg(args)?;
     let paths = telemetry_paths(args, &mut cfg)?;
     let scenario = scenario_arg(args, &cfg)?;
-    let w = scenario.workload();
+    let src = scenario.trace_source().map_err(anyhow::Error::msg)?;
     println!(
-        "workload: {} nnz={} accesses={} bytes={}",
-        w.name,
-        fmt_count(w.nnz as u64),
-        fmt_count(w.n_accesses() as u64),
-        fmt_bytes(w.total_bytes())
+        "workload: {} nnz={} streams={} (streaming, <= {WORK_CHUNK} items buffered per stream)",
+        src.name(),
+        fmt_count(src.nnz() as u64),
+        src.n_streams()
     );
-    let report = run_with_telemetry(&cfg, &w, &paths)?;
+    let report = run_with_telemetry(&cfg, &src, &paths)?;
     println!("{}", report.to_json().to_string_pretty());
     Ok(())
 }
@@ -318,12 +326,14 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         "trace wants --trace-out <file.json> (add --timeline <file.jsonl> for the time-series)"
     );
     let scenario = scenario_arg(args, &cfg)?;
-    let w = scenario.workload();
+    let src = scenario.trace_source().map_err(anyhow::Error::msg)?;
     println!(
         "tracing {} (sample 1-in-{}, window {} cycles)",
-        w.name, cfg.telemetry.sample, cfg.telemetry.window
+        src.name(),
+        cfg.telemetry.sample,
+        cfg.telemetry.window
     );
-    let report = run_with_telemetry(&cfg, &w, &paths)?;
+    let report = run_with_telemetry(&cfg, &src, &paths)?;
     println!(
         "cycles={} accesses={} elem p95={} fiber p95={}",
         fmt_count(report.total_cycles),
@@ -411,6 +421,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             "system",
             "channels",
             "topology",
+            "link-width",
             "link_width",
             "lmb-banks",
             "lmb_banks",
@@ -424,7 +435,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     if has_preset_axis && has_base_overrides {
         eprintln!(
             "warning: --axis preset=... resets the config per grid point; base --system, \
-             --<section.key>, --channels/--topology/--link_width/--lmb-banks/--reply-network \
+             --<section.key>, --channels/--topology/--link-width/--lmb-banks/--reply-network \
              flags are ignored there"
         );
     }

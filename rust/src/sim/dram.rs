@@ -260,7 +260,9 @@ impl Dram {
             return None;
         }
         // Bus saturation guard mirror of `schedule`.
-        let bus_gate = self.bus_free_at.saturating_sub(4 * self.cfg.t_row_miss);
+        let bus_gate = self
+            .bus_free_at
+            .saturating_sub(self.cfg.bus_admission_factor * self.cfg.t_row_miss);
         let mut t = Cycle::MAX;
         for (req, _) in &self.queue {
             let bank = &self.banks[self.bank_of(req.addr)];
@@ -296,9 +298,10 @@ impl Dram {
             }
             let Some(qi) = pick else { break };
             // Bus admission: one transaction's beats must fit after
-            // bus_free_at; if the bus is saturated far in the future,
-            // stop scheduling this cycle.
-            if self.bus_free_at > now + 4 * self.cfg.t_row_miss {
+            // bus_free_at; if the bus is already booked more than
+            // `bus_admission_factor` row-miss times ahead, stop
+            // scheduling this cycle (see `DramConfig::bus_admission_factor`).
+            if self.bus_free_at > now + self.cfg.bus_admission_factor * self.cfg.t_row_miss {
                 break;
             }
             let (req, enq_at) = self.queue.remove(qi).unwrap();
@@ -563,6 +566,32 @@ mod tests {
         assert_eq!(a.write_bytes, 64);
         assert_eq!(a.row_hits, 1);
         assert_eq!(a.row_misses, 2);
+    }
+
+    #[test]
+    fn bus_admission_factor_gates_scheduling() {
+        // 4 KiB bursts (64 beats each) to distinct banks: each booking
+        // pushes bus_free_at 64 cycles further out, so the admission gate
+        // decides how many transactions one tick may start.
+        let admitted_first_tick = |factor: u64| {
+            let cfg = DramConfig {
+                bus_admission_factor: factor,
+                ..DramConfig::mig_u250()
+            };
+            let mut d = Dram::new(&cfg);
+            for i in 0..8u64 {
+                d.push(req(i + 1, i * 8192, 4096, false), 0);
+            }
+            let mut out = Vec::new();
+            d.tick(0, &mut out);
+            d.inflight.len()
+        };
+        let tight = admitted_first_tick(1);
+        let loose = admitted_first_tick(8);
+        assert!(
+            tight < loose,
+            "factor 1 admitted {tight}, factor 8 admitted {loose}"
+        );
     }
 
     #[test]

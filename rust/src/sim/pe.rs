@@ -1,15 +1,20 @@
 //! PE front ends — the compute-fabric side of the memory system.
 //!
-//! A front end replays one [`PeTrace`]: it keeps a decoupling window of
-//! in-flight nonzeros (Type-1: the systolic array's pipeline depth;
-//! Type-2: each PE's load queue), issues each nonzero's accesses to the
-//! memory system, waits for the loads, spends the compute cycles, and
-//! retires. The *system* decides where each access goes (cache / DMA /
-//! direct) — the front end only tracks dependency state, which is why the
-//! same PE model drives the proposed system and all three baselines.
+//! A front end replays one work stream pulled chunk-wise from a
+//! [`WorkCursor`] (a [`TraceSource`](crate::trace::TraceSource) stream):
+//! it keeps a decoupling window of in-flight nonzeros (Type-1: the
+//! systolic array's pipeline depth; Type-2: each PE's load queue),
+//! issues each nonzero's accesses to the memory system, waits for the
+//! loads, spends the compute cycles, and retires. At most
+//! [`WORK_CHUNK`] un-admitted items are buffered at a time, so the
+//! front end's memory footprint is independent of stream length. The
+//! *system* decides where each access goes (cache / DMA / direct) — the
+//! front end only tracks dependency state, which is why the same PE
+//! model drives the proposed system and all three baselines.
 
 use std::collections::VecDeque;
 
+use crate::trace::source::{VecCursor, WorkCursor, WORK_CHUNK};
 use crate::trace::{Access, NnzWork, PeTrace};
 
 use super::Cycle;
@@ -181,8 +186,15 @@ pub struct PeFrontEnd {
     pub pe: usize,
     /// LMB / router port this front end is attached to.
     pub port: usize,
-    trace: PeTrace,
-    cursor: usize,
+    /// Pull cursor over this front end's work stream.
+    cursor: Box<dyn WorkCursor>,
+    /// Refill buffer: at most [`WORK_CHUNK`] items between cursor pulls.
+    buf: Vec<NnzWork>,
+    buf_pos: usize,
+    /// Items admitted into the window so far / stream total (exact, from
+    /// [`TraceSource::stream_len`](crate::trace::TraceSource::stream_len)).
+    admitted: usize,
+    total: usize,
     window: Vec<Option<NnzSlot>>,
     /// Unissued (slot, acc) accesses in program order — avoids the
     /// O(window × 4) scan per issue attempt (§Perf L3 opt #1).
@@ -206,7 +218,9 @@ pub struct PeFrontEnd {
 
 impl PeFrontEnd {
     pub fn new(
-        trace: PeTrace,
+        pe: usize,
+        total: usize,
+        cursor: Box<dyn WorkCursor>,
         port: usize,
         window: usize,
         issue_width: usize,
@@ -214,10 +228,13 @@ impl PeFrontEnd {
     ) -> PeFrontEnd {
         let window = window.max(1);
         PeFrontEnd {
-            pe: trace.pe,
+            pe,
             port,
-            trace,
-            cursor: 0,
+            cursor,
+            buf: Vec::new(),
+            buf_pos: 0,
+            admitted: 0,
+            total,
             window: vec![None; window],
             pending: VecDeque::new(),
             retirable: Vec::new(),
@@ -231,18 +248,53 @@ impl PeFrontEnd {
         }
     }
 
-    /// Admit nonzeros from the trace into free window slots (in order).
+    /// Front end replaying a pre-materialized [`PeTrace`] (unit tests,
+    /// tools that build traces by hand).
+    pub fn from_trace(
+        trace: PeTrace,
+        port: usize,
+        window: usize,
+        issue_width: usize,
+        compute_cycles: Cycle,
+    ) -> PeFrontEnd {
+        let total = trace.work.len();
+        PeFrontEnd::new(
+            trace.pe,
+            total,
+            Box::new(VecCursor::new(trace.work)),
+            port,
+            window,
+            issue_width,
+            compute_cycles,
+        )
+    }
+
+    /// Admit nonzeros from the stream into free window slots (in order),
+    /// pulling from the cursor in [`WORK_CHUNK`]-sized refills.
     pub fn fill_window(&mut self) {
-        while self.cursor < self.trace.work.len() {
+        while self.admitted < self.total {
             let Some(slot) = self.free_slots.pop() else {
                 break;
             };
             let slot = slot as usize;
             debug_assert!(self.window[slot].is_none());
+            if self.buf_pos == self.buf.len() {
+                self.buf.clear();
+                self.buf_pos = 0;
+                let got = self.cursor.refill(&mut self.buf, WORK_CHUNK);
+                assert!(
+                    got > 0,
+                    "pe {}: trace source ran dry after {} of {} items",
+                    self.pe,
+                    self.admitted,
+                    self.total
+                );
+            }
             self.occupied += 1;
-            let work = self.trace.work[self.cursor];
+            let work = self.buf[self.buf_pos];
+            self.buf_pos += 1;
             self.window[slot] = Some(NnzSlot::new(work));
-            self.cursor += 1;
+            self.admitted += 1;
             for acc in [ACC_ELEM, ACC_FIB1, ACC_FIB2] {
                 self.pending.push_back((slot as u32, acc as u8));
             }
@@ -253,13 +305,13 @@ impl PeFrontEnd {
     }
 
     /// Could an issue attempt do anything right now: an unissued access
-    /// is pending, or trace work can be admitted into a free window
+    /// is pending, or stream work can be admitted into a free window
     /// slot? (Partial line-split issues are tracked by the system.) When
     /// false, an issue visit is a provable no-op — the event-driven run
     /// loop skips this front end.
     pub fn can_issue(&self) -> bool {
         !self.pending.is_empty()
-            || (self.cursor < self.trace.work.len() && self.occupied < self.window.len())
+            || (self.admitted < self.total && self.occupied < self.window.len())
     }
 
     /// Next unissued access in program order (front of the pending
@@ -358,14 +410,14 @@ impl PeFrontEnd {
         n
     }
 
-    /// All trace work admitted and completed. `occupied` mirrors the
+    /// All stream work admitted and completed. `occupied` mirrors the
     /// window's live slots, so this is O(1).
     pub fn done(&self) -> bool {
-        self.cursor >= self.trace.work.len() && self.occupied == 0
+        self.admitted >= self.total && self.occupied == 0
     }
 
     pub fn total_work(&self) -> usize {
-        self.trace.work.len()
+        self.total
     }
 
     pub fn in_flight(&self) -> usize {
@@ -399,7 +451,7 @@ mod tests {
             pe: 0,
             work: (0..n as u64).map(|z| work(z, z % 2 == 0)).collect(),
         };
-        PeFrontEnd::new(trace, 0, window, 2, 1)
+        PeFrontEnd::from_trace(trace, 0, window, 2, 1)
     }
 
     #[test]

@@ -59,7 +59,7 @@ use std::collections::BinaryHeap;
 use std::time::Instant;
 
 use crate::config::{FabricType, SystemConfig, SystemKind};
-use crate::trace::{AccessClass, Workload};
+use crate::trace::{AccessClass, TraceSource};
 
 use super::dram::IdGen;
 use super::fabric::Fabric;
@@ -151,10 +151,14 @@ pub struct MemorySystem {
 }
 
 impl MemorySystem {
-    /// Build a system for `cfg` and attach the workload's PE traces.
-    pub fn new(cfg: &SystemConfig, workload: &Workload) -> MemorySystem {
+    /// Build a system for `cfg` and attach one PE front end per source
+    /// stream. Any [`TraceSource`] plugs in here — the materialized
+    /// [`Workload`](crate::trace::Workload) oracle, a lazy
+    /// `CooStreamSource`, or a `TnsStreamSource` reading straight from
+    /// disk; report-identity across them is a hard invariant.
+    pub fn new<S: TraceSource + ?Sized>(cfg: &SystemConfig, source: &S) -> MemorySystem {
         cfg.validate().expect("invalid system config");
-        let n_fronts = workload.pe_traces.len();
+        let n_fronts = source.n_streams();
         // Port topology: ip-only gives each front end its own controller
         // port; the LMB variants use one port per LMB.
         let n_ports = match cfg.kind {
@@ -165,24 +169,31 @@ impl MemorySystem {
             SystemKind::IpOnly => Vec::new(),
             _ => (0..cfg.n_lmbs).map(|i| Lmb::new(cfg, i)).collect(),
         };
-        let pes = workload
-            .pe_traces
-            .iter()
-            .map(|t| {
+        let pes = (0..n_fronts)
+            .map(|s| {
+                let pe = source.stream_pe(s);
                 let port = match cfg.kind {
-                    SystemKind::IpOnly => t.pe % n_ports,
-                    _ => t.pe % cfg.n_lmbs,
+                    SystemKind::IpOnly => pe % n_ports,
+                    _ => pe % cfg.n_lmbs,
                 };
                 // Type-1's single front end stands for the whole fabric:
                 // give it the aggregate window and issue width.
-                let (window, width) = match workload.fabric {
+                let (window, width) = match source.fabric() {
                     FabricType::Type1 => (
                         cfg.pe.max_inflight * cfg.pe.n_pes,
                         3, // shared TLU + MLU + MSU issue in parallel
                     ),
                     FabricType::Type2 => (cfg.pe.max_inflight, 2),
                 };
-                PeFrontEnd::new(t.clone(), port, window, width, cfg.pe.compute_cycles_per_nnz)
+                PeFrontEnd::new(
+                    pe,
+                    source.stream_len(s),
+                    source.open(s),
+                    port,
+                    window,
+                    width,
+                    cfg.pe.compute_cycles_per_nnz,
+                )
             })
             .collect::<Vec<_>>();
         let n_pes = pes.len();
@@ -204,7 +215,7 @@ impl MemorySystem {
             // Type-2's independent per-PE masters squeeze out a little
             // more MLP than Type-1's three shared units, but the limit is
             // GLOBAL — they all share the one controller interface.
-            direct_limit: match workload.fabric {
+            direct_limit: match source.fabric() {
                 FabricType::Type1 => 5,
                 FabricType::Type2 => 7,
             },
@@ -721,16 +732,18 @@ enum IssueStep {
     Done,
 }
 
-/// Convenience: build + run in one call (event-driven engine).
-pub fn simulate(cfg: &SystemConfig, workload: &Workload) -> SimReport {
-    MemorySystem::new(cfg, workload).run(&workload.name)
+/// Convenience: build + run in one call (event-driven engine). Accepts
+/// any [`TraceSource`] — materialized workload or streaming.
+pub fn simulate<S: TraceSource + ?Sized>(cfg: &SystemConfig, source: &S) -> SimReport {
+    let name = source.name().to_string();
+    MemorySystem::new(cfg, source).run(&name)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::tensor::{CooTensor, Mode};
-    use crate::trace::workload_from_tensor;
+    use crate::trace::{workload_from_tensor, Workload};
     use crate::util::rng::Rng;
 
     fn small_workload(fabric: FabricType, n_pes: usize) -> Workload {

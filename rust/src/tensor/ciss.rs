@@ -39,7 +39,12 @@ impl CissTensor {
     pub fn from_coo(t: &CooTensor, mode: Mode, n_channels: usize) -> CissTensor {
         assert!(n_channels > 0);
         let mut sorted = t.clone();
-        if sorted.sorted_mode != Some(mode) {
+        // Order-based check (not the `sorted_mode` flag): tensors loaded
+        // from already-sorted `.tns` files carry no flag, and re-sorting
+        // them lexicographically would reorder within slices — breaking
+        // identity with the streaming Type-1 source, which trusts file
+        // order.
+        if !sorted.is_sorted_mode(mode) {
             sorted.sort_mode(mode);
         }
         // Slice boundaries along the sorted mode.

@@ -35,12 +35,21 @@ impl Mode {
         }
     }
 
+    #[deprecated(note = "use `s.parse::<Mode>()` instead")]
     pub fn from_name(s: &str) -> Option<Mode> {
+        s.parse().ok()
+    }
+}
+
+impl std::str::FromStr for Mode {
+    type Err = crate::util::NameParseError;
+
+    fn from_str(s: &str) -> Result<Mode, crate::util::NameParseError> {
         match s {
-            "i" | "I" | "0" => Some(Mode::I),
-            "j" | "J" | "1" => Some(Mode::J),
-            "k" | "K" | "2" => Some(Mode::K),
-            _ => None,
+            "i" | "I" | "0" => Ok(Mode::I),
+            "j" | "J" | "1" => Ok(Mode::J),
+            "k" | "K" | "2" => Ok(Mode::K),
+            _ => Err(crate::util::NameParseError::new("mode", s, &["i", "j", "k"])),
         }
     }
 }
@@ -240,11 +249,17 @@ mod tests {
     #[test]
     fn mode_names_round_trip() {
         for m in Mode::ALL {
-            assert_eq!(Mode::from_name(m.name()), Some(m));
+            assert_eq!(m.name().parse(), Ok(m));
         }
-        assert_eq!(Mode::from_name("J"), Some(Mode::J));
-        assert_eq!(Mode::from_name("2"), Some(Mode::K));
-        assert_eq!(Mode::from_name("x"), None);
+        assert_eq!("J".parse(), Ok(Mode::J));
+        assert_eq!("2".parse(), Ok(Mode::K));
+        let err = "x".parse::<Mode>().unwrap_err();
+        assert_eq!(err.to_string(), "unknown mode \"x\" (expected i|j|k)");
+        #[allow(deprecated)]
+        {
+            assert_eq!(Mode::from_name("k"), Some(Mode::K));
+            assert_eq!(Mode::from_name("x"), None);
+        }
     }
 
     fn toy() -> CooTensor {

@@ -1,8 +1,19 @@
 //! `.tns` text I/O (FROSTT-style: one `i j k value` line per nonzero,
 //! 1-based indices) so external tensors can be fed to the system.
+//!
+//! The reader comes in three sizes:
+//!
+//! * [`TnsReader`] — a buffered streaming cursor yielding one element at
+//!   a time with its byte offset and line number, resumable mid-file via
+//!   [`TnsReader::open_at`]. This is what the streaming trace sources
+//!   build on; memory is one `BufReader` regardless of file size.
+//! * [`scan_tns`] — a single pass recording nnz, dimensions, and which
+//!   modes the file is sorted along, without keeping any element.
+//! * [`read_tns`] — materializes the whole file into a [`CooTensor`]
+//!   (fine for fixtures and for files that must be re-sorted).
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::Path;
+use std::io::{BufRead, BufReader, BufWriter, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 use super::coo::CooTensor;
 use crate::Result;
@@ -19,50 +30,183 @@ pub fn write_tns(t: &CooTensor, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// One parsed `.tns` nonzero, with enough position info to seek back to
+/// its line later (partition boundaries) and to report errors in
+/// `path:lineno` form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TnsElem {
+    /// 0-based coordinates (the file stores them 1-based).
+    pub idx: [u32; 3],
+    pub val: f32,
+    /// Byte offset of the start of this element's line.
+    pub offset: u64,
+    /// 1-based line number of this element's line.
+    pub lineno: usize,
+}
+
+/// Buffered streaming reader over a `.tns` file: skips comments and
+/// blank lines, validates as it goes, tracks byte offsets so a second
+/// reader can resume at any previously seen element.
+#[derive(Debug)]
+pub struct TnsReader {
+    r: BufReader<std::fs::File>,
+    path: PathBuf,
+    buf: String,
+    /// Lines consumed so far (== lineno of the last line read).
+    lineno: usize,
+    /// Byte offset the next `read_line` starts at.
+    offset: u64,
+}
+
+impl TnsReader {
+    /// Open at the start of the file.
+    pub fn open(path: &Path) -> Result<TnsReader> {
+        TnsReader::open_at(path, 0, 0)
+    }
+
+    /// Open positioned at byte `offset`, which must be the start of a
+    /// line preceded by `lines_before` lines (both typically taken from
+    /// an earlier reader's [`TnsElem`]) so line numbers in errors stay
+    /// correct.
+    pub fn open_at(path: &Path, offset: u64, lines_before: usize) -> Result<TnsReader> {
+        let mut f = std::fs::File::open(path)?;
+        if offset > 0 {
+            f.seek(SeekFrom::Start(offset))?;
+        }
+        Ok(TnsReader {
+            r: BufReader::new(f),
+            path: path.to_path_buf(),
+            buf: String::new(),
+            lineno: lines_before,
+            offset,
+        })
+    }
+
+    /// Byte offset the next line would be read from (end of file once
+    /// `next_elem` has returned `None`).
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Lines consumed so far (including comments and blanks).
+    pub fn lines_read(&self) -> usize {
+        self.lineno
+    }
+
+    /// The next nonzero, or `None` at end of file.
+    pub fn next_elem(&mut self) -> Result<Option<TnsElem>> {
+        loop {
+            self.buf.clear();
+            let line_start = self.offset;
+            let n = self.r.read_line(&mut self.buf)?;
+            if n == 0 {
+                return Ok(None);
+            }
+            self.offset += n as u64;
+            self.lineno += 1;
+            let line = self.buf.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let mut idx = [0u32; 3];
+            for m in &mut idx {
+                let x: u64 = it
+                    .next()
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("{}:{}: too few fields", self.path.display(), self.lineno)
+                    })?
+                    .parse()
+                    .map_err(|e| {
+                        anyhow::anyhow!("{}:{}: bad index: {e}", self.path.display(), self.lineno)
+                    })?;
+                anyhow::ensure!(
+                    x >= 1,
+                    "{}:{}: indices are 1-based",
+                    self.path.display(),
+                    self.lineno
+                );
+                anyhow::ensure!(
+                    x <= u32::MAX as u64,
+                    "{}:{}: index {x} out of range",
+                    self.path.display(),
+                    self.lineno
+                );
+                *m = (x - 1) as u32;
+            }
+            let val: f32 = it
+                .next()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{}:{}: missing value", self.path.display(), self.lineno)
+                })?
+                .parse()
+                .map_err(|e| {
+                    anyhow::anyhow!("{}:{}: bad value: {e}", self.path.display(), self.lineno)
+                })?;
+            return Ok(Some(TnsElem {
+                idx,
+                val,
+                offset: line_start,
+                lineno: self.lineno,
+            }));
+        }
+    }
+}
+
+/// Geometry of a `.tns` file from one streaming pass: nonzero count,
+/// inferred dims (max index per mode), and per-mode sortedness (mode
+/// coordinate non-decreasing — the same order-based predicate as
+/// [`CooTensor::is_sorted_mode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TnsScan {
+    pub nnz: usize,
+    pub dims: [u64; 3],
+    pub sorted: [bool; 3],
+}
+
+/// Scan a `.tns` file for its geometry without materializing it.
+pub fn scan_tns(path: &Path) -> Result<TnsScan> {
+    let mut r = TnsReader::open(path)?;
+    let mut scan = TnsScan {
+        nnz: 0,
+        dims: [0; 3],
+        sorted: [true; 3],
+    };
+    let mut prev: Option<[u32; 3]> = None;
+    while let Some(e) = r.next_elem()? {
+        scan.nnz += 1;
+        for m in 0..3 {
+            scan.dims[m] = scan.dims[m].max(e.idx[m] as u64 + 1);
+            if let Some(p) = prev {
+                scan.sorted[m] &= p[m] <= e.idx[m];
+            }
+        }
+        prev = Some(e.idx);
+    }
+    Ok(scan)
+}
+
 /// Read a 3-mode FROSTT `.tns` file. Dimensions are inferred from the
 /// maximum index per mode unless `dims` is given.
 pub fn read_tns(path: &Path, dims: Option<[u64; 3]>) -> Result<CooTensor> {
-    let f = std::fs::File::open(path)?;
-    let r = BufReader::new(f);
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().to_string())
         .unwrap_or_else(|| "tns".into());
+    let mut r = TnsReader::open(path)?;
     let mut is = Vec::new();
     let mut js = Vec::new();
     let mut ks = Vec::new();
     let mut vs = Vec::new();
     let mut max = [0u64; 3];
-    for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
-            continue;
+    while let Some(e) = r.next_elem()? {
+        for (m, &x) in max.iter_mut().zip(&e.idx) {
+            *m = (*m).max(x as u64 + 1);
         }
-        let mut it = line.split_whitespace();
-        let mut idx = [0u64; 3];
-        for m in &mut idx {
-            *m = it
-                .next()
-                .ok_or_else(|| {
-                    anyhow::anyhow!("{}:{}: too few fields", path.display(), lineno + 1)
-                })?
-                .parse::<u64>()
-                .map_err(|e| anyhow::anyhow!("{}:{}: bad index: {e}", path.display(), lineno + 1))?;
-            anyhow::ensure!(*m >= 1, "{}:{}: indices are 1-based", path.display(), lineno + 1);
-        }
-        let v: f32 = it
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("{}:{}: missing value", path.display(), lineno + 1))?
-            .parse()
-            .map_err(|e| anyhow::anyhow!("{}:{}: bad value: {e}", path.display(), lineno + 1))?;
-        for (m, &x) in max.iter_mut().zip(&idx) {
-            *m = (*m).max(x);
-        }
-        is.push((idx[0] - 1) as u32);
-        js.push((idx[1] - 1) as u32);
-        ks.push((idx[2] - 1) as u32);
-        vs.push(v);
+        is.push(e.idx[0]);
+        js.push(e.idx[1]);
+        ks.push(e.idx[2]);
+        vs.push(e.val);
     }
     let dims = dims.unwrap_or(max);
     anyhow::ensure!(
@@ -126,5 +270,97 @@ mod tests {
         let p3 = dir.join("dims.tns");
         std::fs::write(&p3, "5 1 1 2.0\n").unwrap();
         assert!(read_tns(&p3, Some([2, 2, 2])).is_err(), "extent check");
+    }
+
+    #[test]
+    fn reader_reports_line_numbers_through_comments() {
+        let dir = std::env::temp_dir().join("memsys_io_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lines.tns");
+        std::fs::write(&path, "# one\n\n1 1 1 3.0\n% four\nbad line here\n").unwrap();
+        let mut r = TnsReader::open(&path).unwrap();
+        let e = r.next_elem().unwrap().unwrap();
+        assert_eq!(e.lineno, 3);
+        assert_eq!(e.idx, [0, 0, 0]);
+        let err = r.next_elem().unwrap_err().to_string();
+        assert!(err.contains(":5:"), "error should carry lineno 5: {err}");
+    }
+
+    #[test]
+    fn reader_resumes_at_recorded_offsets() {
+        let dir = std::env::temp_dir().join("memsys_io_test5");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume.tns");
+        std::fs::write(&path, "# hdr\n1 2 3 1.0\n2 3 4 2.0\n3 4 5 -3.5\n").unwrap();
+        let mut r = TnsReader::open(&path).unwrap();
+        let mut elems = Vec::new();
+        while let Some(e) = r.next_elem().unwrap() {
+            elems.push(e);
+        }
+        assert_eq!(elems.len(), 3);
+        // Reopen at each element's offset: the remainder must replay
+        // identically, line numbers included.
+        for (i, start) in elems.iter().enumerate() {
+            let mut r2 = TnsReader::open_at(&path, start.offset, start.lineno - 1).unwrap();
+            for want in &elems[i..] {
+                assert_eq!(r2.next_elem().unwrap().unwrap(), *want);
+            }
+            assert!(r2.next_elem().unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn committed_fixture_round_trips() {
+        // The checked-in FROSTT-style fixture: comments in both styles,
+        // blank lines, negative and exponent-notation values, dims far
+        // from square.
+        let fixture = Path::new(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/tests/data/sample.tns"
+        ));
+        let t = read_tns(fixture, None).unwrap();
+        assert_eq!(t.dims, [5, 400, 7000]);
+        assert_eq!(t.nnz(), 12);
+        assert!(t.is_sorted_mode(Mode::I), "fixture is mode-i sorted");
+        assert_eq!(t.coords(1), (0, 36, 4095));
+        assert_eq!(t.vals[1], -3.25);
+        assert_eq!(t.vals[4], -1.5e2);
+        assert_eq!(t.vals[10], 3.0e-1);
+        assert_eq!(t.vals[11], -42.0);
+        let scan = scan_tns(fixture).unwrap();
+        assert_eq!(scan.nnz, 12);
+        assert_eq!(scan.dims, t.dims);
+        assert!(scan.sorted[0]);
+
+        // write → read is lossless on the fixture's values.
+        let dir = std::env::temp_dir().join("memsys_io_test7");
+        std::fs::create_dir_all(&dir).unwrap();
+        let copy = dir.join("sample_copy.tns");
+        write_tns(&t, &copy).unwrap();
+        let back = read_tns(&copy, None).unwrap();
+        assert_eq!(back.dims, t.dims);
+        assert_eq!(back.ind_i, t.ind_i);
+        assert_eq!(back.ind_j, t.ind_j);
+        assert_eq!(back.ind_k, t.ind_k);
+        assert_eq!(back.vals, t.vals);
+    }
+
+    #[test]
+    fn scan_reports_geometry_and_sortedness() {
+        let dir = std::env::temp_dir().join("memsys_io_test6");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("scan.tns");
+        // i ascending, j ascending, k not.
+        std::fs::write(&path, "1 1 9 1.0\n1 2 4 2.0\n3 2 5 3.0\n").unwrap();
+        let s = scan_tns(&path).unwrap();
+        assert_eq!(s.nnz, 3);
+        assert_eq!(s.dims, [3, 2, 9]);
+        assert_eq!(s.sorted, [true, true, false]);
+        // Empty (comment-only) file: zero nnz, trivially sorted.
+        let empty = dir.join("scan_empty.tns");
+        std::fs::write(&empty, "# nothing\n").unwrap();
+        let s = scan_tns(&empty).unwrap();
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.sorted, [true, true, true]);
     }
 }

@@ -84,8 +84,9 @@ fn access(class: AccessClass, addr: u64, bytes: u64) -> Access {
 
 /// Work item for nonzero stream position `pos` whose element lives at
 /// stream address `pos` (Type-1 streams CISS order, Type-2 COO order).
-#[allow(clippy::too_many_arguments)]
-fn work_item(
+/// Shared with the streaming sources in [`super::source`], which must
+/// emit byte-identical items.
+pub(crate) fn work_item(
     amap: &AddressMap,
     pos: u64,
     j: u64,

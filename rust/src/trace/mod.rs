@@ -5,9 +5,11 @@
 
 mod amap;
 mod gen;
+pub mod source;
 
 pub use amap::AddressMap;
 pub use gen::{workload_from_tensor, Workload};
+pub use source::{CooStreamSource, TnsStreamSource, TraceSource, WorkCursor, WORK_CHUNK};
 
 /// The three access classes of spMTTKRP (§IV): the paper's entire design
 /// is about serving each with the right memory primitive.

@@ -1,0 +1,910 @@
+//! Streaming trace sources — the pull side of the workload API.
+//!
+//! The simulator used to require a fully materialized [`Workload`]
+//! (`Vec<NnzWork>` per PE, ~100 B per nonzero) before a single cycle ran,
+//! which capped runs at scaled-down datasets. This module inverts the
+//! contract: a [`TraceSource`] describes the per-PE streams up front
+//! (count, owner PE, length) and hands out chunked [`WorkCursor`]s that
+//! generate [`NnzWork`] items on demand, so peak workload-side memory is
+//! bounded by [`WORK_CHUNK`] per front end — independent of nnz.
+//!
+//! Three implementations, all report-identical by construction (and by
+//! the randomized property in `tests/integration_engine.rs`):
+//!
+//! * [`Workload`] — the materialized streams, kept as the regression
+//!   oracle; its cursors replay the pre-built vectors.
+//! * [`CooStreamSource`] — generates the Type-1 (CISS-interleaved) or
+//!   Type-2 (fiber-aligned partitions) stream lazily from an in-memory
+//!   [`CooTensor`]; only the 16 B/nnz tensor is resident, never the
+//!   ~100 B/nnz access stream.
+//! * [`TnsStreamSource`] — generates the same streams straight from a
+//!   mode-sorted FROSTT `.tns` file: a scan pass records nnz, dims and
+//!   partition byte offsets, then each cursor re-reads its slice of the
+//!   file through a [`TnsReader`]. Peak memory is a few `BufReader`s —
+//!   full-scale Table III datasets fit on any host.
+//!
+//! # Cursor lifecycle
+//!
+//! `MemorySystem::new` calls [`TraceSource::open`] once per stream; each
+//! [`PeFrontEnd`](crate::sim::pe::PeFrontEnd) then pulls up to
+//! [`WORK_CHUNK`] items at a time via [`WorkCursor::refill`] as its
+//! decoupling window drains. [`TraceSource::stream_len`] is exact (the
+//! run loop sizes its watchdog and report totals from it), so a cursor
+//! returning 0 before `stream_len` items is a contract violation and
+//! panics in the front end.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use super::amap::AddressMap;
+use super::gen::{work_item, Workload};
+use super::NnzWork;
+use crate::config::FabricType;
+use crate::mttkrp::operand_modes;
+use crate::tensor::io::{scan_tns, TnsReader, TnsScan};
+use crate::tensor::{partition_by_nnz, CooTensor, Mode, Partition};
+
+/// Max work items a front end pulls per [`WorkCursor::refill`] — the
+/// workload-side memory bound per stream (~100 B per item).
+pub const WORK_CHUNK: usize = 1024;
+
+/// A chunked pull cursor over one PE's work stream.
+pub trait WorkCursor: Send {
+    /// Append up to `max` items to `out`; returns how many were
+    /// appended. 0 means the stream is exhausted.
+    fn refill(&mut self, out: &mut Vec<NnzWork>, max: usize) -> usize;
+}
+
+/// A workload described as per-PE streams that are generated on demand.
+///
+/// Stream geometry (count, PE ids, exact lengths) is known up front;
+/// the work items themselves are pulled chunk-wise through
+/// [`WorkCursor`]s. See the module docs for the lifecycle.
+pub trait TraceSource: Send + Sync + std::fmt::Debug {
+    /// Workload label (dataset name) used in reports.
+    fn name(&self) -> &str;
+    /// Compute-fabric type the streams were generated for.
+    fn fabric(&self) -> FabricType;
+    /// Total nonzeros across all streams.
+    fn nnz(&self) -> usize;
+    /// Number of independent streams (Type-1: 1; Type-2: one per PE).
+    fn n_streams(&self) -> usize;
+    /// PE id that owns stream `s`.
+    fn stream_pe(&self, s: usize) -> usize;
+    /// Exact number of work items stream `s` will yield.
+    fn stream_len(&self, s: usize) -> usize;
+    /// Open a fresh cursor at the start of stream `s`.
+    fn open(&self, s: usize) -> Box<dyn WorkCursor>;
+}
+
+/// Forward through `Arc` so shared sources (sweep dedup) plug directly
+/// into the generic `MemorySystem::new<S: TraceSource + ?Sized>`.
+impl<S: TraceSource + ?Sized> TraceSource for Arc<S> {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn fabric(&self) -> FabricType {
+        (**self).fabric()
+    }
+    fn nnz(&self) -> usize {
+        (**self).nnz()
+    }
+    fn n_streams(&self) -> usize {
+        (**self).n_streams()
+    }
+    fn stream_pe(&self, s: usize) -> usize {
+        (**self).stream_pe(s)
+    }
+    fn stream_len(&self, s: usize) -> usize {
+        (**self).stream_len(s)
+    }
+    fn open(&self, s: usize) -> Box<dyn WorkCursor> {
+        (**self).open(s)
+    }
+}
+
+/// Cursor over a pre-materialized vector (the [`Workload`] oracle and
+/// unit-test front ends).
+pub struct VecCursor {
+    work: Vec<NnzWork>,
+    pos: usize,
+}
+
+impl VecCursor {
+    pub fn new(work: Vec<NnzWork>) -> VecCursor {
+        VecCursor { work, pos: 0 }
+    }
+}
+
+impl WorkCursor for VecCursor {
+    fn refill(&mut self, out: &mut Vec<NnzWork>, max: usize) -> usize {
+        let n = max.min(self.work.len() - self.pos);
+        out.extend_from_slice(&self.work[self.pos..self.pos + n]);
+        self.pos += n;
+        n
+    }
+}
+
+/// The materialized workload is one (regression-oracle) trace source.
+impl TraceSource for Workload {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn fabric(&self) -> FabricType {
+        self.fabric
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn n_streams(&self) -> usize {
+        self.pe_traces.len()
+    }
+    fn stream_pe(&self, s: usize) -> usize {
+        self.pe_traces[s].pe
+    }
+    fn stream_len(&self, s: usize) -> usize {
+        self.pe_traces[s].work.len()
+    }
+    fn open(&self, s: usize) -> Box<dyn WorkCursor> {
+        Box::new(VecCursor::new(self.pe_traces[s].work.clone()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming from an in-memory COO tensor
+// ---------------------------------------------------------------------
+
+/// Streams the mode-sorted access pattern lazily from a [`CooTensor`].
+///
+/// Construction sorts the tensor along `mode` (one clone) only when it
+/// is not already in mode order — the same rule `workload_from_tensor`
+/// uses — and computes the address map plus (Type-2) the fiber-aligned
+/// partitions. No access stream is ever materialized.
+#[derive(Debug)]
+pub struct CooStreamSource {
+    tensor: Arc<CooTensor>,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    fabric: FabricType,
+    amap: AddressMap,
+    /// Type-1 CISS interleave width (the systolic column count).
+    n_channels: usize,
+    /// Type-2 fiber-aligned partitions (empty for Type-1).
+    parts: Vec<Partition>,
+}
+
+impl CooStreamSource {
+    pub fn new(
+        t: Arc<CooTensor>,
+        mode: Mode,
+        fabric: FabricType,
+        n_pes: usize,
+        rank: usize,
+        row_align: u64,
+    ) -> CooStreamSource {
+        let (om1, om2) = operand_modes(mode);
+        let amap = AddressMap::new(
+            t.nnz() as u64,
+            t.dim(om1),
+            t.dim(om2),
+            t.dim(mode),
+            rank,
+            row_align,
+        );
+        let tensor = if t.is_sorted_mode(mode) {
+            t
+        } else {
+            let mut sorted = (*t).clone();
+            sorted.sort_mode(mode);
+            Arc::new(sorted)
+        };
+        let parts = match fabric {
+            FabricType::Type1 => Vec::new(),
+            FabricType::Type2 => partition_by_nnz(&tensor, mode, n_pes),
+        };
+        CooStreamSource {
+            tensor,
+            mode,
+            om1,
+            om2,
+            fabric,
+            amap,
+            n_channels: n_pes.max(1),
+            parts,
+        }
+    }
+
+    pub fn amap(&self) -> &AddressMap {
+        &self.amap
+    }
+}
+
+impl TraceSource for CooStreamSource {
+    fn name(&self) -> &str {
+        &self.tensor.name
+    }
+    fn fabric(&self) -> FabricType {
+        self.fabric
+    }
+    fn nnz(&self) -> usize {
+        self.tensor.nnz()
+    }
+    fn n_streams(&self) -> usize {
+        match self.fabric {
+            FabricType::Type1 => 1,
+            FabricType::Type2 => self.parts.len(),
+        }
+    }
+    fn stream_pe(&self, s: usize) -> usize {
+        match self.fabric {
+            FabricType::Type1 => 0,
+            FabricType::Type2 => self.parts[s].pe,
+        }
+    }
+    fn stream_len(&self, s: usize) -> usize {
+        match self.fabric {
+            FabricType::Type1 => self.tensor.nnz(),
+            FabricType::Type2 => self.parts[s].len(),
+        }
+    }
+    fn open(&self, s: usize) -> Box<dyn WorkCursor> {
+        match self.fabric {
+            FabricType::Type1 => {
+                assert_eq!(s, 0, "Type-1 has a single stream");
+                let chans = (0..self.n_channels)
+                    .map(|ch| CooChanStream {
+                        t: self.tensor.clone(),
+                        mode: self.mode,
+                        om1: self.om1,
+                        om2: self.om2,
+                        ch,
+                        n_channels: self.n_channels,
+                        z: 0,
+                        slice_end: 0,
+                        scan_from: 0,
+                        next_slice_idx: 0,
+                    })
+                    .collect();
+                Box::new(Type1Cursor {
+                    chans,
+                    next_ch: 0,
+                    pos: 0,
+                    remaining: self.tensor.nnz(),
+                    amap: self.amap.clone(),
+                })
+            }
+            FabricType::Type2 => {
+                let part = self.parts[s];
+                Box::new(CooType2Cursor {
+                    t: self.tensor.clone(),
+                    amap: self.amap.clone(),
+                    mode: self.mode,
+                    om1: self.om1,
+                    om2: self.om2,
+                    z: part.start,
+                    end: part.end,
+                })
+            }
+        }
+    }
+}
+
+/// Type-2 cursor: walks one contiguous partition of the sorted stream.
+struct CooType2Cursor {
+    t: Arc<CooTensor>,
+    amap: AddressMap,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    z: usize,
+    end: usize,
+}
+
+impl WorkCursor for CooType2Cursor {
+    fn refill(&mut self, out: &mut Vec<NnzWork>, max: usize) -> usize {
+        let n = max.min(self.end - self.z);
+        for _ in 0..n {
+            let z = self.z;
+            let oi = self.t.coord(z, self.mode) as u64;
+            // Algorithm 3 writes temp_Y back when the output index
+            // changes: a store rides on the last element of each fiber.
+            let last = z + 1 == self.end || self.t.coord(z + 1, self.mode) as u64 != oi;
+            out.push(work_item(
+                &self.amap,
+                z as u64,
+                self.t.coord(z, self.om1) as u64,
+                self.t.coord(z, self.om2) as u64,
+                last.then_some(oi),
+            ));
+            self.z += 1;
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------
+// Type-1 interleaving, shared by the COO and .tns backends
+// ---------------------------------------------------------------------
+
+/// One CISS channel's element stream: yields
+/// `(operand-1 coord, operand-2 coord, output index, end_of_slice)` for
+/// the slices dealt to this channel (slice index mod channel count).
+trait ChanStream: Send {
+    fn next(&mut self) -> Option<(u64, u64, u64, bool)>;
+}
+
+/// The Type-1 single-stream cursor: one element per non-exhausted
+/// channel per beat, exactly the `CissTensor::from_coo` interleave, with
+/// a global position counter addressing the interleaved element store.
+struct Type1Cursor<C> {
+    chans: Vec<C>,
+    /// Round-robin pointer (persists across refills mid-beat).
+    next_ch: usize,
+    /// Interleaved stream position — the element's stored address.
+    pos: u64,
+    remaining: usize,
+    amap: AddressMap,
+}
+
+impl<C: ChanStream> WorkCursor for Type1Cursor<C> {
+    fn refill(&mut self, out: &mut Vec<NnzWork>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max && self.remaining > 0 {
+            let ch = self.next_ch;
+            self.next_ch = (self.next_ch + 1) % self.chans.len();
+            if let Some((c1, c2, oi, eos)) = self.chans[ch].next() {
+                out.push(work_item(&self.amap, self.pos, c1, c2, eos.then_some(oi)));
+                self.pos += 1;
+                self.remaining -= 1;
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// Lazy channel scan over a mode-sorted [`CooTensor`]: O(1) state, no
+/// per-slice index. Each channel walks the whole stream but only emits
+/// the slices dealt to it.
+struct CooChanStream {
+    t: Arc<CooTensor>,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    ch: usize,
+    n_channels: usize,
+    /// Current adopted slice: next element `z`, exclusive end.
+    z: usize,
+    slice_end: usize,
+    /// Scan frontier for finding this channel's next slice.
+    scan_from: usize,
+    next_slice_idx: usize,
+}
+
+impl CooChanStream {
+    fn slice_end_from(&self, start: usize) -> usize {
+        let n = self.t.nnz();
+        let c = self.t.coord(start, self.mode);
+        let mut z = start + 1;
+        while z < n && self.t.coord(z, self.mode) == c {
+            z += 1;
+        }
+        z
+    }
+}
+
+impl ChanStream for CooChanStream {
+    fn next(&mut self) -> Option<(u64, u64, u64, bool)> {
+        if self.z >= self.slice_end {
+            loop {
+                if self.scan_from >= self.t.nnz() {
+                    return None;
+                }
+                let start = self.scan_from;
+                let end = self.slice_end_from(start);
+                let idx = self.next_slice_idx;
+                self.next_slice_idx += 1;
+                self.scan_from = end;
+                if idx % self.n_channels == self.ch {
+                    self.z = start;
+                    self.slice_end = end;
+                    break;
+                }
+            }
+        }
+        let z = self.z;
+        self.z += 1;
+        Some((
+            self.t.coord(z, self.om1) as u64,
+            self.t.coord(z, self.om2) as u64,
+            self.t.coord(z, self.mode) as u64,
+            self.z == self.slice_end,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming straight from a FROSTT `.tns` file
+// ---------------------------------------------------------------------
+
+/// One Type-2 partition of the file: nonzero range plus where its first
+/// line starts (byte offset + preceding line count, so reopened readers
+/// keep correct error context).
+#[derive(Debug, Clone, Copy)]
+struct TnsPart {
+    pe: usize,
+    start: usize,
+    end: usize,
+    offset: u64,
+    lines_before: usize,
+}
+
+/// Streams the access pattern directly from a `.tns` file that is
+/// already sorted along the MTTKRP mode (FROSTT files are mode-0
+/// sorted). Construction scans the file once for geometry; cursors then
+/// re-read only their slice. For files *not* sorted along the requested
+/// mode, load them with [`crate::tensor::io::read_tns`] and use
+/// [`CooStreamSource`] (what `Scenario::trace_source` falls back to).
+#[derive(Debug)]
+pub struct TnsStreamSource {
+    path: PathBuf,
+    name: String,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    fabric: FabricType,
+    amap: AddressMap,
+    nnz: usize,
+    n_channels: usize,
+    parts: Vec<TnsPart>,
+}
+
+impl TnsStreamSource {
+    /// Scan `path` and build the source. Errors if the file is empty or
+    /// not sorted along `mode`.
+    pub fn open(
+        path: &Path,
+        mode: Mode,
+        fabric: FabricType,
+        n_pes: usize,
+        rank: usize,
+        row_align: u64,
+    ) -> crate::Result<TnsStreamSource> {
+        let scan = scan_tns(path)?;
+        TnsStreamSource::from_scan(path, &scan, mode, fabric, n_pes, rank, row_align)
+    }
+
+    /// Build from a pre-computed [`scan_tns`] result (avoids re-scanning
+    /// when the caller already inspected the file).
+    pub fn from_scan(
+        path: &Path,
+        scan: &TnsScan,
+        mode: Mode,
+        fabric: FabricType,
+        n_pes: usize,
+        rank: usize,
+        row_align: u64,
+    ) -> crate::Result<TnsStreamSource> {
+        anyhow::ensure!(scan.nnz > 0, "{}: empty tensor", path.display());
+        anyhow::ensure!(
+            scan.sorted[mode.index()],
+            "{}: not sorted along mode {} — sort the file, or load it \
+             with read_tns and use CooStreamSource",
+            path.display(),
+            mode.name()
+        );
+        let (om1, om2) = operand_modes(mode);
+        let amap = AddressMap::new(
+            scan.nnz as u64,
+            scan.dims[om1.index()],
+            scan.dims[om2.index()],
+            scan.dims[mode.index()],
+            rank,
+            row_align,
+        );
+        let parts = match fabric {
+            FabricType::Type1 => Vec::new(),
+            FabricType::Type2 => tns_partitions(path, mode, n_pes, scan.nnz)?,
+        };
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| "tns".into());
+        Ok(TnsStreamSource {
+            path: path.to_path_buf(),
+            name,
+            mode,
+            om1,
+            om2,
+            fabric,
+            amap,
+            nnz: scan.nnz,
+            n_channels: n_pes.max(1),
+            parts,
+        })
+    }
+
+    pub fn amap(&self) -> &AddressMap {
+        &self.amap
+    }
+}
+
+/// Replays `partition_by_nnz`'s boundary rule over the file: balanced
+/// nnz targets, each end advanced to the next fiber boundary, the last
+/// partition absorbing the remainder — recording where each partition's
+/// first line lives so cursors can seek straight to it.
+fn tns_partitions(path: &Path, mode: Mode, p: usize, n: usize) -> crate::Result<Vec<TnsPart>> {
+    assert!(p > 0);
+    let target = n as f64 / p as f64;
+    let ideal = |pe: usize| ((pe + 1) as f64 * target).round() as usize;
+    let mut r = TnsReader::open(path)?;
+    let mut parts = Vec::with_capacity(p);
+    let mut start = 0usize;
+    let mut start_off = 0u64;
+    let mut start_lines = 0usize;
+    let mut prev_coord: Option<u32> = None;
+    let mut z = 0usize;
+    while let Some(e) = r.next_elem()? {
+        let c = e.idx[mode.index()];
+        // Close every partition whose (fiber-aligned) end is this z.
+        while parts.len() + 1 < p
+            && z >= ideal(parts.len()).clamp(start, n)
+            && (z == start || prev_coord != Some(c))
+        {
+            parts.push(TnsPart {
+                pe: parts.len(),
+                start,
+                end: z,
+                offset: start_off,
+                lines_before: start_lines,
+            });
+            start = z;
+            start_off = e.offset;
+            start_lines = e.lineno - 1;
+        }
+        z += 1;
+        prev_coord = Some(c);
+    }
+    anyhow::ensure!(
+        z == n,
+        "{}: file changed during scan ({z} nonzeros, expected {n})",
+        path.display()
+    );
+    // Open partitions (the last always, earlier ones when no fiber
+    // boundary appeared past their target) all end at n.
+    while parts.len() < p {
+        parts.push(TnsPart {
+            pe: parts.len(),
+            start,
+            end: n,
+            offset: start_off,
+            lines_before: start_lines,
+        });
+        start = n;
+        start_off = r.offset();
+        start_lines = r.lines_read();
+    }
+    Ok(parts)
+}
+
+impl TraceSource for TnsStreamSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+    fn fabric(&self) -> FabricType {
+        self.fabric
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn n_streams(&self) -> usize {
+        match self.fabric {
+            FabricType::Type1 => 1,
+            FabricType::Type2 => self.parts.len(),
+        }
+    }
+    fn stream_pe(&self, s: usize) -> usize {
+        match self.fabric {
+            FabricType::Type1 => 0,
+            FabricType::Type2 => self.parts[s].pe,
+        }
+    }
+    fn stream_len(&self, s: usize) -> usize {
+        match self.fabric {
+            FabricType::Type1 => self.nnz,
+            FabricType::Type2 => self.parts[s].end - self.parts[s].start,
+        }
+    }
+    fn open(&self, s: usize) -> Box<dyn WorkCursor> {
+        // The file was validated at construction; losing it mid-run is
+        // unrecoverable for the simulation, so cursors panic on IO
+        // errors with file context rather than threading Results
+        // through the hot path.
+        match self.fabric {
+            FabricType::Type1 => {
+                assert_eq!(s, 0, "Type-1 has a single stream");
+                let chans = (0..self.n_channels)
+                    .map(|ch| {
+                        TnsChanStream::new(&self.path, self.mode, self.om1, self.om2, ch, self.n_channels)
+                            .unwrap_or_else(|e| panic!("{}: {e}", self.path.display()))
+                    })
+                    .collect();
+                Box::new(Type1Cursor {
+                    chans,
+                    next_ch: 0,
+                    pos: 0,
+                    remaining: self.nnz,
+                    amap: self.amap.clone(),
+                })
+            }
+            FabricType::Type2 => {
+                let part = self.parts[s];
+                let mut rdr = TnsReader::open_at(&self.path, part.offset, part.lines_before)
+                    .unwrap_or_else(|e| panic!("{}: {e}", self.path.display()));
+                let ahead = if part.end > part.start {
+                    Some(next_idx(&mut rdr, &self.path))
+                } else {
+                    None
+                };
+                Box::new(TnsType2Cursor {
+                    rdr,
+                    path: self.path.clone(),
+                    amap: self.amap.clone(),
+                    mode: self.mode,
+                    om1: self.om1,
+                    om2: self.om2,
+                    z: part.start,
+                    end: part.end,
+                    ahead,
+                })
+            }
+        }
+    }
+}
+
+/// Next element's coordinates, panicking with context on IO/parse
+/// errors or a file shorter than the scan said (see [`TraceSource::open`]).
+fn next_idx(rdr: &mut TnsReader, path: &Path) -> [u32; 3] {
+    rdr.next_elem()
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+        .unwrap_or_else(|| panic!("{}: file shrank during simulation", path.display()))
+        .idx
+}
+
+/// Type-2 cursor: seeked to its partition's first line, reads
+/// `end - start` elements with one element of lookahead for the
+/// fiber-boundary store rule.
+struct TnsType2Cursor {
+    rdr: TnsReader,
+    path: PathBuf,
+    amap: AddressMap,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    z: usize,
+    end: usize,
+    ahead: Option<[u32; 3]>,
+}
+
+impl WorkCursor for TnsType2Cursor {
+    fn refill(&mut self, out: &mut Vec<NnzWork>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max && self.z < self.end {
+            let cur = self.ahead.take().expect("scan counted this element");
+            self.ahead = if self.z + 1 < self.end {
+                Some(next_idx(&mut self.rdr, &self.path))
+            } else {
+                None
+            };
+            let mi = self.mode.index();
+            let oi = cur[mi] as u64;
+            let last = match self.ahead {
+                None => true,
+                Some(nxt) => nxt[mi] != cur[mi],
+            };
+            out.push(work_item(
+                &self.amap,
+                self.z as u64,
+                cur[self.om1.index()] as u64,
+                cur[self.om2.index()] as u64,
+                last.then_some(oi),
+            ));
+            self.z += 1;
+            n += 1;
+        }
+        n
+    }
+}
+
+/// Per-channel file reader for the Type-1 interleave: walks the whole
+/// file, tracks the slice index (mode-coordinate changes), and emits
+/// only the slices dealt to its channel.
+struct TnsChanStream {
+    rdr: TnsReader,
+    path: PathBuf,
+    mode: Mode,
+    om1: Mode,
+    om2: Mode,
+    ch: usize,
+    n_channels: usize,
+    /// Lookahead element + the slice index it belongs to.
+    ahead: Option<([u32; 3], usize)>,
+}
+
+impl TnsChanStream {
+    fn new(
+        path: &Path,
+        mode: Mode,
+        om1: Mode,
+        om2: Mode,
+        ch: usize,
+        n_channels: usize,
+    ) -> crate::Result<TnsChanStream> {
+        let mut rdr = TnsReader::open(path)?;
+        let ahead = rdr.next_elem()?.map(|e| (e.idx, 0));
+        Ok(TnsChanStream {
+            rdr,
+            path: path.to_path_buf(),
+            mode,
+            om1,
+            om2,
+            ch,
+            n_channels,
+            ahead,
+        })
+    }
+}
+
+impl ChanStream for TnsChanStream {
+    fn next(&mut self) -> Option<(u64, u64, u64, bool)> {
+        let mi = self.mode.index();
+        loop {
+            let (cur, sidx) = self.ahead.take()?;
+            let nxt = self
+                .rdr
+                .next_elem()
+                .unwrap_or_else(|e| panic!("{}: {e}", self.path.display()))
+                .map(|e| e.idx);
+            let (eos, nsidx) = match nxt {
+                None => (true, sidx),
+                Some(nx) => {
+                    let change = nx[mi] != cur[mi];
+                    (change, sidx + usize::from(change))
+                }
+            };
+            self.ahead = nxt.map(|nx| (nx, nsidx));
+            if sidx % self.n_channels == self.ch {
+                return Some((
+                    cur[self.om1.index()] as u64,
+                    cur[self.om2.index()] as u64,
+                    cur[mi] as u64,
+                    eos,
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::io::write_tns;
+    use crate::trace::workload_from_tensor;
+    use crate::util::rng::Rng;
+
+    fn drain(src: &dyn TraceSource, s: usize) -> Vec<NnzWork> {
+        let mut cur = src.open(s);
+        let mut out = Vec::new();
+        // Tiny chunk size exercises refill boundaries.
+        while cur.refill(&mut out, 7) > 0 {}
+        out
+    }
+
+    fn assert_matches_workload(src: &dyn TraceSource, w: &Workload) {
+        assert_eq!(src.n_streams(), w.pe_traces.len());
+        assert_eq!(src.nnz(), w.nnz);
+        assert_eq!(src.fabric(), w.fabric);
+        for (s, t) in w.pe_traces.iter().enumerate() {
+            assert_eq!(src.stream_pe(s), t.pe);
+            assert_eq!(src.stream_len(s), t.work.len(), "stream {s} length");
+            let got = drain(src, s);
+            assert_eq!(got.len(), t.work.len(), "stream {s} drained length");
+            for (i, (a, b)) in got.iter().zip(&t.work).enumerate() {
+                assert_eq!(a, b, "stream {s} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn coo_stream_matches_materialized_both_fabrics() {
+        let mut rng = Rng::new(71);
+        let t = CooTensor::random(&mut rng, [24, 300, 400], 700);
+        for fabric in [FabricType::Type1, FabricType::Type2] {
+            let w = workload_from_tensor(&t, Mode::I, fabric, 4, 32, 8192);
+            let src = CooStreamSource::new(Arc::new(t.clone()), Mode::I, fabric, 4, 32, 8192);
+            assert_matches_workload(&src, &w);
+        }
+    }
+
+    #[test]
+    fn coo_stream_matches_materialized_other_modes() {
+        let mut rng = Rng::new(72);
+        let t = CooTensor::random(&mut rng, [16, 20, 24], 500);
+        for mode in [Mode::J, Mode::K] {
+            for fabric in [FabricType::Type1, FabricType::Type2] {
+                let w = workload_from_tensor(&t, mode, fabric, 3, 16, 4096);
+                let src =
+                    CooStreamSource::new(Arc::new(t.clone()), mode, fabric, 3, 16, 4096);
+                assert_matches_workload(&src, &w);
+            }
+        }
+    }
+
+    #[test]
+    fn workload_oracle_streams_itself() {
+        let mut rng = Rng::new(73);
+        let t = CooTensor::random(&mut rng, [12, 40, 50], 200);
+        let w = workload_from_tensor(&t, Mode::I, FabricType::Type2, 2, 8, 4096);
+        assert_matches_workload(&w, &w);
+    }
+
+    #[test]
+    fn tns_stream_matches_materialized_both_fabrics() {
+        let mut rng = Rng::new(74);
+        let mut t = CooTensor::random(&mut rng, [20, 60, 70], 400);
+        t.sort_mode(Mode::I);
+        let dir = std::env::temp_dir().join(format!("memsys-src-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.tns");
+        write_tns(&t, &path).unwrap();
+        for fabric in [FabricType::Type1, FabricType::Type2] {
+            let w = workload_from_tensor(&t, Mode::I, fabric, 4, 32, 8192);
+            let src = TnsStreamSource::open(&path, Mode::I, fabric, 4, 32, 8192).unwrap();
+            assert_matches_workload(&src, &w);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tns_partitions_match_in_memory_partitioning() {
+        let mut rng = Rng::new(75);
+        let mut t = CooTensor::random(&mut rng, [9, 30, 30], 250);
+        t.sort_mode(Mode::I);
+        let dir = std::env::temp_dir().join(format!("memsys-src-p{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("parts.tns");
+        write_tns(&t, &path).unwrap();
+        // More PEs than fibers → some partitions are empty; boundaries
+        // must still match partition_by_nnz exactly.
+        for p in [1usize, 3, 4, 16] {
+            let expect = partition_by_nnz(&t, Mode::I, p);
+            let src = TnsStreamSource::open(&path, Mode::I, FabricType::Type2, p, 8, 4096)
+                .unwrap();
+            let got: Vec<(usize, usize)> =
+                src.parts.iter().map(|q| (q.start, q.end)).collect();
+            let want: Vec<(usize, usize)> =
+                expect.iter().map(|q| (q.start, q.end)).collect();
+            assert_eq!(got, want, "p={p}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tns_source_rejects_unsorted_and_empty() {
+        let dir = std::env::temp_dir().join(format!("memsys-src-b{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let unsorted = dir.join("unsorted.tns");
+        std::fs::write(&unsorted, "2 1 1 1.0\n1 1 1 2.0\n").unwrap();
+        let err = TnsStreamSource::open(&unsorted, Mode::I, FabricType::Type2, 2, 8, 4096)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not sorted"), "{err}");
+        // Sorted along J though — the same file streams fine for mode j.
+        assert!(TnsStreamSource::open(&unsorted, Mode::J, FabricType::Type2, 2, 8, 4096).is_ok());
+        let empty = dir.join("empty.tns");
+        std::fs::write(&empty, "# only a comment\n").unwrap();
+        assert!(TnsStreamSource::open(&empty, Mode::I, FabricType::Type2, 2, 8, 4096).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -9,6 +9,40 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+/// Error for parsing a named enum variant (`SystemKind`, `FabricType`,
+/// `TopologyKind`, `Mode`) from a string: records what was being parsed,
+/// the rejected input, and the accepted spellings — so every `FromStr`
+/// in the crate reports the same way.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NameParseError {
+    /// What kind of name was expected, e.g. `"system"`.
+    pub what: &'static str,
+    /// The rejected input.
+    pub input: String,
+    /// Valid spellings, shown `a|b|c`.
+    pub expected: &'static [&'static str],
+}
+
+impl NameParseError {
+    pub fn new(what: &'static str, input: &str, expected: &'static [&'static str]) -> Self {
+        NameParseError { what, input: input.to_string(), expected }
+    }
+}
+
+impl std::fmt::Display for NameParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown {} {:?} (expected {})",
+            self.what,
+            self.input,
+            self.expected.join("|")
+        )
+    }
+}
+
+impl std::error::Error for NameParseError {}
+
 /// Integer ceiling division.
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {

@@ -13,7 +13,8 @@ use std::sync::Arc;
 use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind, TopologyKind};
 use mttkrp_memsys::experiment::Scenario;
 use mttkrp_memsys::sim::MemorySystem;
-use mttkrp_memsys::tensor::CooTensor;
+use mttkrp_memsys::tensor::io::write_tns;
+use mttkrp_memsys::tensor::{CooTensor, Mode};
 use mttkrp_memsys::trace::Workload;
 use mttkrp_memsys::util::prop::check;
 use mttkrp_memsys::util::rng::Rng;
@@ -203,6 +204,93 @@ fn prop_telemetry_neither_perturbs_nor_diverges_between_engines() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_streamed_source_identical_to_materialized_across_matrix() {
+    // The streaming-workload invariant: simulating from the scenario's
+    // bounded-memory trace source must produce a SimReport identical to
+    // the fully materialized Workload — across system kinds, topologies,
+    // bank counts and both fabrics (random_case randomizes fabric, bank
+    // count and the reply network per iteration).
+    check(
+        "streamed source == materialized workload",
+        6,
+        random_case,
+        |(t, base)| {
+            let scn = Scenario::from_tensor(t.clone())
+                .for_config(base)
+                .fabric(base.pe.fabric);
+            let w = scn.workload();
+            let src = scn.trace_source().expect("in-memory trace source");
+            prop_assert_eq!(src.nnz(), w.nnz, "source/workload nnz mismatch");
+            for kind in SystemKind::ALL {
+                for topology in TopologyKind::ALL {
+                    let mut cfg = base.as_baseline(kind);
+                    cfg.interconnect.topology = topology;
+                    let streamed = MemorySystem::new(&cfg, &src).run(&w.name);
+                    let materialized = MemorySystem::new(&cfg, &w).run(&w.name);
+                    prop_assert_eq!(
+                        streamed.diff(&materialized),
+                        None,
+                        "{kind:?}/{topology:?}: streamed diverged from materialized"
+                    );
+                }
+            }
+            // Bank counts with the reply network forced on — the response
+            // path must see the same request stream either way.
+            for banks in [1usize, 2, 4] {
+                let mut cfg = base.clone();
+                cfg.lmb_banks = banks;
+                cfg.interconnect.reply_network = true;
+                cfg.validate().expect("bank config must be valid");
+                let streamed = MemorySystem::new(&cfg, &src).run(&w.name);
+                let materialized = MemorySystem::new(&cfg, &w).run(&w.name);
+                prop_assert_eq!(
+                    streamed.diff(&materialized),
+                    None,
+                    "banks={banks}: streamed diverged from materialized"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tns_file_scenario_streams_identically_to_materialized() {
+    // Disk-backed streaming end to end: a mode-i-sorted `.tns` file run
+    // through `Scenario::tns_file` (which streams it without ever
+    // materializing the access stream) must match the workload built by
+    // reading the same file into memory — for both fabric types across
+    // all topologies.
+    let dir = std::env::temp_dir().join(format!("memsys-engine-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let mut rng = Rng::new(99);
+    for case in 0..2 {
+        let (t, cfg) = random_case(&mut rng);
+        let mut sorted = t.clone();
+        sorted.sort_mode(Mode::I);
+        let path = dir.join(format!("case{case}.tns"));
+        write_tns(&sorted, &path).expect("write .tns");
+        let scn = Scenario::tns_file(&path).for_config(&cfg).fabric(cfg.pe.fabric);
+        let src = scn.trace_source().expect("file-backed trace source");
+        let w = scn.workload();
+        assert_eq!(src.nnz(), w.nnz);
+        for topology in TopologyKind::ALL {
+            let mut c = cfg.clone();
+            c.interconnect.topology = topology;
+            let streamed = MemorySystem::new(&c, &src).run(&w.name);
+            let materialized = MemorySystem::new(&c, &w).run(&w.name);
+            assert_eq!(
+                streamed.diff(&materialized),
+                None,
+                "case {case} ({:?}), {topology:?}: .tns stream diverged",
+                cfg.pe.fabric
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
