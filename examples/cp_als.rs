@@ -22,7 +22,7 @@ use mttkrp_memsys::tensor::gen;
 use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::fmt_count;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mttkrp_memsys::Result<()> {
     let args = Args::parse_env(false);
     let scale = args.get_f64("scale", 0.002);
     let iters = args.get_usize("iters", 10);
@@ -44,10 +44,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dir = find_artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+        .ok_or_else(|| mttkrp_memsys::format_err!("run `make artifacts` first"))?;
     let manifest = Manifest::load(&dir)?;
     let rank = args.get_usize("rank", manifest.partials.rank);
-    anyhow::ensure!(
+    mttkrp_memsys::ensure!(
         rank == manifest.partials.rank,
         "rank {rank} != AOT rank {} (re-run `make artifacts` with --rank {rank})",
         manifest.partials.rank
@@ -104,7 +104,7 @@ fn main() -> anyhow::Result<()> {
         last.fit - first.fit,
         report.als.converged
     );
-    anyhow::ensure!(
+    mttkrp_memsys::ensure!(
         last.rel_error <= first.rel_error + 1e-9,
         "CP-ALS error did not improve"
     );

@@ -18,15 +18,15 @@ use mttkrp_memsys::tensor::Mode;
 use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::table::{Align, Table};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mttkrp_memsys::Result<()> {
     let args = Args::parse_env(false);
     let quick = args.flag("quick");
     let scale = args.get_f64("scale", if quick { 0.002 } else { 0.005 });
     let mode = Mode::from_name(&args.get_str("mode", "i"))
-        .ok_or_else(|| anyhow::anyhow!("--mode i|j|k"))?;
+        .ok_or_else(|| mttkrp_memsys::format_err!("--mode i|j|k"))?;
     let base_b = SystemConfig::config_b();
     let scenario = Scenario::dataset(&args.get_str("dataset", "synth01"), scale)
-        .map_err(anyhow::Error::msg)?
+        .map_err(mttkrp_memsys::Error::msg)?
         .mode(mode)
         .for_config(&base_b);
     let t = scenario.tensor();
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let runs = Sweep::new(base_b.clone(), scenario.clone())
         .axis("dma.n_buffers", dma_counts)
         .run()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(mttkrp_memsys::Error::msg)?;
     let base_cycles = runs.runs[0].report.total_cycles;
     for run in &runs.runs {
         tab.row(&[
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     let runs = Sweep::new(base_b, scenario.clone())
         .axis("system.n_lmbs", lmb_counts)
         .run()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(mttkrp_memsys::Error::msg)?;
     for run in &runs.runs {
         let m = ResourceModel::new(&run.cfg);
         let p = m.system().percent(&m.dev);
@@ -98,7 +98,7 @@ fn main() -> anyhow::Result<()> {
     let runs = Sweep::new(base_a.clone(), scenario.for_config(&base_a))
         .zip_axis(&["cache.lines", "cache.associativity"], geoms)
         .run()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(mttkrp_memsys::Error::msg)?;
     for run in &runs.runs {
         tab.row(&[
             run.axis("cache.lines").unwrap().to_string(),

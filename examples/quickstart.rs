@@ -16,7 +16,7 @@ use mttkrp_memsys::tensor::{DenseMatrix, Mode};
 use mttkrp_memsys::util::rng::Rng;
 use mttkrp_memsys::util::{fmt_bytes, fmt_count};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mttkrp_memsys::Result<()> {
     // 1. Workload: Synth 01 at 1/200 scale (fast; ratios are scale-free).
     let cfg = SystemConfig::config_b();
     let scenario = Scenario::synth01(0.005).for_config(&cfg);
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Numerics through the AOT/PJRT path, checked against Rust.
     let dir = find_artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+        .ok_or_else(|| mttkrp_memsys::format_err!("run `make artifacts` first"))?;
     let manifest = Manifest::load(&dir)?;
     let r = manifest.partials.rank;
     let mut rng = Rng::new(42);
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         "PJRT MTTKRP: output {}x{}, ‖A‖_F = {:.4}, max |Δ| vs reference = {:.2e}",
         out.rows, out.cols, report.output_norm, report.max_diff_vs_reference
     );
-    anyhow::ensure!(report.max_diff_vs_reference < 1e-3, "numerics diverged");
+    mttkrp_memsys::ensure!(report.max_diff_vs_reference < 1e-3, "numerics diverged");
     println!("quickstart OK");
     Ok(())
 }

@@ -19,10 +19,10 @@ use mttkrp_memsys::util::cli::Args;
 use mttkrp_memsys::util::table::{Align, Table};
 use mttkrp_memsys::util::{fmt_bytes, fmt_count};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mttkrp_memsys::Result<()> {
     let args = Args::parse_env(false);
     let fabric = FabricType::from_name(&args.get_str("fabric", "type2"))
-        .ok_or_else(|| anyhow::anyhow!("--fabric type1|type2"))?;
+        .ok_or_else(|| mttkrp_memsys::format_err!("--fabric type1|type2"))?;
     let cfg = match fabric {
         FabricType::Type1 => SystemConfig::config_a(),
         FabricType::Type2 => SystemConfig::config_b(),

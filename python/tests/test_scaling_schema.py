@@ -1,0 +1,148 @@
+"""Schema check for the `scaling` bench's JSON-lines output
+(`MEMSYS_BENCH_JSON=<path> cargo bench --bench scaling`).
+
+The scaling bench shards a streamed `.tns` dataset across a 2-16 node
+accelerator cluster per inter-node topology (plus the single-node
+anchor) and dumps one record per grid point. The contract machine
+consumers rely on:
+
+* every record carries the sweep axes (`nodes`, `inter_topology`,
+  `dataset`) and a `node_breakdown` with exactly `nodes` rows;
+* each node's makespan decomposition is exact: compute + local-memory
+  cycles tile the local run, and communication + local run is the
+  node's total; the cluster makespan is the slowest node;
+* nonzeros are conserved: the shard nnz sum matches the record's total,
+  and every record of the file saw the same dataset;
+* the network accounts for exactly the requested remote rows
+  (`delivered == sum(remote_rows)`, bytes likewise), is silent at one
+  node, and its sharding is topology-independent (same node count =>
+  same remote-row total on every topology).
+
+Runs against the file named by `MEMSYS_SCALING_JSONL` when set (CI's
+bench-smoke job produces one) and always against the committed sample.
+Needs no third-party deps beyond pytest.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from _jsonl_schema import load_records, schema_paths
+
+SAMPLE = Path(__file__).parent / "data" / "scaling_sample.jsonl"
+ENV_VAR = "MEMSYS_SCALING_JSONL"
+
+AXES = ("nodes", "inter_topology", "dataset")
+BREAKDOWN_FIELDS = (
+    "node",
+    "total_cycles",
+    "compute_cycles",
+    "local_memory_cycles",
+    "communication_cycles",
+    "local_cycles",
+    "nnz",
+    "remote_rows",
+    "remote_bytes",
+)
+NETWORK_FIELDS = (
+    "delivered",
+    "delivered_bytes",
+    "hops",
+    "inject_stall_cycles",
+    "cycles",
+    "max_link_utilization",
+    "links",
+)
+LINK_FIELDS = ("label", "msgs", "bytes", "stall_cycles", "peak_queue", "utilization")
+
+
+def _load(path):
+    return load_records(path, ENV_VAR, SAMPLE)
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_records_carry_axes_and_a_full_breakdown(path):
+    for rec in _load(path):
+        for axis in AXES:
+            assert axis in rec["axes"], f"missing axis {axis!r} in {rec['label']!r}"
+        nodes = int(rec["axes"]["nodes"])
+        assert nodes >= 1
+        assert rec["nodes"] == nodes, "top-level node count must echo the axis"
+        breakdown = rec["node_breakdown"]
+        assert len(breakdown) == nodes, f"{rec['label']!r}: breakdown rows != nodes"
+        for row in breakdown:
+            for field in BREAKDOWN_FIELDS:
+                assert field in row, f"breakdown row missing {field!r}"
+        assert rec["total_cycles"] > 0
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_makespan_decomposition_is_exact(path):
+    for rec in _load(path):
+        worst = 0
+        crit_comm = 0
+        for row in rec["node_breakdown"]:
+            assert (
+                row["compute_cycles"] + row["local_memory_cycles"] == row["local_cycles"]
+            ), f"{rec['label']!r} node {row['node']}: breakdown must tile the local run"
+            assert (
+                row["communication_cycles"] + row["local_cycles"] == row["total_cycles"]
+            ), f"{rec['label']!r} node {row['node']}: comm + local != total"
+            if row["total_cycles"] >= worst:
+                worst = row["total_cycles"]
+                crit_comm = row["communication_cycles"]
+        assert rec["total_cycles"] == worst, (
+            f"{rec['label']!r}: makespan must be the slowest node"
+        )
+        frac = rec["communication_fraction"]
+        assert 0.0 <= frac <= 1.0
+        assert abs(frac - crit_comm / rec["total_cycles"]) < 1e-9, (
+            f"{rec['label']!r}: communication_fraction must be the critical node's share"
+        )
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_nonzeros_are_conserved_across_the_grid(path):
+    records = _load(path)
+    totals = set()
+    for rec in records:
+        shard_sum = sum(row["nnz"] for row in rec["node_breakdown"])
+        assert shard_sum == rec["nnz"], f"{rec['label']!r}: shards lost nonzeros"
+        totals.add(rec["nnz"])
+    assert len(totals) == 1, f"grid points saw different datasets: {sorted(totals)}"
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_network_accounts_for_exactly_the_remote_rows(path):
+    records = _load(path)
+    remote_by_nodes = {}
+    multi = 0
+    for rec in records:
+        net = rec["network"]
+        for field in NETWORK_FIELDS:
+            assert field in net, f"network missing {field!r}"
+        rows = sum(r["remote_rows"] for r in rec["node_breakdown"])
+        bytes_ = sum(r["remote_bytes"] for r in rec["node_breakdown"])
+        assert net["delivered"] == rows, f"{rec['label']!r}: delivered != remote rows"
+        assert net["delivered_bytes"] == bytes_, rec["label"]
+        nodes = int(rec["axes"]["nodes"])
+        if nodes == 1:
+            assert rows == 0, "a single node must not communicate"
+            assert rec["communication_fraction"] == 0.0
+            assert not net["links"]
+        else:
+            multi += 1
+            assert rows > 0, f"{rec['label']!r}: sharded run never crossed nodes"
+            assert net["links"], f"{rec['label']!r}: no inter-node links reported"
+            for link in net["links"]:
+                for field in LINK_FIELDS:
+                    assert field in link, f"link missing {field!r}"
+                assert 0.0 <= link["utilization"] <= 1.0
+            # Who fetches what is a property of the partition, not of
+            # how messages are routed.
+            remote_by_nodes.setdefault(nodes, set()).add(rows)
+    assert multi > 0, "grid must contain multi-node points"
+    for nodes, seen in remote_by_nodes.items():
+        assert len(seen) == 1, (
+            f"nodes={nodes}: remote-row totals varied by topology: {sorted(seen)}"
+        )

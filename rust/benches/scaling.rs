@@ -1,0 +1,184 @@
+//! Bench: multi-accelerator scale-out — sharded MTTKRP makespan as the
+//! node count and inter-node topology vary, on a streamed `.tns`
+//! dataset. Synth-01 is materialized once as a mode-i-sorted FROSTT
+//! file so every cluster run streams its shard window from disk in
+//! bounded memory (the `TnsStreamSource` path), then a 2–16 node grid
+//! runs across the crossbar / ring / mesh inter-node networks with the
+//! single-node run as the speedup anchor.
+//!
+//! Each row decomposes the critical node's makespan into compute,
+//! local-memory, and communication cycles; the in-bench asserts pin the
+//! decomposition identities (compute + local memory == local run,
+//! makespan == slowest node, shards conserve nonzeros, network
+//! deliveries match the remote-row requests).
+//!
+//! `MEMSYS_BENCH_SCALE` (default 0.005) sets the dataset scale. Set
+//! `MEMSYS_BENCH_JSON=<path>` to dump one JSON-lines record per grid
+//! point with the per-node breakdown and network counters
+//! (schema-checked by `python/tests/test_scaling_schema.py` in CI).
+
+use mttkrp_memsys::config::{InterTopologyKind, SystemConfig};
+use mttkrp_memsys::experiment::{run_cluster, Scenario};
+use mttkrp_memsys::tensor::io::write_tns;
+use mttkrp_memsys::tensor::Mode;
+use mttkrp_memsys::util::bench::section;
+use mttkrp_memsys::util::json::Json;
+use mttkrp_memsys::util::table::{Align, Table};
+
+fn main() {
+    let scale: f64 = std::env::var("MEMSYS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    section(&format!(
+        "cluster scale-out x inter-node topology (config-b, synth01.tns, scale {scale})"
+    ));
+
+    // Materialize Synth-01 once as a sorted .tns file; every run below
+    // streams it (sorted along mode i => TnsStreamSource, no in-memory
+    // tensor per run).
+    let mut t = (*Scenario::synth01(scale).tensor()).clone();
+    t.sort_mode(Mode::I);
+    let src_nnz = t.nnz() as u64;
+    let dir = std::env::temp_dir().join(format!("memsys-scaling-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("synth01.tns");
+    write_tns(&t, &path).expect("write tns");
+    drop(t);
+
+    let base = SystemConfig::config_b();
+    let run_at = |nodes: usize, topo: InterTopologyKind| {
+        let mut cfg = base.clone();
+        cfg.cluster.nodes = nodes;
+        cfg.cluster.topology = topo;
+        let scenario = Scenario::tns_file(&path).for_config(&cfg);
+        run_cluster(&cfg, &scenario)
+    };
+
+    let anchor = run_at(1, InterTopologyKind::Ring);
+    assert_eq!(anchor.nnz(), src_nnz, "single node must see the whole tensor");
+    let anchor_cycles = anchor.total_cycles;
+
+    let mut table = Table::new(&[
+        "nodes",
+        "inter-topology",
+        "makespan",
+        "speedup",
+        "comm",
+        "max link util",
+        "critical node",
+    ])
+    .aligns(&[
+        Align::Right,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    table.row(&[
+        "1".into(),
+        "-".into(),
+        anchor_cycles.to_string(),
+        "1.00x".into(),
+        "0%".into(),
+        "-".into(),
+        "0".into(),
+    ]);
+
+    let mut records: Vec<Json> = vec![record(&anchor, 1, "none")];
+    for &nodes in &[2usize, 4, 8, 16] {
+        for topo in [
+            InterTopologyKind::Crossbar,
+            InterTopologyKind::Ring,
+            InterTopologyKind::Mesh,
+        ] {
+            let cl = run_at(nodes, topo);
+
+            // Invariants this bench locks in:
+            // 1. Sharding conserves work: nonzeros across shards == source.
+            assert_eq!(cl.nnz(), src_nnz, "{nodes}x{} lost nonzeros", topo.name());
+            // 2. The decomposition is exact per node, and the makespan is
+            //    the slowest node end to end.
+            let mut makespan = 0;
+            for nr in &cl.node_reports {
+                assert_eq!(
+                    nr.compute_cycles() + nr.local_memory_cycles(),
+                    nr.report.total_cycles,
+                    "node {} decomposition must cover its local run",
+                    nr.node
+                );
+                makespan = makespan.max(nr.total_cycles());
+            }
+            assert_eq!(cl.total_cycles, makespan, "makespan must be the max node");
+            // 3. Network accounting matches the remote-row requests.
+            let remote_rows: u64 = cl.node_reports.iter().map(|n| n.comm.remote_rows).sum();
+            let remote_bytes: u64 = cl.node_reports.iter().map(|n| n.comm.remote_bytes).sum();
+            assert_eq!(cl.network.delivered, remote_rows);
+            assert_eq!(cl.network.delivered_bytes, remote_bytes);
+            assert!(remote_rows > 0, "a sharded factor matrix must cross nodes");
+
+            let crit = cl.critical_node();
+            table.row(&[
+                nodes.to_string(),
+                topo.name().to_string(),
+                cl.total_cycles.to_string(),
+                format!("{:.2}x", anchor_cycles as f64 / cl.total_cycles as f64),
+                format!("{:.0}%", cl.communication_fraction() * 100.0),
+                format!(
+                    "{:.0}%",
+                    cl.network.max_link_utilization(cl.link_bytes) * 100.0
+                ),
+                crit.node.to_string(),
+            ]);
+            records.push(record(&cl, nodes, topo.name()));
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "\nnnz {src_nnz} conserved across every shard split; \
+         anchor (1 node) {anchor_cycles} cycles"
+    );
+
+    if let Ok(out) = std::env::var("MEMSYS_BENCH_JSON") {
+        let mut body = String::new();
+        for r in &records {
+            body.push_str(&r.to_string_compact());
+            body.push('\n');
+        }
+        std::fs::write(&out, body).expect("write jsonl");
+        println!("wrote {} JSON-lines to {out}", records.len());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One JSON-lines record: axes + makespan + per-node breakdown + network
+/// counters (the slim view — full per-node SimReports stay in
+/// `ClusterReport::to_json`, which is too heavy for a bench artifact).
+fn record(cl: &mttkrp_memsys::cluster::ClusterReport, nodes: usize, topo: &str) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(format!("nodes={nodes} inter-topology={topo}"))),
+        (
+            "axes",
+            Json::obj(vec![
+                ("nodes", Json::str(nodes.to_string())),
+                ("inter_topology", Json::str(topo)),
+                ("dataset", Json::str(cl.workload.clone())),
+            ]),
+        ),
+        ("nodes", Json::num(nodes as f64)),
+        ("topology", Json::str(cl.topology)),
+        ("total_cycles", Json::num(cl.total_cycles as f64)),
+        ("nnz", Json::num(cl.nnz() as f64)),
+        (
+            "communication_fraction",
+            Json::num(cl.communication_fraction()),
+        ),
+        (
+            "node_breakdown",
+            Json::arr(cl.node_reports.iter().map(|n| n.breakdown_json()).collect()),
+        ),
+        ("network", cl.network_json()),
+    ])
+}

@@ -1,0 +1,484 @@
+//! Multi-accelerator scale-out: sharded MTTKRP across routed nodes.
+//!
+//! One accelerator board holds the whole paper: PEs, LMB banks, the
+//! intra-node fabric, per-channel DRAM. This layer asks the next
+//! question — what happens when the tensor outgrows one board and the
+//! nonzeros are sharded across `cluster.nodes` accelerators joined by a
+//! routed inter-node network?
+//!
+//! # Sharding model
+//!
+//! The nonzeros are already split into `n_pes x nodes` fiber-aligned
+//! Type-2 streams by the trace layer's `partition_by_nnz` boundary rule
+//! — the cluster layer reuses that exact rule at node granularity:
+//! node `m` owns streams `[m*n_pes, (m+1)*n_pes)`, a contiguous,
+//! fiber-aligned nnz range. Tensor elements and output fibers are
+//! node-local by construction (the partition never splits an output
+//! fiber). Input factor-matrix rows are *block-distributed* over nodes
+//! (`owner = row / ceil(rows/nodes)` per matrix), so a node whose shard
+//! references a row it does not own must fetch it from the owner before
+//! its local run: the communication phase.
+//!
+//! Each node's phase is one request/response exchange over
+//! [`network::InterNodeNetwork`]: a [`MSG_HEADER_BYTES`] request per
+//! distinct remote row (deduplicated — the fetched row lives in node
+//! DRAM for the whole run), answered by a header + `R*4`-byte row
+//! payload. The makespan decomposes per node into *communication*
+//! (last remote row arrival), *compute* (the ideal-memory floor of its
+//! local run) and *local memory* (everything the local run spends above
+//! that floor); the cluster total is the slowest node's sum.
+//!
+//! # Identity by construction
+//!
+//! With `cluster.nodes = 1` (the default) [`simulate_cluster`] runs the
+//! plain single-accelerator [`sim::simulate`] on the unsliced source —
+//! no network, no classification pass — and
+//! [`ClusterReport::into_report`] returns that report verbatim. The
+//! randomized property in `tests/integration_cluster.rs` pins this.
+
+pub mod network;
+pub mod report;
+
+use std::collections::BTreeSet;
+
+use crate::config::{FabricType, SystemConfig};
+use crate::sim::{self, Cycle};
+use crate::trace::source::{TraceSource, WorkCursor, WORK_CHUNK};
+use crate::trace::AddressMap;
+use crate::util::ceil_div;
+
+pub use network::{
+    inter_topology_of, mesh_dims, FullyConnected, InterLinkStats, InterNodeNetwork, Mesh,
+    NetRun, NetworkStats, Request,
+};
+pub use report::{ClusterReport, NodeComm, NodeReport};
+
+/// Bytes of addressing/tag overhead per inter-node message. Requests
+/// are exactly one header; responses are a header plus the row payload.
+pub const MSG_HEADER_BYTES: u64 = 16;
+
+/// Type-2 front ends issue up to two accesses per cycle (see
+/// `MemorySystem::new`) — the issue-rate term of the compute floor.
+const TYPE2_ISSUE_WIDTH: u64 = 2;
+
+/// A contiguous window of an existing [`TraceSource`]'s streams,
+/// re-exposed as a complete source with *local* PE ids `0..count` — the
+/// view one cluster node has of its shard. `MemorySystem` maps stream
+/// PEs onto LMB ports as `pe % n_lmbs`, so the slice must renumber from
+/// zero or every node past the first would land on skewed ports.
+#[derive(Debug)]
+pub struct NodeSlice<'a, S: TraceSource + ?Sized> {
+    inner: &'a S,
+    base: usize,
+    count: usize,
+}
+
+impl<'a, S: TraceSource + ?Sized> NodeSlice<'a, S> {
+    pub fn new(inner: &'a S, base: usize, count: usize) -> NodeSlice<'a, S> {
+        assert!(count > 0, "empty node slice");
+        assert!(
+            base + count <= inner.n_streams(),
+            "slice [{}, {}) out of range ({} streams)",
+            base,
+            base + count,
+            inner.n_streams()
+        );
+        NodeSlice { inner, base, count }
+    }
+}
+
+impl<S: TraceSource + ?Sized> TraceSource for NodeSlice<'_, S> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn fabric(&self) -> FabricType {
+        self.inner.fabric()
+    }
+    fn nnz(&self) -> usize {
+        (0..self.count).map(|s| self.inner.stream_len(self.base + s)).sum()
+    }
+    fn n_streams(&self) -> usize {
+        self.count
+    }
+    fn stream_pe(&self, s: usize) -> usize {
+        assert!(s < self.count);
+        let pe = self.inner.stream_pe(self.base + s);
+        debug_assert!(
+            (self.base..self.base + self.count).contains(&pe),
+            "stream {} owned by PE {} outside its node's window",
+            self.base + s,
+            pe
+        );
+        pe - self.base
+    }
+    fn stream_len(&self, s: usize) -> usize {
+        assert!(s < self.count);
+        self.inner.stream_len(self.base + s)
+    }
+    fn open(&self, s: usize) -> Box<dyn WorkCursor> {
+        assert!(s < self.count);
+        self.inner.open(self.base + s)
+    }
+    fn amap(&self) -> Option<&AddressMap> {
+        self.inner.amap()
+    }
+}
+
+/// Block distribution of the two factor matrices' rows over nodes, plus
+/// the address-region inversion the remote-row classifier needs.
+struct RowOwners {
+    m1_base: u64,
+    m1_end: u64,
+    m2_base: u64,
+    m2_end: u64,
+    fiber_bytes: u64,
+    m1_block: u64,
+    m2_block: u64,
+    nodes: usize,
+    /// Response size: header + one factor row.
+    reply_bytes: u64,
+}
+
+impl RowOwners {
+    fn new(amap: &AddressMap, nodes: usize) -> RowOwners {
+        let m1_rows = amap.m1_bytes / amap.fiber_bytes;
+        let m2_rows = amap.m2_bytes / amap.fiber_bytes;
+        RowOwners {
+            m1_base: amap.m1_base,
+            m1_end: amap.m1_base + amap.m1_bytes,
+            m2_base: amap.m2_base,
+            m2_end: amap.m2_base + amap.m2_bytes,
+            fiber_bytes: amap.fiber_bytes,
+            m1_block: ceil_div(m1_rows, nodes as u64).max(1),
+            m2_block: ceil_div(m2_rows, nodes as u64).max(1),
+            nodes,
+            reply_bytes: MSG_HEADER_BYTES + amap.fiber_bytes,
+        }
+    }
+
+    /// Invert a fiber-load address to `(matrix, row)`.
+    fn classify(&self, addr: u64) -> (u8, u64) {
+        if (self.m2_base..self.m2_end).contains(&addr) {
+            (1, (addr - self.m2_base) / self.fiber_bytes)
+        } else {
+            debug_assert!(
+                (self.m1_base..self.m1_end).contains(&addr),
+                "fiber load at {addr:#x} outside both factor-matrix regions"
+            );
+            (0, (addr - self.m1_base) / self.fiber_bytes)
+        }
+    }
+
+    /// Node owning row `row` of matrix `mat` (block distribution; the
+    /// clamp folds the ragged tail block onto the last node).
+    fn owner(&self, mat: u8, row: u64) -> usize {
+        let block = if mat == 0 { self.m1_block } else { self.m2_block };
+        ((row / block) as usize).min(self.nodes - 1)
+    }
+}
+
+/// Simulate `cfg.cluster.nodes` accelerator nodes sharing `source`'s
+/// streams: a remote-row communication phase over the inter-node
+/// network, then each node's full single-accelerator run over its
+/// shard. With one node this *is* [`sim::simulate`] — see the module
+/// docs for the identity contract.
+pub fn simulate_cluster<S: TraceSource + ?Sized>(
+    cfg: &SystemConfig,
+    source: &S,
+) -> ClusterReport {
+    let start = std::time::Instant::now();
+    cfg.validate().expect("invalid system config");
+    let nodes = cfg.cluster.nodes;
+    let per_node = if nodes == 1 {
+        source.n_streams()
+    } else {
+        assert_eq!(
+            source.fabric(),
+            FabricType::Type2,
+            "multi-node sharding requires the Type-2 fiber-aligned partition rule"
+        );
+        assert_eq!(
+            source.n_streams(),
+            nodes * cfg.pe.n_pes,
+            "cluster geometry: the source must carry n_pes x nodes streams"
+        );
+        cfg.pe.n_pes
+    };
+    let owners = (nodes > 1).then(|| {
+        RowOwners::new(
+            source.amap().expect("cluster sharding needs the source's address map"),
+            nodes,
+        )
+    });
+    let type2 = source.fabric() == FabricType::Type2;
+
+    // Classification pass: one streamed scan per node (bounded by
+    // WORK_CHUNK, like the simulation itself) collecting the distinct
+    // remote rows and the per-PE compute floor.
+    let mut requests: Vec<Request> = Vec::new();
+    let mut comms: Vec<NodeComm> = Vec::with_capacity(nodes);
+    let mut buf: Vec<crate::trace::NnzWork> = Vec::with_capacity(WORK_CHUNK);
+    for m in 0..nodes {
+        let mut remote: BTreeSet<(u8, u64)> = BTreeSet::new();
+        let mut floor: Cycle = 0;
+        for s in m * per_node..(m + 1) * per_node {
+            let mut cur = source.open(s);
+            let (mut items, mut accs) = (0u64, 0u64);
+            loop {
+                buf.clear();
+                if cur.refill(&mut buf, WORK_CHUNK) == 0 {
+                    break;
+                }
+                for w in &buf {
+                    items += 1;
+                    accs += w.n_accesses() as u64;
+                    if let Some(own) = &owners {
+                        // Tensor elements and output-fiber stores are
+                        // node-local by the partition rule; only the two
+                        // input-fiber loads can cross nodes.
+                        for f in &w.fibers {
+                            let (mat, row) = own.classify(f.addr);
+                            if own.owner(mat, row) != m {
+                                remote.insert((mat, row));
+                            }
+                        }
+                    }
+                }
+            }
+            debug_assert_eq!(
+                items as usize,
+                source.stream_len(s),
+                "cursor yielded a different count than stream_len"
+            );
+            if type2 {
+                // A PE is issue-bound or compute-bound, whichever is
+                // slower; PEs run in parallel, so the node floor is the
+                // max over its streams.
+                let ideal = ceil_div(accs, TYPE2_ISSUE_WIDTH)
+                    .max(items * cfg.pe.compute_cycles_per_nnz);
+                floor = floor.max(ideal);
+            }
+        }
+        if let Some(own) = &owners {
+            for &(mat, row) in &remote {
+                requests.push(Request {
+                    from: m,
+                    to: own.owner(mat, row),
+                    bytes: MSG_HEADER_BYTES,
+                    reply_bytes: own.reply_bytes,
+                });
+            }
+        }
+        comms.push(NodeComm {
+            remote_rows: remote.len() as u64,
+            remote_bytes: remote.len() as u64
+                * owners.as_ref().map_or(0, |o| o.reply_bytes),
+            comm_cycles: 0,
+            compute_floor: floor,
+        });
+    }
+
+    // Communication phase: every node's remote rows exchange at once
+    // (the prefetch all nodes run before computing).
+    let network = if nodes > 1 {
+        let mut net = InterNodeNetwork::new(&cfg.cluster);
+        let run = net.run(&requests);
+        for (c, done) in comms.iter_mut().zip(&run.node_done) {
+            c.comm_cycles = *done;
+        }
+        run.stats
+    } else {
+        NetworkStats::default()
+    };
+
+    // Local phase: each node is a full MemorySystem over its shard.
+    let mut node_reports = Vec::with_capacity(nodes);
+    for (m, comm) in comms.into_iter().enumerate() {
+        let report = if nodes == 1 {
+            sim::simulate(cfg, source)
+        } else {
+            sim::simulate(cfg, &NodeSlice::new(source, m * per_node, per_node))
+        };
+        node_reports.push(NodeReport { node: m, report, comm });
+    }
+    let total_cycles = node_reports
+        .iter()
+        .map(NodeReport::total_cycles)
+        .max()
+        .expect("cluster has at least one node");
+    ClusterReport {
+        label: node_reports[0].report.label.clone(),
+        workload: source.name().to_string(),
+        nodes,
+        topology: cfg.cluster.topology.name(),
+        link_bytes: cfg.cluster.link_bytes,
+        node_reports,
+        network,
+        total_cycles,
+        host_seconds: start.elapsed().as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{InterTopologyKind, SystemConfig};
+    use crate::tensor::{CooTensor, Mode};
+    use crate::trace::CooStreamSource;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn cluster_cfg(nodes: usize) -> SystemConfig {
+        let mut c = SystemConfig::config_b();
+        c.cluster.nodes = nodes;
+        c.cluster.topology = InterTopologyKind::Ring;
+        c.validate().unwrap();
+        c
+    }
+
+    /// A hyper-sparse tensor whose factor rows are far wider-spread than
+    /// any node's block, so multi-node runs always have remote rows.
+    fn source_for(cfg: &SystemConfig) -> CooStreamSource {
+        let mut rng = Rng::new(7);
+        let t = CooTensor::random(&mut rng, [64, 3000, 5000], 2000);
+        CooStreamSource::new(
+            Arc::new(t),
+            Mode::I,
+            FabricType::Type2,
+            cfg.pe.n_pes * cfg.cluster.nodes,
+            cfg.pe.rank,
+            cfg.dram.row_bytes,
+        )
+    }
+
+    #[test]
+    fn node_slice_exposes_local_geometry() {
+        let cfg = cluster_cfg(2);
+        let src = source_for(&cfg);
+        let n = cfg.pe.n_pes;
+        let s0 = NodeSlice::new(&src, 0, n);
+        let s1 = NodeSlice::new(&src, n, n);
+        assert_eq!(s0.n_streams(), n);
+        assert_eq!(s1.n_streams(), n);
+        // PE ids renumber to the local 0..n in both slices.
+        for s in 0..n {
+            assert_eq!(s0.stream_pe(s), s);
+            assert_eq!(s1.stream_pe(s), s);
+        }
+        // The slices tile the source's nnz exactly.
+        assert_eq!(
+            TraceSource::nnz(&s0) + TraceSource::nnz(&s1),
+            TraceSource::nnz(&src)
+        );
+        // A slice cursor yields exactly stream_len items.
+        let mut cur = s1.open(0);
+        let mut buf = Vec::new();
+        let mut total = 0;
+        loop {
+            let got = cur.refill(&mut buf, 100);
+            if got == 0 {
+                break;
+            }
+            total += got;
+            buf.clear();
+        }
+        assert_eq!(total, s1.stream_len(0));
+    }
+
+    #[test]
+    fn single_node_cluster_is_the_plain_run() {
+        let cfg = cluster_cfg(1);
+        let src = source_for(&cfg);
+        let plain = sim::simulate(&cfg, &src);
+        let cl = simulate_cluster(&cfg, &src);
+        assert_eq!(cl.nodes, 1);
+        assert_eq!(cl.network.delivered, 0);
+        assert_eq!(cl.network.links.len(), 0);
+        assert_eq!(cl.node_reports[0].comm.remote_rows, 0);
+        assert_eq!(cl.total_cycles, plain.total_cycles);
+        assert_eq!(cl.into_report().diff(&plain), None);
+    }
+
+    #[test]
+    fn two_node_cluster_conserves_work_and_decomposes_makespan() {
+        let cfg = cluster_cfg(2);
+        let src = source_for(&cfg);
+        let cl = simulate_cluster(&cfg, &src);
+        assert_eq!(cl.node_reports.len(), 2);
+        assert_eq!(cl.nnz() as usize, TraceSource::nnz(&src));
+        // Randomly spread factor rows guarantee cross-node fetches.
+        let remote: u64 = cl.node_reports.iter().map(|n| n.comm.remote_rows).sum();
+        assert!(remote > 0, "no remote rows in a random shard");
+        assert_eq!(cl.network.delivered, remote);
+        let bytes: u64 = cl.node_reports.iter().map(|n| n.comm.remote_bytes).sum();
+        assert_eq!(cl.network.delivered_bytes, bytes);
+        for n in &cl.node_reports {
+            assert_eq!(
+                n.compute_cycles() + n.local_memory_cycles(),
+                n.report.total_cycles,
+                "node {}: breakdown must tile the local run",
+                n.node
+            );
+            assert!(n.compute_cycles() > 0, "node {} has no compute floor", n.node);
+            if n.comm.remote_rows > 0 {
+                assert!(n.comm.comm_cycles > 0);
+            }
+        }
+        let worst = cl.node_reports.iter().map(NodeReport::total_cycles).max().unwrap();
+        assert_eq!(cl.total_cycles, worst);
+        assert!(cl.communication_fraction() > 0.0);
+    }
+
+    #[test]
+    fn cluster_json_carries_breakdown_and_network() {
+        let cfg = cluster_cfg(2);
+        let src = source_for(&cfg);
+        let cl = simulate_cluster(&cfg, &src);
+        let j = cl.to_json();
+        assert_eq!(j.get("nodes").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("topology").unwrap().as_str(), Some("ring"));
+        let rows = j.get("node_breakdown").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in rows {
+            for k in [
+                "total_cycles",
+                "compute_cycles",
+                "local_memory_cycles",
+                "communication_cycles",
+                "remote_rows",
+                "remote_bytes",
+            ] {
+                assert!(r.get(k).is_some(), "breakdown row missing {k}");
+            }
+        }
+        let net = j.get("network").unwrap();
+        assert!(!net.get("links").unwrap().as_arr().unwrap().is_empty());
+        assert!(net.get("max_link_utilization").is_some());
+        assert_eq!(j.get("node_reports").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn merged_report_prefixes_link_labels_by_node() {
+        // A store-and-forward intra-node fabric so per-node link labels
+        // exist (and would collide without the node prefix).
+        let mut cfg = cluster_cfg(2);
+        cfg.interconnect.channels = 4;
+        cfg.interconnect.topology = crate::config::TopologyKind::Ring;
+        cfg.validate().unwrap();
+        let src = source_for(&cfg);
+        let cl = simulate_cluster(&cfg, &src);
+        let nnz = cl.nnz();
+        let makespan = cl.total_cycles;
+        let merged = cl.into_report();
+        assert_eq!(merged.nnz, nnz);
+        assert_eq!(merged.total_cycles, makespan);
+        assert!(!merged.fabric.links.is_empty(), "ring fabric has links");
+        for l in &merged.fabric.links {
+            assert!(
+                l.label.starts_with("n0:") || l.label.starts_with("n1:"),
+                "unprefixed link label {}",
+                l.label
+            );
+        }
+    }
+}

@@ -1,0 +1,564 @@
+//! Hop-accurate inter-node network for the cluster layer.
+//!
+//! This generalizes the intra-node fabric's [`Topology`] trait to the
+//! scale-out setting: the same static-routing view (ingress, next hop,
+//! directed link list) now connects whole accelerator nodes instead of
+//! DRAM channels, and the transported unit is a sized *message* (a
+//! remote-row request or its factor-row response) instead of a DRAM
+//! transaction. Two topologies join the fabric's line and ring:
+//!
+//! * [`FullyConnected`] — the config's `crossbar`: a dedicated direct
+//!   link per ordered node pair, every route one hop. This is the
+//!   inter-node analogue of the fabric crossbar (which has no links at
+//!   all because ports arbitrate combinationally — across chassis there
+//!   is always a wire, so here the wire is explicit).
+//! * [`Mesh`] — a near-square 2D grid with dimension-ordered (X-then-Y)
+//!   routing. Node counts that do not fill the grid leave the last row
+//!   short; routing detours *up* first when an X step would leave the
+//!   grid, which adds only north-to-X turns and therefore keeps the
+//!   turn set acyclic (no south-to-X turn ever occurs — the classic
+//!   turn-model argument for deadlock freedom).
+//!
+//! # Transport model
+//!
+//! Store-and-forward with byte-level bandwidth budgets: a message of
+//! `b` bytes occupies a directed link's wire for
+//! `link_latency + ceil(b / link_bytes)` cycles per hop (SerDes +
+//! serialization), waits in a bounded per-link queue (`link_queue`
+//! messages) when the wire is busy, and backpressures the upstream hop
+//! when the queue is full. Injection follows the bubble rule — a node
+//! may inject only while the first-hop queue keeps one slot free for
+//! transit traffic — which guarantees the ring's circular channel
+//! dependency always has a bubble and so cannot deadlock (`link_queue
+//! >= 2` is enforced by config validation for exactly this reason).
+//!
+//! Request/response protocol: the caller injects request messages; when
+//! a request reaches its destination the destination node turns it
+//! around as a response (`reply_bytes`) the following cycle, through
+//! its own egress port. The run completes when every response has been
+//! delivered; per-node completion cycles and per-link peak-demand
+//! statistics come back in [`NetRun`].
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::config::{ClusterConfig, InterTopologyKind};
+use crate::sim::fabric::{Line, Ring, Topology};
+use crate::sim::Cycle;
+use crate::util::ceil_div;
+
+/// Every ordered node pair wired directly; all routes are one hop.
+pub struct FullyConnected;
+
+impl Topology for FullyConnected {
+    fn name(&self) -> &'static str {
+        "crossbar"
+    }
+
+    fn next_hop(&self, at: usize, dest: usize, _nodes: usize) -> Option<usize> {
+        (at != dest).then_some(dest)
+    }
+
+    fn links(&self, nodes: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(nodes.saturating_sub(1) * nodes);
+        for a in 0..nodes {
+            for b in 0..nodes {
+                if a != b {
+                    out.push((a, b));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Grid shape for `nodes` mesh nodes: `(rows, cols)` with
+/// `cols = ceil(sqrt(nodes))`, rows filled left-to-right so only the
+/// last row can be short.
+pub fn mesh_dims(nodes: usize) -> (usize, usize) {
+    assert!(nodes > 0);
+    let cols = (1..=nodes).find(|c| c * c >= nodes).expect("cols <= nodes");
+    (nodes.div_ceil(cols), cols)
+}
+
+/// Near-square 2D mesh with X-then-Y dimension-ordered routing.
+pub struct Mesh;
+
+impl Topology for Mesh {
+    fn name(&self) -> &'static str {
+        "mesh"
+    }
+
+    fn next_hop(&self, at: usize, dest: usize, nodes: usize) -> Option<usize> {
+        if at == dest {
+            return None;
+        }
+        let (_, cols) = mesh_dims(nodes);
+        let (ar, ac) = (at / cols, at % cols);
+        let (dr, dc) = (dest / cols, dest % cols);
+        if ac != dc {
+            let step_c = if dc > ac { ac + 1 } else { ac - 1 };
+            let cand = ar * cols + step_c;
+            if cand < nodes {
+                return Some(cand);
+            }
+            // The X step would leave a short last row: detour one row up
+            // (always exists — only the last row is short). This is the
+            // lone non-XY turn and it is strictly northbound, so the
+            // routing relation stays cycle-free.
+            return Some((ar - 1) * cols + ac);
+        }
+        let step_r = if dr > ar { ar + 1 } else { ar - 1 };
+        Some(step_r * cols + ac)
+    }
+
+    fn links(&self, nodes: usize) -> Vec<(usize, usize)> {
+        let (_, cols) = mesh_dims(nodes);
+        let mut out = Vec::new();
+        for a in 0..nodes {
+            // Right neighbor (same row) and down neighbor, both directions.
+            if a % cols + 1 < cols && a + 1 < nodes {
+                out.push((a, a + 1));
+                out.push((a + 1, a));
+            }
+            if a + cols < nodes {
+                out.push((a, a + cols));
+                out.push((a + cols, a));
+            }
+        }
+        out
+    }
+}
+
+/// Resolve an inter-node topology kind to its routing implementation.
+/// Line and ring are literally the fabric's; crossbar and mesh are the
+/// scale-out additions above.
+pub fn inter_topology_of(kind: InterTopologyKind) -> &'static dyn Topology {
+    match kind {
+        InterTopologyKind::Crossbar => &FullyConnected,
+        InterTopologyKind::Line => &Line,
+        InterTopologyKind::Ring => &Ring,
+        InterTopologyKind::Mesh => &Mesh,
+    }
+}
+
+/// One remote-row fetch: `from` asks `to` for a row; the request is
+/// `bytes` on the wire, the turned-around response `reply_bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub from: usize,
+    pub to: usize,
+    pub bytes: u64,
+    pub reply_bytes: u64,
+}
+
+/// Per-directed-link counters, including the peak queue demand the link
+/// saw (the provisioning signal the byte counters alone cannot give).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct InterLinkStats {
+    /// `nA->nB` label.
+    pub label: String,
+    /// Messages that crossed this link.
+    pub msgs: u64,
+    /// Payload bytes that crossed this link.
+    pub bytes: u64,
+    /// Cycles a wire-completed message was held by a full queue at the
+    /// next hop (upstream backpressure).
+    pub stall_cycles: u64,
+    /// Deepest the bounded queue ever got (peak demand; capacity is
+    /// `cluster.link_queue`).
+    pub peak_queue: usize,
+}
+
+impl InterLinkStats {
+    /// Fraction of the run's cycles this link's byte budget was spoken
+    /// for (`bytes / (cycles * link_bytes)`).
+    pub fn utilization(&self, total_cycles: Cycle, link_bytes: u64) -> f64 {
+        if total_cycles == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / (total_cycles as f64 * link_bytes as f64)
+        }
+    }
+}
+
+/// Whole-network counters for one communication phase.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetworkStats {
+    /// Responses delivered (== requests injected on completion).
+    pub delivered: u64,
+    /// Response payload bytes delivered to requesters.
+    pub delivered_bytes: u64,
+    /// Total link traversals (requests + responses).
+    pub hops: u64,
+    /// Cycles a node's injection port was blocked by the bubble rule.
+    pub inject_stall_cycles: u64,
+    /// Cycles the communication phase ran.
+    pub cycles: Cycle,
+    pub links: Vec<InterLinkStats>,
+}
+
+impl NetworkStats {
+    /// Highest per-link byte utilization over the phase.
+    pub fn max_link_utilization(&self, link_bytes: u64) -> f64 {
+        self.links
+            .iter()
+            .map(|l| l.utilization(self.cycles, link_bytes))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Result of one network run: counters plus, per node, the cycle its
+/// last response arrived (0 for nodes that requested nothing).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetRun {
+    pub stats: NetworkStats,
+    pub node_done: Vec<Cycle>,
+}
+
+/// A message in flight (requests remember their response size).
+#[derive(Debug, Clone, Copy)]
+struct Flight {
+    src: usize,
+    dst: usize,
+    bytes: u64,
+    /// `Some(reply_bytes)` for requests, `None` for responses.
+    reply: Option<u64>,
+}
+
+struct LinkState {
+    to: usize,
+    /// Waiting messages with the cycle they were enqueued (a message
+    /// becomes eligible for the wire the cycle *after* it arrives —
+    /// store-and-forward, no cut-through).
+    queue: VecDeque<(Flight, Cycle)>,
+    /// Message on the wire and the cycle its transfer completes.
+    wire: Option<(Flight, Cycle)>,
+    stats: InterLinkStats,
+}
+
+/// The simulator: fixed topology + link parameters, run once per
+/// communication phase.
+pub struct InterNodeNetwork {
+    topo: &'static dyn Topology,
+    nodes: usize,
+    link_bytes: u64,
+    link_latency: u64,
+    queue_cap: usize,
+    links: Vec<LinkState>,
+    index: HashMap<(usize, usize), usize>,
+}
+
+impl InterNodeNetwork {
+    pub fn new(cfg: &ClusterConfig) -> InterNodeNetwork {
+        let topo = inter_topology_of(cfg.topology);
+        let mut links = Vec::new();
+        let mut index = HashMap::new();
+        for (from, to) in topo.links(cfg.nodes) {
+            index.insert((from, to), links.len());
+            links.push(LinkState {
+                to,
+                queue: VecDeque::new(),
+                wire: None,
+                stats: InterLinkStats {
+                    label: format!("n{from}->n{to}"),
+                    ..InterLinkStats::default()
+                },
+            });
+        }
+        InterNodeNetwork {
+            topo,
+            nodes: cfg.nodes,
+            link_bytes: cfg.link_bytes,
+            link_latency: cfg.link_latency,
+            queue_cap: cfg.link_queue,
+            links,
+            index,
+        }
+    }
+
+    fn first_link(&self, at: usize, dst: usize) -> usize {
+        let next = self
+            .topo
+            .next_hop(at, dst, self.nodes)
+            .expect("messages never target their own node");
+        self.index[&(at, next)]
+    }
+
+    fn wire_cycles(&self, bytes: u64) -> Cycle {
+        self.link_latency + ceil_div(bytes.max(1), self.link_bytes)
+    }
+
+    /// Run the request/response exchange to completion. Requests inject
+    /// in slice order (at most one message per node per cycle — the
+    /// egress port); each delivered request re-injects its response from
+    /// the destination the next cycle.
+    pub fn run(&mut self, requests: &[Request]) -> NetRun {
+        let mut egress: Vec<VecDeque<(Flight, Cycle)>> = vec![VecDeque::new(); self.nodes];
+        for r in requests {
+            assert!(r.from != r.to, "remote request to own node");
+            assert!(r.from < self.nodes && r.to < self.nodes);
+            egress[r.from].push_back((
+                Flight { src: r.from, dst: r.to, bytes: r.bytes, reply: Some(r.reply_bytes) },
+                0,
+            ));
+        }
+        let mut stats = NetworkStats::default();
+        let mut node_done: Vec<Cycle> = vec![0; self.nodes];
+        if requests.is_empty() {
+            stats.links = self.links.iter().map(|l| l.stats.clone()).collect();
+            return NetRun { stats, node_done };
+        }
+        let mut pending = requests.len() as u64;
+        // Livelock/deadlock watchdog: with the bubble rule the network
+        // always drains, so any run past this (very loose) bound is a
+        // model bug, not a long simulation.
+        let worst_hop = self.wire_cycles(
+            requests.iter().map(|r| r.bytes.max(r.reply_bytes)).max().unwrap_or(1),
+        );
+        let bound = 64
+            + 4 * (2 * requests.len() as Cycle)
+                * worst_hop
+                * (self.nodes as Cycle + 2)
+                * (self.queue_cap as Cycle);
+        let mut now: Cycle = 0;
+        loop {
+            // 1. Wire completions: deliver, or forward to the next hop's
+            //    queue (blocking on the wire while that queue is full).
+            #[allow(clippy::needless_range_loop)] // also indexes links[nli]
+            for li in 0..self.links.len() {
+                let Some((flight, done)) = self.links[li].wire else { continue };
+                if done > now {
+                    continue;
+                }
+                let at = self.links[li].to;
+                if at == flight.dst {
+                    self.links[li].wire = None;
+                    stats.hops += 1;
+                    match flight.reply {
+                        Some(reply_bytes) => {
+                            // Request arrived: turn it around next cycle.
+                            egress[at].push_back((
+                                Flight {
+                                    src: at,
+                                    dst: flight.src,
+                                    bytes: reply_bytes,
+                                    reply: None,
+                                },
+                                now + 1,
+                            ));
+                        }
+                        None => {
+                            node_done[at] = node_done[at].max(now);
+                            stats.delivered += 1;
+                            stats.delivered_bytes += flight.bytes;
+                            pending -= 1;
+                        }
+                    }
+                } else {
+                    let nli = self.first_link(at, flight.dst);
+                    if self.links[nli].queue.len() < self.queue_cap {
+                        self.links[nli].queue.push_back((flight, now));
+                        self.links[li].wire = None;
+                        stats.hops += 1;
+                    } else {
+                        self.links[li].stats.stall_cycles += 1;
+                    }
+                }
+            }
+            if pending == 0 {
+                break;
+            }
+            // 2. Wire starts: an idle wire picks up its queue head once
+            //    the head has sat in the queue for a full cycle.
+            for l in &mut self.links {
+                if l.wire.is_some() {
+                    continue;
+                }
+                let ready = matches!(l.queue.front(), Some(&(_, enq)) if enq < now);
+                if ready {
+                    let (flight, _) = l.queue.pop_front().expect("checked front");
+                    l.wire = Some((flight, now + self.wire_cycles(flight.bytes)));
+                    l.stats.msgs += 1;
+                    l.stats.bytes += flight.bytes;
+                }
+            }
+            // 3. Injection (bubble rule: leave one queue slot for
+            //    transit traffic so ring routes cannot deadlock).
+            for n in 0..self.nodes {
+                let Some(&(flight, ready)) = egress[n].front() else { continue };
+                if ready > now {
+                    continue;
+                }
+                let li = self.first_link(n, flight.dst);
+                if self.links[li].queue.len() + 1 < self.queue_cap {
+                    self.links[li].queue.push_back((flight, now));
+                    egress[n].pop_front();
+                } else {
+                    stats.inject_stall_cycles += 1;
+                }
+            }
+            for l in &mut self.links {
+                l.stats.peak_queue = l.stats.peak_queue.max(l.queue.len());
+            }
+            now += 1;
+            assert!(
+                now < bound,
+                "inter-node network stuck after {now} cycles ({pending} responses pending)"
+            );
+        }
+        stats.cycles = now + 1;
+        stats.links = self.links.iter().map(|l| l.stats.clone()).collect();
+        NetRun { stats, node_done }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(nodes: usize, topology: InterTopologyKind) -> ClusterConfig {
+        ClusterConfig { nodes, topology, ..ClusterConfig::single_node() }
+    }
+
+    #[test]
+    fn mesh_dims_near_square() {
+        assert_eq!(mesh_dims(1), (1, 1));
+        assert_eq!(mesh_dims(2), (1, 2));
+        assert_eq!(mesh_dims(3), (2, 2));
+        assert_eq!(mesh_dims(4), (2, 2));
+        assert_eq!(mesh_dims(7), (3, 3));
+        assert_eq!(mesh_dims(8), (3, 3));
+        assert_eq!(mesh_dims(16), (4, 4));
+    }
+
+    #[test]
+    fn every_topology_routes_every_pair_over_real_links() {
+        for kind in InterTopologyKind::ALL {
+            let topo = inter_topology_of(kind);
+            for nodes in 1..=17 {
+                let links: std::collections::HashSet<(usize, usize)> =
+                    topo.links(nodes).into_iter().collect();
+                for src in 0..nodes {
+                    for dst in 0..nodes {
+                        let mut at = src;
+                        let mut hops = 0;
+                        while let Some(next) = topo.next_hop(at, dst, nodes) {
+                            assert!(
+                                links.contains(&(at, next)),
+                                "{}: {at}->{next} not a link ({nodes} nodes)",
+                                topo.name()
+                            );
+                            at = next;
+                            hops += 1;
+                            assert!(hops <= nodes, "{}: loop {src}->{dst}", topo.name());
+                        }
+                        assert_eq!(at, dst, "{}: route ended early", topo.name());
+                        if kind == InterTopologyKind::Crossbar && src != dst {
+                            assert_eq!(hops, 1, "crossbar is single-hop");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_links_are_grid_neighbors_both_ways() {
+        let links = Mesh.links(8); // 3x3 grid, last row short (nodes 6,7)
+        for (a, b) in &links {
+            assert!(links.contains(&(*b, *a)), "missing reverse of {a}->{b}");
+            let (_, cols) = mesh_dims(8);
+            let dr = (*a / cols).abs_diff(*b / cols);
+            let dc = (*a % cols).abs_diff(*b % cols);
+            assert_eq!(dr + dc, 1, "{a}->{b} is not a grid neighbor");
+        }
+        assert!(!links.contains(&(5, 8)), "node 8 does not exist");
+    }
+
+    #[test]
+    fn single_message_latency_is_hops_times_wire_time() {
+        // Crossbar, 1 hop each way: request 16 B then response 64 B over
+        // a 16 B/cycle link with 8-cycle hop latency. Store-and-forward
+        // costs one queue cycle per hop plus one turnaround cycle at the
+        // destination; pin the exact constant to keep the timing model
+        // deterministic under refactoring.
+        let mut net = InterNodeNetwork::new(&cfg(2, InterTopologyKind::Crossbar));
+        let run =
+            net.run(&[Request { from: 0, to: 1, bytes: 16, reply_bytes: 64 }]);
+        assert_eq!(run.stats.delivered, 1);
+        assert_eq!(run.stats.delivered_bytes, 64);
+        assert_eq!(run.stats.hops, 2);
+        let expect_req = 8 + 1; // latency + ceil(16/16)
+        let expect_resp = 8 + 4; // latency + ceil(64/16)
+        // inject@0 -> wire start@1 -> arrive@1+9=10; response enqueued
+        // ready@11, injected@11, wire start@12, arrives@12+12=24.
+        assert_eq!(run.node_done[0], 1 + expect_req + 2 + expect_resp);
+        assert_eq!(run.node_done[1], 0, "node 1 requested nothing");
+        assert!(run.stats.cycles >= run.node_done[0]);
+    }
+
+    #[test]
+    fn ring_all_to_opposite_drains_with_tiny_queues() {
+        // The deadlock-prone pattern: every node floods its antipode so
+        // both ring directions develop circular link demand. The bubble
+        // rule must keep it live even at the minimum legal queue depth.
+        let mut c = cfg(4, InterTopologyKind::Ring);
+        c.link_queue = 2;
+        let mut net = InterNodeNetwork::new(&c);
+        let mut reqs = Vec::new();
+        for n in 0..4usize {
+            for _ in 0..40 {
+                reqs.push(Request {
+                    from: n,
+                    to: (n + 2) % 4,
+                    bytes: 16,
+                    reply_bytes: 144,
+                });
+            }
+        }
+        let run = net.run(&reqs);
+        assert_eq!(run.stats.delivered, 160);
+        assert_eq!(run.stats.delivered_bytes, 160 * 144);
+        // Peak demand is visible and bounded by the queue capacity.
+        for l in &run.stats.links {
+            assert!(l.peak_queue <= 2, "{}: queue overflow", l.label);
+        }
+        assert!(
+            run.stats.links.iter().any(|l| l.peak_queue > 0),
+            "load never queued anywhere"
+        );
+    }
+
+    #[test]
+    fn mesh_many_to_many_conserves_bytes_and_counts_hops() {
+        let mut net = InterNodeNetwork::new(&cfg(9, InterTopologyKind::Mesh));
+        let mut reqs = Vec::new();
+        for from in 0..9usize {
+            for to in 0..9usize {
+                if from != to {
+                    reqs.push(Request { from, to, bytes: 16, reply_bytes: 128 });
+                }
+            }
+        }
+        let run = net.run(&reqs);
+        assert_eq!(run.stats.delivered, 72);
+        assert_eq!(run.stats.delivered_bytes, 72 * 128);
+        // Hops ≥ 2 per exchange (1 out + 1 back minimum), and the link
+        // byte counters account for every traversal exactly.
+        assert!(run.stats.hops >= 144);
+        let link_msgs: u64 = run.stats.links.iter().map(|l| l.msgs).sum();
+        assert_eq!(link_msgs, run.stats.hops);
+        for n in 0..9 {
+            assert!(run.node_done[n] > 0, "node {n} never completed");
+        }
+    }
+
+    #[test]
+    fn empty_request_set_is_a_zero_cycle_phase() {
+        let mut net = InterNodeNetwork::new(&cfg(4, InterTopologyKind::Ring));
+        let run = net.run(&[]);
+        assert_eq!(run.stats.cycles, 0);
+        assert_eq!(run.stats.delivered, 0);
+        assert_eq!(run.node_done, vec![0; 4]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Cluster-level result: per-node [`SimReport`]s plus the communication
+//! phase, with the makespan broken into compute, local memory, and
+//! inter-node communication time.
+
+use crate::sim::stats::SimReport;
+use crate::sim::Cycle;
+use crate::util::json::Json;
+
+use super::network::NetworkStats;
+
+/// One node's communication-phase share.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NodeComm {
+    /// Distinct remote factor-matrix rows this node fetched.
+    pub remote_rows: u64,
+    /// Response payload bytes delivered to this node (header + row data).
+    pub remote_bytes: u64,
+    /// Cycle the node's last remote row arrived — the prefetch phase the
+    /// node sits through before its local run can start (0 when every
+    /// row it touches is node-local).
+    pub comm_cycles: Cycle,
+    /// Lower bound on the node's pure compute time: cycles its PEs would
+    /// need with an ideal (zero-latency) memory system. Anything the
+    /// local run spends beyond this floor is memory time.
+    pub compute_floor: Cycle,
+}
+
+/// One node's complete result: the full single-accelerator report of its
+/// shard plus its communication share.
+#[derive(Debug, Clone)]
+pub struct NodeReport {
+    pub node: usize,
+    pub report: SimReport,
+    pub comm: NodeComm,
+}
+
+impl NodeReport {
+    /// Compute component of the node's local run (the ideal-memory
+    /// floor, clamped by the run itself — a shard can never finish
+    /// below its floor, but the clamp keeps the decomposition safe
+    /// against floor estimation drift).
+    pub fn compute_cycles(&self) -> Cycle {
+        self.comm.compute_floor.min(self.report.total_cycles)
+    }
+
+    /// Local-memory component: whatever the local run spent beyond the
+    /// compute floor. `compute + local_memory == report.total_cycles`
+    /// by construction.
+    pub fn local_memory_cycles(&self) -> Cycle {
+        self.report.total_cycles - self.compute_cycles()
+    }
+
+    /// The node's end-to-end time: remote-row prefetch, then the local
+    /// run over its shard.
+    pub fn total_cycles(&self) -> Cycle {
+        self.comm.comm_cycles + self.report.total_cycles
+    }
+
+    /// Slim JSON view of the node's makespan decomposition (the
+    /// `node_breakdown` entries of [`ClusterReport::to_json`]).
+    pub fn breakdown_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::num(self.node as f64)),
+            ("total_cycles", Json::num(self.total_cycles() as f64)),
+            ("compute_cycles", Json::num(self.compute_cycles() as f64)),
+            (
+                "local_memory_cycles",
+                Json::num(self.local_memory_cycles() as f64),
+            ),
+            (
+                "communication_cycles",
+                Json::num(self.comm.comm_cycles as f64),
+            ),
+            ("local_cycles", Json::num(self.report.total_cycles as f64)),
+            ("nnz", Json::num(self.report.nnz as f64)),
+            ("remote_rows", Json::num(self.comm.remote_rows as f64)),
+            ("remote_bytes", Json::num(self.comm.remote_bytes as f64)),
+        ])
+    }
+}
+
+/// Result of [`simulate_cluster`](super::simulate_cluster).
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub label: String,
+    pub workload: String,
+    pub nodes: usize,
+    /// Inter-node topology name ("crossbar" / "line" / "ring" / "mesh").
+    pub topology: &'static str,
+    /// Per-link byte budget the communication phase ran with.
+    pub link_bytes: u64,
+    pub node_reports: Vec<NodeReport>,
+    pub network: NetworkStats,
+    /// Cluster makespan: `max` over nodes of communication + local run.
+    pub total_cycles: Cycle,
+    pub host_seconds: f64,
+}
+
+impl ClusterReport {
+    /// Nonzeros across all shards.
+    pub fn nnz(&self) -> u64 {
+        self.node_reports.iter().map(|n| n.report.nnz).sum()
+    }
+
+    /// Slowest node — the one that sets the makespan.
+    pub fn critical_node(&self) -> &NodeReport {
+        self.node_reports
+            .iter()
+            .max_by_key(|n| n.total_cycles())
+            .expect("cluster has at least one node")
+    }
+
+    /// Makespan share spent communicating on the critical path.
+    pub fn communication_fraction(&self) -> f64 {
+        if self.total_cycles == 0 {
+            0.0
+        } else {
+            self.critical_node().comm.comm_cycles as f64 / self.total_cycles as f64
+        }
+    }
+
+    /// Flatten into a single [`SimReport`] so every existing consumer
+    /// (sweep tables, run sets, baselines, `SimReport::diff`) works on
+    /// cluster results unchanged.
+    ///
+    /// With one node this returns that node's report **verbatim** — the
+    /// identity the `nodes = 1` property tests pin. With several, the
+    /// counters sum/merge, per-component vectors concatenate, and link
+    /// labels gain an `n{i}:` node prefix; `total_cycles` becomes the
+    /// cluster makespan.
+    pub fn into_report(self) -> SimReport {
+        let ClusterReport {
+            label,
+            workload,
+            nodes,
+            node_reports,
+            total_cycles,
+            host_seconds,
+            ..
+        } = self;
+        let mut it = node_reports.into_iter();
+        let first = it.next().expect("cluster has at least one node").report;
+        if nodes == 1 {
+            return first;
+        }
+        let mut out = first;
+        for nr in it {
+            let r = nr.report;
+            out.nnz += r.nnz;
+            out.accesses += r.accesses;
+            out.requested_bytes += r.requested_bytes;
+            out.dram.merge(&r.dram);
+            out.channels.extend(r.channels);
+            out.fabric.forwarded += r.fabric.forwarded;
+            out.fabric.backpressure_cycles += r.fabric.backpressure_cycles;
+            out.fabric.hops += r.fabric.hops;
+            out.fabric.per_port_forwarded.extend(r.fabric.per_port_forwarded);
+            out.fabric
+                .per_channel_forwarded
+                .extend(r.fabric.per_channel_forwarded);
+            out.fabric.links.extend(r.fabric.links);
+            out.fabric.reply.delivered += r.fabric.reply.delivered;
+            out.fabric.reply.hops += r.fabric.reply.hops;
+            out.fabric.reply.backpressure_cycles += r.fabric.reply.backpressure_cycles;
+            out.fabric.reply.links.extend(r.fabric.reply.links);
+            out.lmbs.extend(r.lmbs);
+            out.pe.retired += r.pe.retired;
+            out.pe.issued_accesses += r.pe.issued_accesses;
+            out.pe.stall_cycles += r.pe.stall_cycles;
+            for (slot, o) in out.latency.iter_mut().zip(r.latency.iter()) {
+                slot.merge(o);
+            }
+        }
+        // Every node ran the same shard geometry, so per-node link label
+        // collisions are certain — prefix by node position. The labels
+        // concatenated in node order, n_links per node.
+        let per_node_links = out.fabric.links.len() / nodes;
+        for (i, l) in out.fabric.links.iter_mut().enumerate() {
+            l.label = format!("n{}:{}", i / per_node_links.max(1), l.label);
+        }
+        let per_node_rlinks = out.fabric.reply.links.len() / nodes;
+        for (i, l) in out.fabric.reply.links.iter_mut().enumerate() {
+            l.label = format!("n{}:{}", i / per_node_rlinks.max(1), l.label);
+        }
+        out.label = label;
+        out.workload = workload;
+        out.total_cycles = total_cycles;
+        out.host_seconds = host_seconds;
+        out
+    }
+
+    /// JSON view of the inter-node network counters (the `network`
+    /// object of [`ClusterReport::to_json`]).
+    pub fn network_json(&self) -> Json {
+        let links = self
+            .network
+            .links
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("label", Json::str(l.label.clone())),
+                    ("msgs", Json::num(l.msgs as f64)),
+                    ("bytes", Json::num(l.bytes as f64)),
+                    ("stall_cycles", Json::num(l.stall_cycles as f64)),
+                    ("peak_queue", Json::num(l.peak_queue as f64)),
+                    (
+                        "utilization",
+                        Json::num(l.utilization(self.network.cycles, self.link_bytes)),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("delivered", Json::num(self.network.delivered as f64)),
+            (
+                "delivered_bytes",
+                Json::num(self.network.delivered_bytes as f64),
+            ),
+            ("hops", Json::num(self.network.hops as f64)),
+            (
+                "inject_stall_cycles",
+                Json::num(self.network.inject_stall_cycles as f64),
+            ),
+            ("cycles", Json::num(self.network.cycles as f64)),
+            (
+                "max_link_utilization",
+                Json::num(self.network.max_link_utilization(self.link_bytes)),
+            ),
+            ("links", Json::arr(links)),
+        ])
+    }
+
+    /// Cluster summary: makespan breakdown per node, network counters,
+    /// and each node's full single-accelerator report.
+    pub fn to_json(&self) -> Json {
+        let breakdown = self.node_reports.iter().map(NodeReport::breakdown_json).collect();
+        let reports = self.node_reports.iter().map(|n| n.report.to_json()).collect();
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("workload", Json::str(self.workload.clone())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("topology", Json::str(self.topology)),
+            ("link_bytes", Json::num(self.link_bytes as f64)),
+            ("total_cycles", Json::num(self.total_cycles as f64)),
+            ("nnz", Json::num(self.nnz() as f64)),
+            (
+                "communication_fraction",
+                Json::num(self.communication_fraction()),
+            ),
+            ("node_breakdown", Json::arr(breakdown)),
+            ("network", self.network_json()),
+            ("node_reports", Json::arr(reports)),
+            ("host_seconds", Json::num(self.host_seconds)),
+        ])
+    }
+}

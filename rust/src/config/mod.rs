@@ -154,6 +154,115 @@ impl std::str::FromStr for TopologyKind {
     }
 }
 
+/// Inter-node topology joining cluster nodes (`cluster::network`). A
+/// superset of [`TopologyKind`]: the intra-node fabric keys one node per
+/// DRAM channel, while the cluster layer is free to pick a mesh when the
+/// node count is not tied to the channel count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InterTopologyKind {
+    /// Every node pair exchanges messages directly (one arbitration
+    /// stage, no store-and-forward hops).
+    Crossbar,
+    /// Nodes in a row; messages hop neighbor-to-neighbor.
+    Line,
+    /// A line closed into a ring; messages take the shortest direction.
+    Ring,
+    /// Near-square 2D mesh with dimension-order (XY) routing.
+    Mesh,
+}
+
+impl InterTopologyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            InterTopologyKind::Crossbar => "crossbar",
+            InterTopologyKind::Line => "line",
+            InterTopologyKind::Ring => "ring",
+            InterTopologyKind::Mesh => "mesh",
+        }
+    }
+
+    pub const ALL: [InterTopologyKind; 4] = [
+        InterTopologyKind::Crossbar,
+        InterTopologyKind::Line,
+        InterTopologyKind::Ring,
+        InterTopologyKind::Mesh,
+    ];
+}
+
+impl std::str::FromStr for InterTopologyKind {
+    type Err = NameParseError;
+
+    fn from_str(s: &str) -> Result<InterTopologyKind, NameParseError> {
+        match s {
+            "crossbar" | "xbar" => Ok(InterTopologyKind::Crossbar),
+            "line" => Ok(InterTopologyKind::Line),
+            "ring" => Ok(InterTopologyKind::Ring),
+            "mesh" => Ok(InterTopologyKind::Mesh),
+            _ => Err(NameParseError::new(
+                "inter-node topology",
+                s,
+                &["crossbar", "line", "ring", "mesh"],
+            )),
+        }
+    }
+}
+
+/// Multi-accelerator scale-out parameters (`cluster`): how many
+/// accelerator nodes share the tensor and how the inter-node network
+/// joining them is shaped. The default — one node — is the literal
+/// single-accelerator code path (`sim::simulate`), the same
+/// identity-by-construction convention `lmb_banks == 1` and
+/// `reply_network == false` follow.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterConfig {
+    /// Accelerator nodes, each a full memory system (PEs, LMB banks,
+    /// fabric, DRAM channels). 1 = single accelerator, no cluster layer.
+    pub nodes: usize,
+    /// Inter-node topology (independent of the intra-node fabric's).
+    pub topology: InterTopologyKind,
+    /// Payload bytes one directed inter-node link moves per cycle — the
+    /// byte-level bandwidth budget (serial transceiver model, so a
+    /// `rank x 4`-byte factor row occupies the wire for several cycles).
+    pub link_bytes: u64,
+    /// Per-hop transport latency in cycles (SerDes + synchronization).
+    pub link_latency: u64,
+    /// Bounded queue depth (messages) per directed link; full queues
+    /// backpressure upstream senders.
+    pub link_queue: usize,
+}
+
+impl ClusterConfig {
+    /// The default: one node — exactly today's single-accelerator system.
+    pub fn single_node() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 1,
+            topology: InterTopologyKind::Ring,
+            link_bytes: 16,
+            link_latency: 8,
+            link_queue: 16,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes == 0 {
+            return Err("cluster: nodes must be > 0".into());
+        }
+        if self.link_bytes == 0 {
+            return Err("cluster: link_bytes must be > 0".into());
+        }
+        if self.link_latency == 0 {
+            return Err("cluster: link_latency must be > 0 (a hop takes a cycle)".into());
+        }
+        if self.link_queue < 2 {
+            // The inter-node network's injection rule keeps one queue
+            // slot free for transit traffic (bubble flow control); with
+            // a single-slot queue no node could ever inject.
+            return Err("cluster: link_queue must be >= 2 (bubble flow control)".into());
+        }
+        Ok(())
+    }
+}
+
 /// Multi-channel interconnect parameters (`sim::fabric`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct InterconnectConfig {
@@ -457,6 +566,9 @@ pub struct SystemConfig {
     pub dram: DramConfig,
     pub interconnect: InterconnectConfig,
     pub pe: PeConfig,
+    /// Multi-accelerator scale-out (defaults to one node — no cluster
+    /// layer; see [`ClusterConfig`]).
+    pub cluster: ClusterConfig,
     /// Observability products (off by default — see [`TelemetryConfig`]).
     pub telemetry: TelemetryConfig,
     /// Human label ("config-a", "config-b", ...).
@@ -499,6 +611,7 @@ impl SystemConfig {
             },
             dram: DramConfig::mig_u250(),
             interconnect: InterconnectConfig::single_channel(),
+            cluster: ClusterConfig::single_node(),
             telemetry: TelemetryConfig::off(),
             pe: PeConfig {
                 n_pes: 4,
@@ -621,6 +734,17 @@ impl SystemConfig {
         self.dram.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.interconnect.validate().map_err(|e| format!("{}: {e}", self.label))?;
         self.pe.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        self.cluster.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        if self.cluster.nodes > 1 && self.pe.fabric != FabricType::Type2 {
+            // Node sharding reuses the Type-2 per-PE partitioning rule;
+            // the Type-1 systolic stream has a single point of access
+            // and cannot be split across accelerators.
+            return Err(format!(
+                "{}: cluster.nodes {} needs a type2 fabric (type1 has a \
+                 single access stream)",
+                self.label, self.cluster.nodes
+            ));
+        }
         self.telemetry.validate().map_err(|e| format!("{}: {e}", self.label))?;
         Ok(())
     }
@@ -638,6 +762,8 @@ impl SystemConfig {
             "link_width" | "link-width" => "interconnect.link_width",
             "reply_network" | "reply-network" => "interconnect.reply_network",
             "lmb_banks" | "lmb-banks" => "system.lmb_banks",
+            "nodes" => "cluster.nodes",
+            "inter_topology" | "inter-topology" => "cluster.topology",
             other => other,
         };
         match key {
@@ -687,6 +813,14 @@ impl SystemConfig {
             "dram.bus_admission_factor" => {
                 self.dram.bus_admission_factor = parse_u64(value)?
             }
+            "cluster.nodes" => self.cluster.nodes = parse_usize(value)?,
+            "cluster.topology" => {
+                self.cluster.topology =
+                    value.parse::<InterTopologyKind>().map_err(|e| e.to_string())?
+            }
+            "cluster.link_bytes" => self.cluster.link_bytes = parse_u64(value)?,
+            "cluster.link_latency" => self.cluster.link_latency = parse_u64(value)?,
+            "cluster.link_queue" => self.cluster.link_queue = parse_usize(value)?,
             "telemetry.trace" => self.telemetry.trace = parse_on_off(key, value)?,
             "telemetry.timeline" => self.telemetry.timeline = parse_on_off(key, value)?,
             "telemetry.sample" => self.telemetry.sample = parse_u64(value)?,
@@ -760,6 +894,16 @@ impl SystemConfig {
                     ("n_pes", Json::num(self.pe.n_pes as f64)),
                     ("fabric", Json::str(self.pe.fabric.name())),
                     ("rank", Json::num(self.pe.rank as f64)),
+                ]),
+            ),
+            (
+                "cluster",
+                Json::obj(vec![
+                    ("nodes", Json::num(self.cluster.nodes as f64)),
+                    ("topology", Json::str(self.cluster.topology.name())),
+                    ("link_bytes", Json::num(self.cluster.link_bytes as f64)),
+                    ("link_latency", Json::num(self.cluster.link_latency as f64)),
+                    ("link_queue", Json::num(self.cluster.link_queue as f64)),
                 ]),
             ),
             (
@@ -984,6 +1128,73 @@ mod tests {
         }
         assert_eq!("xbar".parse(), Ok(TopologyKind::Crossbar));
         assert!("mesh".parse::<TopologyKind>().is_err());
+        // The inter-node layer is where mesh lives.
+        for t in InterTopologyKind::ALL {
+            assert_eq!(t.name().parse(), Ok(t));
+        }
+        assert_eq!("mesh".parse(), Ok(InterTopologyKind::Mesh));
+        assert!("torus".parse::<InterTopologyKind>().is_err());
+    }
+
+    #[test]
+    fn cluster_defaults_single_node_and_overrides_round_trip() {
+        // Default: one node — the literal single-accelerator code path.
+        let c = SystemConfig::config_b();
+        assert_eq!(c.cluster, ClusterConfig::single_node());
+        assert_eq!(c.cluster.nodes, 1);
+        c.validate().unwrap();
+
+        let mut c = SystemConfig::config_b();
+        c.apply_override("nodes", "4").unwrap();
+        c.apply_override("inter-topology", "mesh").unwrap();
+        c.apply_override("cluster.link_bytes", "32").unwrap();
+        c.apply_override("cluster.link_latency", "12").unwrap();
+        c.apply_override("cluster.link_queue", "8").unwrap();
+        assert_eq!(c.cluster.nodes, 4);
+        assert_eq!(c.cluster.topology, InterTopologyKind::Mesh);
+        assert_eq!(c.cluster.link_bytes, 32);
+        assert_eq!(c.cluster.link_latency, 12);
+        assert_eq!(c.cluster.link_queue, 8);
+        c.validate().unwrap();
+        // Snake_case alias, like the other shorthands.
+        c.apply_override("inter_topology", "line").unwrap();
+        assert_eq!(c.cluster.topology, InterTopologyKind::Line);
+        assert!(c.apply_override("inter-topology", "torus").is_err());
+
+        let j = c.to_json();
+        let cl = j.get("cluster").unwrap();
+        assert_eq!(cl.get("nodes").unwrap().as_usize(), Some(4));
+        assert_eq!(cl.get("topology").unwrap().as_str(), Some("line"));
+        assert_eq!(cl.get("link_bytes").unwrap().as_usize(), Some(32));
+    }
+
+    #[test]
+    fn cluster_validation() {
+        let mut c = SystemConfig::config_b();
+        c.cluster.nodes = 0;
+        assert!(c.validate().is_err());
+        c.cluster.nodes = 3; // any count >= 1 is fine, not only powers of two
+        c.validate().unwrap();
+        c.cluster.link_bytes = 0;
+        assert!(c.validate().is_err());
+        c.cluster.link_bytes = 16;
+        c.cluster.link_latency = 0;
+        assert!(c.validate().is_err());
+        c.cluster.link_latency = 1;
+        c.cluster.link_queue = 0;
+        assert!(c.validate().is_err());
+        // Depth 1 leaves no bubble for transit traffic — also rejected.
+        c.cluster.link_queue = 1;
+        assert!(c.validate().is_err());
+        c.cluster.link_queue = 4;
+        c.validate().unwrap();
+        // Multi-node sharding needs the Type-2 per-PE partition rule.
+        let mut a = SystemConfig::config_a();
+        a.cluster.nodes = 2;
+        let err = a.validate().unwrap_err();
+        assert!(err.contains("type2"), "{err}");
+        a.pe.fabric = FabricType::Type2;
+        a.validate().unwrap();
     }
 
     #[test]

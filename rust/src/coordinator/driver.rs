@@ -41,7 +41,7 @@ impl TimedCpAls {
     /// Run CP-ALS with the PJRT MTTKRP kernel and simulate each mode's
     /// memory traffic on the configured system.
     pub fn run(&self, t: &CooTensor, opts: CpAlsOptions) -> Result<TimedCpAlsReport> {
-        anyhow::ensure!(
+        crate::ensure!(
             opts.rank == self.manifest.partials.rank,
             "CP-ALS rank {} != AOT rank {} — re-run `make artifacts --rank`",
             opts.rank,
@@ -69,7 +69,7 @@ impl TimedCpAls {
         // Numerics through PJRT.
         let mut exec = MttkrpExecutor::new(&self.manifest)?;
         let mut als = CpAls::new(t, opts);
-        let mut err: Option<anyhow::Error> = None;
+        let mut err: Option<crate::Error> = None;
         let report = {
             let mut kernel =
                 |tt: &CooTensor, m: Mode, m1: &DenseMatrix, m2: &DenseMatrix| -> DenseMatrix {

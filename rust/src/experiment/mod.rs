@@ -52,6 +52,7 @@ pub use runset::{Run, RunSet};
 pub use scenario::{Scenario, TensorSource, DATASETS};
 pub use sweep::{default_threads, Point, Sweep};
 
+use crate::cluster::ClusterReport;
 use crate::config::SystemConfig;
 use crate::sim::SimReport;
 
@@ -67,11 +68,33 @@ pub fn preset(name: &str) -> Result<SystemConfig, String> {
 /// Simulate a single (config, scenario) pair — the degenerate sweep.
 /// Runs from the scenario's streaming trace source (bounded memory);
 /// panics on a broken dataset source, like the workload path used to.
+///
+/// With `cfg.cluster.nodes > 1` the run is a sharded multi-accelerator
+/// cluster (see [`crate::cluster`]) and the returned report is the
+/// flattened cluster view; use [`run_cluster`] to keep the per-node
+/// breakdown. With the single-node default this is exactly
+/// [`crate::sim::simulate`].
 pub fn run_one(cfg: &SystemConfig, scenario: &Scenario) -> SimReport {
+    if cfg.cluster.nodes > 1 {
+        return run_cluster(cfg, scenario).into_report();
+    }
     let src = scenario
         .trace_source()
         .unwrap_or_else(|e| panic!("building trace source: {e}"));
     crate::sim::simulate(cfg, &src)
+}
+
+/// Simulate a (config, scenario) pair as an accelerator cluster and keep
+/// the full cluster result: per-node reports, makespan decomposition
+/// (compute / local memory / communication) and inter-node network
+/// counters. Works for any node count — with one node the communication
+/// phase is empty and [`ClusterReport::into_report`] returns the plain
+/// run verbatim.
+pub fn run_cluster(cfg: &SystemConfig, scenario: &Scenario) -> ClusterReport {
+    let src = scenario
+        .trace_source()
+        .unwrap_or_else(|e| panic!("building trace source: {e}"));
+    crate::cluster::simulate_cluster(cfg, &src)
 }
 
 #[cfg(test)]
@@ -84,6 +107,20 @@ mod tests {
         assert_eq!(preset("a").unwrap().label, "config-a");
         assert_eq!(preset("config-b").unwrap().label, "config-b");
         assert!(preset("c").is_err());
+    }
+
+    #[test]
+    fn run_one_dispatches_to_the_cluster_layer() {
+        let mut cfg = SystemConfig::config_b();
+        cfg.cluster.nodes = 2;
+        let scenario = Scenario::random([40, 3_000, 5_000], 400, 3).for_config(&cfg);
+        let cl = run_cluster(&cfg, &scenario);
+        assert_eq!(cl.nodes, 2);
+        assert_eq!(cl.node_reports.len(), 2);
+        // run_one returns the same cluster run, flattened.
+        let flat = run_one(&cfg, &scenario);
+        assert_eq!(flat.total_cycles, cl.total_cycles);
+        assert_eq!(flat.nnz, cl.nnz());
     }
 
     #[test]

@@ -33,19 +33,7 @@ impl Run {
     /// `key=value key=value` label (falls back to the config label for
     /// an axis-less single run).
     pub fn label(&self) -> String {
-        if self.axes.is_empty() {
-            return self.cfg.label.clone();
-        }
-        let mut out = String::new();
-        for (i, (k, v)) in self.axes.iter().enumerate() {
-            if i > 0 {
-                out.push(' ');
-            }
-            out.push_str(k);
-            out.push('=');
-            out.push_str(v);
-        }
-        out
+        axes_label(&self.axes, &self.cfg.label)
     }
 
     /// True when this run matches every `(axis, value)` selector.
@@ -70,6 +58,25 @@ impl Run {
             ("report", self.report.to_json()),
         ])
     }
+}
+
+/// The label a grid point will have once run — shared by [`Run::label`]
+/// and the sweep's resume filter, so "already in the output file" and
+/// "what this run will be called" can never drift apart.
+pub(crate) fn axes_label(axes: &[(String, String)], cfg_label: &str) -> String {
+    if axes.is_empty() {
+        return cfg_label.to_string();
+    }
+    let mut out = String::new();
+    for (i, (k, v)) in axes.iter().enumerate() {
+        if i > 0 {
+            out.push(' ');
+        }
+        out.push_str(k);
+        out.push('=');
+        out.push_str(v);
+    }
+    out
 }
 
 /// All runs of one sweep, in deterministic grid order.

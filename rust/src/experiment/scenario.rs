@@ -243,13 +243,18 @@ impl Scenario {
     }
 
     /// Align PE count, rank and row alignment with `cfg` (the tensor and
-    /// its cache survive; the workload is rebuilt only on change).
+    /// its cache survive; the workload is rebuilt only on change). A
+    /// multi-node cluster needs one stream per PE *per node* — the
+    /// cluster layer slices the `n_pes x nodes` streams back into
+    /// per-node windows — so the stream count scales with
+    /// `cluster.nodes` (x1 with the single-node default).
     pub(crate) fn sync_geometry(&mut self, cfg: &SystemConfig) {
-        if self.n_pes != cfg.pe.n_pes
+        let streams = cfg.pe.n_pes * cfg.cluster.nodes;
+        if self.n_pes != streams
             || self.rank != cfg.pe.rank
             || self.row_align != cfg.dram.row_bytes
         {
-            self.n_pes = cfg.pe.n_pes;
+            self.n_pes = streams;
             self.rank = cfg.pe.rank;
             self.row_align = cfg.dram.row_bytes;
             self.invalidate_workload();

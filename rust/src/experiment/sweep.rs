@@ -9,7 +9,7 @@
 //! up front and shared read-only across workers; each worker opens its
 //! own cursors, so streams never contend.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
@@ -19,9 +19,10 @@ use crate::resource::max_frequency_mhz;
 use crate::sim::{simulate, MemorySystem, TelemetryOutput};
 use crate::tensor::Mode;
 use crate::trace::TraceSource;
+use crate::util::json::Json;
 use crate::util::NameParseError;
 
-use super::runset::{Run, RunSet};
+use super::runset::{axes_label, Run, RunSet};
 use super::{preset, Scenario};
 
 /// One grid dimension: one config/scenario key (or several zipped keys
@@ -56,7 +57,9 @@ pub struct Point {
 ///   and `pe.fabric`).
 /// * anything else — a [`SystemConfig::apply_override`] key, including
 ///   the `channels` / `topology` / `link-width` / `lmb-banks` /
-///   `reply-network` shorthands.
+///   `reply-network` shorthands and the cluster axes (`nodes`,
+///   `inter-topology`, `cluster.link_bytes`, ...) — multi-node points
+///   run through [`crate::cluster`] and return the flattened report.
 #[derive(Debug, Clone)]
 pub struct Sweep {
     base: SystemConfig,
@@ -64,6 +67,7 @@ pub struct Sweep {
     axes: Vec<Axis>,
     threads: usize,
     telemetry_dir: Option<PathBuf>,
+    resume_from: Option<PathBuf>,
 }
 
 /// Worker count the runner defaults to (the machine's parallelism).
@@ -79,7 +83,20 @@ impl Sweep {
             axes: Vec::new(),
             threads: default_threads(),
             telemetry_dir: None,
+            resume_from: None,
         }
+    }
+
+    /// Resume an interrupted sweep: grid points whose label already
+    /// appears as a `label` field in the JSON-lines file at `path` are
+    /// skipped, and [`Sweep::run`] returns only the newly executed runs
+    /// (append them to the same file to complete it). A missing file
+    /// skips nothing; an unreadable or non-JSONL file is an error —
+    /// silently re-running everything against a corrupt output would
+    /// duplicate records.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Sweep {
+        self.resume_from = Some(path.into());
+        self
     }
 
     /// Write per-run telemetry artifacts into `dir` (created on demand):
@@ -175,9 +192,18 @@ impl Sweep {
         Ok(points)
     }
 
-    /// Execute the grid and collect a [`RunSet`] in grid order.
+    /// Execute the grid and collect a [`RunSet`] in grid order. With
+    /// [`Sweep::resume_from`], already-recorded grid points are skipped
+    /// and only the new runs are returned.
     pub fn run(&self) -> Result<RunSet, String> {
-        let points = self.grid()?;
+        let mut points = self.grid()?;
+        if let Some(path) = &self.resume_from {
+            let done = completed_labels(path)?;
+            points.retain(|p| !done.contains(&axes_label(&p.axes, &p.cfg.label)));
+        }
+        if points.is_empty() {
+            return Ok(RunSet { axis_names: self.axis_names(), runs: Vec::new() });
+        }
         // Resolve each distinct trace source once, before spawning
         // workers: source construction can fail (missing/garbled `.tns`
         // files) and the error must propagate instead of poisoning a
@@ -213,7 +239,14 @@ impl Sweep {
                     let p = &points[i];
                     let src = &sources[&p.scenario.key()];
                     let name = src.name().to_string();
-                    let (report, tel) = if want_telemetry && p.cfg.telemetry.enabled() {
+                    let (report, tel) = if p.cfg.cluster.nodes > 1 {
+                        // Multi-node points run through the cluster layer
+                        // and flatten to a single report (per-node cycle
+                        // telemetry is not plumbed through sweeps — use
+                        // `run_cluster` directly for the full breakdown).
+                        let cl = crate::cluster::simulate_cluster(&p.cfg, src);
+                        (cl.into_report(), None)
+                    } else if want_telemetry && p.cfg.telemetry.enabled() {
                         let mut sys = MemorySystem::new(&p.cfg, src);
                         let report = sys.run(&name);
                         (report, Some(sys.take_telemetry(&name)))
@@ -287,6 +320,29 @@ fn write_telemetry_artifacts(
         }
     }
     Ok(())
+}
+
+/// Labels already recorded in a JSON-lines results file (resume filter).
+/// A missing file is an empty set; a present-but-corrupt file is an
+/// error.
+fn completed_labels(path: &Path) -> Result<HashSet<String>, String> {
+    let body = match std::fs::read_to_string(path) {
+        Ok(body) => body,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(HashSet::new()),
+        Err(e) => return Err(format!("resume file {}: {e}", path.display())),
+    };
+    let mut done = HashSet::new();
+    for (i, line) in body.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let rec = Json::parse(line)
+            .map_err(|e| format!("resume file {} line {}: {e}", path.display(), i + 1))?;
+        if let Some(label) = rec.get("label").and_then(Json::as_str) {
+            done.insert(label.to_string());
+        }
+    }
+    Ok(done)
 }
 
 /// Apply one axis assignment to the (config, scenario) pair.
@@ -469,9 +525,73 @@ mod tests {
     }
 
     #[test]
+    fn resume_skips_grid_cells_already_in_the_output_file() {
+        let dir = std::env::temp_dir().join(format!("memsys-resume-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("sweep.jsonl");
+        let sweep = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .axis("lmb_banks", &["1", "2"])
+            .axis("channels", &["1", "2"])
+            .threads(2);
+        let full = sweep.clone().run().unwrap();
+        assert_eq!(full.len(), 4);
+        full.write_jsonl(&out).unwrap();
+        // Complete file: nothing left to run.
+        let none = sweep.clone().resume_from(&out).run().unwrap();
+        assert!(none.is_empty());
+        assert_eq!(none.axis_names, sweep.axis_names());
+        // Partial file (one record removed): exactly that cell re-runs,
+        // with the same label and report as the uninterrupted sweep.
+        let target = full.runs[2].label();
+        let body = std::fs::read_to_string(&out).unwrap();
+        let kept: Vec<&str> = body
+            .lines()
+            .filter(|l| {
+                Json::parse(l).unwrap().get("label").unwrap().as_str()
+                    != Some(target.as_str())
+            })
+            .collect();
+        assert_eq!(kept.len(), 3);
+        std::fs::write(&out, kept.join("\n") + "\n").unwrap();
+        let partial = sweep.clone().resume_from(&out).run().unwrap();
+        assert_eq!(partial.len(), 1);
+        assert_eq!(partial.runs[0].label(), target);
+        assert_eq!(
+            partial.runs[0].report.diff(&full.runs[2].report),
+            None,
+            "resumed cell must reproduce the uninterrupted run"
+        );
+        // Missing file: a fresh sweep runs everything.
+        let fresh = sweep.clone().resume_from(dir.join("absent.jsonl")).run().unwrap();
+        assert_eq!(fresh.len(), 4);
+        // Corrupt file: error, not silent duplication.
+        std::fs::write(&out, "not json\n").unwrap();
+        assert!(sweep.resume_from(&out).run().is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn slug_flattens_labels() {
         assert_eq!(slug("system=proposed scale=0.01"), "system-proposed-scale-0-01");
         assert_eq!(slug("config-b"), "config-b");
+    }
+
+    #[test]
+    fn cluster_axes_flow_through_overrides_and_geometry() {
+        use crate::config::InterTopologyKind;
+        let sweep = Sweep::new(SystemConfig::config_b(), tiny_scenario())
+            .axis("nodes", &["1", "2"])
+            .axis("inter-topology", &["ring", "mesh"]);
+        let grid = sweep.grid().unwrap();
+        assert_eq!(grid.len(), 4);
+        assert_eq!(grid[0].cfg.cluster.nodes, 1);
+        assert_eq!(grid[2].cfg.cluster.nodes, 2);
+        assert_eq!(grid[1].cfg.cluster.topology, InterTopologyKind::Mesh);
+        // Stream geometry scales with the node count (one window of
+        // n_pes streams per node).
+        assert_eq!(grid[0].scenario.n_pes, grid[0].cfg.pe.n_pes);
+        assert_eq!(grid[2].scenario.n_pes, 2 * grid[2].cfg.pe.n_pes);
+        assert_ne!(grid[0].scenario.key(), grid[2].scenario.key());
     }
 
     #[test]

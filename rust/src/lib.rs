@@ -17,7 +17,9 @@
 //!
 //! * **L3 (this crate)** — event loop, memory-system simulation, batching,
 //!   routing, CLI, metrics. Drivers compose simulations through the
-//!   [`experiment`] API (scenario builder + parallel sweep runner).
+//!   [`experiment`] API (scenario builder + parallel sweep runner);
+//!   [`cluster`] shards a tensor across several such accelerators behind
+//!   a routed inter-node network.
 //! * **L2 (python/compile/model.py)** — batched spMTTKRP JAX graph.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (partials +
 //!   scatter-as-matmul), lowered with `interpret=True` into the same HLO.
@@ -38,6 +40,7 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod experiment;
@@ -49,5 +52,7 @@ pub mod tensor;
 pub mod trace;
 pub mod util;
 
+pub use util::error::Error;
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;

@@ -72,20 +72,25 @@ USAGE: mttkrp-memsys <subcommand> [--options]
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
             [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
             [--link-width W] [--lmb-banks N] [--reply-network on|off]
+            [--nodes N] [--inter-topology crossbar|line|ring|mesh]
             [--scale 0.01] [--dataset synth01|synth02|file.tns] [--<section.key> v]
             [--trace-out trace.json] [--timeline tl.jsonl] [--sample N] [--window W]
+            (--nodes > 1 shards the tensor across a routed accelerator
+             cluster and prints the per-node makespan breakdown)
   trace     --trace-out trace.json [--timeline tl.jsonl] [--sample N] [--window W]
             (simulate with tracing forced on; all simulate options apply;
              load the JSON in Perfetto / chrome://tracing)
   report-diff  a.json b.json       first diverging field of two SimReports
   sweep     --axis key=v1,v2,... [--axis ...] [--threads N]
-            [--baseline axis=value] [--out runs.jsonl]
+            [--baseline axis=value] [--out runs.jsonl] [--resume]
             [--preset b] [--dataset synth01|file.tns] [--scale 0.01] [--mode i|j|k]
             [--telemetry-dir DIR]
             (axes: system, preset, dataset, scale, mode, fabric, channels,
-             topology, link-width, lmb-banks, reply-network, and any
-             --<section.key> override key, e.g. telemetry.trace;
-             dataset values may be synthetic names or .tns paths)
+             topology, link-width, lmb-banks, reply-network, nodes,
+             inter-topology, and any --<section.key> override key, e.g.
+             telemetry.trace; dataset values may be synthetic names or
+             .tns paths; --resume skips cells already in --out and
+             appends only the new ones)
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
   gen       --out t.tns [--dataset synth01] [--scale 0.01]
@@ -94,20 +99,20 @@ USAGE: mttkrp-memsys <subcommand> [--options]
 }
 
 /// `--mode i|j|k` (default: mode-1/`i`, the paper's evaluation mode).
-fn mode_arg(args: &Args) -> anyhow::Result<Mode> {
+fn mode_arg(args: &Args) -> mttkrp_memsys::Result<Mode> {
     Ok(args.get_str("mode", "i").parse::<Mode>()?)
 }
 
 /// `--dataset`/`--scale`/`--mode` → a Scenario shaped for `cfg`.
-fn scenario_arg(args: &Args, cfg: &SystemConfig) -> anyhow::Result<Scenario> {
+fn scenario_arg(args: &Args, cfg: &SystemConfig) -> mttkrp_memsys::Result<Scenario> {
     let name = args.get_str("dataset", "synth01");
     let scale = args.get_f64("scale", 0.01);
-    let scenario = Scenario::dataset(&name, scale).map_err(anyhow::Error::msg)?;
+    let scenario = Scenario::dataset(&name, scale).map_err(mttkrp_memsys::Error::msg)?;
     Ok(scenario.mode(mode_arg(args)?).for_config(cfg))
 }
 
-fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
-    let mut cfg = experiment::preset(&args.get_str("preset", "b")).map_err(anyhow::Error::msg)?;
+fn preset_cfg(args: &Args) -> mttkrp_memsys::Result<SystemConfig> {
+    let mut cfg = experiment::preset(&args.get_str("preset", "b")).map_err(mttkrp_memsys::Error::msg)?;
     if let Some(sys) = args.get("system") {
         let kind: SystemKind = sys.parse()?;
         cfg = cfg.as_baseline(kind);
@@ -115,12 +120,13 @@ fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
     // Pass through any config-style overrides (`--cache.lines 4096`).
     for (k, v) in args.options() {
         if k.contains('.') {
-            cfg.apply_override(k, v).map_err(|e| anyhow::anyhow!(e))?;
+            cfg.apply_override(k, v).map_err(|e| mttkrp_memsys::format_err!(e))?;
         }
     }
-    // Interconnect + LMB shorthands: `--channels 4 --topology ring
-    // --link-width 2 --lmb-banks 4 --reply-network on` (snake_case
-    // spellings stay as hidden aliases).
+    // Interconnect + LMB + cluster shorthands: `--channels 4 --topology
+    // ring --link-width 2 --lmb-banks 4 --reply-network on --nodes 4
+    // --inter-topology mesh` (snake_case spellings stay as hidden
+    // aliases).
     for key in [
         "channels",
         "topology",
@@ -128,37 +134,40 @@ fn preset_cfg(args: &Args) -> anyhow::Result<SystemConfig> {
         "link_width",
         "lmb-banks",
         "lmb_banks",
+        "nodes",
+        "inter-topology",
+        "inter_topology",
     ] {
         if let Some(v) = args.get(key) {
-            cfg.apply_override(key, v).map_err(|e| anyhow::anyhow!(e))?;
+            cfg.apply_override(key, v).map_err(|e| mttkrp_memsys::format_err!(e))?;
         }
     }
     for key in ["reply-network", "reply_network"] {
         if let Some(v) = args.get(key) {
-            cfg.apply_override(key, v).map_err(|e| anyhow::anyhow!(e))?;
+            cfg.apply_override(key, v).map_err(|e| mttkrp_memsys::format_err!(e))?;
         } else if args.flag(key) {
             // Bare `--reply-network` means "turn it on".
-            cfg.apply_override(key, "on").map_err(|e| anyhow::anyhow!(e))?;
+            cfg.apply_override(key, "on").map_err(|e| mttkrp_memsys::format_err!(e))?;
         }
     }
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate().map_err(|e| mttkrp_memsys::format_err!(e))?;
     Ok(cfg)
 }
 
-fn load_tensor(args: &Args) -> anyhow::Result<Arc<CooTensor>> {
+fn load_tensor(args: &Args) -> mttkrp_memsys::Result<Arc<CooTensor>> {
     let name = args.get_str("dataset", "synth01");
     let scale = args.get_f64("scale", 0.01);
-    let scenario = Scenario::dataset(&name, scale).map_err(anyhow::Error::msg)?;
+    let scenario = Scenario::dataset(&name, scale).map_err(mttkrp_memsys::Error::msg)?;
     Ok(scenario.tensor())
 }
 
-fn manifest() -> anyhow::Result<Manifest> {
+fn manifest() -> mttkrp_memsys::Result<Manifest> {
     let dir = find_artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("artifacts not found — run `make artifacts`"))?;
+        .ok_or_else(|| mttkrp_memsys::format_err!("artifacts not found — run `make artifacts`"))?;
     Manifest::load(&dir)
 }
 
-fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
+fn cmd_fig4(args: &Args) -> mttkrp_memsys::Result<()> {
     let scale = args.get_f64("scale", 0.01);
     let mode = mode_arg(args)?;
     println!("Fig. 4 — memory-access-time speedup over IP-only (scale {scale})\n");
@@ -173,7 +182,7 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
         .axis("system", &["ip-only", "cache-only", "dma-only", "proposed"])
         .threads(args.get_usize("threads", default_threads()))
         .run()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(mttkrp_memsys::Error::msg)?;
     let mut table = Table::new(&[
         "category",
         "ip-only",
@@ -217,15 +226,15 @@ fn cmd_fig4(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_table2() -> anyhow::Result<()> {
-    let a = experiment::preset("a").map_err(anyhow::Error::msg)?;
-    let b = experiment::preset("b").map_err(anyhow::Error::msg)?;
+fn cmd_table2() -> mttkrp_memsys::Result<()> {
+    let a = experiment::preset("a").map_err(mttkrp_memsys::Error::msg)?;
+    let b = experiment::preset("b").map_err(mttkrp_memsys::Error::msg)?;
     println!("Table II — module configuration and resource utilization (model)\n");
     println!("{}", table2(&[&a, &b]));
     Ok(())
 }
 
-fn cmd_table3(args: &Args) -> anyhow::Result<()> {
+fn cmd_table3(args: &Args) -> mttkrp_memsys::Result<()> {
     let scale = args.get_f64("scale", 1.0);
     println!("Table III — sparse 3D tensor datasets (scale {scale})\n");
     let mut t = Table::new(&["Tensor", "Dimensions", "Nonzeros", "Density"]).aligns(&[
@@ -255,7 +264,7 @@ struct TelemetryPaths {
     timeline: Option<String>,
 }
 
-fn telemetry_paths(args: &Args, cfg: &mut SystemConfig) -> anyhow::Result<TelemetryPaths> {
+fn telemetry_paths(args: &Args, cfg: &mut SystemConfig) -> mttkrp_memsys::Result<TelemetryPaths> {
     let paths = TelemetryPaths {
         trace: args.get("trace-out").map(str::to_string),
         timeline: args.get("timeline").map(str::to_string),
@@ -268,7 +277,7 @@ fn telemetry_paths(args: &Args, cfg: &mut SystemConfig) -> anyhow::Result<Teleme
     }
     cfg.telemetry.sample = args.get_u64("sample", cfg.telemetry.sample);
     cfg.telemetry.window = args.get_u64("window", cfg.telemetry.window);
-    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate().map_err(|e| mttkrp_memsys::format_err!(e))?;
     Ok(paths)
 }
 
@@ -278,7 +287,7 @@ fn run_with_telemetry(
     cfg: &SystemConfig,
     src: &Arc<dyn TraceSource>,
     paths: &TelemetryPaths,
-) -> anyhow::Result<SimReport> {
+) -> mttkrp_memsys::Result<SimReport> {
     let name = src.name().to_string();
     let mut sys = MemorySystem::new(cfg, src);
     let report = sys.run(&name);
@@ -300,11 +309,35 @@ fn run_with_telemetry(
     Ok(report)
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> mttkrp_memsys::Result<()> {
     let mut cfg = preset_cfg(args)?;
+    // Cluster runs (`--nodes N`, N > 1): shard the tensor across N
+    // accelerator nodes and print the full cluster report with its
+    // per-node makespan breakdown. Telemetry products are per-node
+    // artifacts the merged view cannot represent, so they are rejected
+    // rather than silently dropped.
+    if cfg.cluster.nodes > 1 {
+        mttkrp_memsys::ensure!(
+            args.get("trace-out").is_none() && args.get("timeline").is_none(),
+            "--trace-out/--timeline are single-node telemetry; not available with --nodes > 1"
+        );
+        let scenario = scenario_arg(args, &cfg)?;
+        let src = scenario.trace_source().map_err(mttkrp_memsys::Error::msg)?;
+        println!(
+            "cluster workload: {} nnz={} nodes={} x {} PE streams ({})",
+            src.name(),
+            fmt_count(src.nnz() as u64),
+            cfg.cluster.nodes,
+            cfg.pe.n_pes,
+            cfg.cluster.topology.name()
+        );
+        let cluster = experiment::run_cluster(&cfg, &scenario);
+        println!("{}", cluster.to_json().to_string_pretty());
+        return Ok(());
+    }
     let paths = telemetry_paths(args, &mut cfg)?;
     let scenario = scenario_arg(args, &cfg)?;
-    let src = scenario.trace_source().map_err(anyhow::Error::msg)?;
+    let src = scenario.trace_source().map_err(mttkrp_memsys::Error::msg)?;
     println!(
         "workload: {} nnz={} streams={} (streaming, <= {WORK_CHUNK} items buffered per stream)",
         src.name(),
@@ -317,16 +350,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `trace` — `simulate` with request-lifecycle tracing forced on.
-fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+fn cmd_trace(args: &Args) -> mttkrp_memsys::Result<()> {
     let mut cfg = preset_cfg(args)?;
     cfg.telemetry.trace = true;
     let paths = telemetry_paths(args, &mut cfg)?;
-    anyhow::ensure!(
+    mttkrp_memsys::ensure!(
         paths.trace.is_some(),
         "trace wants --trace-out <file.json> (add --timeline <file.jsonl> for the time-series)"
     );
     let scenario = scenario_arg(args, &cfg)?;
-    let src = scenario.trace_source().map_err(anyhow::Error::msg)?;
+    let src = scenario.trace_source().map_err(mttkrp_memsys::Error::msg)?;
     println!(
         "tracing {} (sample 1-in-{}, window {} cycles)",
         src.name(),
@@ -347,14 +380,14 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
 /// `report-diff a.json b.json` — print the first diverging field of two
 /// SimReport dumps (host timing is masked). Exits 1 on divergence so the
 /// command doubles as a regression check in scripts.
-fn cmd_report_diff(args: &Args) -> anyhow::Result<()> {
+fn cmd_report_diff(args: &Args) -> mttkrp_memsys::Result<()> {
     let [a_path, b_path] = args.positionals() else {
-        anyhow::bail!("report-diff wants exactly two positional report.json paths");
+        mttkrp_memsys::bail!("report-diff wants exactly two positional report.json paths");
     };
-    let load = |p: &String| -> anyhow::Result<Json> {
+    let load = |p: &String| -> mttkrp_memsys::Result<Json> {
         let src = std::fs::read_to_string(p)
-            .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
-        Json::parse(&src).map_err(|e| anyhow::anyhow!("{p}: {e}"))
+            .map_err(|e| mttkrp_memsys::format_err!("cannot read {p}: {e}"))?;
+        Json::parse(&src).map_err(|e| mttkrp_memsys::format_err!("{p}: {e}"))
     };
     let (a, b) = (load(a_path)?, load(b_path)?);
     // Host wall time is machine noise, never a simulation divergence.
@@ -388,7 +421,7 @@ fn cmd_report_diff(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+fn cmd_sweep(args: &Args) -> mttkrp_memsys::Result<()> {
     let cfg = preset_cfg(args)?;
     let scenario = scenario_arg(args, &cfg)?;
     let threads = args.get_usize("threads", default_threads());
@@ -399,8 +432,17 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     if let Some(dir) = telemetry_dir {
         sweep = sweep.telemetry_dir(dir);
     }
+    // `--resume`: skip grid cells whose label already sits in `--out`,
+    // then append only the newly-run cells to the same file.
+    let resume = args.flag("resume");
+    if resume {
+        let out = args
+            .get("out")
+            .ok_or_else(|| mttkrp_memsys::format_err!("--resume needs --out <runs.jsonl>"))?;
+        sweep = sweep.resume_from(out);
+    }
     let specs = args.get_all("axis");
-    anyhow::ensure!(
+    mttkrp_memsys::ensure!(
         !specs.is_empty(),
         "at least one --axis required, e.g. --axis system=ip-only,proposed"
     );
@@ -408,9 +450,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     for spec in specs {
         let (key, vals) = spec
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("--axis wants key=v1,v2,..., got {spec:?}"))?;
+            .ok_or_else(|| mttkrp_memsys::format_err!("--axis wants key=v1,v2,..., got {spec:?}"))?;
         let values: Vec<&str> = vals.split(',').filter(|v| !v.is_empty()).collect();
-        anyhow::ensure!(!values.is_empty(), "axis {key:?} has no values");
+        mttkrp_memsys::ensure!(!values.is_empty(), "axis {key:?} has no values");
         has_preset_axis |= key == "preset";
         sweep = sweep.axis(key, &values);
     }
@@ -427,6 +469,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             "lmb_banks",
             "reply-network",
             "reply_network",
+            "nodes",
+            "inter-topology",
+            "inter_topology",
         ]
         .iter()
         .any(|k| args.get(k).is_some())
@@ -435,19 +480,19 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     if has_preset_axis && has_base_overrides {
         eprintln!(
             "warning: --axis preset=... resets the config per grid point; base --system, \
-             --<section.key>, --channels/--topology/--link-width/--lmb-banks/--reply-network \
-             flags are ignored there"
+             --<section.key>, --channels/--topology/--link-width/--lmb-banks/--reply-network/\
+             --nodes/--inter-topology flags are ignored there"
         );
     }
     let baseline = match args.get("baseline") {
         Some(spec) => Some(
             spec.split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("--baseline wants axis=value, got {spec:?}"))?,
+                .ok_or_else(|| mttkrp_memsys::format_err!("--baseline wants axis=value, got {spec:?}"))?,
         ),
         None => None,
     };
     let wall_t0 = std::time::Instant::now();
-    let runs = sweep.run().map_err(anyhow::Error::msg)?;
+    let runs = sweep.run().map_err(mttkrp_memsys::Error::msg)?;
     let wall = wall_t0.elapsed().as_secs_f64();
     println!("{}", runs.to_table(baseline).render());
     let sim_host: f64 = runs.runs.iter().map(|r| r.report.host_seconds).sum();
@@ -456,8 +501,15 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         runs.len()
     );
     if let Some(path) = args.get("out") {
-        runs.write_jsonl(std::path::Path::new(path))?;
-        println!("wrote {} JSON-lines to {path}", runs.len());
+        if resume && std::path::Path::new(path).exists() {
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new().append(true).open(path)?;
+            f.write_all(runs.to_jsonl().as_bytes())?;
+            println!("appended {} JSON-lines to {path}", runs.len());
+        } else {
+            runs.write_jsonl(std::path::Path::new(path))?;
+            println!("wrote {} JSON-lines to {path}", runs.len());
+        }
     }
     if let Some(dir) = telemetry_dir {
         let traced = runs.runs.iter().filter(|r| r.cfg.telemetry.enabled()).count();
@@ -466,7 +518,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_mttkrp(args: &Args) -> anyhow::Result<()> {
+fn cmd_mttkrp(args: &Args) -> mttkrp_memsys::Result<()> {
     let cfg = preset_cfg(args)?;
     let man = manifest()?;
     let mut t = load_tensor(args)?;
@@ -486,7 +538,7 @@ fn cmd_mttkrp(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_als(args: &Args) -> anyhow::Result<()> {
+fn cmd_als(args: &Args) -> mttkrp_memsys::Result<()> {
     let cfg = preset_cfg(args)?;
     let man = manifest()?;
     let t = load_tensor(args)?;
@@ -514,11 +566,11 @@ fn cmd_als(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+fn cmd_gen(args: &Args) -> mttkrp_memsys::Result<()> {
     let t = load_tensor(args)?;
     let out = args
         .get("out")
-        .ok_or_else(|| anyhow::anyhow!("--out <file.tns> required"))?;
+        .ok_or_else(|| mttkrp_memsys::format_err!("--out <file.tns> required"))?;
     io::write_tns(&t, std::path::Path::new(out))?;
     println!(
         "wrote {} ({} nnz, {})",
@@ -529,7 +581,7 @@ fn cmd_gen(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_freq() -> anyhow::Result<()> {
+fn cmd_freq() -> mttkrp_memsys::Result<()> {
     println!("max-frequency model (§IV-E): DMA-count and cache-size sweeps\n");
     // Model-only grids (no simulation): the Sweep resolves the configs,
     // the resource model prices each point.
@@ -538,11 +590,11 @@ fn cmd_freq() -> anyhow::Result<()> {
     let dma_grid = Sweep::new(base.clone(), scenario.clone())
         .axis("dma.n_buffers", &["1", "2", "4", "6", "8"])
         .grid()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(mttkrp_memsys::Error::msg)?;
     let cache_grid = Sweep::new(base, scenario)
         .axis("cache.lines", &["2048", "4096", "8192", "16384", "32768"])
         .grid()
-        .map_err(anyhow::Error::msg)?;
+        .map_err(mttkrp_memsys::Error::msg)?;
     let mut t = Table::new(&["dma buffers", "fmax (MHz)", "", "cache lines", "fmax (MHz)"])
         .aligns(&[
             Align::Right,

@@ -29,24 +29,24 @@ impl Manifest {
     /// Load and validate a manifest from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .map_err(|e| anyhow::anyhow!("read {}/manifest.json: {e}", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+            .map_err(|e| crate::format_err!("read {}/manifest.json: {e}", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| crate::format_err!("manifest parse: {e}"))?;
         let entries = j
             .get("entries")
-            .ok_or_else(|| anyhow::anyhow!("manifest missing entries"))?;
+            .ok_or_else(|| crate::format_err!("manifest missing entries"))?;
         let parse_entry = |name: &str| -> Result<EntryShapes> {
             let e = entries
                 .get(name)
-                .ok_or_else(|| anyhow::anyhow!("manifest missing entry {name}"))?;
+                .ok_or_else(|| crate::format_err!("manifest missing entry {name}"))?;
             let get = |k: &str| e.get(k).and_then(Json::as_usize);
             Ok(EntryShapes {
                 file: e
                     .get("file")
                     .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow::anyhow!("{name}: missing file"))?
+                    .ok_or_else(|| crate::format_err!("{name}: missing file"))?
                     .to_string(),
-                batch: get("batch").ok_or_else(|| anyhow::anyhow!("{name}: missing batch"))?,
-                rank: get("rank").ok_or_else(|| anyhow::anyhow!("{name}: missing rank"))?,
+                batch: get("batch").ok_or_else(|| crate::format_err!("{name}: missing batch"))?,
+                rank: get("rank").ok_or_else(|| crate::format_err!("{name}: missing rank"))?,
                 i_tile: get("i_tile"),
                 j: get("j"),
                 k: get("k"),
@@ -54,7 +54,7 @@ impl Manifest {
         };
         let partials = parse_entry("mttkrp_partials")?;
         let fused = parse_entry("mttkrp_fused").ok();
-        anyhow::ensure!(
+        crate::ensure!(
             dir.join(&partials.file).exists(),
             "artifact {} missing — run `make artifacts`",
             partials.file

@@ -77,14 +77,14 @@ impl MttkrpExecutor {
         m1: &DenseMatrix,
         m2: &DenseMatrix,
     ) -> Result<DenseMatrix> {
-        anyhow::ensure!(
+        crate::ensure!(
             m1.cols == self.rank && m2.cols == self.rank,
             "factor rank {} != AOT rank {} — re-run `make artifacts` with --rank",
             m1.cols,
             self.rank
         );
         let (om1, om2) = operand_modes(mode);
-        anyhow::ensure!(
+        crate::ensure!(
             m1.rows as u64 == t.dim(om1) && m2.rows as u64 == t.dim(om2),
             "operand shape mismatch"
         );
@@ -121,7 +121,7 @@ impl MttkrpExecutor {
             )?;
             let pvec = partials
                 .to_vec::<f32>()
-                .map_err(|e| anyhow::anyhow!("partials to_vec: {e:?}"))?;
+                .map_err(|e| crate::format_err!("partials to_vec: {e:?}"))?;
             self.stats.execute_seconds += e0.elapsed().as_secs_f64();
 
             // Scatter-accumulate into output fibers.

@@ -16,7 +16,7 @@ impl PjrtRuntime {
     /// Create a CPU PJRT client.
     pub fn cpu() -> Result<PjrtRuntime> {
         let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+            .map_err(|e| crate::format_err!("PjRtClient::cpu: {e:?}"))?;
         Ok(PjrtRuntime {
             client,
             executables: HashMap::new(),
@@ -29,17 +29,17 @@ impl PjrtRuntime {
 
     /// Load + compile an HLO-text artifact under `name`.
     pub fn load_hlo_text(&mut self, name: &str, path: &Path) -> Result<()> {
-        anyhow::ensure!(path.exists(), "artifact {} missing", path.display());
+        crate::ensure!(path.exists(), "artifact {} missing", path.display());
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+                .ok_or_else(|| crate::format_err!("non-utf8 path"))?,
         )
-        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        .map_err(|e| crate::format_err!("parse {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+            .map_err(|e| crate::format_err!("compile {name}: {e:?}"))?;
         self.executables.insert(name.to_string(), exe);
         Ok(())
     }
@@ -55,28 +55,28 @@ impl PjrtRuntime {
         let exe = self
             .executables
             .get(name)
-            .ok_or_else(|| anyhow::anyhow!("executable {name:?} not loaded"))?;
+            .ok_or_else(|| crate::format_err!("executable {name:?} not loaded"))?;
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+            .map_err(|e| crate::format_err!("execute {name}: {e:?}"))?;
         let lit = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e:?}"))?;
+            .map_err(|e| crate::format_err!("to_literal {name}: {e:?}"))?;
         lit.to_tuple1()
-            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+            .map_err(|e| crate::format_err!("untuple {name}: {e:?}"))
     }
 }
 
 /// Build an f32 literal of the given logical shape from a flat slice.
 pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
     let n: i64 = shape.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape {shape:?} != len {}", data.len());
+    crate::ensure!(n as usize == data.len(), "shape {shape:?} != len {}", data.len());
     let lit = xla::Literal::vec1(data);
     if shape.len() == 1 {
         return Ok(lit);
     }
     lit.reshape(shape)
-        .map_err(|e| anyhow::anyhow!("reshape {shape:?}: {e:?}"))
+        .map_err(|e| crate::format_err!("reshape {shape:?}: {e:?}"))
 }
 
 /// Build an i32 literal (rank-1).

@@ -31,7 +31,7 @@ pub struct PjrtRuntime {
 impl PjrtRuntime {
     /// Always fails: the XLA/PJRT toolchain is not compiled in.
     pub fn cpu() -> Result<PjrtRuntime> {
-        anyhow::bail!(
+        crate::bail!(
             "PJRT runtime unavailable: built without the `pjrt` feature \
              (the `xla` crate is not part of the offline build)"
         )
@@ -42,7 +42,7 @@ impl PjrtRuntime {
     }
 
     pub fn load_hlo_text(&mut self, name: &str, path: &std::path::Path) -> Result<()> {
-        anyhow::bail!("cannot load {name} from {}: pjrt feature disabled", path.display())
+        crate::bail!("cannot load {name} from {}: pjrt feature disabled", path.display())
     }
 
     pub fn is_loaded(&self, _name: &str) -> bool {
@@ -50,7 +50,7 @@ impl PjrtRuntime {
     }
 
     pub fn execute(&self, name: &str, _inputs: &[Literal]) -> Result<Literal> {
-        anyhow::bail!("cannot execute {name:?}: pjrt feature disabled")
+        crate::bail!("cannot execute {name:?}: pjrt feature disabled")
     }
 }
 
@@ -59,8 +59,8 @@ impl PjrtRuntime {
 /// missing feature.
 pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<Literal> {
     let n: i64 = shape.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "shape {shape:?} != len {}", data.len());
-    anyhow::bail!("cannot build literal: pjrt feature disabled")
+    crate::ensure!(n as usize == data.len(), "shape {shape:?} != len {}", data.len());
+    crate::bail!("cannot build literal: pjrt feature disabled")
 }
 
 /// Mirror of the real `literal_i32` constructor (infallible signature in

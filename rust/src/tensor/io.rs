@@ -114,19 +114,19 @@ impl TnsReader {
                 let x: u64 = it
                     .next()
                     .ok_or_else(|| {
-                        anyhow::anyhow!("{}:{}: too few fields", self.path.display(), self.lineno)
+                        crate::format_err!("{}:{}: too few fields", self.path.display(), self.lineno)
                     })?
                     .parse()
                     .map_err(|e| {
-                        anyhow::anyhow!("{}:{}: bad index: {e}", self.path.display(), self.lineno)
+                        crate::format_err!("{}:{}: bad index: {e}", self.path.display(), self.lineno)
                     })?;
-                anyhow::ensure!(
+                crate::ensure!(
                     x >= 1,
                     "{}:{}: indices are 1-based",
                     self.path.display(),
                     self.lineno
                 );
-                anyhow::ensure!(
+                crate::ensure!(
                     x <= u32::MAX as u64,
                     "{}:{}: index {x} out of range",
                     self.path.display(),
@@ -137,11 +137,11 @@ impl TnsReader {
             let val: f32 = it
                 .next()
                 .ok_or_else(|| {
-                    anyhow::anyhow!("{}:{}: missing value", self.path.display(), self.lineno)
+                    crate::format_err!("{}:{}: missing value", self.path.display(), self.lineno)
                 })?
                 .parse()
                 .map_err(|e| {
-                    anyhow::anyhow!("{}:{}: bad value: {e}", self.path.display(), self.lineno)
+                    crate::format_err!("{}:{}: bad value: {e}", self.path.display(), self.lineno)
                 })?;
             return Ok(Some(TnsElem {
                 idx,
@@ -209,7 +209,7 @@ pub fn read_tns(path: &Path, dims: Option<[u64; 3]>) -> Result<CooTensor> {
         vs.push(e.val);
     }
     let dims = dims.unwrap_or(max);
-    anyhow::ensure!(
+    crate::ensure!(
         dims[0] >= max[0] && dims[1] >= max[1] && dims[2] >= max[2],
         "given dims {dims:?} smaller than data extent {max:?}"
     );

@@ -75,6 +75,13 @@ pub trait TraceSource: Send + Sync + std::fmt::Debug {
     fn stream_len(&self, s: usize) -> usize;
     /// Open a fresh cursor at the start of stream `s`.
     fn open(&self, s: usize) -> Box<dyn WorkCursor>;
+    /// The address map the streams were generated against, when the
+    /// source knows it. Consumers that must invert addresses back to
+    /// (structure, row) — the cluster layer's remote-row classifier —
+    /// require `Some`; every in-tree source provides it.
+    fn amap(&self) -> Option<&AddressMap> {
+        None
+    }
 }
 
 /// Forward through `Arc` so shared sources (sweep dedup) plug directly
@@ -100,6 +107,9 @@ impl<S: TraceSource + ?Sized> TraceSource for Arc<S> {
     }
     fn open(&self, s: usize) -> Box<dyn WorkCursor> {
         (**self).open(s)
+    }
+    fn amap(&self) -> Option<&AddressMap> {
+        (**self).amap()
     }
 }
 
@@ -147,6 +157,9 @@ impl TraceSource for Workload {
     }
     fn open(&self, s: usize) -> Box<dyn WorkCursor> {
         Box::new(VecCursor::new(self.pe_traces[s].work.clone()))
+    }
+    fn amap(&self) -> Option<&AddressMap> {
+        Some(&self.amap)
     }
 }
 
@@ -287,6 +300,9 @@ impl TraceSource for CooStreamSource {
                 })
             }
         }
+    }
+    fn amap(&self) -> Option<&AddressMap> {
+        Some(&self.amap)
     }
 }
 
@@ -486,8 +502,8 @@ impl TnsStreamSource {
         rank: usize,
         row_align: u64,
     ) -> crate::Result<TnsStreamSource> {
-        anyhow::ensure!(scan.nnz > 0, "{}: empty tensor", path.display());
-        anyhow::ensure!(
+        crate::ensure!(scan.nnz > 0, "{}: empty tensor", path.display());
+        crate::ensure!(
             scan.sorted[mode.index()],
             "{}: not sorted along mode {} — sort the file, or load it \
              with read_tns and use CooStreamSource",
@@ -566,7 +582,7 @@ fn tns_partitions(path: &Path, mode: Mode, p: usize, n: usize) -> crate::Result<
         z += 1;
         prev_coord = Some(c);
     }
-    anyhow::ensure!(
+    crate::ensure!(
         z == n,
         "{}: file changed during scan ({z} nonzeros, expected {n})",
         path.display()
@@ -660,6 +676,9 @@ impl TraceSource for TnsStreamSource {
                 })
             }
         }
+    }
+    fn amap(&self) -> Option<&AddressMap> {
+        Some(&self.amap)
     }
 }
 

@@ -1,0 +1,141 @@
+//! In-tree replacement for the `anyhow` error crate (the last external
+//! dependency) — the subset this crate actually uses: a message-carrying
+//! [`Error`], `?`-conversion from any `std::error::Error`, and the
+//! [`format_err!`](crate::format_err)/[`bail!`](crate::bail)/
+//! [`ensure!`](crate::ensure) macros. Dropping the dependency makes the
+//! committed `Cargo.lock` a single-package file with no registry
+//! checksums, so `cargo build --locked` is reproducible offline.
+//!
+//! Differences from `anyhow`, deliberate and harmless here:
+//!
+//! * The source error is flattened to its `Display` string at conversion
+//!   time (no cause chain, no backtrace). Every error in this crate is
+//!   either terminal (printed and exited) or asserted on in tests — the
+//!   chain was never inspected.
+//! * Like `anyhow::Error`, [`Error`] does **not** implement
+//!   `std::error::Error`; that is what makes the blanket `From` impl
+//!   coherent alongside the reflexive `From<Error> for Error` that `?`
+//!   uses within the crate.
+
+/// A flattened error message. Construct with [`Error::msg`], the
+/// [`format_err!`](crate::format_err) macro, or any `?` on a
+/// `std::error::Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: std::fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// Debug prints the message too: `fn main() -> Result<()>` and
+/// `unwrap()` show the human text, not a struct dump.
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `?`-conversion from any standard error (IO, parse, ...). Coherent
+/// because [`Error`] itself does not implement `std::error::Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Construct an [`Error`](crate::Error) from a format string, or wrap a
+/// single printable expression (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! format_err {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::format_err!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`](crate::Error) unless the
+/// condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::format_err!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> crate::Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn display_and_debug_show_the_message() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn macros_format_and_wrap() {
+        let e = format_err!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let owned: String = "owned".into();
+        assert_eq!(format_err!(owned).to_string(), "owned");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> crate::Result<()> {
+            bail!("stopped at {}", "once");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stopped at once");
+    }
+}

@@ -1,8 +1,10 @@
 //! In-tree replacements for crates unavailable in the offline registry
-//! (clap, serde_json, criterion, proptest, rand) plus small shared helpers.
+//! (anyhow, clap, serde_json, criterion, proptest, rand) plus small
+//! shared helpers.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,181 @@
+//! Integration: the cluster layer's external contracts.
+//!
+//! * **Identity** — a `nodes = 1` cluster run is the plain
+//!   single-accelerator run, *report-identical* under the exhaustive
+//!   `SimReport::diff` oracle, across every system variant × inter-node
+//!   topology × randomized link parameters and workload geometry. The
+//!   cluster layer must be impossible to observe when it is not asked
+//!   for.
+//! * **Conservation** — multi-node runs shard without losing work, the
+//!   network accounts for exactly the requested remote rows, and the
+//!   makespan decomposition tiles each node's local run.
+//! * **Diff sensitivity** — `SimReport::diff` notices a randomized
+//!   perturbation of any single stats field (with `host_seconds` as the
+//!   one deliberate blind spot), so the identity above actually means
+//!   something.
+
+use mttkrp_memsys::config::{InterTopologyKind, SystemConfig, SystemKind};
+use mttkrp_memsys::experiment::{run_cluster, run_one, Scenario};
+use mttkrp_memsys::sim::{self, SimReport};
+use mttkrp_memsys::trace::TraceSource;
+use mttkrp_memsys::util::rng::Rng;
+
+/// A small random scenario with factor rows spread far wider than any
+/// node's block, so multi-node shards always reference remote rows.
+fn random_scenario(rng: &mut Rng, cfg: &SystemConfig) -> Scenario {
+    let dims = [
+        16 + rng.gen_range(48),
+        500 + rng.gen_range(2_000),
+        500 + rng.gen_range(2_000),
+    ];
+    let nnz = 200 + rng.gen_range(400) as usize;
+    Scenario::random(dims, nnz, rng.next_u64()).for_config(cfg)
+}
+
+#[test]
+fn single_node_cluster_is_report_identical_across_systems_and_topologies() {
+    let mut rng = Rng::new(2024);
+    for kind in SystemKind::ALL {
+        for topo in InterTopologyKind::ALL {
+            let mut cfg = SystemConfig::config_b().as_baseline(kind);
+            cfg.cluster.topology = topo;
+            // Link parameters must be unobservable at one node.
+            cfg.cluster.link_bytes = 1 + rng.gen_range(64);
+            cfg.cluster.link_latency = 1 + rng.gen_range(16);
+            cfg.cluster.link_queue = 2 + rng.gen_range(14) as usize;
+            cfg.validate().unwrap();
+            let scenario = random_scenario(&mut rng, &cfg);
+            let src = scenario.trace_source().unwrap();
+            let plain = sim::simulate(&cfg, &src);
+            let cl = run_cluster(&cfg, &scenario);
+            assert_eq!(cl.nodes, 1);
+            assert_eq!(cl.network.delivered, 0, "one node must not communicate");
+            let ctx = format!("system={} inter-topology={}", kind.name(), topo.name());
+            assert_eq!(
+                cl.into_report().diff(&plain),
+                None,
+                "{ctx}: cluster(1) diverged from the plain run"
+            );
+            assert_eq!(
+                run_one(&cfg, &scenario).diff(&plain),
+                None,
+                "{ctx}: run_one diverged from the plain run"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_node_runs_conserve_work_on_every_topology() {
+    let mut rng = Rng::new(77);
+    // 3 and 5 exercise the mesh's ragged last row; 8 its 3x3-minus-one
+    // shape is not (cols 3, rows 3, 8 < 9) — also ragged.
+    for nodes in [2usize, 3, 5, 8] {
+        let mut remote_per_topo: Vec<u64> = Vec::new();
+        // Same workload for every topology at this node count.
+        let mut base = SystemConfig::config_b();
+        base.cluster.nodes = nodes;
+        let scenario = random_scenario(&mut rng, &base);
+        for topo in InterTopologyKind::ALL {
+            let mut cfg = base.clone();
+            cfg.cluster.topology = topo;
+            cfg.validate().unwrap();
+            let cl = run_cluster(&cfg, &scenario);
+            let ctx = format!("nodes={nodes} inter-topology={}", topo.name());
+            assert_eq!(cl.node_reports.len(), nodes, "{ctx}");
+            let shard_nnz: u64 = cl.node_reports.iter().map(|n| n.report.nnz).sum();
+            assert_eq!(
+                shard_nnz,
+                scenario.trace_source().unwrap().nnz() as u64,
+                "{ctx}: shards lost nonzeros"
+            );
+            let remote: u64 = cl.node_reports.iter().map(|n| n.comm.remote_rows).sum();
+            assert!(remote > 0, "{ctx}: random rows never crossed nodes");
+            assert_eq!(cl.network.delivered, remote, "{ctx}");
+            let bytes: u64 = cl.node_reports.iter().map(|n| n.comm.remote_bytes).sum();
+            assert_eq!(cl.network.delivered_bytes, bytes, "{ctx}");
+            for n in &cl.node_reports {
+                assert_eq!(
+                    n.compute_cycles() + n.local_memory_cycles(),
+                    n.report.total_cycles,
+                    "{ctx}: node {} breakdown must tile its local run",
+                    n.node
+                );
+            }
+            let worst = cl
+                .node_reports
+                .iter()
+                .map(|n| n.total_cycles())
+                .max()
+                .unwrap();
+            assert_eq!(cl.total_cycles, worst, "{ctx}: makespan is the slowest node");
+            remote_per_topo.push(remote);
+        }
+        // The sharding (who owns what, who fetches what) is a property
+        // of the partition, not of how messages are routed.
+        assert!(
+            remote_per_topo.windows(2).all(|w| w[0] == w[1]),
+            "nodes={nodes}: remote-row totals varied by topology: {remote_per_topo:?}"
+        );
+    }
+}
+
+#[test]
+fn diff_detects_a_random_perturbation_of_any_single_field() {
+    let cfg = SystemConfig::config_b();
+    let scenario = Scenario::random([48, 2_000, 3_000], 500, 11).for_config(&cfg);
+    let base = run_one(&cfg, &scenario);
+    assert_eq!(base.diff(&base.clone()), None, "a report must equal itself");
+    assert!(!base.channels.is_empty() && !base.lmbs.is_empty());
+
+    type Perturb = (&'static str, Box<dyn Fn(&mut SimReport, u64)>);
+    let cases: Vec<Perturb> = vec![
+        ("label", Box::new(|r, _| r.label.push('x'))),
+        ("workload", Box::new(|r, _| r.workload.push('x'))),
+        ("total_cycles", Box::new(|r, d| r.total_cycles += d)),
+        ("nnz", Box::new(|r, d| r.nnz += d)),
+        ("accesses", Box::new(|r, d| r.accesses += d)),
+        ("requested_bytes", Box::new(|r, d| r.requested_bytes += d)),
+        ("dram", Box::new(|r, d| r.dram.reads += d)),
+        ("dram", Box::new(|r, d| r.dram.write_bytes += d)),
+        ("dram", Box::new(|r, d| r.dram.row_hits += d)),
+        ("dram", Box::new(|r, d| r.dram.total_queue_wait += d)),
+        ("channels", Box::new(|r, d| r.channels[0].writes += d)),
+        ("channels", Box::new(|r, _| r.channels.push(Default::default()))),
+        ("fabric", Box::new(|r, d| r.fabric.forwarded += d)),
+        ("fabric", Box::new(|r, d| r.fabric.backpressure_cycles += d)),
+        ("fabric", Box::new(|r, d| r.fabric.per_port_forwarded.push(d))),
+        ("fabric", Box::new(|r, d| r.fabric.reply.delivered += d)),
+        ("fabric", Box::new(|r, d| r.fabric.reply.hops += d)),
+        ("link_width", Box::new(|r, d| r.link_width += d as usize)),
+        ("lmbs", Box::new(|r, _| r.lmbs.push(Default::default()))),
+        ("lmbs", Box::new(|r, _| r.lmbs[0].banks.push(Default::default()))),
+        ("pe", Box::new(|r, d| r.pe.retired += d)),
+        ("pe", Box::new(|r, d| r.pe.issued_accesses += d)),
+        ("pe", Box::new(|r, d| r.pe.stall_cycles += d)),
+        ("latency", Box::new(|r, d| r.latency[0].count += d)),
+        ("latency", Box::new(|r, d| r.latency[1].max += d)),
+        ("latency", Box::new(|r, d| r.latency[3].buckets[7] += d)),
+    ];
+
+    let mut rng = Rng::new(4242);
+    for (i, (field, apply)) in cases.iter().enumerate() {
+        let mut mutated = base.clone();
+        let delta = 1 + rng.gen_range(1_000_000);
+        apply(&mut mutated, delta);
+        let msg = mutated
+            .diff(&base)
+            .unwrap_or_else(|| panic!("case {i}: perturbing {field} by {delta} went undetected"));
+        assert!(
+            msg.starts_with(field),
+            "case {i}: {field} perturbation reported as {msg:?}"
+        );
+        assert!(base.diff(&mutated).is_some(), "case {i}: diff must be symmetric");
+    }
+
+    // host_seconds is the one deliberate blind spot: wall-clock noise
+    // must never read as a simulation divergence.
+    let mut wall = base.clone();
+    wall.host_seconds += 123.456;
+    assert_eq!(wall.diff(&base), None);
+}
