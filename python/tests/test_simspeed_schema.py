@@ -4,16 +4,23 @@ output (`MEMSYS_BENCH_JSON=<path> cargo bench --bench simspeed`).
 This is the per-PR perf trajectory for the simulator itself: one record
 per (preset, dataset, system) cell per engine, where `engine` is either
 `event` (the event-driven run loop) or `reference` (the seed poll loop
-kept as the correctness oracle). The contract machine consumers rely on:
+kept as the correctness oracle), plus thread-axis records (`event`
+records with `sim_threads` > 1) from the scaled point's in-run sharding
+sweep. The contract machine consumers rely on:
 
 * every record carries the documented fields with positive timings and
-  throughputs;
-* each cell appears once per engine, and the paired records agree on
-  `total_cycles` / `nnz` / `accesses` — the two engines are
-  report-identical by construction, so a simulated-behavior mismatch in
-  the artifact means the equivalence guarantee broke;
-* `speedup_vs_reference` on `event` records is `reference` host time
-  over `event` host time (throughput regressions show up here).
+  throughputs; `visited_cycles` (loop iterations the engine executed —
+  the skip-ahead metric) never exceeds `total_cycles` + 1;
+* each cell appears once per engine at `sim_threads` == 1, and the
+  paired records agree on `total_cycles` / `nnz` / `accesses` — the two
+  engines are report-identical by construction, so a simulated-behavior
+  mismatch in the artifact means the equivalence guarantee broke;
+* thread-axis records match their cell's single-thread `event` record on
+  every simulated field including `visited_cycles` — the sharded engine
+  is bit-identical at any thread count;
+* `speedup_vs_reference` on single-thread `event` records is `reference`
+  host time over `event` host time (throughput regressions show up
+  here); on thread-axis records it is the speedup over 1 thread.
 
 Runs against the file named by `MEMSYS_SIMSPEED_JSONL` when set (CI's
 bench-smoke job produces one) and always against the committed sample.
@@ -35,7 +42,9 @@ REQUIRED = (
     "dataset",
     "system",
     "engine",
+    "sim_threads",
     "total_cycles",
+    "visited_cycles",
     "nnz",
     "accesses",
     "host_seconds",
@@ -46,6 +55,8 @@ REQUIRED = (
 
 ENGINES = {"event", "reference"}
 SYSTEMS = {"ip-only", "cache-only", "dma-only", "proposed"}
+
+SIM_FIELDS = ("total_cycles", "visited_cycles", "nnz", "accesses")
 
 
 def _load(path):
@@ -60,6 +71,7 @@ def test_records_carry_the_documented_schema(path):
         assert rec["bench"] == "simspeed"
         assert rec["engine"] in ENGINES, rec["engine"]
         assert rec["system"] in SYSTEMS, rec["system"]
+        assert rec["sim_threads"] >= 1
         assert rec["total_cycles"] > 0
         assert rec["nnz"] > 0
         assert rec["accesses"] > 0
@@ -67,18 +79,48 @@ def test_records_carry_the_documented_schema(path):
         assert rec["mcycles_per_sec"] > 0
         assert rec["knnz_per_sec"] > 0
         assert rec["speedup_vs_reference"] > 0
+        # Skip-ahead can only remove iterations; the +1 covers the final
+        # boundary visit of a run that ends exactly on its last cycle.
+        assert 0 < rec["visited_cycles"] <= rec["total_cycles"] + 1, rec
+        # The reference poll loop is never sharded.
+        if rec["engine"] == "reference":
+            assert rec["sim_threads"] == 1, rec
 
 
 @pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
 def test_engines_are_paired_and_simulation_identical(path):
     cells = {}
     for rec in _load(path):
+        if rec["sim_threads"] != 1:
+            continue
         key = (rec["preset"], rec["dataset"], rec["system"])
         cells.setdefault(key, {})[rec["engine"]] = rec
+    assert cells, "no single-thread records"
     for key, by_engine in cells.items():
         assert set(by_engine) == ENGINES, f"{key}: engines {set(by_engine)}"
         event, reference = by_engine["event"], by_engine["reference"]
-        # Simulated behavior must match exactly — only host time differs.
+        # Simulated behavior must match exactly — only host time (and,
+        # between engines, visited_cycles) differs.
         for field in ("total_cycles", "nnz", "accesses"):
             assert event[field] == reference[field], (key, field)
+        # Skip-ahead is the event engine's whole point: it must not
+        # visit more iterations than the poll loop.
+        assert event["visited_cycles"] <= reference["visited_cycles"], key
         assert reference["speedup_vs_reference"] == 1.0, key
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_thread_axis_records_are_bit_identical_to_single_thread(path):
+    singles = {}
+    threaded = []
+    for rec in _load(path):
+        key = (rec["preset"], rec["dataset"], rec["system"])
+        if rec["engine"] == "event" and rec["sim_threads"] == 1:
+            singles[key] = rec
+        elif rec["sim_threads"] > 1:
+            assert rec["engine"] == "event", rec
+            threaded.append((key, rec))
+    for key, rec in threaded:
+        assert key in singles, f"thread-axis record without 1-thread anchor: {key}"
+        for field in SIM_FIELDS:
+            assert rec[field] == singles[key][field], (key, rec["sim_threads"], field)

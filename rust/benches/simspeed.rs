@@ -14,13 +14,18 @@
 //! allocation-free sinks, O(1) window/idle bookkeeping and the
 //! HashMap-free direct map, which speed up both loops).
 //!
+//! The scaled point additionally sweeps the in-run thread axis
+//! (`sim_threads` 1/2/4/8), asserting the sharded engine is
+//! report-identical to single-thread before any timing is trusted, and
+//! reports the skip-ahead saving (visited vs reference loop iterations).
+//!
 //! Every cell also asserts the two engines are report-identical, so this
 //! bench doubles as an equivalence smoke in CI. `MEMSYS_BENCH_SCALE`
 //! (default 0.002) sets the dataset scale, `MEMSYS_BENCH_REPS` (default
 //! 3) the timing repetitions (min is reported), and
 //! `MEMSYS_BENCH_JSON=<path>` dumps one JSON-lines record per cell per
-//! engine — the host-throughput perf trajectory
-//! (`python/tests/test_simspeed_schema.py` pins the schema).
+//! engine — plus one per thread-axis point — the host-throughput perf
+//! trajectory (`python/tests/test_simspeed_schema.py` pins the schema).
 
 use mttkrp_memsys::config::{FabricType, SystemConfig, SystemKind};
 use mttkrp_memsys::experiment::Scenario;
@@ -49,11 +54,13 @@ fn best_of(reps: usize, mut f: impl FnMut() -> SimReport) -> (SimReport, f64) {
     (report.expect("reps >= 1"), best_secs)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn record(
     preset: &str,
     dataset: &str,
     kind: SystemKind,
     engine: &str,
+    sim_threads: usize,
     rep: &SimReport,
     secs: f64,
     speedup: f64,
@@ -64,7 +71,9 @@ fn record(
         ("dataset", Json::str(dataset)),
         ("system", Json::str(kind.name())),
         ("engine", Json::str(engine)),
+        ("sim_threads", Json::num(sim_threads as f64)),
         ("total_cycles", Json::num(rep.total_cycles as f64)),
+        ("visited_cycles", Json::num(rep.visited_cycles as f64)),
         ("nnz", Json::num(rep.nnz as f64)),
         ("accesses", Json::num(rep.accesses as f64)),
         ("host_seconds", Json::num(secs)),
@@ -103,8 +112,8 @@ fn bench_cell(
         format!("{:.1}", event.nnz as f64 / event_secs / 1e3),
         format!("{speedup:.2}x"),
     ]);
-    records.push(record(preset, dataset, kind, "event", &event, event_secs, speedup));
-    records.push(record(preset, dataset, kind, "reference", &reference, ref_secs, 1.0));
+    records.push(record(preset, dataset, kind, "event", 1, &event, event_secs, speedup));
+    records.push(record(preset, dataset, kind, "reference", 1, &reference, ref_secs, 1.0));
     speedup
 }
 
@@ -166,21 +175,21 @@ fn main() {
     }
 
     // A scaled operating point: many more quiescent components per busy
-    // one — the regime the skip-idle gating targets.
-    {
-        let mut base = SystemConfig::config_b();
-        base.pe.n_pes = 16;
-        base.n_lmbs = 8;
-        base.interconnect.channels = 4;
-        base.label = "config-b16".into();
-        let scenario = Scenario::synth01(scale).for_config(&base).fabric(FabricType::Type2);
-        let w = scenario.workload();
-        for kind in [SystemKind::Proposed, SystemKind::IpOnly] {
-            let cfg = base.as_baseline(kind);
-            let s = bench_cell("b16", "synth01", &cfg, kind, &w, reps, &mut table, &mut records);
-            log_speedup_sum += s.ln();
-            cells += 1;
-        }
+    // one — the regime the skip-idle gating targets — and the point
+    // where the sharded engine has enough per-cycle work (16 PEs over
+    // 8 LMBs, 4 channels) for the thread axis to mean something.
+    let mut b16 = SystemConfig::config_b();
+    b16.pe.n_pes = 16;
+    b16.n_lmbs = 8;
+    b16.interconnect.channels = 4;
+    b16.label = "config-b16".into();
+    let b16_scenario = Scenario::synth01(scale).for_config(&b16).fabric(FabricType::Type2);
+    let b16_w = b16_scenario.workload();
+    for kind in [SystemKind::Proposed, SystemKind::IpOnly] {
+        let cfg = b16.as_baseline(kind);
+        let s = bench_cell("b16", "synth01", &cfg, kind, &b16_w, reps, &mut table, &mut records);
+        log_speedup_sum += s.ln();
+        cells += 1;
     }
 
     println!("{}", table.render());
@@ -189,6 +198,64 @@ fn main() {
         cells,
         (log_speedup_sum / cells as f64).exp()
     );
+
+    // Thread-scaling axis at the scaled point: the same run at
+    // sim_threads 1/2/4/8, asserting the parallel engine is
+    // report-identical to single-thread before timing is trusted.
+    section("simspeed — sim_threads scaling at the scaled point (b16/proposed)");
+    let mut taxis = Table::new(&["sim_threads", "host s", "Mcyc/s", "speedup vs 1T"]).aligns(&[
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+    let cfg1 = b16.as_baseline(SystemKind::Proposed);
+    let mut single: Option<(SimReport, f64)> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let mut cfg = cfg1.clone();
+        cfg.sim_threads = threads;
+        let (rep, secs) = best_of(reps, || MemorySystem::new(&cfg, &b16_w).run(&b16_w.name));
+        if let Some((base_rep, _)) = &single {
+            if let Some(d) = rep.diff(base_rep) {
+                panic!("b16/proposed: sim_threads={threads} diverged from 1 on {d}");
+            }
+        }
+        let speedup = single.as_ref().map_or(1.0, |(_, s1)| s1 / secs);
+        taxis.row(&[
+            threads.to_string(),
+            format!("{secs:.4}"),
+            format!("{:.2}", rep.total_cycles as f64 / secs / 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        records.push(record(
+            "b16",
+            "synth01",
+            SystemKind::Proposed,
+            "event",
+            threads,
+            &rep,
+            secs,
+            speedup,
+        ));
+        if single.is_none() {
+            single = Some((rep, secs));
+        }
+    }
+    println!("{}", taxis.render());
+
+    // Skip-ahead accounting at the same point: how many loop iterations
+    // the event engine actually executed vs the reference poll loop.
+    {
+        let (event, _) = best_of(1, || MemorySystem::new(&cfg1, &b16_w).run(&b16_w.name));
+        let (reference, _) =
+            best_of(1, || MemorySystem::new(&cfg1, &b16_w).run_reference(&b16_w.name));
+        let saved = 100.0 * (1.0 - event.visited_cycles as f64 / reference.visited_cycles.max(1) as f64);
+        println!(
+            "skip-ahead: event engine visited {} of {} reference iterations \
+             ({saved:.1}% of loop iterations skipped) over {} simulated cycles",
+            event.visited_cycles, reference.visited_cycles, event.total_cycles
+        );
+    }
 
     if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
         let mut out = String::new();

@@ -292,14 +292,58 @@ pub fn simulate_cluster<S: TraceSource + ?Sized>(
     };
 
     // Local phase: each node is a full MemorySystem over its shard.
+    // With `sim_threads > 1` the independent node runs fan out across a
+    // scoped host pool instead (node-level parallelism strictly
+    // dominates in-run sharding here, so each node run drops to the
+    // single-thread engine); results are reassembled in node index
+    // order, so the ClusterReport is bit-identical at any thread count.
+    let threads = cfg.sim_threads.min(nodes);
     let mut node_reports = Vec::with_capacity(nodes);
-    for (m, comm) in comms.into_iter().enumerate() {
-        let report = if nodes == 1 {
-            sim::simulate(cfg, source)
-        } else {
-            sim::simulate(cfg, &NodeSlice::new(source, m * per_node, per_node))
-        };
-        node_reports.push(NodeReport { node: m, report, comm });
+    if threads <= 1 {
+        for (m, comm) in comms.into_iter().enumerate() {
+            let report = if nodes == 1 {
+                sim::simulate(cfg, source)
+            } else {
+                sim::simulate(cfg, &NodeSlice::new(source, m * per_node, per_node))
+            };
+            node_reports.push(NodeReport { node: m, report, comm });
+        }
+    } else {
+        let mut node_cfg = cfg.clone();
+        node_cfg.sim_threads = 1;
+        let node_cfg = &node_cfg;
+        // Deal node indices round-robin across the pool; each worker
+        // returns (node, report) pairs that merge back by index.
+        let mut shards: Vec<Vec<usize>> = (0..threads).map(|_| Vec::new()).collect();
+        for m in 0..nodes {
+            shards[m % threads].push(m);
+        }
+        let mut slots: Vec<Option<sim::SimReport>> = (0..nodes).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .map(|shard| {
+                    s.spawn(move || {
+                        shard
+                            .into_iter()
+                            .map(|m| {
+                                let slice = NodeSlice::new(source, m * per_node, per_node);
+                                (m, sim::simulate(node_cfg, &slice))
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (m, report) in h.join().expect("node simulation thread panicked") {
+                    slots[m] = Some(report);
+                }
+            }
+        });
+        for (m, (slot, comm)) in slots.into_iter().zip(comms).enumerate() {
+            let report = slot.expect("every node simulated");
+            node_reports.push(NodeReport { node: m, report, comm });
+        }
     }
     let total_cycles = node_reports
         .iter()
@@ -427,6 +471,32 @@ mod tests {
         let worst = cl.node_reports.iter().map(NodeReport::total_cycles).max().unwrap();
         assert_eq!(cl.total_cycles, worst);
         assert!(cl.communication_fraction() > 0.0);
+    }
+
+    #[test]
+    fn node_parallel_cluster_is_bit_identical_to_sequential() {
+        let cfg = cluster_cfg(2);
+        let src = source_for(&cfg);
+        let seq = simulate_cluster(&cfg, &src);
+        for sim_threads in [2, 4] {
+            let mut c = cfg.clone();
+            c.sim_threads = sim_threads;
+            let par = simulate_cluster(&c, &src);
+            assert_eq!(par.nodes, seq.nodes);
+            assert_eq!(par.total_cycles, seq.total_cycles);
+            for (a, b) in par.node_reports.iter().zip(&seq.node_reports) {
+                assert_eq!(a.node, b.node);
+                assert_eq!(
+                    a.report.diff(&b.report),
+                    None,
+                    "sim_threads={sim_threads}: node {} diverged",
+                    a.node
+                );
+                assert_eq!(a.comm.remote_rows, b.comm.remote_rows);
+                assert_eq!(a.comm.comm_cycles, b.comm.comm_cycles);
+            }
+            assert_eq!(par.into_report().diff(&seq.clone().into_report()), None);
+        }
     }
 
     #[test]

@@ -167,6 +167,7 @@ impl ClusterReport {
             out.pe.retired += r.pe.retired;
             out.pe.issued_accesses += r.pe.issued_accesses;
             out.pe.stall_cycles += r.pe.stall_cycles;
+            out.visited_cycles += r.visited_cycles;
             for (slot, o) in out.latency.iter_mut().zip(r.latency.iter()) {
                 slot.merge(o);
             }

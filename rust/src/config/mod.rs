@@ -571,6 +571,13 @@ pub struct SystemConfig {
     pub cluster: ClusterConfig,
     /// Observability products (off by default — see [`TelemetryConfig`]).
     pub telemetry: TelemetryConfig,
+    /// In-run engine worker threads (`--sim-threads`). 1 = the
+    /// single-thread event engine; >1 shards DRAM-channel ticking and
+    /// PE window fill/retire across `std::thread::scope` workers with a
+    /// per-visited-cycle barrier. Host-side only: the report is
+    /// bit-identical at every thread count. Distinct from the sweep
+    /// runner's `--threads` (a pool of whole runs).
+    pub sim_threads: usize,
     /// Human label ("config-a", "config-b", ...).
     pub label: String,
 }
@@ -613,6 +620,7 @@ impl SystemConfig {
             interconnect: InterconnectConfig::single_channel(),
             cluster: ClusterConfig::single_node(),
             telemetry: TelemetryConfig::off(),
+            sim_threads: 1,
             pe: PeConfig {
                 n_pes: 4,
                 fabric: FabricType::Type1,
@@ -746,6 +754,12 @@ impl SystemConfig {
             ));
         }
         self.telemetry.validate().map_err(|e| format!("{}: {e}", self.label))?;
+        if self.sim_threads == 0 {
+            return Err(format!(
+                "{}: sim_threads must be >= 1 (1 = single-thread engine)",
+                self.label
+            ));
+        }
         Ok(())
     }
 
@@ -764,6 +778,7 @@ impl SystemConfig {
             "lmb_banks" | "lmb-banks" => "system.lmb_banks",
             "nodes" => "cluster.nodes",
             "inter_topology" | "inter-topology" => "cluster.topology",
+            "sim_threads" | "sim-threads" => "system.sim_threads",
             other => other,
         };
         match key {
@@ -772,6 +787,7 @@ impl SystemConfig {
             }
             "system.n_lmbs" => self.n_lmbs = parse_usize(value)?,
             "system.lmb_banks" => self.lmb_banks = parse_usize(value)?,
+            "system.sim_threads" => self.sim_threads = parse_usize(value)?,
             "cache.associativity" => self.cache.associativity = parse_usize(value)?,
             "cache.lines" => self.cache.lines = parse_usize(value)?,
             "cache.line_bits" => self.cache.line_bits = parse_usize(value)?,
@@ -851,6 +867,7 @@ impl SystemConfig {
             ("kind", Json::str(self.kind.name())),
             ("n_lmbs", Json::num(self.n_lmbs as f64)),
             ("lmb_banks", Json::num(self.lmb_banks as f64)),
+            ("sim_threads", Json::num(self.sim_threads as f64)),
             (
                 "cache",
                 Json::obj(vec![
@@ -1048,6 +1065,28 @@ mod tests {
         c.interconnect.channels = 2;
         c.interconnect.interleave_bytes = 1000;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn sim_threads_default_aliases_and_validation() {
+        let a = SystemConfig::config_a();
+        assert_eq!(a.sim_threads, 1, "single-thread engine by default");
+        let mut c = SystemConfig::config_b();
+        // Kebab-case is the documented CLI spelling; snake_case stays as
+        // a compatibility alias (same policy as link-width).
+        c.apply_override("sim-threads", "4").unwrap();
+        assert_eq!(c.sim_threads, 4);
+        c.apply_override("sim_threads", "2").unwrap();
+        assert_eq!(c.sim_threads, 2);
+        c.apply_override("system.sim_threads", "8").unwrap();
+        assert_eq!(c.sim_threads, 8);
+        c.validate().unwrap();
+        c.sim_threads = 0;
+        let err = c.validate().unwrap_err();
+        assert!(
+            err.contains("sim_threads must be >= 1"),
+            "uniform validation message, got: {err}"
+        );
     }
 
     #[test]

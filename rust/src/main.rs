@@ -66,13 +66,15 @@ fn print_usage() {
 
 USAGE: mttkrp-memsys <subcommand> [--options]
 
-  fig4      [--scale 0.01] [--mode i|j|k]  Fig. 4 speedups (systems × configs × datasets)
+  fig4      [--scale 0.01] [--mode i|j|k] [--threads N] [--sim-threads N]
+            Fig. 4 speedups (systems × configs × datasets)
   table2                              Table II resource model
   table3    [--scale 1.0]             Table III dataset summary
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
             [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
             [--link-width W] [--lmb-banks N] [--reply-network on|off]
             [--nodes N] [--inter-topology crossbar|line|ring|mesh]
+            [--sim-threads N]
             [--scale 0.01] [--dataset synth01|synth02|file.tns] [--<section.key> v]
             [--trace-out trace.json] [--timeline tl.jsonl] [--sample N] [--window W]
             (--nodes > 1 shards the tensor across a routed accelerator
@@ -81,16 +83,23 @@ USAGE: mttkrp-memsys <subcommand> [--options]
             (simulate with tracing forced on; all simulate options apply;
              load the JSON in Perfetto / chrome://tracing)
   report-diff  a.json b.json       first diverging field of two SimReports
-  sweep     --axis key=v1,v2,... [--axis ...] [--threads N]
+  sweep     --axis key=v1,v2,... [--axis ...] [--threads N] [--sim-threads N]
             [--baseline axis=value] [--out runs.jsonl] [--resume]
             [--preset b] [--dataset synth01|file.tns] [--scale 0.01] [--mode i|j|k]
             [--telemetry-dir DIR]
             (axes: system, preset, dataset, scale, mode, fabric, channels,
              topology, link-width, lmb-banks, reply-network, nodes,
-             inter-topology, and any --<section.key> override key, e.g.
-             telemetry.trace; dataset values may be synthetic names or
-             .tns paths; --resume skips cells already in --out and
-             appends only the new ones)
+             inter-topology, sim-threads, and any --<section.key> override
+             key, e.g. telemetry.trace; dataset values may be synthetic
+             names or .tns paths; --resume skips cells already in --out
+             and appends only the new ones)
+
+  thread flags: --threads N is the HOST pool — how many whole simulations
+  run concurrently (sweep/fig4 grids). --sim-threads N parallelizes the
+  inside of ONE run (shards DRAM channels + PE fill/retire across worker
+  threads; with --nodes > 1, fans node runs out instead). Reports and
+  telemetry are bit-identical at every --sim-threads value. snake_case
+  spellings (--sim_threads, --link_width, ...) work everywhere.
   mttkrp    [--preset b] [--scale 0.005]   full-stack MTTKRP (sim + PJRT numerics)
   als       [--scale 0.002] [--iters 10] [--preset b]  timed CP-ALS (E6)
   gen       --out t.tns [--dataset synth01] [--scale 0.01]
@@ -123,10 +132,10 @@ fn preset_cfg(args: &Args) -> mttkrp_memsys::Result<SystemConfig> {
             cfg.apply_override(k, v).map_err(|e| mttkrp_memsys::format_err!(e))?;
         }
     }
-    // Interconnect + LMB + cluster shorthands: `--channels 4 --topology
-    // ring --link-width 2 --lmb-banks 4 --reply-network on --nodes 4
-    // --inter-topology mesh` (snake_case spellings stay as hidden
-    // aliases).
+    // Interconnect + LMB + cluster + engine shorthands: `--channels 4
+    // --topology ring --link-width 2 --lmb-banks 4 --reply-network on
+    // --nodes 4 --inter-topology mesh --sim-threads 4` (snake_case
+    // spellings stay as hidden aliases).
     for key in [
         "channels",
         "topology",
@@ -137,6 +146,8 @@ fn preset_cfg(args: &Args) -> mttkrp_memsys::Result<SystemConfig> {
         "nodes",
         "inter-topology",
         "inter_topology",
+        "sim-threads",
+        "sim_threads",
     ] {
         if let Some(v) = args.get(key) {
             cfg.apply_override(key, v).map_err(|e| mttkrp_memsys::format_err!(e))?;
@@ -176,13 +187,20 @@ fn cmd_fig4(args: &Args) -> mttkrp_memsys::Result<()> {
     }
     // The paper's grid: (Config-A/Type-1, Config-B/Type-2) × dataset ×
     // system variant, one sweep, IP-only as the per-category baseline.
-    let runs = Sweep::new(SystemConfig::config_a(), Scenario::synth01(scale).mode(mode))
+    let mut sweep = Sweep::new(SystemConfig::config_a(), Scenario::synth01(scale).mode(mode))
         .zip_axis(&["preset", "fabric"], &[&["a", "type1"], &["b", "type2"]])
         .axis("dataset", &["synth01", "synth02"])
         .axis("system", &["ip-only", "cache-only", "dma-only", "proposed"])
-        .threads(args.get_usize("threads", default_threads()))
-        .run()
-        .map_err(mttkrp_memsys::Error::msg)?;
+        .threads(args.get_usize("threads", default_threads()));
+    // `--sim-threads N`: in-run sharding for every grid point. Applied
+    // as a single-value axis so the preset axis (which rebuilds the
+    // config per point) cannot drop it.
+    for key in ["sim-threads", "sim_threads"] {
+        if let Some(v) = args.get(key) {
+            sweep = sweep.axis("sim-threads", &[v]);
+        }
+    }
+    let runs = sweep.run().map_err(mttkrp_memsys::Error::msg)?;
     let mut table = Table::new(&[
         "category",
         "ip-only",
@@ -472,6 +490,8 @@ fn cmd_sweep(args: &Args) -> mttkrp_memsys::Result<()> {
             "nodes",
             "inter-topology",
             "inter_topology",
+            "sim-threads",
+            "sim_threads",
         ]
         .iter()
         .any(|k| args.get(k).is_some())
@@ -481,7 +501,7 @@ fn cmd_sweep(args: &Args) -> mttkrp_memsys::Result<()> {
         eprintln!(
             "warning: --axis preset=... resets the config per grid point; base --system, \
              --<section.key>, --channels/--topology/--link-width/--lmb-banks/--reply-network/\
-             --nodes/--inter-topology flags are ignored there"
+             --nodes/--inter-topology/--sim-threads flags are ignored there"
         );
     }
     let baseline = match args.get("baseline") {

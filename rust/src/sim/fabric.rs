@@ -497,19 +497,14 @@ impl Fabric {
         gated: bool,
         tel: &mut Telemetry,
     ) {
-        // Replies that finished transport in an earlier cycle surface
-        // first (they completed strictly before anything due at `now`).
-        while let Some(resp) = self.reply_out.front() {
-            if resp.done_at > now {
-                break;
-            }
-            completions.push(self.reply_out.pop_front().unwrap());
-        }
+        self.drain_due_replies(now, completions);
         for c in 0..self.channels.len() {
             if gated && !self.channels[c].needs_tick(now) {
                 continue;
             }
             if self.reply_enabled {
+                // Inline twin of `absorb_channel_completions` (which the
+                // sharded engine uses on detached channels).
                 self.reply_scratch.clear();
                 self.channels[c].tick_traced(now, &mut self.reply_scratch, tel, c);
                 for resp in self.reply_scratch.drain(..) {
@@ -519,6 +514,68 @@ impl Fabric {
             } else {
                 self.channels[c].tick_traced(now, completions, tel, c);
             }
+        }
+    }
+
+    // --- channel-shard support (parallel engine) ------------------------
+    //
+    // The sharded engine ticks the channel controllers on worker threads:
+    // it detaches them with `take_channels`, ticks each shard against a
+    // private completion sink, then re-absorbs every channel's output *in
+    // channel index order* — the exact order `tick_channels` produces
+    // serially, so completions (and therefore everything downstream) are
+    // bit-identical at any thread count.
+
+    /// Surface replies whose transport finished by `now` — the serial
+    /// head of [`Fabric::tick_channels`] (they completed strictly before
+    /// anything due at `now`), split out so the coordinating thread can
+    /// run it before the channel shards tick.
+    pub fn drain_due_replies(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
+        while let Some(resp) = self.reply_out.front() {
+            if resp.done_at > now {
+                break;
+            }
+            completions.push(self.reply_out.pop_front().unwrap());
+        }
+    }
+
+    /// How many channels the gated tick would actually advance at `now` —
+    /// the sharding-worthwhile test (one idle-channel scan, no mutation).
+    pub fn channels_needing_tick(&self, now: Cycle) -> usize {
+        self.channels.iter().filter(|d| d.needs_tick(now)).count()
+    }
+
+    /// Detach the DRAM channel controllers for shard-parallel ticking.
+    /// The fabric must not be routed or ticked until [`Fabric::put_channels`]
+    /// reinstalls them (the run loop does both within one phase).
+    pub fn take_channels(&mut self) -> Vec<Dram> {
+        std::mem::take(&mut self.channels)
+    }
+
+    /// Reinstall controllers detached by [`Fabric::take_channels`], in
+    /// channel index order.
+    pub fn put_channels(&mut self, channels: Vec<Dram>) {
+        debug_assert!(self.channels.is_empty(), "channels already installed");
+        self.channels = channels;
+    }
+
+    /// Merge one (detached) channel's tick output, exactly as the serial
+    /// loop in [`Fabric::tick_channels`] does inline: with the reply
+    /// network on, completions enter the channel node's reply buffer;
+    /// otherwise they surface directly.
+    pub fn absorb_channel_completions(
+        &mut self,
+        ch: usize,
+        out: &mut Vec<MemResp>,
+        completions: &mut Vec<MemResp>,
+    ) {
+        if self.reply_enabled {
+            for resp in out.drain(..) {
+                self.reply_at_node[ch].push_back(resp);
+                self.reply_occupancy += 1;
+            }
+        } else {
+            completions.append(out);
         }
     }
 

@@ -30,13 +30,18 @@
 //! Two run loops share every component model (see [`system`]):
 //!
 //! * [`MemorySystem::run`] — the event-driven engine: timed events live
-//!   in calendar queues, and per-cycle work only visits components with
-//!   pending work (active-set gating). This is the engine every driver
-//!   uses.
+//!   in calendar queues, per-cycle work only visits components with
+//!   pending work (active-set gating), and time advances straight to
+//!   the next scheduled event whenever nothing is primed for the very
+//!   next cycle (skip-ahead). With `sim_threads > 1` it additionally
+//!   shards DRAM-channel ticking and PE window fill/retire across
+//!   worker threads ([`parallel`]), merged deterministically. This is
+//!   the engine every driver uses.
 //! * [`MemorySystem::run_reference`] — the original poll-everything
 //!   loop, kept as the correctness oracle. The two are report-identical
-//!   by construction (each gate skips only provable no-ops);
-//!   `tests/integration_engine.rs` enforces it across all variants,
+//!   by construction (each gate skips only provable no-ops, each jump
+//!   only provably idle stretches); `tests/integration_engine.rs`
+//!   enforces it — and thread-count invariance — across all variants,
 //!   fabrics and topologies.
 //!
 //! Drivers (CLI, benches, examples, integration tests) do not call
@@ -51,6 +56,7 @@ pub mod dram;
 pub mod fabric;
 pub mod lmb;
 pub mod mshr;
+pub mod parallel;
 pub mod pe;
 pub mod request_reductor;
 pub mod router;

@@ -1,0 +1,245 @@
+//! Shard workers for the parallel in-run engine (`--sim-threads`).
+//!
+//! The run loop in [`super::system`] stays the single source of truth
+//! for simulated behavior; this module only provides the plumbing that
+//! lets some of its *embarrassingly parallel* phases run on worker
+//! threads:
+//!
+//! * **DRAM channel ticks** — each controller owns its banks, queue and
+//!   in-flight set; channels only meet again at the fabric, so the run
+//!   loop detaches them ([`super::fabric::Fabric::take_channels`]),
+//!   shards them round-robin across workers, and re-absorbs each
+//!   channel's completions *in channel index order* — the exact merge
+//!   the serial loop performs.
+//! * **PE window fill / retire** — admission and retirement touch only
+//!   the front end they run on; telemetry retire markers are replayed
+//!   by the coordinator in PE index order from the returned counts.
+//!
+//! Everything else (LMB ticks minting request ids, the shared issue
+//! budget, fabric routing) stays serial on the coordinating thread, so
+//! the parallel engine is *deterministic by construction*: the report
+//! and every telemetry artifact are byte-identical at any thread count
+//! (property-tested in `tests/integration_engine.rs`).
+//!
+//! The crate is dependency-free, so the pool is built from
+//! `std::thread::scope` + `std::sync::mpsc` alone. Workers spin briefly
+//! on `try_recv` (the per-visited-cycle round trip is far shorter than
+//! a park/unpark) and fall back to `yield_now` so an idle pool cannot
+//! monopolize the host.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+use super::dram::Dram;
+use super::pe::PeFrontEnd;
+use super::telemetry::Telemetry;
+use super::{Cycle, MemResp};
+
+/// One phase of sharded work shipped to a worker. Component ownership
+/// *moves* through the channel and comes back in the reply — no locks,
+/// no sharing, no unsafe.
+pub enum ShardTask {
+    /// Tick these detached DRAM channels at `now` (activity-gated like
+    /// the serial engine), collecting each channel's completions
+    /// separately so the coordinator can merge in channel order.
+    Channels { now: Cycle, channels: Vec<(usize, Dram)> },
+    /// Admit pending stream work into these front ends' windows.
+    Fill { pes: Vec<(usize, PeFrontEnd)> },
+    /// Retire finished slots at `now`, reporting per-front-end counts
+    /// for the coordinator's in-order telemetry replay.
+    Retire { now: Cycle, pes: Vec<(usize, PeFrontEnd)> },
+}
+
+/// A completed [`ShardTask`], returning the moved components.
+pub enum ShardDone {
+    Channels { channels: Vec<(usize, Dram, Vec<MemResp>)> },
+    Fill { pes: Vec<(usize, PeFrontEnd)> },
+    Retire { pes: Vec<(usize, PeFrontEnd, u64)> },
+}
+
+/// Execute one shard of work. Shared by workers and the coordinator
+/// (which always processes one shard inline instead of idling at the
+/// barrier). `tel` must be a disabled collector: the sharded paths are
+/// only taken when request tracing is off, and the DRAM trace hooks are
+/// single-branch no-ops on a disabled collector, so behavior matches
+/// the serial engine exactly.
+pub fn run_task(task: ShardTask, tel: &mut Telemetry) -> ShardDone {
+    match task {
+        ShardTask::Channels { now, channels } => {
+            let mut out = Vec::with_capacity(channels.len());
+            for (idx, mut dram) in channels {
+                let mut resps = Vec::new();
+                if dram.needs_tick(now) {
+                    dram.tick_traced(now, &mut resps, tel, idx);
+                }
+                out.push((idx, dram, resps));
+            }
+            ShardDone::Channels { channels: out }
+        }
+        ShardTask::Fill { pes } => {
+            let mut out = Vec::with_capacity(pes.len());
+            for (idx, mut pe) in pes {
+                if pe.needs_fill() {
+                    pe.fill_window();
+                }
+                out.push((idx, pe));
+            }
+            ShardDone::Fill { pes: out }
+        }
+        ShardTask::Retire { now, pes } => {
+            let mut out = Vec::with_capacity(pes.len());
+            for (idx, mut pe) in pes {
+                let n = pe.retire(now);
+                out.push((idx, pe, n));
+            }
+            ShardDone::Retire { pes: out }
+        }
+    }
+}
+
+/// Deal `items` round-robin into `shards` piles, each entry tagged with
+/// its original index so the coordinator can merge results back in
+/// index order (the assignment itself is timing-inert — every sharded
+/// phase is component-local).
+pub fn shard_round_robin<T>(items: Vec<T>, shards: usize) -> Vec<Vec<(usize, T)>> {
+    let mut parts: Vec<Vec<(usize, T)>> = (0..shards).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        parts[i % shards].push((i, item));
+    }
+    parts
+}
+
+/// The coordinator's handle on the worker threads: one task/done
+/// channel pair per worker. Dropping the pool closes the task channels,
+/// which ends every worker loop — `run_parallel` relies on that for
+/// scope teardown.
+pub struct ShardPool {
+    to_workers: Vec<Sender<ShardTask>>,
+    from_workers: Vec<Receiver<ShardDone>>,
+}
+
+/// A worker thread's ends of the channel pair.
+pub struct WorkerEnd {
+    tasks: Receiver<ShardTask>,
+    done: Sender<ShardDone>,
+}
+
+impl ShardPool {
+    /// Build the channel pairs for `workers` worker threads. The caller
+    /// spawns one [`worker_loop`] per returned [`WorkerEnd`] inside a
+    /// `std::thread::scope`.
+    pub fn new(workers: usize) -> (ShardPool, Vec<WorkerEnd>) {
+        let mut to_workers = Vec::with_capacity(workers);
+        let mut from_workers = Vec::with_capacity(workers);
+        let mut ends = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let (task_tx, task_rx) = channel();
+            let (done_tx, done_rx) = channel();
+            to_workers.push(task_tx);
+            from_workers.push(done_rx);
+            ends.push(WorkerEnd { tasks: task_rx, done: done_tx });
+        }
+        (ShardPool { to_workers, from_workers }, ends)
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.to_workers.len()
+    }
+
+    /// Ship one shard to worker `w`.
+    pub fn send(&self, w: usize, task: ShardTask) {
+        self.to_workers[w]
+            .send(task)
+            .expect("shard worker hung up mid-run");
+    }
+
+    /// Barrier half: wait for worker `w`'s result.
+    pub fn recv(&self, w: usize) -> ShardDone {
+        spin_recv(&self.from_workers[w]).expect("shard worker hung up mid-run")
+    }
+}
+
+/// Worker body: serve shard tasks until the pool (sender) is dropped.
+pub fn worker_loop(end: WorkerEnd) {
+    let mut tel = Telemetry::disabled();
+    while let Some(task) = spin_recv(&end.tasks) {
+        if end.done.send(run_task(task, &mut tel)).is_err() {
+            break;
+        }
+    }
+}
+
+/// Latency-oriented receive: spin briefly (the per-cycle round trip is
+/// sub-microsecond when the pool is hot), then yield to the scheduler
+/// so idle workers don't burn a core. `None` when the peer hung up.
+fn spin_recv<T>(rx: &Receiver<T>) -> Option<T> {
+    let mut spins: u32 = 0;
+    loop {
+        match rx.try_recv() {
+            Ok(v) => return Some(v),
+            Err(TryRecvError::Disconnected) => return None,
+            Err(TryRecvError::Empty) => {
+                spins = spins.saturating_add(1);
+                if spins < 1 << 12 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Access, AccessClass, NnzWork, PeTrace, WORK_CHUNK};
+
+    fn front_end(pe: usize, items: usize) -> PeFrontEnd {
+        let a = |addr| Access { class: AccessClass::TensorElem, addr, bytes: 16 };
+        let work = (0..items as u64)
+            .map(|z| NnzWork {
+                elem: a(z * 16),
+                fibers: [a(0x1000 + z * 64), a(0x2000 + z * 64)],
+                store: None,
+            })
+            .collect();
+        PeFrontEnd::from_trace(PeTrace { pe, work }, 0, 8, 2, 4)
+    }
+
+    #[test]
+    fn pool_round_trips_fill_shards() {
+        let (pool, ends) = ShardPool::new(2);
+        std::thread::scope(|s| {
+            for end in ends {
+                s.spawn(move || worker_loop(end));
+            }
+            pool.send(0, ShardTask::Fill { pes: vec![(0, front_end(0, WORK_CHUNK))] });
+            pool.send(1, ShardTask::Fill { pes: vec![(1, front_end(1, 3))] });
+            for w in [0, 1] {
+                match pool.recv(w) {
+                    ShardDone::Fill { pes } => {
+                        for (_, pe) in pes {
+                            assert!(pe.can_issue(), "fill admitted work");
+                        }
+                    }
+                    _ => panic!("mismatched phase reply"),
+                }
+            }
+            drop(pool); // hang up so the scope can join the workers
+        });
+    }
+
+    #[test]
+    fn run_task_inline_matches_worker_semantics() {
+        let mut tel = Telemetry::disabled();
+        let done = run_task(ShardTask::Retire { now: 0, pes: vec![(0, front_end(0, 2))] }, &mut tel);
+        match done {
+            ShardDone::Retire { pes } => {
+                assert_eq!(pes.len(), 1);
+                let (idx, _, retired) = &pes[0];
+                assert_eq!((*idx, *retired), (0, 0), "nothing issued, nothing retires");
+            }
+            _ => panic!("mismatched phase reply"),
+        }
+    }
+}

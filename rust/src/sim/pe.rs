@@ -175,6 +175,12 @@ impl LatencyStats {
 pub struct PeStats {
     pub retired: u64,
     pub issued_accesses: u64,
+    /// Cycles the front end's head access sat stalled (LMB said Stall /
+    /// Blocked). Accounted as episode *durations* — from the cycle the
+    /// head first stalls to the cycle it finally dispatches — a
+    /// definition that depends only on simulated time, never on which
+    /// cycles the engine happened to visit, so the counter is
+    /// engine-invariant even when the event engine skips ahead.
     pub stall_cycles: u64,
     /// Latency by access slot class: [element, fiber-load, fiber-load,
     /// store] — index with ACC_*.
@@ -213,6 +219,10 @@ pub struct PeFrontEnd {
     /// Accesses this front end may issue per cycle.
     pub issue_width: usize,
     compute_cycles: Cycle,
+    /// Cycle the head access first returned Stall, if a stall episode is
+    /// open. The run loop closes the episode when that head dispatches,
+    /// accruing `now - stall_since` into `stats.stall_cycles`.
+    pub stall_since: Option<Cycle>,
     pub stats: PeStats,
 }
 
@@ -244,6 +254,7 @@ impl PeFrontEnd {
             occupied: 0,
             issue_width: issue_width.max(1),
             compute_cycles,
+            stall_since: None,
             stats: PeStats::default(),
         }
     }
@@ -302,6 +313,15 @@ impl PeFrontEnd {
                 self.pending.push_back((slot as u32, ACC_STORE as u8));
             }
         }
+    }
+
+    /// Would [`PeFrontEnd::fill_window`] admit anything right now
+    /// (stream work remains and a window slot is free)? When false, fill
+    /// is a provable no-op — the run loop's admission phase skips this
+    /// front end, and the sharded engine uses the count of front ends
+    /// needing fill as its is-sharding-worthwhile test.
+    pub fn needs_fill(&self) -> bool {
+        self.admitted < self.total && self.occupied < self.window.len()
     }
 
     /// Could an issue attempt do anything right now: an unissued access
@@ -376,6 +396,13 @@ impl PeFrontEnd {
             }
         }
         complete
+    }
+
+    /// Earliest compute-done cycle among finished-but-unretired slots —
+    /// a run-loop fast-forward candidate (`None` when nothing is
+    /// pending retirement).
+    pub fn next_retire(&self) -> Option<Cycle> {
+        (self.earliest_retire != Cycle::MAX).then_some(self.earliest_retire)
     }
 
     /// Retire finished slots; returns how many retired this call.

@@ -39,9 +39,10 @@ pub struct LmbStats {
 
 /// Aggregate PE front-end counters (summed over all front ends). In the
 /// report so the engine-equivalence oracle also covers the PE issue
-/// path — `stall_cycles` in particular accrues once per visited cycle a
-/// stalled head is retried, which is exactly what the event engine's
-/// step-7 gate must preserve.
+/// path — `stall_cycles` in particular accrues stall-episode *durations*
+/// (first-stall cycle to dispatch cycle, see
+/// [`super::pe::PeFrontEnd::stall_since`]), a definition both engines
+/// compute identically even when the event engine skips ahead.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PeAggStats {
     pub retired: u64,
@@ -79,6 +80,12 @@ pub struct SimReport {
     /// PE-observed latency per access slot: [element, fiber-load,
     /// fiber-load, store] — the paper's per-class "minimum latency" view.
     pub latency: [LatencyStats; 4],
+    /// Run-loop iterations the engine actually executed (host-side cost
+    /// metric). The event engine's skip-ahead makes this much smaller
+    /// than `total_cycles`; the reference loop visits more cycles. Like
+    /// `host_seconds` it describes the *simulator*, not the simulated
+    /// machine, so it is excluded from [`SimReport::diff`].
+    pub visited_cycles: u64,
     /// Wall-clock seconds the simulation itself took (host time).
     pub host_seconds: f64,
 }
@@ -108,7 +115,8 @@ impl SimReport {
             lmbs,
             pe,
             latency,
-            host_seconds: _, // host wall-clock is allowed to differ
+            visited_cycles: _, // host-side loop-iteration count, engine-specific
+            host_seconds: _,   // host wall-clock is allowed to differ
         } = self;
         macro_rules! cmp {
             ($field:ident) => {
@@ -477,6 +485,7 @@ mod tests {
             lmbs: vec![],
             pe: PeAggStats::default(),
             latency: Default::default(),
+            visited_cycles: 0,
             host_seconds: 0.0,
         }
     }

@@ -24,35 +24,52 @@
 //! [`MemorySystem::run`] is the **event-driven engine** every driver
 //! uses; [`MemorySystem::run_reference`] is the original poll-everything
 //! loop, kept as the correctness oracle. Both execute the *same* loop
-//! body (`run_impl`) over the *same* sequence of visited
-//! cycles — the event engine only adds per-component **activity gates**,
-//! each of which skips a step exactly when that step would be a provable
-//! no-op (no state change *and* no statistics, stall counters included):
+//! body (`run_impl`); the event engine layers on three mechanisms, each
+//! of which may only elide or reorder a provable no-op:
 //!
-//! * DRAM channels are only ticked when they have queued work or a
-//!   completion due ([`super::dram::Dram::needs_tick`]);
-//! * LMB housekeeping only visits LMBs with queued DMA transfers or
-//!   blocked line retries ([`Lmb::needs_tick`]);
-//! * fabric transport only runs while requests are resident in the
-//!   fabric ([`super::Fabric::has_traffic`]);
-//! * PE issue only visits front ends that could admit or issue an
-//!   access ([`super::pe::PeFrontEnd::can_issue`]), and retirement
-//!   returns in O(1) until the earliest compute-done cycle;
-//! * the (pure) termination predicate is only re-evaluated on cycles
-//!   where state changed.
+//! * **Activity gates** — per-component skips of steps that would
+//!   change no state and no statistic: DRAM channels without queued or
+//!   due work ([`super::dram::Dram::needs_tick`]), LMBs with no
+//!   housekeeping ([`Lmb::needs_tick`]), an empty fabric
+//!   ([`super::Fabric::has_traffic`]), front ends that could not admit
+//!   ([`super::pe::PeFrontEnd::needs_fill`]) or issue
+//!   ([`super::pe::PeFrontEnd::can_issue`]), and a termination
+//!   predicate only re-evaluated on cycles where state changed.
 //!
-//! Timed events live in calendar queues — the `deliveries` and
-//! `line_events` binary heaps plus each channel's tracked
-//! earliest-completion / next-schedulable cycle — which both engines
-//! already use to fast-forward over globally idle stretches
-//! (`next_event_time`). Because stall statistics accrue
-//! once per *visited* cycle, the visited-cycle sequence itself must not
-//! change: the event engine therefore keeps the reference time-advance
-//! rule verbatim and takes its ~order-of-magnitude host-time win purely
-//! from not touching quiescent components while *other* components are
-//! busy. `tests/integration_engine.rs` (and the in-module test below)
-//! assert full [`SimReport`] equality between the engines across all
-//! four variants, both fabric types and all three topologies.
+//! * **Skip-ahead** — instead of stepping `now + 1`, jump straight to
+//!   the earliest calendar entry (delivery / line-event heap heads,
+//!   DRAM earliest-completion and next-schedulable cycles, fabric
+//!   transit, PE earliest-retire) unless some component is *primed* to
+//!   act on the very next cycle (`wants_next_cycle`): resident fabric
+//!   traffic, LMB housekeeping or queued requests, an open line-split
+//!   partial, a front end with issuable work, or a head in a *sticky*
+//!   stall. Sticky stalls (every LMB path: RR probe clocks, cache
+//!   LRU/blocked counters, DMA queue-stall counters) mutate state on
+//!   each retry, so the engine revisits every cycle while one is open
+//!   — exactly like the reference loop; pure stalls (the ip-only limit
+//!   checks) mutate nothing and are skippable. Stall time itself is
+//!   accounted as episode durations
+//!   ([`super::pe::PeFrontEnd::stall_since`]: first-stall cycle to
+//!   dispatch cycle), which both engines compute identically because
+//!   episode endpoints are mutation cycles both always visit. Timeline
+//!   telemetry stays byte-identical because the advance step records a
+//!   row for every window boundary a jump crosses, stamped at the
+//!   boundary with the pre-jump counters — nothing can change inside a
+//!   jumped stretch, or the jump would have been invalid.
+//!
+//! * **Sharded ticking** (`sim_threads > 1`, [`super::parallel`]) —
+//!   DRAM-channel ticks and PE window fill/retire run on scoped worker
+//!   threads, synchronized at a per-visited-cycle barrier and merged
+//!   in component index order, which reproduces the serial engine's
+//!   completion and telemetry order bit-for-bit. Request-id minting
+//!   (LMB ticks), PE issue (shared direct-issue budget, shared
+//!   LMB/fabric queues) and fabric routing stay on the coordinating
+//!   thread — their order *is* observable behavior.
+//!
+//! `tests/integration_engine.rs` (and the in-module tests below) assert
+//! full [`SimReport`] equality between the engines — and across thread
+//! counts, telemetry artifacts included — over all four variants, both
+//! fabric types and all three topologies.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -61,13 +78,14 @@ use std::time::Instant;
 use crate::config::{FabricType, SystemConfig, SystemKind};
 use crate::trace::{AccessClass, TraceSource};
 
-use super::dram::IdGen;
+use super::dram::{Dram, IdGen};
 use super::fabric::Fabric;
 use super::lmb::{LineEvent, Lmb, LmbOutcome};
+use super::parallel::{run_task, shard_round_robin, worker_loop, ShardDone, ShardPool, ShardTask};
 use super::pe::{pack_token, unpack_token, PeFrontEnd};
 use super::stats::{PeAggStats, SimReport};
 use super::telemetry::{Telemetry, TelemetryOutput, TimelineSnap};
-use super::{Cycle, Delivery, MemReq, ReqId};
+use super::{Cycle, Delivery, MemReq, MemResp, ReqId};
 
 /// In-progress multi-part issue (cache-only fiber line splitting).
 #[derive(Debug, Clone, Copy)]
@@ -148,6 +166,9 @@ pub struct MemorySystem {
     /// Bank + RR outcome of the last dispatched element load, staged for
     /// the access span (set only while tracing).
     elem_probe: Option<(usize, &'static str)>,
+    /// Per-front-end head-stall kind from the most recent issue attempt
+    /// — drives the skip-ahead advance rule (see `wants_next_cycle`).
+    head_stall: Vec<HeadStall>,
 }
 
 impl MemorySystem {
@@ -225,6 +246,7 @@ impl MemorySystem {
             scratch_deliveries: Vec::new(),
             telemetry: Telemetry::new(cfg),
             elem_probe: None,
+            head_stall: vec![HeadStall::Clear; n_pes],
             cfg: cfg.clone(),
         }
     }
@@ -238,22 +260,52 @@ impl MemorySystem {
 
     /// Run to completion with the event-driven engine; returns the
     /// report. Report-identical to [`MemorySystem::run_reference`]
-    /// (modulo `host_seconds`), only faster.
+    /// (modulo the host-side fields), only faster. With
+    /// `cfg.sim_threads > 1` the component-local phases run on scoped
+    /// shard workers — still bit-identical at any thread count (the
+    /// merges are deterministic; see [`super::parallel`]).
     pub fn run(&mut self, workload_name: &str) -> SimReport {
-        self.run_impl(workload_name, true)
+        if self.cfg.sim_threads > 1 {
+            return self.run_sharded(workload_name);
+        }
+        self.run_impl(workload_name, true, None)
     }
 
     /// Run to completion with the original poll-everything loop — the
     /// correctness oracle the event-driven engine is checked against.
+    /// Always single-threaded.
     pub fn run_reference(&mut self, workload_name: &str) -> SimReport {
-        self.run_impl(workload_name, false)
+        self.run_impl(workload_name, false, None)
     }
 
-    /// The shared loop body. `event_driven` enables the activity gates;
-    /// with it false every component is polled on every visited cycle
-    /// (the seed behavior). Each gate must only ever skip a provable
-    /// no-op — see the module docs for the per-gate argument.
-    fn run_impl(&mut self, workload_name: &str, event_driven: bool) -> SimReport {
+    /// The event engine with `sim_threads - 1` scoped shard workers
+    /// (`std::thread::scope` only — the crate stays dependency-free).
+    fn run_sharded(&mut self, workload_name: &str) -> SimReport {
+        let (pool, ends) = ShardPool::new(self.cfg.sim_threads - 1);
+        std::thread::scope(|s| {
+            for end in ends {
+                s.spawn(move || worker_loop(end));
+            }
+            let report = self.run_impl(workload_name, true, Some(&pool));
+            drop(pool); // hang up the task channels so the workers exit
+            report
+        })
+    }
+
+    /// The shared loop body. `event_driven` enables the activity gates
+    /// and skip-ahead; with it false every component is polled on every
+    /// visited cycle and time only jumps across globally idle stretches
+    /// (the seed behavior). `pool` (event engine only) shards the
+    /// component-local phases across workers. Each gate, jump and shard
+    /// merge must preserve observable behavior exactly — see the module
+    /// docs for the per-mechanism argument.
+    fn run_impl(
+        &mut self,
+        workload_name: &str,
+        event_driven: bool,
+        pool: Option<&ShardPool>,
+    ) -> SimReport {
+        debug_assert!(pool.is_none() || event_driven, "reference loop is never sharded");
         let host_t0 = Instant::now();
         let mut now: Cycle = 0;
         let total_accesses: u64 = self
@@ -261,24 +313,42 @@ impl MemorySystem {
             .iter()
             .map(|p| p.total_work() as u64 * 4)
             .sum::<u64>();
-        // Generous deadlock watchdog (saturating: scaled-up workloads
-        // must clamp at u64::MAX rather than wrap to a tiny bound).
+        // Generous deadlock watchdog on *visited iterations* (skip-ahead
+        // makes `now` jump legitimately, so wall-cycle bounds would be
+        // meaningless; a deadlock shows up as iterations without
+        // progress). Saturating: scaled-up workloads must clamp at
+        // u64::MAX rather than wrap to a tiny bound.
         let watchdog = total_accesses.saturating_mul(2_000).saturating_add(10_000_000);
+        let mut visited: u64 = 0;
         let mut completions = Vec::new();
         let mut line_evs = Vec::new();
         loop {
+            visited += 1;
             let mut progress = false;
 
             // 1. DRAM completions (all channels with schedulable or due
             //    work; channel order — hence completion order — is the
-            //    same in both engines). With the reply network on these
-            //    are the replies whose fabric traversal finished, their
-            //    done_at rewritten to the delivery cycle.
+            //    same in both engines and at any thread count). With the
+            //    reply network on these are the replies whose fabric
+            //    traversal finished, their done_at rewritten to the
+            //    delivery cycle. Sharded across the pool when at least
+            //    two channels have work and request tracing is off (the
+            //    DRAM trace hooks fire inside the tick; workers carry
+            //    disabled collectors).
             completions.clear();
-            if event_driven {
-                self.fabric.tick_memory_gated_traced(now, &mut completions, &mut self.telemetry);
-            } else {
-                self.fabric.tick_memory_traced(now, &mut completions, &mut self.telemetry);
+            match pool {
+                Some(pool)
+                    if !self.telemetry.tracing()
+                        && self.fabric.channels_needing_tick(now) >= 2 =>
+                {
+                    self.tick_memory_sharded(now, &mut completions, pool);
+                }
+                _ if event_driven => {
+                    self.fabric.tick_memory_gated_traced(now, &mut completions, &mut self.telemetry);
+                }
+                _ => {
+                    self.fabric.tick_memory_traced(now, &mut completions, &mut self.telemetry);
+                }
             }
             for resp in completions.drain(..) {
                 progress = true;
@@ -367,11 +437,31 @@ impl MemorySystem {
                 progress |= self.fabric.route_traced(now, &mut self.telemetry);
             }
 
-            // 7. PE issue + retire — only front ends that could issue
-            //    (pending access, admittable work, or an open line-split
-            //    partial); stalled heads stay "issuable" so their
-            //    per-visited-cycle retry cadence — and thus every stall
-            //    counter — matches the reference loop exactly.
+            // 7a. Window admission. Fill is front-end-local and stamps
+            //     no cycles (admitted items queue *behind* a stalled
+            //     head), so it can run sharded — and hoisted out of the
+            //     per-PE issue call without observable difference.
+            match pool {
+                Some(pool) if self.pes.iter().filter(|p| p.needs_fill()).count() >= 2 => {
+                    self.fill_windows_sharded(pool);
+                }
+                _ => {
+                    for pe in &mut self.pes {
+                        if !event_driven || pe.needs_fill() {
+                            pe.fill_window();
+                        }
+                    }
+                }
+            }
+
+            // 7b. Issue — serial and in PE index order in every
+            //     configuration: it mints request ids, spends the shared
+            //     direct-issue budget and pushes into shared LMB/fabric
+            //     queues, so its order *is* observable behavior. Only
+            //     front ends that could issue are visited (pending
+            //     access or an open line-split partial); stalled heads
+            //     stay "issuable" so sticky retries keep their
+            //     reference-loop cadence.
             for pe_idx in 0..self.pes.len() {
                 let issuable = !event_driven
                     || self.partials[pe_idx].is_some()
@@ -379,14 +469,38 @@ impl MemorySystem {
                 if issuable && self.issue_pe(pe_idx, now) {
                     progress = true;
                 }
-                let n_retired = self.pes[pe_idx].retire(now);
-                if n_retired > 0 {
-                    progress = true;
-                    self.telemetry.retired(self.pes[pe_idx].pe, n_retired, now);
+            }
+
+            // 7c. Retire — front-end-local, O(1) until the earliest
+            //     compute-done cycle; sharded when at least two front
+            //     ends are due. Telemetry retire markers replay in PE
+            //     index order on either path.
+            match pool {
+                Some(pool)
+                    if self
+                        .pes
+                        .iter()
+                        .filter(|p| p.next_retire().is_some_and(|c| c <= now))
+                        .count()
+                        >= 2 =>
+                {
+                    for (pe, n_retired) in self.retire_sharded(now, pool) {
+                        progress = true;
+                        self.telemetry.retired(pe, n_retired, now);
+                    }
+                }
+                _ => {
+                    for pe_idx in 0..self.pes.len() {
+                        let n_retired = self.pes[pe_idx].retire(now);
+                        if n_retired > 0 {
+                            progress = true;
+                            self.telemetry.retired(self.pes[pe_idx].pe, n_retired, now);
+                        }
+                    }
                 }
             }
 
-            // 7b. Telemetry timeline: record one row per elapsed window
+            // 7d. Telemetry timeline: record one row per elapsed window
             //     (observation only — reads counters, mutates nothing).
             if self.telemetry.timeline_due(now) {
                 let snap = self.timeline_snap();
@@ -400,25 +514,48 @@ impl MemorySystem {
                 break;
             }
 
-            // 9. Advance time — identical in both engines (the visited-
-            //    cycle sequence is part of the observable behavior):
-            //    next cycle on progress, else jump to the next scheduled
-            //    event (DRAM completion, delivery, line event, the next
-            //    time a queued DRAM request can issue, or — line/ring —
-            //    the next fabric hop).
-            if progress {
-                now += 1;
+            // 9. Advance time. The reference loop steps `now + 1` after
+            //    every progress cycle and otherwise jumps to the
+            //    calendar head. The event engine proves, before taking
+            //    the post-progress step, that some component is primed
+            //    for the very next cycle (`wants_next_cycle`) — when
+            //    none is, every cycle up to the calendar head is a
+            //    no-op in the reference loop too (it would visit one
+            //    more no-progress cycle, then take the same jump), so
+            //    skipping straight there is unobservable.
+            let step = if event_driven {
+                progress && self.wants_next_cycle()
+            } else {
+                progress
+            };
+            let target = if step {
+                now + 1
             } else {
                 match self.next_event_time(now) {
-                    Some(c) if c > now => now = c,
+                    Some(c) if c > now => c,
                     // Nothing scheduled but not finished → structural
                     // stall that resolves on retry next cycle.
-                    _ => now += 1,
+                    _ => now + 1,
                 }
+            };
+            // Timeline rows for window boundaries the jump crosses,
+            // stamped at the boundary with the current counters — the
+            // frozen snapshot is exactly what a visit at the boundary
+            // would have recorded, since nothing can change inside a
+            // jumped stretch. (One branch per iteration when the
+            // timeline is off or no boundary is crossed.)
+            while let Some(b) = self.telemetry.next_window_boundary() {
+                if b >= target {
+                    break;
+                }
+                let snap = self.timeline_snap();
+                self.telemetry.timeline_record(b, snap);
             }
+            now = target;
             assert!(
-                now < watchdog,
-                "simulation deadlock: cycle {now}, {} accesses served of {}",
+                visited < watchdog,
+                "simulation deadlock: {visited} visited iterations at cycle {now}, \
+                 {} accesses served of {}",
                 self.accesses_served,
                 total_accesses
             );
@@ -455,8 +592,163 @@ impl MemorySystem {
             fabric: self.fabric.stats.clone(),
             link_width: self.fabric.link_width(),
             lmbs: self.lmbs.iter().map(Lmb::stats).collect(),
+            visited_cycles: visited,
             host_seconds: host_t0.elapsed().as_secs_f64(),
         }
+    }
+
+    /// Is any component primed to act on the very next cycle in a way
+    /// the event calendar cannot see? Consulted by the event engine
+    /// after a progress cycle, before taking the reference loop's
+    /// unconditional `now + 1` step: resident fabric traffic, LMB
+    /// housekeeping or held requests, an open line-split partial, a
+    /// sticky-stalled head (its retry mutates state every cycle), or a
+    /// non-stalled front end with issuable work (including an issue
+    /// budget cut short this cycle). Pure-stalled heads are excluded on
+    /// purpose — their retries mutate nothing, and the hazard they wait
+    /// on clears only through calendar-visible events.
+    fn wants_next_cycle(&self) -> bool {
+        self.fabric.has_traffic()
+            || self.lmbs.iter().any(|l| l.needs_tick() || l.has_requests())
+            || (0..self.pes.len()).any(|i| {
+                self.partials[i].is_some()
+                    || match self.head_stall[i] {
+                        HeadStall::Sticky => true,
+                        HeadStall::Pure => false,
+                        HeadStall::Clear => self.pes[i].can_issue(),
+                    }
+            })
+    }
+
+    // --- sharded phases (`sim_threads > 1`) -----------------------------
+
+    /// Phase-1 DRAM tick across the pool: detach the channel
+    /// controllers, tick one shard inline while the workers tick
+    /// theirs, then absorb every channel's completions in channel index
+    /// order — the exact merge [`Fabric::tick_channels`] performs
+    /// serially, so everything downstream is bit-identical.
+    fn tick_memory_sharded(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        pool: &ShardPool,
+    ) {
+        self.fabric.drain_due_replies(now, completions);
+        let channels = self.fabric.take_channels();
+        let n = channels.len();
+        let mut parts = shard_round_robin(channels, pool.n_workers() + 1);
+        let own = parts.pop().expect("coordinator shard");
+        let mut sent = Vec::with_capacity(parts.len());
+        for (w, part) in parts.into_iter().enumerate() {
+            if !part.is_empty() {
+                pool.send(w, ShardTask::Channels { now, channels: part });
+                sent.push(w);
+            }
+        }
+        let mut slots: Vec<Option<(Dram, Vec<MemResp>)>> = (0..n).map(|_| None).collect();
+        let mut tel = Telemetry::disabled();
+        let place = |slots: &mut Vec<Option<(Dram, Vec<MemResp>)>>, done: ShardDone| {
+            match done {
+                ShardDone::Channels { channels } => {
+                    for (i, dram, resps) in channels {
+                        slots[i] = Some((dram, resps));
+                    }
+                }
+                _ => unreachable!("phase reply mismatch"),
+            }
+        };
+        place(
+            &mut slots,
+            run_task(ShardTask::Channels { now, channels: own }, &mut tel),
+        );
+        for w in sent {
+            place(&mut slots, pool.recv(w));
+        }
+        let mut restored = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            let (dram, mut resps) = slot.expect("every channel comes back");
+            self.fabric.absorb_channel_completions(i, &mut resps, completions);
+            restored.push(dram);
+        }
+        self.fabric.put_channels(restored);
+    }
+
+    /// Phase-7a window fill across the pool. Fill is front-end-local,
+    /// so only the reassembly order (PE index) is observable — and it
+    /// is restored explicitly.
+    fn fill_windows_sharded(&mut self, pool: &ShardPool) {
+        let pes = std::mem::take(&mut self.pes);
+        let n = pes.len();
+        let mut parts = shard_round_robin(pes, pool.n_workers() + 1);
+        let own = parts.pop().expect("coordinator shard");
+        let mut sent = Vec::with_capacity(parts.len());
+        for (w, part) in parts.into_iter().enumerate() {
+            if !part.is_empty() {
+                pool.send(w, ShardTask::Fill { pes: part });
+                sent.push(w);
+            }
+        }
+        let mut slots: Vec<Option<PeFrontEnd>> = (0..n).map(|_| None).collect();
+        let mut tel = Telemetry::disabled();
+        let place = |slots: &mut Vec<Option<PeFrontEnd>>, done: ShardDone| match done {
+            ShardDone::Fill { pes } => {
+                for (i, pe) in pes {
+                    slots[i] = Some(pe);
+                }
+            }
+            _ => unreachable!("phase reply mismatch"),
+        };
+        place(&mut slots, run_task(ShardTask::Fill { pes: own }, &mut tel));
+        for w in sent {
+            place(&mut slots, pool.recv(w));
+        }
+        self.pes = slots
+            .into_iter()
+            .map(|s| s.expect("every front end comes back"))
+            .collect();
+    }
+
+    /// Phase-7c retire across the pool. Returns `(pe label, count)` for
+    /// front ends that retired, in PE index order, for the
+    /// coordinator's telemetry replay.
+    fn retire_sharded(&mut self, now: Cycle, pool: &ShardPool) -> Vec<(usize, u64)> {
+        let pes = std::mem::take(&mut self.pes);
+        let n = pes.len();
+        let mut parts = shard_round_robin(pes, pool.n_workers() + 1);
+        let own = parts.pop().expect("coordinator shard");
+        let mut sent = Vec::with_capacity(parts.len());
+        for (w, part) in parts.into_iter().enumerate() {
+            if !part.is_empty() {
+                pool.send(w, ShardTask::Retire { now, pes: part });
+                sent.push(w);
+            }
+        }
+        let mut slots: Vec<Option<(PeFrontEnd, u64)>> = (0..n).map(|_| None).collect();
+        let mut tel = Telemetry::disabled();
+        let place = |slots: &mut Vec<Option<(PeFrontEnd, u64)>>, done: ShardDone| match done {
+            ShardDone::Retire { pes } => {
+                for (i, pe, count) in pes {
+                    slots[i] = Some((pe, count));
+                }
+            }
+            _ => unreachable!("phase reply mismatch"),
+        };
+        place(&mut slots, run_task(ShardTask::Retire { now, pes: own }, &mut tel));
+        for w in sent {
+            place(&mut slots, pool.recv(w));
+        }
+        let mut retired = Vec::new();
+        self.pes = slots
+            .into_iter()
+            .map(|s| {
+                let (pe, count) = s.expect("every front end comes back");
+                if count > 0 {
+                    retired.push((pe.pe, count));
+                }
+                pe
+            })
+            .collect();
+        retired
     }
 
     /// Cumulative-counter snapshot for one telemetry timeline row
@@ -506,6 +798,7 @@ impl MemorySystem {
             self.fabric.next_completion(),
             self.fabric.next_schedule_time(now),
             self.fabric.next_transit_time(now),
+            self.pes.iter().filter_map(PeFrontEnd::next_retire).min(),
         ]
         .into_iter()
         .flatten()
@@ -524,7 +817,6 @@ impl MemorySystem {
     /// Issue up to `issue_width` access (parts) for one PE. Returns true
     /// if anything was issued.
     fn issue_pe(&mut self, pe_idx: usize, now: Cycle) -> bool {
-        self.pes[pe_idx].fill_window();
         let width = self.pes[pe_idx].issue_width;
         let mut issued_any = false;
         let mut budget = width;
@@ -533,11 +825,17 @@ impl MemorySystem {
             if let Some(p) = self.partials[pe_idx] {
                 match self.issue_partial(pe_idx, p, now) {
                     IssueStep::Advanced => {
+                        self.close_head_stall(pe_idx, now);
                         issued_any = true;
                         budget -= 1;
                         continue;
                     }
-                    IssueStep::Stalled => break,
+                    IssueStep::Stalled => {
+                        // All line-split stalls are LMB-side: retries
+                        // clock the cache every cycle.
+                        self.open_head_stall(pe_idx, HeadStall::Sticky, now);
+                        break;
+                    }
                     IssueStep::Done => {
                         self.partials[pe_idx] = None;
                         continue;
@@ -554,6 +852,7 @@ impl MemorySystem {
             match outcome {
                 DispatchResult::Issued { parts } => {
                     self.pes[pe_idx].mark_issued_at(slot, acc, parts, now);
+                    self.close_head_stall(pe_idx, now);
                     self.telemetry.access_issued(token, acc, now);
                     if let Some((bank, rr)) = probe {
                         self.telemetry.access_probe(token, bank, rr);
@@ -564,18 +863,48 @@ impl MemorySystem {
                 DispatchResult::Split => {
                     // mark_issued already done inside dispatch (cache-only
                     // fibers); the partial continues next loop turn.
+                    self.close_head_stall(pe_idx, now);
                     self.telemetry.access_issued(token, acc, now);
                     issued_any = true;
                     budget -= 1;
                 }
-                DispatchResult::Stall => {
+                DispatchResult::Stall { sticky } => {
                     self.requested_bytes -= access.bytes as u64;
-                    self.pes[pe_idx].stats.stall_cycles += 1;
+                    let kind = if sticky { HeadStall::Sticky } else { HeadStall::Pure };
+                    self.open_head_stall(pe_idx, kind, now);
                     break; // head-of-line: wait for the hazard to clear
                 }
             }
         }
         issued_any
+    }
+
+    /// Record that `pe_idx`'s head access failed to dispatch this
+    /// cycle. Opens a stall episode (first failing cycle) if none is
+    /// running and remembers the stall *kind* for the skip-ahead rule:
+    /// sticky retries mutate component state every visited cycle, so
+    /// the event engine must keep visiting; pure retries are no-ops, so
+    /// it may jump.
+    fn open_head_stall(&mut self, pe_idx: usize, kind: HeadStall, now: Cycle) {
+        debug_assert!(kind != HeadStall::Clear);
+        self.head_stall[pe_idx] = kind;
+        let pe = &mut self.pes[pe_idx];
+        if pe.stall_since.is_none() {
+            pe.stall_since = Some(now);
+        }
+    }
+
+    /// The head finally dispatched: close any open stall episode,
+    /// accruing its *duration* (first-stall cycle to this dispatch
+    /// cycle) into `stall_cycles`. Durations depend only on simulated
+    /// time — never on which cycles the engine visited — which keeps
+    /// the counter engine-invariant under skip-ahead.
+    fn close_head_stall(&mut self, pe_idx: usize, now: Cycle) {
+        self.head_stall[pe_idx] = HeadStall::Clear;
+        let pe = &mut self.pes[pe_idx];
+        if let Some(since) = pe.stall_since.take() {
+            pe.stats.stall_cycles += now - since;
+        }
     }
 
     /// Route one access according to the system variant.
@@ -663,7 +992,9 @@ impl MemorySystem {
                 if self.direct_total >= self.direct_limit
                     || self.fabric.port_depth(port) >= self.port_cap
                 {
-                    return DispatchResult::Stall;
+                    // Limit checks only — the retry mutates nothing, so
+                    // the event engine may skip ahead over this stall.
+                    return DispatchResult::Stall { sticky: false };
                 }
                 let beat = self.cfg.dram.beat_bytes();
                 let start = access.addr - access.addr % beat;
@@ -692,7 +1023,10 @@ impl MemorySystem {
                 DispatchResult::Issued { parts }
             }
             LmbOutcome::Pending => DispatchResult::Issued { parts },
-            LmbOutcome::Stall => DispatchResult::Stall,
+            // Every LMB stall path (RR bank probe, cache lookup, DMA
+            // queue) counts per-attempt stats and clocks LRU/RR state on
+            // each retry — sticky, so the event engine keeps visiting.
+            LmbOutcome::Stall => DispatchResult::Stall { sticky: true },
         }
     }
 
@@ -723,13 +1057,35 @@ impl MemorySystem {
 enum DispatchResult {
     Issued { parts: u16 },
     Split,
-    Stall,
+    /// Head-of-line hazard. `sticky` distinguishes stalls whose retry
+    /// mutates component state every attempt (all LMB paths: RR probe
+    /// clocks + stat counters, cache LRU clock, DMA queue stalls) from
+    /// pure limit checks (IP-only outstanding/port caps) that are
+    /// attempt-count-invariant — the skip-ahead rule in
+    /// [`MemorySystem::wants_next_cycle`] hinges on the difference.
+    Stall { sticky: bool },
 }
 
 enum IssueStep {
     Advanced,
     Stalled,
     Done,
+}
+
+/// Skip-ahead classification of a front end's head-of-line state,
+/// refreshed on every issue attempt (see [`DispatchResult::Stall`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HeadStall {
+    /// No open stall: the head dispatched on its last attempt (or was
+    /// never attempted).
+    Clear,
+    /// Stalled on a pure limit check; retries mutate nothing, so the
+    /// engine may jump to the next calendar event.
+    Pure,
+    /// Stalled on a mutating retry path; the engine must visit every
+    /// cycle until the head dispatches so per-attempt state matches the
+    /// reference loop exactly.
+    Sticky,
 }
 
 /// Convenience: build + run in one call (event-driven engine). Accepts
@@ -812,6 +1168,21 @@ mod tests {
                     "{fabric:?}/{kind:?}: engines diverged"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn sharded_engine_is_bit_identical_at_any_thread_count() {
+        let w = small_workload(FabricType::Type2, 4);
+        let mut cfg = cfg_for(SystemKind::Proposed, FabricType::Type2);
+        cfg.interconnect.channels = 2; // give the channel shards real work
+        cfg.validate().unwrap();
+        let base = MemorySystem::new(&cfg, &w).run(&w.name);
+        for threads in [2, 4] {
+            let mut c = cfg.clone();
+            c.sim_threads = threads;
+            let sharded = MemorySystem::new(&c, &w).run(&w.name);
+            assert_eq!(sharded.diff(&base), None, "sim_threads={threads} diverged");
         }
     }
 

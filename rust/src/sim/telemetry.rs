@@ -410,6 +410,17 @@ impl Telemetry {
         self.timeline_on && now >= self.next_window_end
     }
 
+    /// End of the current timeline window, when the timeline product is
+    /// on. The run loop's advance step records a row for every boundary
+    /// a skip-ahead jump crosses — stamped at the boundary cycle with
+    /// the pre-jump counters (nothing changes across a jumped stretch by
+    /// construction), which keeps timeline artifacts byte-identical
+    /// between the engines without forcing extra visited cycles.
+    #[inline]
+    pub fn next_window_boundary(&self) -> Option<Cycle> {
+        self.timeline_on.then_some(self.next_window_end)
+    }
+
     /// Record one timeline row at `now` from the cumulative snapshot:
     /// stores deltas against the previous row (instantaneous fields pass
     /// through). Idempotent per cycle so the end-of-run flush cannot

@@ -207,6 +207,91 @@ fn prop_telemetry_neither_perturbs_nor_diverges_between_engines() {
 }
 
 #[test]
+fn prop_sharded_engine_identical_across_thread_counts_and_matrix() {
+    // The parallel-engine contract, randomized: for sim_threads in
+    // {1, 2, 4}, the sharded event engine must stay report-identical to
+    // the single-thread reference loop across every system variant and
+    // topology (random_case already randomizes fabric, channel count,
+    // bank count and the reply network) — and the telemetry artifacts
+    // (request trace + timeline rows) must be byte-identical across
+    // thread counts: the shard merges are deterministic by construction.
+    check(
+        "sim_threads {1,2,4} == reference loop",
+        4,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            for kind in SystemKind::ALL {
+                for topology in TopologyKind::ALL {
+                    let mut cfg = base.as_baseline(kind);
+                    cfg.interconnect.topology = topology;
+                    let reference = MemorySystem::new(&cfg, &w).run_reference(&w.name);
+                    for sim_threads in [1usize, 2, 4] {
+                        let mut c = cfg.clone();
+                        c.sim_threads = sim_threads;
+                        let sharded = MemorySystem::new(&c, &w).run(&w.name);
+                        prop_assert_eq!(
+                            sharded.diff(&reference),
+                            None,
+                            "{kind:?}/{topology:?}/sim_threads={sim_threads}: diverged"
+                        );
+                    }
+                }
+            }
+            // Telemetry byte-identity across thread counts (trace +
+            // timeline on together; proposed system exercises every
+            // hook family).
+            let mut cfg = base.clone();
+            cfg.telemetry.trace = true;
+            cfg.telemetry.timeline = true;
+            let mut single = MemorySystem::new(&cfg, &w);
+            let single_report = single.run(&w.name);
+            let single_tel = single.take_telemetry(&w.name);
+            let single_trace = single_tel
+                .trace
+                .as_ref()
+                .map(|j| j.to_string_compact())
+                .unwrap_or_default();
+            for sim_threads in [2usize, 4] {
+                let mut c = cfg.clone();
+                c.sim_threads = sim_threads;
+                let mut sys = MemorySystem::new(&c, &w);
+                let report = sys.run(&w.name);
+                prop_assert_eq!(
+                    report.diff(&single_report),
+                    None,
+                    "sim_threads={sim_threads}: report diverged with telemetry on"
+                );
+                let tel = sys.take_telemetry(&w.name);
+                let trace = tel
+                    .trace
+                    .as_ref()
+                    .map(|j| j.to_string_compact())
+                    .unwrap_or_default();
+                prop_assert_eq!(
+                    trace,
+                    single_trace.clone(),
+                    "sim_threads={sim_threads}: trace artifact diverged"
+                );
+                prop_assert_eq!(
+                    tel.timeline.len(),
+                    single_tel.timeline.len(),
+                    "sim_threads={sim_threads}: timeline row counts diverged"
+                );
+                for (i, (ra, rb)) in tel.timeline.iter().zip(&single_tel.timeline).enumerate() {
+                    prop_assert_eq!(
+                        ra.to_string_compact(),
+                        rb.to_string_compact(),
+                        "sim_threads={sim_threads}: timeline row {i} diverged"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_streamed_source_identical_to_materialized_across_matrix() {
     // The streaming-workload invariant: simulating from the scenario's
     // bounded-memory trace source must produce a SimReport identical to
