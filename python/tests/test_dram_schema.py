@@ -1,0 +1,107 @@
+"""Schema check for the `dram` bench's JSON-lines output
+(`MEMSYS_BENCH_JSON=<path> cargo bench --bench dram`).
+
+The dram bench re-runs the Fig. 4 system x dataset grid on both DRAM
+timing backends (`dram.model` axis: the lumped default vs the
+command-level ACT/RD/WR/PRE/REF model) and dumps one `RunSet` record per
+grid point. The contract machine consumers rely on:
+
+* every record carries the sweep axes (`dram.model`, `system`,
+  `dataset`), the resolved config echoes the backend back, and
+  `config.dram` exposes the full timing parameter set (tRCD/tRP/tCAS/
+  tCWL/tRAS/tCCD, turnaround, refresh knobs);
+* `report.dram` carries the command-level counters (`refreshes`,
+  `refresh_steal_cycles`, `turnaround_cycles`) and they are identically
+  zero on every lumped record — the lumped report shape is frozen;
+* backends paired per (system, dataset) point agree on the transaction
+  stream (reads/writes/bytes) and the timed run never finishes first —
+  command-level effects only cost cycles.
+
+Runs against the file named by `MEMSYS_DRAM_JSONL` when set (CI's
+bench-smoke job produces one) and always against the committed sample.
+Needs no third-party deps beyond pytest.
+"""
+
+from pathlib import Path
+
+import pytest
+
+from _jsonl_schema import load_records, schema_paths
+
+SAMPLE = Path(__file__).parent / "data" / "dram_sample.jsonl"
+ENV_VAR = "MEMSYS_DRAM_JSONL"
+
+AXES = ("dram.model", "system", "dataset")
+TIMING_FIELDS = (
+    "banks",
+    "t_row_hit",
+    "t_row_miss",
+    "t_precharge",
+    "t_rcd",
+    "t_rp",
+    "t_cas",
+    "t_cwl",
+    "t_ras",
+    "t_ccd",
+    "t_wtr",
+    "t_rtw",
+    "refresh",
+    "t_refi",
+    "t_rfc",
+)
+COUNTER_FIELDS = ("refreshes", "refresh_steal_cycles", "turnaround_cycles")
+
+
+def _load(path):
+    return load_records(path, ENV_VAR, SAMPLE)
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_records_carry_axes_and_echo_the_backend(path):
+    for rec in _load(path):
+        for axis in AXES:
+            assert axis in rec["axes"], f"missing axis {axis!r} in {rec['label']!r}"
+        model = rec["axes"]["dram.model"]
+        assert model in {"lumped", "timed"}, rec["label"]
+        assert rec["config"]["dram"]["model"] == model, "config must echo the axis"
+        for field in TIMING_FIELDS:
+            assert field in rec["config"]["dram"], f"config.dram missing {field!r}"
+        assert rec["config"]["dram"]["t_ccd"] >= 1
+        assert rec["total_cycles"] > 0
+        assert rec["report"]["total_cycles"] == rec["total_cycles"]
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_command_level_counters_are_timed_only(path):
+    for rec in _load(path):
+        dram = rec["report"]["dram"]
+        for field in COUNTER_FIELDS:
+            assert field in dram, f"{rec['label']!r}: report.dram missing {field!r}"
+            assert dram[field] >= 0
+        assert 0.0 <= dram["row_hit_rate"] <= 1.0
+        if rec["axes"]["dram.model"] == "lumped":
+            zeros = {f: dram[f] for f in COUNTER_FIELDS if dram[f] != 0}
+            assert not zeros, f"{rec['label']!r}: lumped produced command counters {zeros}"
+
+
+@pytest.mark.parametrize("path", schema_paths(ENV_VAR, SAMPLE), ids=lambda p: p.name)
+def test_timed_backend_conserves_transactions_and_only_adds_cycles(path):
+    by_point = {}
+    for rec in _load(path):
+        key = (rec["axes"]["system"], rec["axes"]["dataset"])
+        by_point.setdefault(key, {})[rec["axes"]["dram.model"]] = rec
+    paired = [g for g in by_point.values() if {"lumped", "timed"} <= set(g)]
+    assert paired, "grid must pair lumped/timed per (system, dataset) point"
+    for key, g in by_point.items():
+        if not {"lumped", "timed"} <= set(g):
+            continue
+        lumped, timed = g["lumped"]["report"]["dram"], g["timed"]["report"]["dram"]
+        for field in ("reads", "writes", "read_bytes", "write_bytes"):
+            assert timed[field] == lumped[field], (
+                f"{key}: backends disagree on {field} "
+                f"({timed[field]} != {lumped[field]})"
+            )
+        assert g["timed"]["total_cycles"] >= g["lumped"]["total_cycles"], (
+            f"{key}: command-level timing sped the system up "
+            f"({g['timed']['total_cycles']} < {g['lumped']['total_cycles']})"
+        )

@@ -1,0 +1,128 @@
+//! Bench: DRAM timing-backend grid — the Fig. 4 system × dataset matrix
+//! re-run on both `dram.model` backends (the lumped default and the
+//! command-level ACT/RD/WR/PRE/REF model), one `experiment::Sweep` over
+//! the `dram.model` × `system` × `dataset` axes.
+//!
+//! Each (system, dataset) cell pairs a lumped run with its timed
+//! counterpart: the table shows the makespan delta the explicit DDR4
+//! command timing adds (tRCD/tRP splits, tRAS-gated precharges, tWTR/
+//! tRTW turnaround, tREFI/tRFC refresh) and the Fig. 4 speedup of the
+//! proposed system over ip-only under each backend. The locked-in
+//! invariants: command-level effects only ever add cycles, and the
+//! lumped backend never produces command-level counters.
+//!
+//! `MEMSYS_BENCH_SCALE` (default 0.005) sets the dataset scale. Set
+//! `MEMSYS_BENCH_JSON=<path>` to also dump the RunSet as JSON-lines.
+
+use mttkrp_memsys::config::SystemConfig;
+use mttkrp_memsys::experiment::{Scenario, Sweep};
+use mttkrp_memsys::util::bench::section;
+use mttkrp_memsys::util::table::{Align, Table};
+
+const MODELS: [&str; 2] = ["lumped", "timed"];
+const SYSTEMS: [&str; 4] = ["proposed", "ip-only", "cache-only", "dma-only"];
+const DATASETS: [&str; 2] = ["synth01", "synth02"];
+
+fn main() {
+    let scale: f64 = std::env::var("MEMSYS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    section(&format!(
+        "DRAM backend grid — dram.model x system x dataset (config-b, scale {scale})"
+    ));
+
+    let base = SystemConfig::config_b();
+    let scenario = Scenario::synth01(scale).for_config(&base);
+    let runs = Sweep::new(base, scenario)
+        .axis("dram.model", &MODELS)
+        .axis("system", &SYSTEMS)
+        .axis("dataset", &DATASETS)
+        .run()
+        .expect("dram backend sweep");
+
+    let mut table = Table::new(&[
+        "dataset",
+        "system",
+        "lumped cycles",
+        "timed cycles",
+        "delta",
+        "timed hit rate",
+        "refreshes",
+        "turnaround cyc",
+    ])
+    .aligns(&[
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ]);
+
+    let cell = |model: &str, system: &str, dataset: &str| {
+        runs.get(&[("dram.model", model), ("system", system), ("dataset", dataset)])
+            .unwrap_or_else(|| panic!("{model}/{system}/{dataset} missing from grid"))
+    };
+    for dataset in DATASETS {
+        for system in SYSTEMS {
+            let lumped = &cell("lumped", system, dataset).report;
+            let timed = &cell("timed", system, dataset).report;
+            // The conformance contract, re-checked at bench scale: the
+            // command-level backend serves the same transaction stream
+            // and only ever adds cycles; lumped never refreshes.
+            assert_eq!(
+                (lumped.dram.reads, lumped.dram.writes),
+                (timed.dram.reads, timed.dram.writes),
+                "{system}/{dataset}: backends disagree on the transaction stream"
+            );
+            assert!(
+                timed.total_cycles >= lumped.total_cycles,
+                "{system}/{dataset}: timed ({}) finished before lumped ({})",
+                timed.total_cycles,
+                lumped.total_cycles
+            );
+            assert_eq!(
+                (lumped.dram.refreshes, lumped.dram.turnaround_cycles),
+                (0, 0),
+                "{system}/{dataset}: lumped backend produced command-level counters"
+            );
+            let delta = timed.total_cycles as f64 / lumped.total_cycles as f64 - 1.0;
+            table.row(&[
+                dataset.to_string(),
+                system.to_string(),
+                lumped.total_cycles.to_string(),
+                timed.total_cycles.to_string(),
+                format!("{:+.1}%", delta * 100.0),
+                format!("{:.0}%", timed.dram.row_hit_rate() * 100.0),
+                timed.dram.refreshes.to_string(),
+                timed.dram.turnaround_cycles.to_string(),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+
+    // Fig. 4 headline under each backend: the proposed system's speedup
+    // over ip-only must survive command-level timing.
+    for dataset in DATASETS {
+        for model in MODELS {
+            let ip = cell(model, "ip-only", dataset).report.total_cycles;
+            let proposed = cell(model, "proposed", dataset).report.total_cycles;
+            assert!(ip > 0 && proposed > 0);
+            assert!(
+                proposed < ip,
+                "{model}/{dataset}: proposed ({proposed}) must beat ip-only ({ip})"
+            );
+            println!(
+                "{dataset} / {model}: proposed speedup over ip-only {:.2}x",
+                ip as f64 / proposed as f64
+            );
+        }
+    }
+    if let Ok(path) = std::env::var("MEMSYS_BENCH_JSON") {
+        runs.write_jsonl(std::path::Path::new(&path)).expect("write jsonl");
+        println!("wrote {} JSON-lines to {path}", runs.len());
+    }
+}

@@ -463,13 +463,53 @@ impl RrConfig {
     }
 }
 
+/// Which DRAM timing backend simulates a channel (see `sim::dram` and
+/// `sim::dram_timed`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DramModelKind {
+    /// The fast regression backend: DDR4 bank timing folded into lumped
+    /// `t_row_hit`/`t_row_miss`/`t_precharge` user-clock latencies.
+    Lumped,
+    /// Command-level backend: explicit ACT/RD/WR/PRE/REF per bank with
+    /// tRCD/tRP/tCAS/tCWL/tRAS timing, periodic refresh (tREFI/tRFC)
+    /// and tWTR/tRTW bus turnaround.
+    Timed,
+}
+
+impl DramModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DramModelKind::Lumped => "lumped",
+            DramModelKind::Timed => "timed",
+        }
+    }
+
+    pub const ALL: [DramModelKind; 2] = [DramModelKind::Lumped, DramModelKind::Timed];
+}
+
+impl std::str::FromStr for DramModelKind {
+    type Err = NameParseError;
+
+    fn from_str(s: &str) -> Result<DramModelKind, NameParseError> {
+        match s {
+            "lumped" => Ok(DramModelKind::Lumped),
+            "timed" => Ok(DramModelKind::Timed),
+            _ => Err(NameParseError::new("dram.model", s, &["lumped", "timed"])),
+        }
+    }
+}
+
 /// DRAM / memory-interface-IP timing model (user-clock cycles @300 MHz).
 ///
 /// The paper connects to the Xilinx UltraScale Memory Interface IP
-/// (512-bit data, 31-bit address). We fold DDR4 bank timing into
-/// user-clock latencies; see DESIGN.md §6.
+/// (512-bit data, 31-bit address). The default `lumped` backend folds
+/// DDR4 bank timing into user-clock latencies (see DESIGN.md §6); the
+/// `timed` backend replays the underlying DDR4 command schedule with the
+/// `t_rcd`..`t_rfc` parameters below.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct DramConfig {
+    /// Timing backend for every channel of this config.
+    pub model: DramModelKind,
     /// Data-bus width in bits (Xilinx MIG on U250: 512 with ECC).
     pub data_bits: usize,
     /// Number of DRAM banks the address space interleaves over.
@@ -496,6 +536,31 @@ pub struct DramConfig {
     /// on one bank could book the bus arbitrarily far ahead and starve
     /// ready requests at other banks.
     pub bus_admission_factor: u64,
+    /// tRCD: ACT-to-column command delay, user cycles (timed backend).
+    pub t_rcd: u64,
+    /// tRP: precharge-to-ACT delay, user cycles (timed backend).
+    pub t_rp: u64,
+    /// tCAS/CL: read column command to data, user cycles (timed backend).
+    pub t_cas: u64,
+    /// tCWL: write column command to data, user cycles (timed backend).
+    pub t_cwl: u64,
+    /// tRAS: minimum ACT-to-PRE interval, user cycles (timed backend).
+    pub t_ras: u64,
+    /// tCCD: column-to-column spacing on one bank, user cycles (timed
+    /// backend; the lumped backend hardcodes the same 4-cycle value for
+    /// back-to-back row hits).
+    pub t_ccd: u64,
+    /// tWTR: write-to-read bus turnaround, user cycles (timed backend).
+    pub t_wtr: u64,
+    /// tRTW: read-to-write bus turnaround, user cycles (timed backend).
+    pub t_rtw: u64,
+    /// Periodic refresh on/off (timed backend; lumped never refreshes).
+    pub refresh: bool,
+    /// tREFI: refresh command interval, user cycles (timed backend).
+    pub t_refi: u64,
+    /// tRFC: refresh cycle time stolen from every bank, user cycles
+    /// (timed backend).
+    pub t_rfc: u64,
 }
 
 impl DramConfig {
@@ -515,6 +580,30 @@ impl DramConfig {
         }
         if self.bus_admission_factor == 0 {
             return Err("dram: bus_admission_factor must be > 0".into());
+        }
+        if self.t_ccd == 0 {
+            return Err("dram: t_ccd must be > 0".into());
+        }
+        if self.t_ras < self.t_rcd + self.t_cas {
+            // A row must stay open at least long enough to activate and
+            // read it — anything shorter is a nonsense DDR4 schedule.
+            return Err(format!(
+                "dram: t_ras {} < t_rcd {} + t_cas {}",
+                self.t_ras, self.t_rcd, self.t_cas
+            ));
+        }
+        if self.refresh {
+            if self.t_refi == 0 {
+                return Err("dram: refresh enabled but t_refi is 0".into());
+            }
+            if self.t_rfc >= self.t_refi {
+                // Refresh must leave some interval for real work or the
+                // channel spends 100% of its time refreshing.
+                return Err(format!(
+                    "dram: t_rfc {} must be < t_refi {}",
+                    self.t_rfc, self.t_refi
+                ));
+            }
         }
         Ok(())
     }
@@ -779,6 +868,7 @@ impl SystemConfig {
             "nodes" => "cluster.nodes",
             "inter_topology" | "inter-topology" => "cluster.topology",
             "sim_threads" | "sim-threads" => "system.sim_threads",
+            "dram_model" | "dram-model" => "dram.model",
             other => other,
         };
         match key {
@@ -821,14 +911,29 @@ impl SystemConfig {
                     other => return Err(format!("reply_network {other:?}: expected on|off")),
                 }
             }
+            "dram.model" => {
+                self.dram.model = value.parse::<DramModelKind>().map_err(|e| e.to_string())?
+            }
             "dram.t_row_hit" => self.dram.t_row_hit = parse_u64(value)?,
             "dram.t_row_miss" => self.dram.t_row_miss = parse_u64(value)?,
+            "dram.t_precharge" => self.dram.t_precharge = parse_u64(value)?,
             "dram.t_controller" => self.dram.t_controller = parse_u64(value)?,
             "dram.max_outstanding" => self.dram.max_outstanding = parse_usize(value)?,
             "dram.banks" => self.dram.banks = parse_usize(value)?,
             "dram.bus_admission_factor" => {
                 self.dram.bus_admission_factor = parse_u64(value)?
             }
+            "dram.t_rcd" => self.dram.t_rcd = parse_u64(value)?,
+            "dram.t_rp" => self.dram.t_rp = parse_u64(value)?,
+            "dram.t_cas" => self.dram.t_cas = parse_u64(value)?,
+            "dram.t_cwl" => self.dram.t_cwl = parse_u64(value)?,
+            "dram.t_ras" => self.dram.t_ras = parse_u64(value)?,
+            "dram.t_ccd" => self.dram.t_ccd = parse_u64(value)?,
+            "dram.t_wtr" => self.dram.t_wtr = parse_u64(value)?,
+            "dram.t_rtw" => self.dram.t_rtw = parse_u64(value)?,
+            "dram.refresh" => self.dram.refresh = parse_on_off(key, value)?,
+            "dram.t_refi" => self.dram.t_refi = parse_u64(value)?,
+            "dram.t_rfc" => self.dram.t_rfc = parse_u64(value)?,
             "cluster.nodes" => self.cluster.nodes = parse_usize(value)?,
             "cluster.topology" => {
                 self.cluster.topology =
@@ -895,6 +1000,27 @@ impl SystemConfig {
                 ]),
             ),
             (
+                "dram",
+                Json::obj(vec![
+                    ("model", Json::str(self.dram.model.name())),
+                    ("banks", Json::num(self.dram.banks as f64)),
+                    ("t_row_hit", Json::num(self.dram.t_row_hit as f64)),
+                    ("t_row_miss", Json::num(self.dram.t_row_miss as f64)),
+                    ("t_precharge", Json::num(self.dram.t_precharge as f64)),
+                    ("t_rcd", Json::num(self.dram.t_rcd as f64)),
+                    ("t_rp", Json::num(self.dram.t_rp as f64)),
+                    ("t_cas", Json::num(self.dram.t_cas as f64)),
+                    ("t_cwl", Json::num(self.dram.t_cwl as f64)),
+                    ("t_ras", Json::num(self.dram.t_ras as f64)),
+                    ("t_ccd", Json::num(self.dram.t_ccd as f64)),
+                    ("t_wtr", Json::num(self.dram.t_wtr as f64)),
+                    ("t_rtw", Json::num(self.dram.t_rtw as f64)),
+                    ("refresh", Json::Bool(self.dram.refresh)),
+                    ("t_refi", Json::num(self.dram.t_refi as f64)),
+                    ("t_rfc", Json::num(self.dram.t_rfc as f64)),
+                ]),
+            ),
+            (
                 "interconnect",
                 Json::obj(vec![
                     ("channels", Json::num(self.interconnect.channels as f64)),
@@ -938,8 +1064,18 @@ impl SystemConfig {
 
 impl DramConfig {
     /// Xilinx MIG-like DDR4 channel on Alveo U250 (see DESIGN.md §6).
+    ///
+    /// The command-level parameters are DDR4-2400-class values expressed
+    /// in 300 MHz user-clock cycles, calibrated against the lumped
+    /// latencies: a hit costs `t_cas` (28 = `t_row_hit`), an empty-bank
+    /// activate `t_rcd + t_cas` (52 = `t_row_miss`), a conflict
+    /// `t_rp + t_rcd + t_cas` (64 = `t_row_miss + t_precharge`).
+    /// `t_cwl` is kept equal to `t_cas` (the folded user-clock write
+    /// path) so timed never undercuts lumped; `t_refi`/`t_rfc` are
+    /// 7.8 µs / 350 ns at 300 MHz.
     pub fn mig_u250() -> DramConfig {
         DramConfig {
+            model: DramModelKind::Lumped,
             data_bits: 512,
             banks: 16,
             row_bytes: 8192,
@@ -950,6 +1086,17 @@ impl DramConfig {
             max_outstanding: 32,
             addr_bits: 31,
             bus_admission_factor: 4,
+            t_rcd: 24,
+            t_rp: 12,
+            t_cas: 28,
+            t_cwl: 28,
+            t_ras: 56,
+            t_ccd: 4,
+            t_wtr: 8,
+            t_rtw: 6,
+            refresh: true,
+            t_refi: 2340,
+            t_rfc: 105,
         }
     }
 }
@@ -1008,6 +1155,95 @@ mod tests {
 
         c.cache.lines = 3000; // 1500 sets, not a power of two
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dram_model_overrides_and_aliases() {
+        let mut c = SystemConfig::config_b();
+        assert_eq!(c.dram.model, DramModelKind::Lumped, "lumped is the default");
+        // Kebab-case is the documented CLI spelling; snake_case and the
+        // full dotted key stay as compatibility aliases.
+        c.apply_override("dram-model", "timed").unwrap();
+        assert_eq!(c.dram.model, DramModelKind::Timed);
+        c.apply_override("dram_model", "lumped").unwrap();
+        assert_eq!(c.dram.model, DramModelKind::Lumped);
+        c.apply_override("dram.model", "timed").unwrap();
+        assert_eq!(c.dram.model, DramModelKind::Timed);
+        assert!(c.apply_override("dram.model", "dramsim3").is_err());
+
+        // Every command-timing knob round-trips through overrides.
+        for (key, get) in [
+            ("dram.t_rcd", (|d: &DramConfig| d.t_rcd) as fn(&DramConfig) -> u64),
+            ("dram.t_rp", |d| d.t_rp),
+            ("dram.t_cas", |d| d.t_cas),
+            ("dram.t_cwl", |d| d.t_cwl),
+            ("dram.t_ras", |d| d.t_ras),
+            ("dram.t_ccd", |d| d.t_ccd),
+            ("dram.t_wtr", |d| d.t_wtr),
+            ("dram.t_rtw", |d| d.t_rtw),
+            ("dram.t_refi", |d| d.t_refi),
+            ("dram.t_rfc", |d| d.t_rfc),
+            ("dram.t_precharge", |d| d.t_precharge),
+        ] {
+            c.apply_override(key, "77").unwrap();
+            assert_eq!(get(&c.dram), 77, "{key}");
+            assert!(c.apply_override(key, "many").is_err(), "{key}");
+        }
+        c.apply_override("dram.refresh", "off").unwrap();
+        assert!(!c.dram.refresh);
+        c.apply_override("dram.refresh", "on").unwrap();
+        assert!(c.dram.refresh);
+        assert!(c.apply_override("dram.refresh", "sometimes").is_err());
+    }
+
+    #[test]
+    fn dram_timing_validation_rejects_nonsense_combinations() {
+        let mut c = SystemConfig::config_a();
+        c.validate().unwrap();
+
+        // tRAS must cover activate + read.
+        c.dram.t_ras = c.dram.t_rcd + c.dram.t_cas - 1;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("t_ras"), "got: {err}");
+        c.dram.t_ras = c.dram.t_rcd + c.dram.t_cas;
+        c.validate().unwrap();
+
+        // Refresh enabled needs a positive interval longer than tRFC.
+        c.dram.refresh = true;
+        c.dram.t_refi = 0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("t_refi"), "got: {err}");
+        c.dram.t_refi = 100;
+        c.dram.t_rfc = 100;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("t_rfc"), "got: {err}");
+        c.dram.t_rfc = 99;
+        c.validate().unwrap();
+        // With refresh off the interval fields are dormant — any value
+        // passes (the degenerate-equivalence configs rely on this).
+        c.dram.refresh = false;
+        c.dram.t_refi = 0;
+        c.validate().unwrap();
+
+        // Zero column spacing would let one bank book the bus forever.
+        c.dram.t_ccd = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dram_json_echoes_model_and_timing_fields() {
+        let mut c = SystemConfig::config_b();
+        c.apply_override("dram-model", "timed").unwrap();
+        let j = c.to_json();
+        let d = j.get("dram").expect("config JSON must carry a dram object");
+        assert_eq!(d.get("model").unwrap().as_str(), Some("timed"));
+        for key in [
+            "banks", "t_row_hit", "t_row_miss", "t_precharge", "t_rcd", "t_rp", "t_cas",
+            "t_cwl", "t_ras", "t_ccd", "t_wtr", "t_rtw", "t_refi", "t_rfc",
+        ] {
+            assert!(d.get(key).unwrap().as_f64().is_some(), "dram.{key}");
+        }
+        assert!(matches!(d.get("refresh"), Some(Json::Bool(true))));
     }
 
     #[test]

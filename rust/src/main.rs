@@ -73,6 +73,7 @@ USAGE: mttkrp-memsys <subcommand> [--options]
   simulate  [--preset a|b] [--system proposed|ip-only|cache-only|dma-only]
             [--mode i|j|k] [--channels N] [--topology crossbar|line|ring]
             [--link-width W] [--lmb-banks N] [--reply-network on|off]
+            [--dram-model lumped|timed]
             [--nodes N] [--inter-topology crossbar|line|ring|mesh]
             [--sim-threads N]
             [--scale 0.01] [--dataset synth01|synth02|file.tns] [--<section.key> v]
@@ -88,11 +89,16 @@ USAGE: mttkrp-memsys <subcommand> [--options]
             [--preset b] [--dataset synth01|file.tns] [--scale 0.01] [--mode i|j|k]
             [--telemetry-dir DIR]
             (axes: system, preset, dataset, scale, mode, fabric, channels,
-             topology, link-width, lmb-banks, reply-network, nodes,
-             inter-topology, sim-threads, and any --<section.key> override
-             key, e.g. telemetry.trace; dataset values may be synthetic
-             names or .tns paths; --resume skips cells already in --out
-             and appends only the new ones)
+             topology, link-width, lmb-banks, dram-model, reply-network,
+             nodes, inter-topology, sim-threads, and any --<section.key>
+             override key, e.g. telemetry.trace; dataset values may be
+             synthetic names or .tns paths; --resume skips cells already
+             in --out and appends only the new ones)
+
+  DRAM backends: --dram-model lumped (default; per-access latency classes)
+  or timed (command-level ACT/RD/WR/PRE/REF DDR4 timing; knobs
+  --dram.t_rcd/t_rp/t_cas/t_cwl/t_ras/t_ccd/t_wtr/t_rtw, refresh via
+  --dram.refresh on|off with --dram.t_refi/t_rfc).
 
   thread flags: --threads N is the HOST pool — how many whole simulations
   run concurrently (sweep/fig4 grids). --sim-threads N parallelizes the
@@ -143,6 +149,8 @@ fn preset_cfg(args: &Args) -> mttkrp_memsys::Result<SystemConfig> {
         "link_width",
         "lmb-banks",
         "lmb_banks",
+        "dram-model",
+        "dram_model",
         "nodes",
         "inter-topology",
         "inter_topology",
@@ -485,6 +493,8 @@ fn cmd_sweep(args: &Args) -> mttkrp_memsys::Result<()> {
             "link_width",
             "lmb-banks",
             "lmb_banks",
+            "dram-model",
+            "dram_model",
             "reply-network",
             "reply_network",
             "nodes",
@@ -500,8 +510,8 @@ fn cmd_sweep(args: &Args) -> mttkrp_memsys::Result<()> {
     if has_preset_axis && has_base_overrides {
         eprintln!(
             "warning: --axis preset=... resets the config per grid point; base --system, \
-             --<section.key>, --channels/--topology/--link-width/--lmb-banks/--reply-network/\
-             --nodes/--inter-topology/--sim-threads flags are ignored there"
+             --<section.key>, --channels/--topology/--link-width/--lmb-banks/--dram-model/\
+             --reply-network/--nodes/--inter-topology/--sim-threads flags are ignored there"
         );
     }
     let baseline = match args.get("baseline") {

@@ -17,7 +17,7 @@
 
 use std::collections::VecDeque;
 
-use crate::config::DramConfig;
+use crate::config::{DramConfig, DramModelKind};
 use crate::util::log2;
 
 use super::telemetry::Telemetry;
@@ -32,6 +32,11 @@ struct Bank {
 }
 
 /// DRAM timing + occupancy statistics.
+///
+/// The last three counters are produced only by the command-level
+/// backend ([`super::dram_timed::TimedDram`]); the lumped model leaves
+/// them at zero, which keeps lumped reports bit-identical to their
+/// pre-trait shape.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DramStats {
     pub reads: u64,
@@ -43,6 +48,12 @@ pub struct DramStats {
     pub row_conflicts: u64,
     pub busy_bus_cycles: u64,
     pub total_queue_wait: u64,
+    /// REF commands issued (one per elapsed tREFI boundary).
+    pub refreshes: u64,
+    /// Bank-cycles stolen by refresh (tRFC per bank per boundary).
+    pub refresh_steal_cycles: u64,
+    /// Column-command cycles added by tWTR/tRTW bus turnaround.
+    pub turnaround_cycles: u64,
 }
 
 impl DramStats {
@@ -66,6 +77,182 @@ impl DramStats {
         self.row_conflicts += other.row_conflicts;
         self.busy_bus_cycles += other.busy_bus_cycles;
         self.total_queue_wait += other.total_queue_wait;
+        self.refreshes += other.refreshes;
+        self.refresh_steal_cycles += other.refresh_steal_cycles;
+        self.turnaround_cycles += other.turnaround_cycles;
+    }
+}
+
+/// The backend-agnostic seam between the interconnect fabric and a DRAM
+/// channel's timing model. Each method mirrors an event-engine gate of
+/// the lumped [`Dram`]:
+///
+/// * [`DramModel::needs_tick`] must be true whenever `tick` at `now`
+///   would do anything (schedule queued work or deliver a due
+///   completion) — skipping a channel for which it is false must be a
+///   provable no-op;
+/// * [`DramModel::next_event`] is the earliest in-flight completion;
+/// * [`DramModel::next_schedule_time`] may wake the engine *early*
+///   (a revisit recomputes) but never late.
+pub trait DramModel {
+    /// Can the controller accept another request this cycle?
+    fn can_accept(&self) -> bool;
+    /// Number of requests currently queued or in flight.
+    fn occupancy(&self) -> usize;
+    /// Accept a request (caller must have checked `can_accept`).
+    fn push(&mut self, req: MemReq, now: Cycle);
+    /// Advance to `now`; deliver completions due at or before `now`.
+    fn tick(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
+        self.tick_traced(now, completions, &mut Telemetry::disabled(), 0);
+    }
+    /// [`DramModel::tick`] with a telemetry sink (observation-only).
+    fn tick_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+        ch: usize,
+    );
+    /// Earliest in-flight completion cycle; `None` if nothing in flight.
+    fn next_event(&self) -> Option<Cycle>;
+    /// Would `tick` do anything at `now`?
+    fn needs_tick(&self, now: Cycle) -> bool;
+    /// True if requests are waiting to be scheduled onto banks.
+    fn has_queued(&self) -> bool;
+    /// Earliest future cycle a queued request could issue (may be early,
+    /// never late); `None` when the queue is empty.
+    fn next_schedule_time(&self, now: Cycle) -> Option<Cycle>;
+    fn is_idle(&self) -> bool;
+    fn stats(&self) -> &DramStats;
+}
+
+impl DramModel for Dram {
+    fn can_accept(&self) -> bool {
+        Dram::can_accept(self)
+    }
+
+    fn occupancy(&self) -> usize {
+        Dram::occupancy(self)
+    }
+
+    fn push(&mut self, req: MemReq, now: Cycle) {
+        Dram::push(self, req, now)
+    }
+
+    fn tick_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+        ch: usize,
+    ) {
+        Dram::tick_traced(self, now, completions, tel, ch)
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        Dram::next_event(self)
+    }
+
+    fn needs_tick(&self, now: Cycle) -> bool {
+        Dram::needs_tick(self, now)
+    }
+
+    fn has_queued(&self) -> bool {
+        Dram::has_queued(self)
+    }
+
+    fn next_schedule_time(&self, now: Cycle) -> Option<Cycle> {
+        Dram::next_schedule_time(self, now)
+    }
+
+    fn is_idle(&self) -> bool {
+        Dram::is_idle(self)
+    }
+
+    fn stats(&self) -> &DramStats {
+        &self.stats
+    }
+}
+
+macro_rules! channel_delegate {
+    ($self:ident, $m:ident $(, $a:expr)*) => {
+        match $self {
+            DramChannel::Lumped(d) => d.$m($($a),*),
+            DramChannel::Timed(d) => d.$m($($a),*),
+        }
+    };
+}
+
+/// Enum dispatch over the configured timing backend. Chosen over trait
+/// objects so channels stay `Send` (they cross the mpsc channels of the
+/// sharded engine) and the default lumped path keeps static dispatch.
+pub enum DramChannel {
+    Lumped(Dram),
+    Timed(super::dram_timed::TimedDram),
+}
+
+impl DramChannel {
+    /// Build the backend `cfg.model` selects.
+    pub fn new(cfg: &DramConfig) -> DramChannel {
+        match cfg.model {
+            DramModelKind::Lumped => DramChannel::Lumped(Dram::new(cfg)),
+            DramModelKind::Timed => {
+                DramChannel::Timed(super::dram_timed::TimedDram::new(cfg))
+            }
+        }
+    }
+
+    pub fn can_accept(&self) -> bool {
+        channel_delegate!(self, can_accept)
+    }
+
+    pub fn occupancy(&self) -> usize {
+        channel_delegate!(self, occupancy)
+    }
+
+    pub fn push(&mut self, req: MemReq, now: Cycle) {
+        channel_delegate!(self, push, req, now)
+    }
+
+    pub fn tick(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
+        channel_delegate!(self, tick, now, completions)
+    }
+
+    pub fn tick_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+        ch: usize,
+    ) {
+        channel_delegate!(self, tick_traced, now, completions, tel, ch)
+    }
+
+    pub fn next_event(&self) -> Option<Cycle> {
+        channel_delegate!(self, next_event)
+    }
+
+    pub fn needs_tick(&self, now: Cycle) -> bool {
+        channel_delegate!(self, needs_tick, now)
+    }
+
+    pub fn has_queued(&self) -> bool {
+        channel_delegate!(self, has_queued)
+    }
+
+    pub fn next_schedule_time(&self, now: Cycle) -> Option<Cycle> {
+        channel_delegate!(self, next_schedule_time, now)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        channel_delegate!(self, is_idle)
+    }
+
+    pub fn stats(&self) -> &DramStats {
+        match self {
+            DramChannel::Lumped(d) => &d.stats,
+            DramChannel::Timed(d) => d.stats(),
+        }
     }
 }
 
@@ -557,6 +744,9 @@ mod tests {
             read_bytes: 192,
             write_bytes: 64,
             row_misses: 2,
+            refreshes: 4,
+            refresh_steal_cycles: 420,
+            turnaround_cycles: 7,
             ..DramStats::default()
         };
         a.merge(&b);
@@ -566,6 +756,38 @@ mod tests {
         assert_eq!(a.write_bytes, 64);
         assert_eq!(a.row_hits, 1);
         assert_eq!(a.row_misses, 2);
+        assert_eq!(a.refreshes, 4);
+        assert_eq!(a.refresh_steal_cycles, 420);
+        assert_eq!(a.turnaround_cycles, 7);
+    }
+
+    #[test]
+    fn channel_enum_dispatches_on_config_model() {
+        let cfg = DramConfig::mig_u250();
+        let mut lumped = DramChannel::new(&cfg);
+        assert!(matches!(lumped, DramChannel::Lumped(_)));
+        let timed_cfg = DramConfig {
+            model: DramModelKind::Timed,
+            ..cfg.clone()
+        };
+        let mut timed = DramChannel::new(&timed_cfg);
+        assert!(matches!(timed, DramChannel::Timed(_)));
+        // Both backends serve a request through the shared seam.
+        for d in [&mut lumped, &mut timed] {
+            assert!(d.is_idle());
+            d.push(req(1, 0, 64, false), 0);
+            assert!(d.has_queued() && d.needs_tick(0));
+            assert_eq!(d.occupancy(), 1);
+            let mut out = Vec::new();
+            for c in 0..10_000 {
+                d.tick(c, &mut out);
+                if d.is_idle() {
+                    break;
+                }
+            }
+            assert_eq!(out.len(), 1);
+            assert_eq!(d.stats().reads, 1);
+        }
     }
 
     #[test]

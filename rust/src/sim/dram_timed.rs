@@ -1,0 +1,742 @@
+//! Command-level DDR4 channel backend (`dram.model = timed`).
+//!
+//! Where the lumped [`super::dram::Dram`] folds bank timing into
+//! `t_row_hit`/`t_row_miss` latencies, this backend replays the explicit
+//! command schedule the controller would emit per bank:
+//!
+//! * **ACT** — opening a row costs `t_rcd` before the column command;
+//! * **PRE** — closing a conflicting row costs `t_rp`, and may not cut
+//!   the row's `t_ras` minimum-open window short;
+//! * **RD/WR** — the column command returns data after `t_cas` (reads)
+//!   or `t_cwl` (writes); back-to-back columns on one open row pipeline
+//!   at `t_ccd`;
+//! * **REF** — every `t_refi` cycles a refresh steals `t_rfc` cycles
+//!   from *every* bank and closes all open rows (so row hits can turn
+//!   into misses across a boundary);
+//! * **turnaround** — flipping the data-bus direction inserts `t_wtr`
+//!   (write→read) or `t_rtw` (read→write) between column commands.
+//!
+//! Everything above the command layer is kept identical to the lumped
+//! model on purpose: the same FR-FCFS-lite pick loop, the same
+//! `t_controller` front-end, the same shared-data-bus beat serialization
+//! and `bus_admission_factor` guard, and the same event-engine gate
+//! contract (`needs_tick` true whenever `tick` would act;
+//! `next_schedule_time` early-but-never-late). That is what makes the
+//! degenerate-timing configuration (`t_rcd = t_rp = 0`, refresh off,
+//! turnaround 0, `t_cas = t_cwl = t_ras`) *bit-identical* to a lumped
+//! channel with `t_row_hit = t_row_miss = t_cas, t_precharge = 0` — the
+//! conformance property `tests/integration_dram.rs` pins.
+//!
+//! Refresh is applied lazily: elapsed tREFI boundaries are caught up at
+//! the top of `schedule`, but only when the queue is non-empty. The
+//! guard is load-bearing for engine equivalence — the reference loop
+//! calls `tick` every cycle while the event engine skips provable
+//! no-ops, so a mutation during an empty-queue call would diverge the
+//! two engines' refresh accounting. With the guard, both engines process
+//! exactly the same boundary set at the same points in the issue order,
+//! and the catch-up result (`busy_until = max(busy_until, boundary) +
+//! t_rfc`) is independent of which cycle actually executes it.
+
+use std::collections::VecDeque;
+
+use crate::config::DramConfig;
+use crate::util::log2;
+
+use super::dram::{DramModel, DramStats};
+use super::telemetry::Telemetry;
+use super::{Cycle, MemReq, MemResp};
+
+/// Per-bank command state.
+#[derive(Debug, Clone, Copy, Default)]
+struct TimedBank {
+    open_row: Option<u64>,
+    /// Bank command machine busy through this cycle.
+    busy_until: Cycle,
+    /// Cycle of the last ACT — a PRE may not land before `act_at + t_ras`.
+    act_at: Cycle,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    req: MemReq,
+    done_at: Cycle,
+}
+
+/// The command-level DRAM channel model.
+pub struct TimedDram {
+    cfg: DramConfig,
+    banks: Vec<TimedBank>,
+    /// Requests accepted but not yet scheduled onto banks.
+    queue: VecDeque<(MemReq, Cycle)>,
+    /// Requests with a computed completion time.
+    inflight: Vec<Inflight>,
+    /// Min `done_at` over `inflight` (`Cycle::MAX` when empty).
+    earliest_done: Cycle,
+    /// Data bus reserved through this cycle.
+    bus_free_at: Cycle,
+    /// Next un-processed tREFI boundary (refresh catch-up cursor).
+    next_refresh: Cycle,
+    /// Direction of the last column command (`true` = write); decides
+    /// whether tWTR/tRTW applies to the next one.
+    last_dir: Option<bool>,
+    /// End of the last column command's data window (turnaround anchor).
+    last_col_end: Cycle,
+    stats: DramStats,
+    bank_shift: u32,
+    bank_mask: u64,
+    row_shift: u32,
+}
+
+impl TimedDram {
+    pub fn new(cfg: &DramConfig) -> TimedDram {
+        TimedDram {
+            banks: vec![TimedBank::default(); cfg.banks],
+            queue: VecDeque::new(),
+            inflight: Vec::new(),
+            earliest_done: Cycle::MAX,
+            bus_free_at: 0,
+            next_refresh: cfg.t_refi,
+            last_dir: None,
+            last_col_end: 0,
+            stats: DramStats::default(),
+            // ROW-BANK-COLUMN order, exactly as the lumped model.
+            bank_shift: log2(cfg.row_bytes),
+            bank_mask: cfg.banks as u64 - 1,
+            row_shift: log2(cfg.row_bytes) + log2(cfg.banks as u64),
+            cfg: cfg.clone(),
+        }
+    }
+
+    #[inline]
+    fn bank_of(&self, addr: u64) -> usize {
+        ((addr >> self.bank_shift) & self.bank_mask) as usize
+    }
+
+    #[inline]
+    fn row_of(&self, addr: u64) -> u64 {
+        addr >> self.row_shift
+    }
+
+    /// The bus-admission horizon. The lumped model uses
+    /// `factor * t_row_miss`; the command-level analog of one row-miss
+    /// service is `t_rcd + t_cas`, so the calibrated default
+    /// (24 + 28 = 52) books the bus exactly as far ahead as lumped does.
+    #[inline]
+    fn bus_horizon(&self) -> u64 {
+        self.cfg.bus_admission_factor * (self.cfg.t_rcd + self.cfg.t_cas)
+    }
+
+    pub fn can_accept(&self) -> bool {
+        self.queue.len() + self.inflight.len() < self.cfg.max_outstanding
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.queue.len() + self.inflight.len()
+    }
+
+    pub fn push(&mut self, req: MemReq, now: Cycle) {
+        debug_assert!(self.can_accept());
+        debug_assert!(req.bytes > 0);
+        self.queue.push_back((req, now));
+    }
+
+    pub fn tick(&mut self, now: Cycle, completions: &mut Vec<MemResp>) {
+        self.tick_traced(now, completions, &mut Telemetry::disabled(), 0);
+    }
+
+    pub fn tick_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+        ch: usize,
+    ) {
+        self.schedule(now, tel, ch);
+        if self.earliest_done > now {
+            return;
+        }
+        let mut i = 0;
+        while i < self.inflight.len() {
+            if self.inflight[i].done_at <= now {
+                let fin = self.inflight.swap_remove(i);
+                completions.push(MemResp {
+                    id: fin.req.id,
+                    port: fin.req.port,
+                    done_at: fin.done_at,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        self.earliest_done = self
+            .inflight
+            .iter()
+            .map(|f| f.done_at)
+            .min()
+            .unwrap_or(Cycle::MAX);
+    }
+
+    pub fn next_event(&self) -> Option<Cycle> {
+        if self.inflight.is_empty() {
+            None
+        } else {
+            Some(self.earliest_done)
+        }
+    }
+
+    pub fn needs_tick(&self, now: Cycle) -> bool {
+        !self.queue.is_empty() || self.earliest_done <= now
+    }
+
+    pub fn has_queued(&self) -> bool {
+        !self.queue.is_empty()
+    }
+
+    /// Mirror of the lumped gate. Computed against the *pre-catch-up*
+    /// bank state, which can only under-estimate (refresh extends
+    /// `busy_until`) — an early wakeup re-runs `schedule`, which first
+    /// applies the catch-up and then recomputes; a late one is
+    /// impossible.
+    pub fn next_schedule_time(&self, now: Cycle) -> Option<Cycle> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let bus_gate = self.bus_free_at.saturating_sub(self.bus_horizon());
+        let mut t = Cycle::MAX;
+        for (req, _) in &self.queue {
+            let bank = &self.banks[self.bank_of(req.addr)];
+            t = t.min(bank.busy_until.max(bus_gate));
+        }
+        Some(t.max(now + 1))
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.inflight.is_empty()
+    }
+
+    pub fn stats(&self) -> &DramStats {
+        &self.stats
+    }
+
+    /// FR-FCFS-lite, identical pick rule to the lumped model: row hits
+    /// first, then oldest, only on free banks, bounded by the bus window.
+    fn schedule(&mut self, now: Cycle, tel: &mut Telemetry, ch: usize) {
+        if self.queue.is_empty() {
+            // Do NOT catch up refresh here: the reference loop reaches
+            // this point every cycle while the event engine skips, so a
+            // mutation on the empty-queue path would diverge the engines
+            // (see the module doc). Deferring it is timing-neutral — the
+            // catch-up result is the same whenever it runs before the
+            // next issue.
+            return;
+        }
+        if self.cfg.refresh {
+            while self.next_refresh <= now {
+                let boundary = self.next_refresh;
+                for bank in &mut self.banks {
+                    // REF hits all banks: wait out any command in
+                    // flight, steal tRFC, close the row.
+                    bank.busy_until = bank.busy_until.max(boundary) + self.cfg.t_rfc;
+                    bank.open_row = None;
+                }
+                self.stats.refreshes += 1;
+                self.stats.refresh_steal_cycles += self.cfg.t_rfc * self.banks.len() as u64;
+                self.next_refresh += self.cfg.t_refi;
+            }
+        }
+        while !self.queue.is_empty() {
+            let mut pick: Option<usize> = None;
+            for (qi, (req, _)) in self.queue.iter().enumerate() {
+                let bank = self.banks[self.bank_of(req.addr)];
+                if bank.busy_until > now {
+                    continue;
+                }
+                let is_hit = bank.open_row == Some(self.row_of(req.addr));
+                if is_hit {
+                    pick = Some(qi);
+                    break;
+                }
+                if pick.is_none() {
+                    pick = Some(qi);
+                }
+            }
+            let Some(qi) = pick else { break };
+            if self.bus_free_at > now + self.bus_horizon() {
+                break;
+            }
+            let (req, enq_at) = self.queue.remove(qi).unwrap();
+            self.issue(req, enq_at, now, tel, ch);
+        }
+    }
+
+    /// Compute the command schedule for one transaction and book the
+    /// bank + bus. All times are exact command cycles; the golden
+    /// fixtures below assert them number by number.
+    fn issue(&mut self, req: MemReq, enq_at: Cycle, now: Cycle, tel: &mut Telemetry, ch: usize) {
+        let beat = self.cfg.beat_bytes();
+        let beats = crate::util::ceil_div(req.bytes as u64, beat).max(1);
+        let bank_idx = self.bank_of(req.addr);
+        let row = self.row_of(req.addr);
+        let cas_lat = if req.is_write {
+            self.cfg.t_cwl
+        } else {
+            self.cfg.t_cas
+        };
+        let bank = &mut self.banks[bank_idx];
+        let start = now.max(bank.busy_until);
+        let was_hit = bank.open_row == Some(row);
+        // Command chain up to the column command (RD/WR at `col_at`).
+        let (mut col_at, row_kind) = match bank.open_row {
+            Some(r) if r == row => {
+                self.stats.row_hits += 1;
+                (start, "hit")
+            }
+            Some(_) => {
+                self.stats.row_conflicts += 1;
+                // PRE may not close the row before tRAS expires.
+                let pre_at = start.max(bank.act_at + self.cfg.t_ras);
+                let act_at = pre_at + self.cfg.t_rp;
+                bank.act_at = act_at;
+                (act_at + self.cfg.t_rcd, "conflict")
+            }
+            None => {
+                self.stats.row_misses += 1;
+                bank.act_at = start;
+                (start + self.cfg.t_rcd, "miss")
+            }
+        };
+        // Bus turnaround: a direction flip separates the two column
+        // commands by tWTR (W→R) / tRTW (R→W). Gated on `gap > 0` so a
+        // zero-turnaround config is exactly turnaround-free — another
+        // bank's later `last_col_end` must not leak a delay in.
+        if let Some(last_write) = self.last_dir {
+            if last_write != req.is_write {
+                let gap = if req.is_write {
+                    self.cfg.t_rtw
+                } else {
+                    self.cfg.t_wtr
+                };
+                if gap > 0 {
+                    let gated = col_at.max(self.last_col_end + gap);
+                    self.stats.turnaround_cycles += gated - col_at;
+                    col_at = gated;
+                }
+            }
+        }
+        self.last_dir = Some(req.is_write);
+        self.last_col_end = col_at + cas_lat;
+        bank.open_row = Some(row);
+        // Bank occupancy: hits pipeline at tCCD; an activate ties the
+        // bank up until its column data window.
+        bank.busy_until = col_at + if was_hit { self.cfg.t_ccd } else { cas_lat };
+        let ready = col_at + self.cfg.t_controller + cas_lat;
+        // Data beats serialize on the shared bus, as in the lumped model.
+        let data_start = ready.max(self.bus_free_at);
+        let done_at = data_start + beats;
+        self.earliest_done = self.earliest_done.min(done_at);
+        self.bus_free_at = done_at;
+        self.stats.busy_bus_cycles += beats;
+        self.stats.total_queue_wait += now.saturating_sub(enq_at);
+        if req.is_write {
+            self.stats.writes += 1;
+            self.stats.write_bytes += req.bytes as u64;
+        } else {
+            self.stats.reads += 1;
+            self.stats.read_bytes += req.bytes as u64;
+        }
+        tel.mem_service(req.id, ch, enq_at, now, done_at, row_kind);
+        self.inflight.push(Inflight { req, done_at });
+    }
+}
+
+impl DramModel for TimedDram {
+    fn can_accept(&self) -> bool {
+        TimedDram::can_accept(self)
+    }
+
+    fn occupancy(&self) -> usize {
+        TimedDram::occupancy(self)
+    }
+
+    fn push(&mut self, req: MemReq, now: Cycle) {
+        TimedDram::push(self, req, now)
+    }
+
+    fn tick_traced(
+        &mut self,
+        now: Cycle,
+        completions: &mut Vec<MemResp>,
+        tel: &mut Telemetry,
+        ch: usize,
+    ) {
+        TimedDram::tick_traced(self, now, completions, tel, ch)
+    }
+
+    fn next_event(&self) -> Option<Cycle> {
+        TimedDram::next_event(self)
+    }
+
+    fn needs_tick(&self, now: Cycle) -> bool {
+        TimedDram::needs_tick(self, now)
+    }
+
+    fn has_queued(&self) -> bool {
+        TimedDram::has_queued(self)
+    }
+
+    fn next_schedule_time(&self, now: Cycle) -> Option<Cycle> {
+        TimedDram::next_schedule_time(self, now)
+    }
+
+    fn is_idle(&self) -> bool {
+        TimedDram::is_idle(self)
+    }
+
+    fn stats(&self) -> &DramStats {
+        TimedDram::stats(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramModelKind;
+    use crate::sim::dram::Dram;
+    use crate::sim::ReqId;
+    use crate::util::rng::Rng;
+
+    /// Timed defaults with refresh off — every golden fixture states its
+    /// own refresh/turnaround knobs explicitly.
+    fn timed_cfg() -> DramConfig {
+        DramConfig {
+            model: DramModelKind::Timed,
+            refresh: false,
+            ..DramConfig::mig_u250()
+        }
+    }
+
+    fn req(id: ReqId, addr: u64, bytes: u32, is_write: bool) -> MemReq {
+        MemReq {
+            id,
+            addr,
+            bytes,
+            is_write,
+            port: 0,
+        }
+    }
+
+    fn run_until_done(d: &mut TimedDram, horizon: Cycle) -> Vec<MemResp> {
+        let mut out = Vec::new();
+        for c in 0..horizon {
+            d.tick(c, &mut out);
+            if d.is_idle() {
+                break;
+            }
+        }
+        out
+    }
+
+    fn done_of(out: &[MemResp], id: ReqId) -> Cycle {
+        out.iter().find(|r| r.id == id).expect("completion").done_at
+    }
+
+    /// Address of `row` in bank 0 (ROW-BANK-COLUMN, 16 banks x 8 KiB
+    /// rows): row bits sit above bank bits.
+    fn bank0_row(cfg: &DramConfig, row: u64) -> u64 {
+        row * cfg.row_bytes * cfg.banks as u64
+    }
+
+    // ---- Golden command-timing fixtures (hand-computed cycles) ----
+
+    #[test]
+    fn golden_act_rd_pre_sequence_cycle_by_cycle() {
+        // Defaults: t_rcd=24 t_rp=12 t_cas=28 t_ras=56 t_ccd=4
+        // t_controller=8, 64 B = 1 beat, turnaround irrelevant (reads
+        // only), refresh off.
+        let cfg = timed_cfg();
+        let mut d = TimedDram::new(&cfg);
+        // r1: ACT row0 -> RD. r2: row0 hit. r3: row1 conflict (PRE+ACT).
+        d.push(req(1, bank0_row(&cfg, 0), 64, false), 0);
+        d.push(req(2, bank0_row(&cfg, 0) + 64, 64, false), 0);
+        d.push(req(3, bank0_row(&cfg, 1), 64, false), 0);
+        let out = run_until_done(&mut d, 10_000);
+        assert_eq!(out.len(), 3);
+        // r1 (bank empty): ACT@0, RD@24 (tRCD), data ready 24+8+28=60,
+        // 1 beat -> done 61. Bank busy through 24+28=52.
+        assert_eq!(done_of(&out, 1), 61);
+        // r2 (row hit): issues when the bank frees at 52, RD@52, ready
+        // 52+8+28=88, bus free since 61 -> done 89. Bank busy 52+4=56.
+        assert_eq!(done_of(&out, 2), 89);
+        // r3 (conflict): issues at 56; PRE must wait for tRAS of the
+        // ACT@0 -> PRE@max(56, 0+56)=56, ACT@68 (tRP=12), RD@92
+        // (tRCD=24), ready 92+8+28=128 -> done 129.
+        assert_eq!(done_of(&out, 3), 129);
+        assert_eq!(d.stats.row_misses, 1);
+        assert_eq!(d.stats.row_hits, 1);
+        assert_eq!(d.stats.row_conflicts, 1);
+        assert_eq!(d.stats.refreshes, 0);
+        assert_eq!(d.stats.turnaround_cycles, 0);
+    }
+
+    #[test]
+    fn golden_pre_waits_out_tras() {
+        // Stretch tRAS to 200: the conflict's PRE may not land before
+        // ACT@0 + 200 even though the bank frees at 52.
+        let cfg = DramConfig {
+            t_ras: 200,
+            ..timed_cfg()
+        };
+        let mut d = TimedDram::new(&cfg);
+        d.push(req(1, bank0_row(&cfg, 0), 64, false), 0);
+        d.push(req(2, bank0_row(&cfg, 1), 64, false), 0);
+        let out = run_until_done(&mut d, 10_000);
+        assert_eq!(done_of(&out, 1), 61);
+        // Bank free at 52 -> PRE@max(52, 0+200)=200, ACT@212, RD@236,
+        // ready 236+8+28=272 -> done 273.
+        assert_eq!(done_of(&out, 2), 273);
+    }
+
+    #[test]
+    fn golden_refresh_steals_exactly_trfc_at_the_trefi_boundary() {
+        // tREFI=100, tRFC=50. r1 opens row0 (done 61, bank busy to 52).
+        // r2 arrives at 150, after the boundary at 100: the catch-up
+        // extends every bank to max(busy, 100)+50 = 150 and closes the
+        // row, so r2 — a row hit without refresh — re-activates:
+        // ACT@150, RD@174, ready 174+8+28=210 -> done 211.
+        let cfg = DramConfig {
+            refresh: true,
+            t_refi: 100,
+            t_rfc: 50,
+            ..timed_cfg()
+        };
+        let mut d = TimedDram::new(&cfg);
+        d.push(req(1, bank0_row(&cfg, 0), 64, false), 0);
+        let mut out = Vec::new();
+        for c in 0..2_000 {
+            if c == 150 {
+                d.push(req(2, bank0_row(&cfg, 0) + 64, 64, false), c);
+            }
+            d.tick(c, &mut out);
+            if c > 150 && d.is_idle() {
+                break;
+            }
+        }
+        assert_eq!(done_of(&out, 1), 61);
+        assert_eq!(done_of(&out, 2), 211);
+        // Exactly one boundary processed, stealing tRFC on all 16 banks;
+        // the re-activation shows up as a second row miss.
+        assert_eq!(d.stats.refreshes, 1);
+        assert_eq!(d.stats.refresh_steal_cycles, 50 * cfg.banks as u64);
+        assert_eq!(d.stats.row_misses, 2);
+        assert_eq!(d.stats.row_hits, 0);
+    }
+
+    #[test]
+    fn golden_write_to_read_turnaround() {
+        // tWTR=8: WR row0 (CWL=28, col@24, data window ends 52), then a
+        // row-hit RD at 52 is pushed to col@max(52, 52+8)=60 -> ready
+        // 60+8+28=96 -> done 97 (without tWTR it would be 89).
+        let cfg = timed_cfg(); // t_wtr=8 from the preset
+        let mut d = TimedDram::new(&cfg);
+        d.push(req(1, bank0_row(&cfg, 0), 64, true), 0);
+        d.push(req(2, bank0_row(&cfg, 0) + 64, 64, false), 0);
+        let out = run_until_done(&mut d, 10_000);
+        assert_eq!(done_of(&out, 1), 61);
+        assert_eq!(done_of(&out, 2), 97);
+        assert_eq!(d.stats.turnaround_cycles, 8);
+    }
+
+    #[test]
+    fn golden_read_to_write_turnaround() {
+        // tRTW=6, symmetric case: RD then row-hit WR at 52 pushed to
+        // col@58 -> ready 58+8+28=94 -> done 95.
+        let cfg = timed_cfg(); // t_rtw=6 from the preset
+        let mut d = TimedDram::new(&cfg);
+        d.push(req(1, bank0_row(&cfg, 0), 64, false), 0);
+        d.push(req(2, bank0_row(&cfg, 0) + 64, 64, true), 0);
+        let out = run_until_done(&mut d, 10_000);
+        assert_eq!(done_of(&out, 1), 61);
+        assert_eq!(done_of(&out, 2), 95);
+        assert_eq!(d.stats.turnaround_cycles, 6);
+    }
+
+    // ---- Channel-level equivalence against the lumped model ----
+
+    /// The degenerate pair from the conformance contract: timed with
+    /// tRCD=tRP=0, refresh off, turnaround 0, tCAS=tCWL=tRAS=L is
+    /// bit-identical to lumped with t_row_hit=t_row_miss=L,
+    /// t_precharge=0.
+    fn degenerate_pair(l: u64) -> (DramConfig, DramConfig) {
+        let lumped = DramConfig {
+            t_row_hit: l,
+            t_row_miss: l,
+            t_precharge: 0,
+            ..DramConfig::mig_u250()
+        };
+        let timed = DramConfig {
+            model: DramModelKind::Timed,
+            t_rcd: 0,
+            t_rp: 0,
+            t_cas: l,
+            t_cwl: l,
+            t_ras: l,
+            t_wtr: 0,
+            t_rtw: 0,
+            refresh: false,
+            ..lumped.clone()
+        };
+        (lumped, timed)
+    }
+
+    /// The calibrated pair: timed with the preset's DDR4 numbers minus
+    /// refresh/turnaround/tRAS-slack reproduces the lumped preset
+    /// exactly (hit 28 = tCAS, miss 52 = tRCD+tCAS, conflict 64 =
+    /// tRP+tRCD+tCAS; bus horizon 4x52 both ways).
+    fn calibrated_pair() -> (DramConfig, DramConfig) {
+        let lumped = DramConfig::mig_u250();
+        let timed = DramConfig {
+            model: DramModelKind::Timed,
+            t_ras: lumped.t_rcd + lumped.t_cas,
+            t_cwl: lumped.t_cas,
+            t_wtr: 0,
+            t_rtw: 0,
+            refresh: false,
+            ..lumped.clone()
+        };
+        (lumped, timed)
+    }
+
+    /// Drive both backends with an identical randomized request stream,
+    /// ticking every cycle, and demand identical completion times and
+    /// stats.
+    fn assert_backends_identical(lumped_cfg: &DramConfig, timed_cfg: &DramConfig, seed: u64) {
+        lumped_cfg.validate().expect("lumped cfg");
+        timed_cfg.validate().expect("timed cfg");
+        let mut lumped = Dram::new(lumped_cfg);
+        let mut timed = TimedDram::new(timed_cfg);
+        let mut rng = Rng::new(seed);
+        let n = 300u64;
+        let mut pushed = 0u64;
+        let mut out_l = Vec::new();
+        let mut out_t = Vec::new();
+        let mut c: Cycle = 0;
+        while (out_l.len() as u64) < n {
+            // Bursty arrivals over a mix of streams and scatters.
+            while pushed < n && lumped.can_accept() && timed.can_accept() && rng.gen_bool(0.7) {
+                let addr = match pushed % 3 {
+                    0 => pushed * 64,                          // stream
+                    1 => (pushed * 1_048_576) % (1 << 30),     // scatter
+                    _ => (pushed % 7) * 8192 * 16 + pushed * 8, // few rows
+                };
+                let is_write = rng.gen_bool(0.3);
+                pushed += 1;
+                lumped.push(req(pushed, addr, 64, is_write), c);
+                timed.push(req(pushed, addr, 64, is_write), c);
+            }
+            lumped.tick(c, &mut out_l);
+            timed.tick(c, &mut out_t);
+            c += 1;
+            assert!(c < 1_000_000, "runaway");
+        }
+        for _ in 0..5_000 {
+            lumped.tick(c, &mut out_l);
+            timed.tick(c, &mut out_t);
+            c += 1;
+            if lumped.is_idle() && timed.is_idle() {
+                break;
+            }
+        }
+        let key = |r: &MemResp| (r.id, r.done_at);
+        let mut a: Vec<_> = out_l.iter().map(key).collect();
+        let mut b: Vec<_> = out_t.iter().map(key).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "completion schedules diverged (seed {seed})");
+        assert_eq!(lumped.stats, *timed.stats(), "stats diverged (seed {seed})");
+    }
+
+    #[test]
+    fn degenerate_timings_are_bit_identical_to_lumped() {
+        for (l, seed) in [(28u64, 1u64), (52, 2), (1, 3)] {
+            let (lumped, timed) = degenerate_pair(l);
+            assert_backends_identical(&lumped, &timed, seed);
+        }
+    }
+
+    #[test]
+    fn calibrated_timings_reproduce_the_lumped_preset() {
+        let (lumped, timed) = calibrated_pair();
+        for seed in [11u64, 12, 13] {
+            assert_backends_identical(&lumped, &timed, seed);
+        }
+    }
+
+    #[test]
+    fn refresh_preserves_counts_and_only_adds_cycles() {
+        // Same stream with refresh on vs off: identical access counters,
+        // identical row-outcome totals (hits may convert to misses), and
+        // a last completion that can only move later.
+        let run = |refresh: bool| {
+            let cfg = DramConfig {
+                refresh,
+                t_refi: 500,
+                t_rfc: 40,
+                ..timed_cfg()
+            };
+            let mut d = TimedDram::new(&cfg);
+            let mut out = Vec::new();
+            let mut pushed = 0u64;
+            let mut c: Cycle = 0;
+            while out.len() < 200 {
+                while pushed < 200 && d.can_accept() {
+                    d.push(req(pushed + 1, (pushed % 16) * 64, 64, pushed % 5 == 0), c);
+                    pushed += 1;
+                }
+                d.tick(c, &mut out);
+                c += 1;
+                assert!(c < 1_000_000, "runaway");
+            }
+            let makespan = out.iter().map(|r| r.done_at).max().unwrap();
+            (makespan, d.stats.clone())
+        };
+        let (span_off, off) = run(false);
+        let (span_on, on) = run(true);
+        assert!(on.refreshes > 0, "the stream must cross tREFI boundaries");
+        assert_eq!(on.reads, off.reads);
+        assert_eq!(on.writes, off.writes);
+        assert_eq!(on.read_bytes, off.read_bytes);
+        assert_eq!(on.write_bytes, off.write_bytes);
+        assert_eq!(
+            on.row_hits + on.row_misses + on.row_conflicts,
+            off.row_hits + off.row_misses + off.row_conflicts,
+            "row outcomes must be conserved in total"
+        );
+        assert!(
+            span_on >= span_off,
+            "refresh may only add cycles: on {span_on} < off {span_off}"
+        );
+    }
+
+    #[test]
+    fn event_gates_match_the_lumped_contract() {
+        let cfg = timed_cfg();
+        let mut d = TimedDram::new(&cfg);
+        assert!(d.is_idle());
+        assert_eq!(d.next_event(), None);
+        assert_eq!(d.next_schedule_time(0), None);
+        assert!(!d.needs_tick(0));
+        d.push(req(1, 0, 64, false), 0);
+        assert!(d.needs_tick(0));
+        assert!(d.next_schedule_time(0).unwrap() >= 1, "strictly future");
+        let mut out = Vec::new();
+        d.tick(0, &mut out);
+        // Issued: the completion event is exact (61), and the gate skips
+        // straight to it.
+        assert_eq!(d.next_event(), Some(61));
+        assert!(!d.needs_tick(60));
+        assert!(d.needs_tick(61));
+        d.tick(61, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(d.is_idle());
+    }
+}

@@ -46,7 +46,7 @@ use std::collections::VecDeque;
 
 use crate::config::{DramConfig, InterconnectConfig, TopologyKind};
 
-use super::dram::{ChannelMap, Dram, DramStats};
+use super::dram::{ChannelMap, DramChannel, DramStats};
 use super::telemetry::Telemetry;
 use super::{Cycle, MemReq, MemResp};
 
@@ -254,7 +254,7 @@ enum ReplySource {
 pub struct Fabric {
     kind: TopologyKind,
     chmap: ChannelMap,
-    channels: Vec<Dram>,
+    channels: Vec<DramChannel>,
     /// Per-port ingress queues (filled by LMBs / direct PE ports).
     ingress: Vec<VecDeque<MemReq>>,
     /// Store-and-forward link queues, entries tagged with the cycle the
@@ -392,7 +392,7 @@ impl Fabric {
         Fabric {
             kind: ic.topology,
             chmap: ChannelMap::new(ic.channels, ic.interleave_bytes),
-            channels: (0..ic.channels).map(|_| Dram::new(dram)).collect(),
+            channels: (0..ic.channels).map(|_| DramChannel::new(dram)).collect(),
             ingress: (0..n_ports).map(|_| VecDeque::new()).collect(),
             links: (0..phys.len()).map(|_| VecDeque::new()).collect(),
             link_id,
@@ -548,13 +548,13 @@ impl Fabric {
     /// Detach the DRAM channel controllers for shard-parallel ticking.
     /// The fabric must not be routed or ticked until [`Fabric::put_channels`]
     /// reinstalls them (the run loop does both within one phase).
-    pub fn take_channels(&mut self) -> Vec<Dram> {
+    pub fn take_channels(&mut self) -> Vec<DramChannel> {
         std::mem::take(&mut self.channels)
     }
 
     /// Reinstall controllers detached by [`Fabric::take_channels`], in
     /// channel index order.
-    pub fn put_channels(&mut self, channels: Vec<Dram>) {
+    pub fn put_channels(&mut self, channels: Vec<DramChannel>) {
         debug_assert!(self.channels.is_empty(), "channels already installed");
         self.channels = channels;
     }
@@ -924,7 +924,7 @@ impl Fabric {
 
     /// Earliest in-flight DRAM completion across all channels.
     pub fn next_completion(&self) -> Option<Cycle> {
-        self.channels.iter().filter_map(Dram::next_event).min()
+        self.channels.iter().filter_map(DramChannel::next_event).min()
     }
 
     /// Earliest future cycle a queued DRAM request could issue, across
@@ -972,12 +972,12 @@ impl Fabric {
             && self.link_occupancy == 0
             && self.reply_occupancy == 0
             && self.reply_out.is_empty()
-            && self.channels.iter().all(Dram::is_idle)
+            && self.channels.iter().all(DramChannel::is_idle)
     }
 
     /// Per-channel DRAM statistics snapshots.
     pub fn channel_stats(&self) -> Vec<DramStats> {
-        self.channels.iter().map(|d| d.stats.clone()).collect()
+        self.channels.iter().map(|d| d.stats().clone()).collect()
     }
 
     /// Requests resident (queued + in flight) per channel — the
@@ -990,7 +990,7 @@ impl Fabric {
     pub fn aggregate_dram_stats(&self) -> DramStats {
         let mut agg = DramStats::default();
         for d in &self.channels {
-            agg.merge(&d.stats);
+            agg.merge(d.stats());
         }
         agg
     }
@@ -1007,6 +1007,7 @@ impl Fabric {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::dram::Dram;
     use crate::sim::router::Router;
 
     fn req(id: u64, addr: u64, port: usize) -> MemReq {

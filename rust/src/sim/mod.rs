@@ -18,7 +18,11 @@
 //! * §IV-B non-blocking cache   → [`cache`] (+ conventional [`mshr`] for
 //!   the cache-only baseline)
 //! * DRAM interface IP + DDR4   → [`dram`] (one instance per channel;
-//!   [`dram::ChannelMap`] interleaves the physical address space)
+//!   [`dram::ChannelMap`] interleaves the physical address space). Two
+//!   timing backends share the [`dram::DramModel`] seam, selected per
+//!   config by `dram.model`: the lumped default, and the command-level
+//!   [`dram_timed`] (explicit ACT/RD/WR/PRE/REF with
+//!   tRCD/tRP/tCAS/tCWL/tRAS, tREFI/tRFC refresh, tWTR/tRTW turnaround)
 //! * compute fabrics (Type-1/2) → [`pe`]
 //!
 //! One simulated cycle = one user-clock cycle of the memory interface IP
@@ -53,6 +57,7 @@
 pub mod cache;
 pub mod dma;
 pub mod dram;
+pub mod dram_timed;
 pub mod fabric;
 pub mod lmb;
 pub mod mshr;

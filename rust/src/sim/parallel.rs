@@ -29,7 +29,7 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
-use super::dram::Dram;
+use super::dram::DramChannel;
 use super::pe::PeFrontEnd;
 use super::telemetry::Telemetry;
 use super::{Cycle, MemResp};
@@ -41,7 +41,7 @@ pub enum ShardTask {
     /// Tick these detached DRAM channels at `now` (activity-gated like
     /// the serial engine), collecting each channel's completions
     /// separately so the coordinator can merge in channel order.
-    Channels { now: Cycle, channels: Vec<(usize, Dram)> },
+    Channels { now: Cycle, channels: Vec<(usize, DramChannel)> },
     /// Admit pending stream work into these front ends' windows.
     Fill { pes: Vec<(usize, PeFrontEnd)> },
     /// Retire finished slots at `now`, reporting per-front-end counts
@@ -51,7 +51,7 @@ pub enum ShardTask {
 
 /// A completed [`ShardTask`], returning the moved components.
 pub enum ShardDone {
-    Channels { channels: Vec<(usize, Dram, Vec<MemResp>)> },
+    Channels { channels: Vec<(usize, DramChannel, Vec<MemResp>)> },
     Fill { pes: Vec<(usize, PeFrontEnd)> },
     Retire { pes: Vec<(usize, PeFrontEnd, u64)> },
 }

@@ -284,6 +284,9 @@ impl SimReport {
                     ("read_bytes", Json::num(self.dram.read_bytes as f64)),
                     ("write_bytes", Json::num(self.dram.write_bytes as f64)),
                     ("row_hit_rate", Json::num(self.dram.row_hit_rate())),
+                    ("refreshes", Json::num(self.dram.refreshes as f64)),
+                    ("refresh_steal_cycles", Json::num(self.dram.refresh_steal_cycles as f64)),
+                    ("turnaround_cycles", Json::num(self.dram.turnaround_cycles as f64)),
                 ]),
             ),
             ("latency", self.latency_json()),

@@ -78,7 +78,7 @@ use std::time::Instant;
 use crate::config::{FabricType, SystemConfig, SystemKind};
 use crate::trace::{AccessClass, TraceSource};
 
-use super::dram::{Dram, IdGen};
+use super::dram::{DramChannel, IdGen};
 use super::fabric::Fabric;
 use super::lmb::{LineEvent, Lmb, LmbOutcome};
 use super::parallel::{run_task, shard_round_robin, worker_loop, ShardDone, ShardPool, ShardTask};
@@ -645,9 +645,9 @@ impl MemorySystem {
                 sent.push(w);
             }
         }
-        let mut slots: Vec<Option<(Dram, Vec<MemResp>)>> = (0..n).map(|_| None).collect();
+        let mut slots: Vec<Option<(DramChannel, Vec<MemResp>)>> = (0..n).map(|_| None).collect();
         let mut tel = Telemetry::disabled();
-        let place = |slots: &mut Vec<Option<(Dram, Vec<MemResp>)>>, done: ShardDone| {
+        let place = |slots: &mut Vec<Option<(DramChannel, Vec<MemResp>)>>, done: ShardDone| {
             match done {
                 ShardDone::Channels { channels } => {
                     for (i, dram, resps) in channels {

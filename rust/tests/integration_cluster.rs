@@ -140,6 +140,9 @@ fn diff_detects_a_random_perturbation_of_any_single_field() {
         ("dram", Box::new(|r, d| r.dram.write_bytes += d)),
         ("dram", Box::new(|r, d| r.dram.row_hits += d)),
         ("dram", Box::new(|r, d| r.dram.total_queue_wait += d)),
+        ("dram", Box::new(|r, d| r.dram.refreshes += d)),
+        ("dram", Box::new(|r, d| r.dram.refresh_steal_cycles += d)),
+        ("dram", Box::new(|r, d| r.dram.turnaround_cycles += d)),
         ("channels", Box::new(|r, d| r.channels[0].writes += d)),
         ("channels", Box::new(|r, _| r.channels.push(Default::default()))),
         ("fabric", Box::new(|r, d| r.fabric.forwarded += d)),

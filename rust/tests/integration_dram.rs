@@ -1,0 +1,292 @@
+//! Cross-backend DRAM conformance suite: the command-level timing
+//! backend (`dram.model = timed`, `sim::dram_timed::TimedDram`) is
+//! pinned against the lumped default through the `DramModel` seam at
+//! full-system scope.
+//!
+//! Three contracts, randomized over system variants, topologies,
+//! channel counts, LMB bank counts and workloads:
+//!
+//! 1. **Degenerate equivalence** — with tRCD = tRP = 0, tCAS = tCWL =
+//!    tRAS = L, no turnaround and no refresh, the timed backend *is* the
+//!    lumped model with `t_row_hit = t_row_miss = L`, `t_precharge = 0`:
+//!    every SimReport field must be bit-identical. A calibrated pair
+//!    (tRCD/tRP/tCAS splitting the preset's lumped classes exactly)
+//!    likewise reproduces the untouched `mig_u250` preset.
+//! 2. **Conservation** — with real DDR4 timings (turnaround + refresh
+//!    on), the timed backend serves exactly the same transactions: read
+//!    and write counts and bytes are unchanged, every request still gets
+//!    exactly one row outcome, and the makespan only grows.
+//! 3. **Engine invariance** — `run` == `run_reference` on the timed
+//!    backend, at every `sim_threads` count. This is the test that keeps
+//!    the refresh catch-up rule honest: the event engine skips idle
+//!    cycles, so refresh bookkeeping must never depend on being ticked
+//!    at the boundary cycle.
+
+use std::sync::Arc;
+
+use mttkrp_memsys::config::{DramModelKind, FabricType, SystemConfig, SystemKind, TopologyKind};
+use mttkrp_memsys::experiment::Scenario;
+use mttkrp_memsys::sim::MemorySystem;
+use mttkrp_memsys::tensor::CooTensor;
+use mttkrp_memsys::trace::Workload;
+use mttkrp_memsys::util::prop::check;
+use mttkrp_memsys::util::rng::Rng;
+use mttkrp_memsys::{prop_assert, prop_assert_eq};
+
+/// A randomized small workload + base config, shaped like the engine
+/// equivalence suite: fabric follows the preset, channel/bank counts
+/// and the reply network are randomized per case.
+fn random_case(rng: &mut Rng) -> (CooTensor, SystemConfig) {
+    let dims = [
+        rng.gen_range(60) + 4,
+        rng.gen_range(6_000) + 100,
+        rng.gen_range(9_000) + 100,
+    ];
+    let nnz = rng.gen_usize(40, 400);
+    let t = CooTensor::random(rng, dims, nnz);
+    let mut cfg = if rng.gen_bool(0.5) {
+        SystemConfig::config_a()
+    } else {
+        SystemConfig::config_b()
+    };
+    cfg.pe.fabric = if cfg.n_lmbs == 1 {
+        FabricType::Type1
+    } else {
+        FabricType::Type2
+    };
+    cfg.pe.max_inflight = rng.gen_usize(2, 12);
+    cfg.interconnect.channels = 1 << rng.gen_range(3); // 1, 2 or 4
+    cfg.lmb_banks = 1 << rng.gen_range(3); // 1, 2 or 4 cache/RR banks
+    cfg.interconnect.reply_network = rng.gen_bool(0.5);
+    cfg.validate().expect("randomized config must be valid");
+    (t, cfg)
+}
+
+fn wl(t: &CooTensor, cfg: &SystemConfig) -> Arc<Workload> {
+    Scenario::from_tensor(t.clone())
+        .for_config(cfg)
+        .fabric(cfg.pe.fabric)
+        .workload()
+}
+
+/// The degenerate pair: a lumped config with a single latency class `l`
+/// and the timed config that collapses to it command-for-command
+/// (row state becomes observationally irrelevant: every path costs
+/// `t_controller + l` and books the bank for `l`, except hits which
+/// book `t_ccd` — matching the lumped model's hit pipelining).
+fn degenerate_pair(base: &SystemConfig, l: u64) -> (SystemConfig, SystemConfig) {
+    let mut lumped = base.clone();
+    lumped.dram.model = DramModelKind::Lumped;
+    lumped.dram.t_row_hit = l;
+    lumped.dram.t_row_miss = l;
+    lumped.dram.t_precharge = 0;
+    let mut timed = base.clone();
+    timed.dram = lumped.dram.clone();
+    timed.dram.model = DramModelKind::Timed;
+    timed.dram.t_rcd = 0;
+    timed.dram.t_rp = 0;
+    timed.dram.t_cas = l;
+    timed.dram.t_cwl = l;
+    timed.dram.t_ras = l;
+    timed.dram.t_wtr = 0;
+    timed.dram.t_rtw = 0;
+    timed.dram.refresh = false;
+    for c in [&lumped, &timed] {
+        c.validate().expect("degenerate pair must validate");
+    }
+    (lumped, timed)
+}
+
+/// The calibrated pair: the preset's lumped classes split into explicit
+/// tRCD/tRP/tCAS such that hit/miss/conflict costs land on the exact
+/// same cycles (t_cas = t_row_hit - t? — see `dram_timed` unit tests for
+/// the per-command argument; here we only pin the system-level identity).
+fn calibrated_pair(base: &SystemConfig) -> (SystemConfig, SystemConfig) {
+    let mut lumped = base.clone();
+    lumped.dram.model = DramModelKind::Lumped;
+    let mut timed = base.clone();
+    timed.dram.model = DramModelKind::Timed;
+    timed.dram.t_ras = timed.dram.t_rcd + timed.dram.t_cas;
+    timed.dram.t_cwl = timed.dram.t_cas;
+    timed.dram.t_wtr = 0;
+    timed.dram.t_rtw = 0;
+    timed.dram.refresh = false;
+    for c in [&lumped, &timed] {
+        c.validate().expect("calibrated pair must validate");
+    }
+    (lumped, timed)
+}
+
+/// Real-timing config: the preset's timed defaults (turnaround on,
+/// refresh on with a sharply shortened interval so even the smallest
+/// randomized workload schedules DRAM work past several boundaries —
+/// the lazy catch-up only fires, and counts, when work is queued after
+/// a boundary, so a tREFI longer than the run's DRAM-active window
+/// would leave `refreshes == 0`).
+fn real_timed(base: &SystemConfig) -> SystemConfig {
+    let mut timed = base.clone();
+    timed.dram.model = DramModelKind::Timed;
+    timed.dram.refresh = true;
+    timed.dram.t_refi = 64;
+    timed.dram.t_rfc = 16;
+    timed.validate().expect("timed config must validate");
+    timed
+}
+
+#[test]
+fn prop_degenerate_timed_is_report_identical_to_lumped_across_matrix() {
+    check(
+        "degenerate timed == lumped",
+        6,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            for l in [28u64, 52, 1] {
+                let (lumped, timed) = degenerate_pair(base, l);
+                for kind in SystemKind::ALL {
+                    for topology in TopologyKind::ALL {
+                        let mut lc = lumped.as_baseline(kind);
+                        lc.interconnect.topology = topology;
+                        let mut tc = timed.as_baseline(kind);
+                        tc.interconnect.topology = topology;
+                        let lr = MemorySystem::new(&lc, &w).run(&w.name);
+                        let tr = MemorySystem::new(&tc, &w).run(&w.name);
+                        prop_assert_eq!(
+                            tr.diff(&lr),
+                            None,
+                            "L={l}/{kind:?}/{topology:?}: degenerate timed diverged from lumped"
+                        );
+                        // The command-level-only counters stay dormant
+                        // in the degenerate regime.
+                        prop_assert_eq!(
+                            (tr.dram.refreshes, tr.dram.turnaround_cycles),
+                            (0, 0),
+                            "L={l}/{kind:?}/{topology:?}: degenerate run exercised refresh/turnaround"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_calibrated_timed_reproduces_the_preset_across_matrix() {
+    check(
+        "calibrated timed == mig_u250 lumped preset",
+        6,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            let (lumped, timed) = calibrated_pair(base);
+            for kind in SystemKind::ALL {
+                for topology in TopologyKind::ALL {
+                    let mut lc = lumped.as_baseline(kind);
+                    lc.interconnect.topology = topology;
+                    let mut tc = timed.as_baseline(kind);
+                    tc.interconnect.topology = topology;
+                    let lr = MemorySystem::new(&lc, &w).run(&w.name);
+                    let tr = MemorySystem::new(&tc, &w).run(&w.name);
+                    prop_assert_eq!(
+                        tr.diff(&lr),
+                        None,
+                        "{kind:?}/{topology:?}: calibrated timed diverged from the lumped preset"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_real_timings_conserve_work_and_only_add_cycles() {
+    check(
+        "real DDR4 timings conserve transactions",
+        6,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            let timed_base = real_timed(base);
+            for kind in SystemKind::ALL {
+                let lc = base.as_baseline(kind);
+                let tc = timed_base.as_baseline(kind);
+                let lr = MemorySystem::new(&lc, &w).run(&w.name);
+                let tr = MemorySystem::new(&tc, &w).run(&w.name);
+                // Same transactions, byte for byte: the backend decides
+                // *when*, never *what*.
+                prop_assert_eq!(
+                    (tr.dram.reads, tr.dram.writes, tr.dram.read_bytes, tr.dram.write_bytes),
+                    (lr.dram.reads, lr.dram.writes, lr.dram.read_bytes, lr.dram.write_bytes),
+                    "{kind:?}: timed backend changed the transaction stream"
+                );
+                // Every scheduled request gets exactly one row outcome on
+                // both backends (refresh may *convert* hits to misses by
+                // closing rows, so only the sum is invariant).
+                prop_assert_eq!(
+                    tr.dram.row_hits + tr.dram.row_misses + tr.dram.row_conflicts,
+                    lr.dram.row_hits + lr.dram.row_misses + lr.dram.row_conflicts,
+                    "{kind:?}: row-outcome sum not conserved"
+                );
+                prop_assert_eq!(
+                    tr.dram.row_hits + tr.dram.row_misses + tr.dram.row_conflicts,
+                    tr.dram.reads + tr.dram.writes,
+                    "{kind:?}: a request was scheduled without a row outcome"
+                );
+                // Command-level effects only ever cost cycles.
+                prop_assert!(
+                    tr.total_cycles >= lr.total_cycles,
+                    "{kind:?}: timed ({}) finished before lumped ({})",
+                    tr.total_cycles,
+                    lr.total_cycles
+                );
+                // The shortened tREFI guarantees the runs cross refresh
+                // boundaries with work queued, so the refresh machinery
+                // is actually exercised (and priced) here.
+                prop_assert!(
+                    tr.dram.refreshes > 0 && tr.dram.refresh_steal_cycles > 0,
+                    "{kind:?}: refresh never fired (total_cycles = {})",
+                    tr.total_cycles
+                );
+                prop_assert_eq!(
+                    (lr.dram.refreshes, lr.dram.refresh_steal_cycles, lr.dram.turnaround_cycles),
+                    (0, 0, 0),
+                    "{kind:?}: lumped backend produced command-level counters"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_engine_matches_reference_on_timed_backend_across_threads() {
+    check(
+        "timed backend: run == run_reference at sim_threads 1/2/4",
+        4,
+        random_case,
+        |(t, base)| {
+            let w = wl(t, base);
+            let timed_base = real_timed(base);
+            for kind in SystemKind::ALL {
+                for topology in TopologyKind::ALL {
+                    let mut cfg = timed_base.as_baseline(kind);
+                    cfg.interconnect.topology = topology;
+                    let reference = MemorySystem::new(&cfg, &w).run_reference(&w.name);
+                    for sim_threads in [1usize, 2, 4] {
+                        let mut c = cfg.clone();
+                        c.sim_threads = sim_threads;
+                        let event = MemorySystem::new(&c, &w).run(&w.name);
+                        prop_assert_eq!(
+                            event.diff(&reference),
+                            None,
+                            "{kind:?}/{topology:?}/sim_threads={sim_threads}: timed engines diverged"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
